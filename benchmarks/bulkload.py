@@ -1,0 +1,26 @@
+"""Sec 4.2.7: bulk-load stitch bandwidth.
+
+The stitch stream's DPA-bound bytes are measured from the real bulk-load
+batch, scaled to the paper's 50M keys, and pushed through the 120 MB/s
+host->DPA bandwidth: the paper loads 192 MB in ~1.6s.
+"""
+import numpy as np
+from repro.core import perfmodel
+from .common import N_KEYS, build_store, emit, time_op
+
+def run():
+    import time
+    t0 = time.perf_counter()
+    store = build_store("sparse", cache=False)
+    t_build = time.perf_counter() - t0
+    per_key = store.stats.bulk_load_dpa_bytes / N_KEYS
+    mb_50m = per_key * 50e6 / 1e6
+    secs = perfmodel.bulk_load_seconds(per_key * 50e6)
+    emit(
+        "bulkload/sparse",
+        t_build * 1e6 / N_KEYS,
+        f"dpa_mb_at_50M={mb_50m:.0f};model_seconds={secs:.2f};paper=192MB/1.6s",
+    )
+
+if __name__ == "__main__":
+    run()

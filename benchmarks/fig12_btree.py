@@ -1,0 +1,38 @@
+"""Figure 12: learned index vs B+-tree GET traversals.
+
+Both structures are real (bulk-loaded from the same pairs); we measure CPU
+batched lookups for both and derive BlueField-3 MOPS from the counted
+accesses: learned = 4.5 DPA lines/inner level + 1 line + 2 host DMAs;
+B+-tree = ~6 lines/inner level + ~4 dependent host DMA line probes (binary
+search cannot collapse its leaf probes into one DMA — the paper's point).
+"""
+import numpy as np
+import jax.numpy as jnp
+from repro.core import btree, perfmodel
+from repro.core.keys import split_u64
+from .common import build_store, emit, time_op
+
+def _model_btree_mops(depth: int, hw=perfmodel.HwParams()) -> float:
+    inner = btree.inner_lines_touched() * hw.dpa_ns
+    leaf = btree.leaf_dmas_touched() * hw.dma_ns + hw.dpa_ns
+    t_us = ((depth - 1) * inner + leaf) / 1000.0
+    return hw.traversers / t_us
+
+def run():
+    for ds in ("sparse", "amzn", "osmc"):
+        store = build_store(ds, cache=False)
+        all_keys, all_vals = store.items()
+        bt = btree.build(all_keys, all_vals)
+        rng = np.random.default_rng(3)
+        q = rng.choice(all_keys, 4096)
+        limbs = split_u64(q)
+        kh, kl = jnp.asarray(limbs[:, 0]), jnp.asarray(limbs[:, 1])
+        t_learned = time_op(store.get, q) / 4096
+        t_btree = time_op(lambda: np.asarray(btree.get_batch(bt, kh, kl)[2])) / 4096
+        m_l = perfmodel.get_mops(store.depth, store.cfg.eps_inner, store.cfg.eps_leaf)
+        m_b = _model_btree_mops(bt.depth)
+        emit(f"fig12/{ds}/learned", t_learned * 1e6, f"model_mops={m_l:.1f};depth={store.depth}")
+        emit(f"fig12/{ds}/btree", t_btree * 1e6, f"model_mops={m_b:.1f};depth={bt.depth}")
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Figure 13: INSERT and UPDATE throughput (the stitch-bandwidth story).
+
+UPDATE-only: patches carry no DPA copies -> patcher-bound ~12 MOPS.
+INSERT-only: every structural patch ships node/leaf metadata through the
+~120 MB/s host->DPA path; we MEASURE bytes/insert on the real store and
+push it through the bandwidth model (paper: ~1.7 MOPS).
+"""
+import numpy as np
+from repro.core import perfmodel
+from .common import build_store, emit, time_op
+
+def run():
+    for ds in ("sparse", "amzn", "osmc"):
+        store = build_store(ds, n=100_000, cache=False)
+        rng = np.random.default_rng(4)
+        all_keys, _ = store.items()
+        # UPDATE-only wave
+        upd = rng.choice(all_keys, 8192)
+        t_upd = time_op(store.put, upd, upd, repeats=1) / 8192
+        m_upd = perfmodel.update_mops(depth=store.depth, ib_cap=store.cfg.ib_cap)
+        emit(f"fig13/{ds}/update", t_upd * 1e6, f"model_mops={m_upd:.2f};paper=12.1")
+        # INSERT-only wave of new keys
+        newk = np.setdiff1d(
+            rng.integers(0, 2**63, 20_000, dtype=np.uint64), all_keys
+        )[:8192]
+        b0 = store.stats.stitched_dpa_bytes
+        t_ins = time_op(store.put, newk, newk, repeats=1) / len(newk)
+        bpi = (store.stats.stitched_dpa_bytes - b0) / len(newk)
+        m_ins = perfmodel.insert_mops(bpi, depth=store.depth)
+        emit(
+            f"fig13/{ds}/insert",
+            t_ins * 1e6,
+            f"model_mops={m_ins:.2f};bytes_per_insert={bpi:.0f};paper=1.7",
+        )
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Figure 14: BlueField-3 B3140L vs B3220.
+
+Uniform GET is DPA-memory-latency-bound -> identical on both cards (the
+dual-channel DPA DRAM does not change latency).  Skewed GET + ping are
+packet-rate-bound -> the B3220's stronger match hardware shows through
+(paper: ping +69%, zipf GET 48.5 vs 39.9 MOPS).
+"""
+from repro.core import perfmodel
+from .common import emit
+
+def run():
+    b1 = perfmodel.HwParams()
+    b2 = perfmodel.HwParams.b3220()
+    emit("fig14/ping/B3140L", 0.0, f"model_mops={b1.ping_mops:.1f};paper=44.9")
+    emit("fig14/ping/B3220", 0.0, f"model_mops={b2.ping_mops:.1f};paper=75.9")
+    for hw, name in ((b1, "B3140L"), (b2, "B3220")):
+        uni = perfmodel.get_mops(3, hw=hw)
+        emit(f"fig14/get_uniform/{name}", 0.0, f"model_mops={uni:.1f};paper_equal=True")
+        # zipf: cache hits are packet-rate-limited, not memory-limited
+        zipf = perfmodel.get_mops(3, hw=hw, cache_hit_rate=0.5)
+        emit(f"fig14/get_zipf/{name}", 0.0, f"model_mops={zipf:.1f};paper=39.9/48.5")
+
+if __name__ == "__main__":
+    run()

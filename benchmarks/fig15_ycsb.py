@@ -1,0 +1,76 @@
+"""Figure 15: YCSB A-F + INSERT-only + RANGE-only, DPA-Store vs ROLEX.
+
+Each workload mix RUNS on the CPU store (correctness + measured
+bytes/insert + cache rates feed the model); `derived` compares the
+BlueField-3 DPA-Store model against the calibrated ROLEX RDMA model for
+sparse/amzn/osmc — the paper's qualitative wins/losses are asserted in
+tests/test_benchmarks.py.
+"""
+import numpy as np
+from repro.core import perfmodel, rolex_model
+from .common import build_store, emit, time_op
+
+MIXES = {
+    "A": {"get": 0.5, "update": 0.5},
+    "B": {"get": 0.95, "update": 0.05},
+    "C": {"get": 1.0},
+    "D": {"get": 0.95, "insert": 0.05},
+    "E": {"range": 0.95, "insert": 0.05},
+    "F": {"get": 0.5, "rmw": 0.5},
+    "INSERT": {"insert": 1.0},
+    "RANGE": {"range": 1.0},
+}
+WAVE = 4096
+
+def _dpa_mix(store, mix, bytes_per_insert):
+    return perfmodel.mix_mops(
+        mix,
+        depth=store.depth,
+        eps_inner=store.cfg.eps_inner,
+        eps_leaf=store.cfg.eps_leaf,
+        bytes_per_insert=bytes_per_insert,
+        ib_cap=store.cfg.ib_cap,
+    )
+
+def run():
+    rng = np.random.default_rng(5)
+    for ds in ("sparse", "amzn", "osmc"):
+        store = build_store(ds, n=100_000, cache=False)
+        all_keys, _ = store.items()
+        # calibrate bytes/insert on this dataset
+        newk = np.setdiff1d(rng.integers(0, 2**63, 8000, dtype=np.uint64), all_keys)[:4096]
+        b0 = store.stats.stitched_dpa_bytes
+        store.put(newk, newk)
+        bpi = (store.stats.stitched_dpa_bytes - b0) / len(newk)
+        for wl, mix in MIXES.items():
+            # run the mix once on CPU (interleaved waves)
+            t0 = 0.0
+            n_ops = 0
+            for op, frac in mix.items():
+                k = max(int(WAVE * frac), 1)
+                ks = rng.choice(all_keys, k)
+                if op in ("get",):
+                    t0 += time_op(store.get, ks, repeats=1)
+                elif op in ("update", "rmw"):
+                    t0 += time_op(store.put, ks, ks, repeats=1)
+                elif op == "insert":
+                    nk = np.setdiff1d(
+                        rng.integers(0, 2**63, 3 * k, dtype=np.uint64), all_keys
+                    )[:k]
+                    t0 += time_op(store.put, nk, nk, repeats=1)
+                elif op == "range":
+                    t0 += time_op(store.range, ks[:256], repeats=1)
+                    k = 256
+                n_ops += k
+            dpa = _dpa_mix(store, mix, bpi)
+            rolex = rolex_model.ycsb_mops(wl, ds) if wl in "ABCDEF" else (
+                rolex_model.insert_mops() if wl == "INSERT" else rolex_model.range_mops(10)
+            )
+            emit(
+                f"fig15/{ds}/{wl}",
+                t0 * 1e6 / max(n_ops, 1),
+                f"dpastore_mops={dpa:.1f};rolex_mops={rolex:.1f}",
+            )
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Figure 9: throughput/latency vs traverser, patcher, stitcher threads.
+
+Left plot: GET throughput scales ~linearly with traverser threads and
+flattens at the memory-latency bound; right: INSERT/UPDATE flatten beyond 4
+patcher/stitcher threads.  Threads cannot be measured on CPU, so `derived`
+comes from the counted-access latency model; `us_per_call` is the measured
+CPU wave time of the equivalent batched op (sanity anchor).
+"""
+import numpy as np
+from repro.core import perfmodel
+from .common import build_store, emit, time_op
+
+def run():
+    store = build_store("sparse", cache=False)
+    keys = store.image.hbm_keys[store.image.leaf_slot[store.image.first_leaf()], 0:1]
+    rng = np.random.default_rng(0)
+    all_keys, _ = store.items()
+    q = rng.choice(all_keys, 4096)
+    t = time_op(store.get, q) / 4096
+    for threads in (16, 44, 88, 132, 176):
+        mops = perfmodel.get_mops(store.depth, threads=threads, root_cached=True)
+        emit(f"fig9/get@T{threads}", t * 1e6, f"model_mops={mops:.1f}")
+    # right plot: patcher/stitcher scaling (UPDATE plateau at 12.1 MOPS)
+    for pst in (1, 2, 4, 8):
+        hw = perfmodel.HwParams(patchers=pst, stitchers=pst)
+        mops = perfmodel.update_mops(hw=hw)
+        emit(f"fig9/update@P{pst}", 0.0, f"model_mops={mops:.2f};paper_plateau=12.1@4")
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+"""Sec 4.2.6 worked example + headline numbers as a benchmark row set."""
+from repro.core import perfmodel
+from .common import emit
+
+def run():
+    ex = perfmodel.paper_worked_example()
+    emit("perfmodel/traversal", ex["t_uncached_us"], f"paper=6.47us")
+    emit("perfmodel/mops_uncached", 0.0, f"model={ex['mops_uncached']:.1f};paper=27.2")
+    emit("perfmodel/mops_root_cached", 0.0, f"model={ex['mops_cached']:.2f};paper=31.05")
+    emit("perfmodel/get_headline", 0.0, f"model={perfmodel.get_mops(3, cache_hit_rate=0.12):.1f};paper=33")
+    emit("perfmodel/range_headline", 0.0, f"model={perfmodel.range_mops(3):.1f};paper=13")
+    emit("perfmodel/update_headline", 0.0, f"model={perfmodel.update_mops():.1f};paper=12.1")
+    emit("perfmodel/insert_headline", 0.0, f"model={perfmodel.insert_mops(70.0):.2f};paper=1.7")
+    # the lessons-learned hypothetical: 100ns DPA memory
+    fast = perfmodel.HwParams(dpa_ns=100.0)
+    emit("perfmodel/hypothetical_100ns", perfmodel.get_time_us(3, hw=fast),
+         f"model_mops={perfmodel.get_mops(3, hw=fast):.1f};paper>62")
+
+if __name__ == "__main__":
+    run()

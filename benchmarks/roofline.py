@@ -1,0 +1,287 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch x shape x mesh) cell json produced by repro.launch.dryrun:
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s)
+
+HLO_FLOPs / bytes / collective bytes use the while-trip-count-corrected
+extrapolation recorded by the dry-run (XLA cost analysis counts loop bodies
+once).  All extrapolated quantities are already per-device, so the formula's
+chips factor cancels: term = per_device_quantity / per_chip_rate.
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (forward-only), with N = active params
+for MoE.
+
+Outputs: benchmarks/results/roofline.csv + a markdown table consumed by
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 per chip (v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per link (ICI)
+
+RESULTS = Path(__file__).resolve().parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def model_flops_per_device(rec: dict, chips: int) -> float:
+    """PaLM-style useful-FLOPs accounting: parameter term (6ND train, 2ND
+    forward) PLUS the attention score/value matmuls (causal-optimal span;
+    window/chunk spans for sub-quadratic flavours) which 6ND ignores — at
+    32k context the attention term dominates and a bare 6ND makes every
+    long-S cell look artificially wasteful."""
+    from repro.configs import ARCHS, SHAPES
+
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    moe_like = cfg.n_experts > 0
+    n = rec["params_active"] if moe_like else rec["params_total"]
+    S, B = shape.seq_len, shape.global_batch
+    decode = shape.kind == "decode"
+    tokens = B if decode else shape.tokens
+    param_mult = 6 if shape.kind == "train" else 2
+    param_flops = param_mult * n * tokens
+
+    # attention span per flavour
+    attn_flops = 0.0
+    hd = cfg.head_dim_
+    H = cfg.n_heads
+    for i in range(cfg.superblock):
+        if cfg.layer_kind(i) != "attn":
+            continue
+        flavor = cfg.attn_flavor(i)
+        layers = cfg.n_layers / cfg.superblock
+        if decode:
+            span = {
+                "full": S,
+                "window": min(cfg.window, S),
+                "chunk": min(cfg.chunk, S),
+            }[flavor]
+            fwd = 4 * B * span * H * hd  # qk + pv, one new token
+            attn_flops += layers * fwd
+        else:
+            span = {
+                "full": (0.5 if cfg.causal else 1.0) * S,
+                "window": min(cfg.window, S),
+                "chunk": 0.5 * min(cfg.chunk, S),
+            }[flavor]
+            fwd = 4 * B * S * span * H * hd
+            attn_flops += layers * fwd * (3 if shape.kind == "train" else 1)
+    return (param_flops + attn_flops) / chips
+
+
+def analyse_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    if rec["arch"] not in _lm_archs():
+        # the KV-service cell: report terms without the LM useful-FLOPs model
+        flops = rec["cost"]["flops"]
+        mem_b = rec["cost"]["bytes_accessed"]
+        coll = rec.get("collective_bytes_per_device", 0)
+        return {
+            "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": rec["mesh"],
+            "t_compute_s": flops / PEAK_FLOPS,
+            "t_memory_s": mem_b / HBM_BW,
+            "t_collective_s": coll / LINK_BW,
+            "dominant": "memory",
+            "model_flops_per_dev": 0.0,
+            "hlo_flops_per_dev": flops,
+            "useful_ratio": 0.0,
+            "roofline_fraction": 0.0,
+            "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+            "fits_16g": True,
+        }
+    ex = rec.get("extrapolated", {})
+    flops = ex.get("flops_per_device", rec["cost"]["flops"])
+    mem_bytes = ex.get("bytes_per_device", rec["cost"]["bytes_accessed"])
+    coll = ex.get(
+        "collective_bytes_per_device", rec.get("collective_bytes_per_device", 0)
+    )
+    coll = max(coll, 0)  # guard extrapolation noise on tiny cells
+    t_comp = flops / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = coll / LINK_BW
+    dom = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    model_flops_per_dev = model_flops_per_device(rec, chips)
+    useful = model_flops_per_dev / flops if flops > 0 else 0.0
+    bound_time = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful work vs the time the dominant resource pins
+    # us down.  Decode is intrinsically memory-bound, so its useful work is
+    # the ESSENTIAL byte traffic (params read once + cache read once per
+    # step), not FLOPs.
+    if rec["shape"] in ("decode_32k", "long_500k"):
+        from repro.configs import ARCHS, SHAPES
+
+        cfg = ARCHS[rec["arch"]]
+        shape = SHAPES[rec["shape"]]
+        cache_bytes = _cache_bytes(cfg, shape)
+        n = rec["params_active"] if cfg.n_experts else rec["params_total"]
+        # per-DEVICE essentials: the cache shards over the data axis only
+        # (batch or context parallel, 16-way); params shard over all chips.
+        essential = n * 2 / chips + cache_bytes / 16
+        frac = (essential / HBM_BW) / bound_time if bound_time > 0 else 0.0
+        useful = essential / mem_bytes if mem_bytes > 0 else 0.0
+    else:
+        frac = (
+            (model_flops_per_dev / PEAK_FLOPS) / bound_time if bound_time > 0 else 0.0
+        )
+    return {
+        "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_dev": model_flops_per_dev,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "fits_16g": rec["memory"]["temp_bytes"] + rec["memory"]["argument_bytes"]
+        < 16 * 2**30,
+    }
+
+
+def _lm_archs():
+    from repro.configs import ARCHS
+
+    return ARCHS
+
+
+def _cache_bytes(cfg, shape) -> float:
+    """Total decode-cache bytes (the essential per-step read traffic)."""
+    total = 0.0
+    hd = cfg.head_dim_
+    for i in range(cfg.superblock):
+        layers = cfg.n_layers / cfg.superblock
+        if cfg.layer_kind(i) == "attn":
+            span = {
+                "full": shape.seq_len,
+                "window": min(cfg.window, shape.seq_len),
+                "chunk": min(cfg.chunk, shape.seq_len),
+            }[cfg.attn_flavor(i)]
+            total += layers * 2 * shape.global_batch * span * cfg.n_kv_heads * hd * 2
+        else:
+            d_in = cfg.ssm_expand * cfg.d_model
+            H = d_in // cfg.ssm_head_dim
+            total += layers * shape.global_batch * (
+                H * cfg.ssm_head_dim * cfg.ssm_state * 4
+                + (cfg.ssm_conv - 1) * (d_in + 2 * cfg.ssm_state) * 2
+            )
+    return total
+
+
+def load_all() -> list:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("supported", True):
+            rows.append(
+                {
+                    "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+                    "arch": rec["arch"],
+                    "shape": rec["shape"],
+                    "mesh": rec["mesh"],
+                    "skipped": rec.get("skip_reason", ""),
+                }
+            )
+            continue
+        a = analyse_cell(rec)
+        if a:
+            rows.append(a)
+        else:
+            rows.append(
+                {
+                    "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+                    "arch": rec["arch"],
+                    "shape": rec["shape"],
+                    "mesh": rec["mesh"],
+                    "error": rec.get("error", "?"),
+                }
+            )
+    return rows
+
+
+def fix_hint(row: dict) -> str:
+    d = row.get("dominant")
+    if d == "collective":
+        return "cut FSDP regathers / shard_map LSE-merge decode attention"
+    if d == "memory":
+        return "fuse gather+attend (paged kernel); larger per-step tiles"
+    return "remove masked-causal FLOP waste (paired schedule); MXU-align tiles"
+
+
+def write_tables():
+    rows = load_all()
+    RESULTS.mkdir(exist_ok=True, parents=True)
+    csv_lines = [
+        "cell,t_compute_s,t_memory_s,t_collective_s,dominant,model_flops_dev,hlo_flops_dev,useful_ratio,roofline_fraction,temp_gib,fits_16g"
+    ]
+    md = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | MODEL/HLO | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | {r['skipped'][:60]} |"
+            )
+            continue
+        if "error" in r:
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | ERROR | — | — | {r['error'][:60]} |"
+            )
+            continue
+        csv_lines.append(
+            f"{r['cell']},{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},{r['t_collective_s']:.4e},"
+            f"{r['dominant']},{r['model_flops_per_dev']:.3e},{r['hlo_flops_per_dev']:.3e},"
+            f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},{r['temp_gib']:.2f},{r['fits_16g']}"
+        )
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {fix_hint(r)} |"
+        )
+    (RESULTS / "roofline.csv").write_text("\n".join(csv_lines))
+    (RESULTS / "roofline.md").write_text("\n".join(md))
+    return rows
+
+
+def run():
+    from .common import emit
+
+    rows = write_tables()
+    ok = [r for r in rows if "dominant" in r]
+    skipped = [r for r in rows if "skipped" in r]
+    errors = [r for r in rows if "error" in r]
+    emit(
+        "roofline/cells",
+        0.0,
+        f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}",
+    )
+    for r in ok:
+        if r["mesh"] == "pod16x16":
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}",
+                0.0,
+                f"dominant={r['dominant']};frac={r['roofline_fraction']:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    write_tables()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` — prints ``name,us_per_call,
+derived`` CSV rows for every experiment, plus the roofline table derived
+from the dry-run artifacts (if present).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bulkload,
+        fig9_threads,
+        fig10_queue_depth,
+        fig11_get,
+        fig12_btree,
+        fig13_insert_update,
+        fig14_models,
+        fig15_ycsb,
+        perfmodel_check,
+        roofline,
+        table1_memory,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("perfmodel_check", perfmodel_check),
+        ("table1_memory", table1_memory),
+        ("fig9_threads", fig9_threads),
+        ("fig10_queue_depth", fig10_queue_depth),
+        ("fig11_get", fig11_get),
+        ("fig12_btree", fig12_btree),
+        ("fig13_insert_update", fig13_insert_update),
+        ("fig14_models", fig14_models),
+        ("fig15_ycsb", fig15_ycsb),
+        ("bulkload", bulkload),
+        ("roofline", roofline),
+    ]
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name}: done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001 — keep the harness sweeping
+            failures += 1
+            print(f"# {name}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""LM decode with the learned-index paged KV cache — the paper's technique
+serving a model.
+
+    PYTHONPATH=src python examples/paged_decode.py
+
+Three sequences decode in interleaved order; every attention call routes
+through the DPA-Store page table: block allocation = INSERT, cache fetch =
+ordered RANGE + paged-gather kernel.  The dense-cache result is computed
+side by side and asserted equal.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention
+from repro.serving.engine import PagedAttentionLayer
+
+
+def main():
+    rng = np.random.default_rng(0)
+    H, HKV, HD = 4, 2, 16
+    layer = PagedAttentionLayer(kv_heads=HKV, head_dim=HD, block_size=8, n_blocks=128)
+    dense = {}
+
+    seqs = {101: 37, 202: 23, 303: 41}
+    print(f"decoding {len(seqs)} sequences, lengths {list(seqs.values())}")
+    for t in range(max(seqs.values())):
+        for sid, n in seqs.items():
+            if t >= n:
+                continue
+            k = jnp.asarray(rng.normal(size=(HKV, HD)).astype(np.float32))
+            v = jnp.asarray(rng.normal(size=(HKV, HD)).astype(np.float32))
+            layer.append(sid, k, v)
+            dense.setdefault(sid, []).append((np.asarray(k), np.asarray(v)))
+
+    worst = 0.0
+    for sid, n in seqs.items():
+        q = jnp.asarray(rng.normal(size=(H, HD)).astype(np.float32))
+        out_paged = layer.attend(sid, q)
+        K = jnp.asarray(np.stack([kv[0] for kv in dense[sid]]))[None]
+        V = jnp.asarray(np.stack([kv[1] for kv in dense[sid]]))[None]
+        out_dense = decode_attention(q[None, None], K, V, n)[0, 0]
+        err = float(jnp.max(jnp.abs(out_paged.astype(jnp.float32) - out_dense)))
+        worst = max(worst, err)
+        print(f"seq {sid}: {n} tokens, {len(layer.cache.lookup_slots(sid))} blocks, "
+              f"paged-vs-dense max err {err:.2e}")
+    assert worst < 1e-2
+    st = layer.cache.table.stats
+    print(f"page-table store: {st.puts} INSERTs, {st.ranges} RANGEs, "
+          f"{st.patches_structural + st.patches_update} patches — the paper's "
+          f"machinery doing the serving bookkeeping")
+    # free one sequence, reuse its blocks
+    freed = layer.cache.release(202)
+    print(f"released seq 202: {freed} blocks returned to the pool")
+
+
+if __name__ == "__main__":
+    main()

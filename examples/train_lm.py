@@ -1,0 +1,88 @@
+"""End-to-end training example: train a ~100M-param GLM4-family model for a
+few hundred steps with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+This is the (b) deliverable's end-to-end driver: real data pipeline, real
+optimizer, real checkpoint manager — the same code path launch/train.py runs
+at cluster scale, exercised at laptop scale.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.training import optimizer, train_step as ts
+
+
+def hundred_m() -> ArchConfig:
+    """A ~100M-param dense config of the glm4 family."""
+    return dataclasses.replace(
+        ARCHS["glm4-9b"],
+        name="glm4-100m",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32_000,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = hundred_m()
+    total, _ = cfg.param_counts()
+    print(f"model: {cfg.name}, {total/1e6:.0f}M params")
+    shape = ShapeConfig("ex", args.seq, args.batch, "train")
+    tcfg = ts.TrainConfig(opt=optimizer.OptConfig(lr=6e-4), microbatches=2)
+    data = SyntheticLM(cfg, shape, DataConfig(seed=11))
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+
+    state = ts.init_state(cfg, tcfg, jax.random.key(0))
+    start = ckpt.latest_step() or 0
+    if start:
+        like = jax.eval_shape(lambda: ts.init_state(cfg, tcfg, jax.random.key(0)))
+        state = ckpt.restore(start, like)
+        print(f"resumed from step {start}")
+    step_fn = jax.jit(ts.make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    import time
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {
+            k: (jnp.asarray(v) if v is not None else None)
+            for k, v in data.global_batch(step).items()
+        }
+        state, m = step_fn(state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            toks = shape.tokens * (step + 1 - start)
+            print(
+                f"step {step:4d} loss {float(m['loss']):.4f} "
+                f"gnorm {float(m['grad_norm']):.3f} "
+                f"({toks/(time.time()-t0)/1e3:.1f}k tok/s)"
+            )
+        if (step + 1) % 100 == 0:
+            ckpt.save(step + 1, state)
+    ckpt.wait()
+    print("done; checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

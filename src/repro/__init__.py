@@ -1,0 +1,2 @@
+"""repro — DPA-Store on TPU: learned-index ordered KV runtime + multi-pod JAX LM framework."""
+__version__ = "1.0.0"

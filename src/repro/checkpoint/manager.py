@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing: sharded, atomic, mesh-independent, async.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000100.tmp/            # written first
+        META.json                 # tree structure, shapes, dtypes, step
+        arr_000000.npy ...        # one file per leaf (host-gathered)
+      step_000100/                # atomic rename == commit
+
+Properties the tests assert:
+
+  * **atomic commit** — a crash mid-write leaves only ``*.tmp`` which
+    ``latest_step`` ignores and ``clean`` removes; a committed step is
+    always complete;
+  * **mesh independence / elastic restart** — leaves are saved as full
+    (host-replicated) arrays and restored with ``jax.device_put`` against
+    whatever sharding the *new* mesh prescribes, so a 16-host job can
+    resume on 8 or 32 hosts (elastic scaling);
+  * **exact resume** — params + optimizer state + data-pipeline step are
+    all captured, and the synthetic pipeline is a pure function of step,
+    so the loss trajectory after restore is bit-identical (tested);
+  * **async save** — the device->host snapshot happens synchronously (jax
+    arrays are immutable, so it is a consistent cut), the file writes run
+    on a background thread; ``wait()`` joins before the next save.
+
+On a real cluster the np.save files become per-shard tensorstore writes;
+the commit protocol and restore-reshard logic are identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        """Snapshot ``state`` (any pytree of jax/np arrays) at ``step``."""
+        self.wait()
+        leaves, treedef = jax.tree.flatten(state)
+        host = [np.asarray(x) for x in leaves]  # consistent cut
+        treedef_str = str(treedef)
+
+        def write():
+            tmp = self.dir / f"step_{step:09d}.tmp"
+            final = self.dir / f"step_{step:09d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            meta = {
+                "step": step,
+                "n_leaves": len(host),
+                "treedef": treedef_str,
+                "shapes": [list(a.shape) for a in host],
+                "dtypes": [str(a.dtype) for a in host],
+            }
+            for i, a in enumerate(host):
+                # numpy can't serialise bf16 & friends: store a same-width
+                # integer view; META carries the true dtype for restore.
+                if a.dtype.kind not in "biufc":
+                    a = a.view(np.dtype(f"u{a.dtype.itemsize}"))
+                np.save(tmp / f"arr_{i:06d}.npy", a)
+            (tmp / "META.json").write_text(json.dumps(meta))
+            os.replace(tmp, final)  # atomic commit
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
+                if (p / "META.json").exists():
+                    out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: int, like: Any, shardings: Any = None
+    ) -> Any:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings`` (same structure, or None) reshards
+        onto the *current* mesh — this is the elastic-restart entry point."""
+        d = self.dir / f"step_{step:09d}"
+        meta = json.loads((d / "META.json").read_text())
+        leaves_like, treedef = jax.tree.flatten(like)
+        assert meta["n_leaves"] == len(leaves_like), (
+            f"checkpoint has {meta['n_leaves']} leaves, target {len(leaves_like)}"
+        )
+        shard_leaves = (
+            jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves_like)
+        )
+        out = []
+        for i, (lk, sh) in enumerate(zip(leaves_like, shard_leaves)):
+            a = np.load(d / f"arr_{i:06d}.npy")
+            true_dt = np.dtype(meta["dtypes"][i])
+            if a.dtype != true_dt:
+                a = a.view(true_dt)  # undo the exotic-dtype integer view
+            assert list(a.shape) == list(lk.shape), (i, a.shape, lk.shape)
+            if sh is not None:
+                out.append(jax.device_put(a, sh))
+            else:
+                out.append(jax.device_put(a.astype(lk.dtype)))
+        return jax.tree.unflatten(treedef, out)
+
+    def clean_tmp(self) -> int:
+        n = 0
+        for p in self.dir.iterdir():
+            if p.name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
+                n += 1
+        return n

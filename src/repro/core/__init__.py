@@ -1,0 +1,27 @@
+"""DPA-Store core — the paper's primary contribution in JAX.
+
+Layers (bottom-up): keys (u64-as-limbs), pla (host-side model training),
+tree (host image + device pools), lookup (batched traversal semantics),
+insert_buffer / hotcache (NIC-side write/read fast paths), patch + stitch +
+epoch (the RCU update cycle), store (the facade), plus the evaluation
+substrates: btree (baseline), rolex_model (RDMA cost model), perfmodel
+(Sec 4.2.6 analytic model), datasets (SOSD-style key distributions).
+"""
+
+from .tree import TreeConfig, TreeImage, DeviceTree, build_image, SEG_CAP, NODE_SEGS
+from .hotcache import CacheConfig
+from .store import DPAStore, StoreStats, STATUS_OK, STATUS_RETRY
+
+__all__ = [
+    "TreeConfig",
+    "TreeImage",
+    "DeviceTree",
+    "build_image",
+    "SEG_CAP",
+    "NODE_SEGS",
+    "CacheConfig",
+    "DPAStore",
+    "StoreStats",
+    "STATUS_OK",
+    "STATUS_RETRY",
+]

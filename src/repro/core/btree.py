@@ -1,0 +1,140 @@
+"""B+-tree baseline (Sec 4.2.5).
+
+The paper builds the comparison B+-tree with the *same* node machinery by
+setting eps = inf: fully packed 2 KB nodes of 128 entries, binary search
+inside nodes instead of model predictions.  We reproduce exactly that: a
+bulk-loaded, fully-packed 128-ary tree with numpy build + batched jnp
+lookups, plus the cache-line access model the Fig-12 benchmark needs.
+
+Access counting (the quantity Fig 12 is really about):
+  * learned inner node: 1 meta line + 1 model line + ~1.5 pivot lines + 1
+    child line = 4.5 lines on average (paper Sec 4.2.6);
+  * B+-tree inner node: binary search over 128 keys spread across 16 cache
+    lines touches ~log2(16) = 4 distinct key lines + 1 child line + 1 meta
+    line = 6 lines;
+  * learned leaf: the eps_leaf window is contiguous -> ONE host DMA + one
+    value DMA;
+  * B+-tree leaf: binary search over the key array in host memory -> ~4
+    *dependent* DMA line accesses + one value DMA — this is why the paper's
+    B+-tree latencies are "mostly higher".
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .keys import KEY_MAX, limb_le, limb_eq, split_u64
+
+FANOUT = 128  # 2 KB nodes: 128 x (8 B key + 8 B pointer)
+
+
+class BTree(NamedTuple):
+    depth: int  # levels including leaf level
+    node_keys: jnp.ndarray  # (N, 128, 2) u32 — per-level concatenated pools
+    node_child: jnp.ndarray  # (N, 128) i32
+    level_base: Tuple[int, ...]  # base node id of each inner level
+    leaf_keys: jnp.ndarray  # (L, 128, 2) u32, padded KEY_MAX  (host memory)
+    leaf_vals: jnp.ndarray  # (L, 128, 2) u32
+    n_leaves: int
+
+
+def build(keys: np.ndarray, vals: np.ndarray) -> BTree:
+    keys = np.asarray(keys, dtype=np.uint64)
+    vals = np.asarray(vals, dtype=np.uint64)
+    n = keys.size
+    n_leaves = math.ceil(n / FANOUT)
+    lk = np.full((n_leaves, FANOUT), KEY_MAX, dtype=np.uint64)
+    lv = np.zeros((n_leaves, FANOUT), dtype=np.uint64)
+    for i in range(n_leaves):
+        chunk = keys[i * FANOUT : (i + 1) * FANOUT]
+        lk[i, : chunk.size] = chunk
+        lv[i, : chunk.size] = vals[i * FANOUT : (i + 1) * FANOUT]
+
+    levels = []  # list of (keys (m,128) u64, child (m,128) i32)
+    child_firsts = lk[:, 0].copy()
+    child_ids = np.arange(n_leaves, dtype=np.int32)
+    while child_ids.size > 1:
+        m = math.ceil(child_ids.size / FANOUT)
+        nk = np.full((m, FANOUT), KEY_MAX, dtype=np.uint64)
+        nc = np.full((m, FANOUT), -1, dtype=np.int32)
+        for i in range(m):
+            f = child_firsts[i * FANOUT : (i + 1) * FANOUT]
+            c = child_ids[i * FANOUT : (i + 1) * FANOUT]
+            nk[i, : f.size] = f
+            nc[i, : c.size] = c
+        levels.append((nk, nc))
+        child_firsts = nk[:, 0].copy()
+        child_ids = np.arange(m, dtype=np.int32)
+    if not levels:  # single leaf -> trivial root
+        levels.append(
+            (
+                np.full((1, FANOUT), KEY_MAX, dtype=np.uint64),
+                np.full((1, FANOUT), -1, dtype=np.int32),
+            )
+        )
+        levels[0][0][0, 0] = lk[0, 0]
+        levels[0][1][0, 0] = 0
+
+    # concatenate levels root-first so ids are stable
+    levels = levels[::-1]
+    bases = []
+    all_k, all_c = [], []
+    base = 0
+    for nk, nc in levels:
+        bases.append(base)
+        all_k.append(nk)
+        all_c.append(nc)
+        base += nk.shape[0]
+    return BTree(
+        depth=len(levels) + 1,
+        node_keys=jnp.asarray(split_u64(np.concatenate(all_k, axis=0))),
+        node_child=jnp.asarray(np.concatenate(all_c, axis=0)),
+        level_base=tuple(bases),
+        leaf_keys=jnp.asarray(split_u64(lk)),
+        leaf_vals=jnp.asarray(split_u64(lv)),
+        n_leaves=n_leaves,
+    )
+
+
+def _node_rank(rows_k, khi, klo):
+    """Last index with key <= k via full compare (the jnp analogue of binary
+    search — identical result, same returned index)."""
+    le = limb_le(rows_k[:, :, 0], rows_k[:, :, 1], khi[:, None], klo[:, None])
+    return jnp.sum(le.astype(jnp.int32), axis=1) - 1
+
+
+def get_batch(bt: BTree, khi: jnp.ndarray, klo: jnp.ndarray):
+    """Batched point lookup. Returns (vhi, vlo, found)."""
+    node = jnp.zeros_like(khi, dtype=jnp.int32)  # root is id 0 (level 0 base)
+    for lvl in range(bt.depth - 1):
+        rows_k = bt.node_keys[node]
+        rank = jnp.maximum(_node_rank(rows_k, khi, klo), 0)
+        node = jnp.take_along_axis(bt.node_child[node], rank[:, None], axis=1)[:, 0]
+    leaf = node
+    rows_k = bt.leaf_keys[leaf]
+    rank = _node_rank(rows_k, khi, klo)
+    safe = jnp.maximum(rank, 0)
+    kk = jnp.take_along_axis(rows_k, safe[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    found = (rank >= 0) & limb_eq(kk[:, 0], kk[:, 1], khi, klo)
+    vv = jnp.take_along_axis(bt.leaf_vals[leaf], safe[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    return vv[:, 0], vv[:, 1], found
+
+
+# ---------------------------------------------------------------------------
+# access-count model (consumed by benchmarks/fig12 + perfmodel)
+# ---------------------------------------------------------------------------
+
+
+def inner_lines_touched() -> float:
+    """Distinct cache lines touched by binary search in a full 2 KB node."""
+    key_lines = math.log2(FANOUT * 8 / 64)  # 16 lines -> ~4 probes
+    return 1 + key_lines + 1  # meta + key probes + child line
+
+
+def leaf_dmas_touched() -> float:
+    """Dependent DMA line accesses for binary search in a host-memory leaf."""
+    return math.log2(FANOUT * 8 / 64) + 1  # key probes + value fetch

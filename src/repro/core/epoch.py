@@ -1,0 +1,61 @@
+"""Epoch-based reclamation (Sec 3.2.3).
+
+The paper computes a global epoch from every DPA thread's packet counters:
+a node made obsolete by a stitch is freed only after every traverser has
+moved past the request it was serving when the stitch landed.
+
+Batched analogue: the store's *wave counter* is the epoch.  A wave is a
+single functional update, so a wave that began before a CONNECT ran entirely
+against the old tree version; once the next wave starts, no reference to the
+old version can exist.  We keep the paper's safety margin of retiring ids
+only after ``grace`` further epochs so that asynchronous consumers (e.g. a
+client still holding a range cursor) have a bounded validity window.
+
+The manager is host-side bookkeeping; ``tests/test_epoch.py`` asserts the
+invariant that an id is never handed back to an allocator while any epoch
+that could reference it is still live.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass
+class EpochManager:
+    grace: int = 2  # epochs an obsolete id stays quarantined
+    epoch: int = 0
+    # (retire_at_epoch, pool, id)
+    _quarantine: List[Tuple[int, str, int]] = field(default_factory=list)
+    # ids currently quarantined, for the safety assertion
+    _held: Dict[Tuple[str, int], int] = field(default_factory=dict)
+
+    def advance(self) -> int:
+        """Called once per completed request wave."""
+        self.epoch += 1
+        return self.epoch
+
+    def defer_free(self, pool: str, idx: int) -> None:
+        key = (pool, int(idx))
+        assert key not in self._held, f"double free of {key}"
+        retire_at = self.epoch + self.grace
+        self._quarantine.append((retire_at, pool, int(idx)))
+        self._held[key] = retire_at
+
+    def reclaim(self, image) -> int:
+        """Release quarantined ids whose grace period has elapsed back to the
+        host image's allocator.  Returns the number reclaimed."""
+        ready = [q for q in self._quarantine if q[0] <= self.epoch]
+        self._quarantine = [q for q in self._quarantine if q[0] > self.epoch]
+        for _, pool, idx in ready:
+            del self._held[(pool, idx)]
+            image.release(pool, idx)
+        return len(ready)
+
+    def is_quarantined(self, pool: str, idx: int) -> bool:
+        return (pool, int(idx)) in self._held
+
+    @property
+    def pending(self) -> int:
+        return len(self._quarantine)

@@ -1,0 +1,84 @@
+"""Wave-append into per-leaf insert buffers (Sec 3.1, INSERT/UPDATE/DELETE).
+
+The paper appends with two atomic counters (slot claim before the data write,
+publish after) so concurrent DPA writers never collide and readers never see
+a key before its value.  Our execution model is batched SPMD: a *wave* of
+requests is applied as one functional update, which gives the same guarantee
+wholesale — a wave is atomic, and within a wave appends land in request
+order (the per-thread FIFO order of the paper, since clients steer a given
+key to a fixed thread).
+
+A request whose buffer is full is *rejected* with RETRY status — the paper's
+traverser re-enqueues it; our store facade retries after the patch cycle
+drains the buffer (Sec 3.2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .lookup import InsertBuffers
+
+STATUS_OK = 0
+STATUS_RETRY = 1  # buffer full -> client re-sends after patch cycle
+STATUS_NOP = 2  # inactive lane (padding)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def append_wave(
+    ib: InsertBuffers,
+    leaf: jnp.ndarray,  # (B,) i32 target leaf per request
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    vhi: jnp.ndarray,
+    vlo: jnp.ndarray,
+    op: jnp.ndarray,  # (B,) i32 IB_PUT / IB_DEL
+    active: jnp.ndarray,  # (B,) bool — padding lanes are inactive
+) -> Tuple[InsertBuffers, jnp.ndarray]:
+    """Append a wave of write requests. Returns (new buffers, status (B,))."""
+    B = leaf.shape[0]
+    cap = ib.keys.shape[1]
+    # rank of request i among *prior* active requests targeting the same leaf
+    # (order-preserving multi-append).  A rejected request consumes no slot,
+    # but any request behind it on the same leaf has an even larger naive
+    # rank, so "naive offset >= cap -> reject" is self-consistent.
+    same = (leaf[None, :] == leaf[:, None]) & active[None, :]
+    prior = jnp.tril(same, k=-1)
+    rank = jnp.sum(prior.astype(jnp.int32), axis=1)
+    offset = ib.count[leaf] + rank
+    accept = active & (offset < cap)
+    # rejected lanes scatter out of bounds and are dropped — no collision
+    # with real writes (masked scatter).
+    n_leaves = ib.keys.shape[0]
+    leaf_idx = jnp.where(accept, leaf, n_leaves)
+    slot_idx = jnp.where(accept, offset, cap)
+
+    keys = ib.keys.at[leaf_idx, slot_idx].set(
+        jnp.stack([khi, klo], -1), mode="drop"
+    )
+    vals = ib.vals.at[leaf_idx, slot_idx].set(
+        jnp.stack([vhi, vlo], -1), mode="drop"
+    )
+    ops = ib.op.at[leaf_idx, slot_idx].set(op, mode="drop")
+    count = ib.count.at[leaf_idx].add(
+        accept.astype(jnp.int32), mode="drop"
+    )
+    status = jnp.where(
+        active, jnp.where(accept, STATUS_OK, STATUS_RETRY), STATUS_NOP
+    )
+    return InsertBuffers(keys=keys, vals=vals, op=ops, count=count), status
+
+
+def clear_rows(ib: InsertBuffers, leaves) -> InsertBuffers:
+    """Reset the buffers of the given leaves (the CLEAR part of a stitch)."""
+    leaves = jnp.asarray(leaves, dtype=jnp.int32)
+    return InsertBuffers(
+        keys=ib.keys.at[leaves].set(0),
+        vals=ib.vals.at[leaves].set(0),
+        op=ib.op.at[leaves].set(0),
+        count=ib.count.at[leaves].set(0),
+    )

@@ -1,0 +1,326 @@
+"""Pure-jnp batched traversal of the NIC-side learned index (reference path).
+
+This module is the *semantic definition* of the DPA traverser (Sec 3.1): the
+Pallas kernels in ``repro.kernels`` are tile-level implementations of exactly
+these functions and are tested against them.  On CPU (this container) the ops
+layer dispatches here; on TPU it dispatches to the kernels.
+
+Access-pattern faithfulness: each inner-node visit touches (1) the segment
+first-key line, (2) the segment model, (3) an eps-bounded pivot window, and
+(4) one child pointer — the same "few cache lines per level" contract the
+paper engineers for the DPA memory (Fig 4).  Each leaf visit touches the
+insert buffer, an eps_leaf window of the key array, and one value — the two
+"DMA crossings" (here: HBM touches) of the paper.  ``benchmarks/`` counts
+these touches and pushes them through the paper's latency constants, so the
+structure here *is* the performance model.
+
+All keys are u32 limb pairs; all functions are batched over a request wave.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .keys import limb_le, limb_eq, limb_sub_to_f32
+from .tree import DeviceTree, NODE_SEGS
+
+# insert-buffer op codes
+IB_EMPTY = 0
+IB_PUT = 1  # INSERT or UPDATE (newest wins)
+IB_DEL = 2  # tombstone
+
+
+class InsertBuffers(NamedTuple):
+    """Per-leaf NIC-side insert buffers (Sec 3.1: appended with two atomic
+    counters; a wave here is an atomic batch, so visibility is wave-granular)."""
+
+    keys: jnp.ndarray  # (Nl, B, 2) u32
+    vals: jnp.ndarray  # (Nl, B, 2) u32
+    op: jnp.ndarray  # (Nl, B) i32
+    count: jnp.ndarray  # (Nl,) i32
+
+
+def make_insert_buffers(n_leaves: int, cap: int) -> InsertBuffers:
+    return InsertBuffers(
+        keys=jnp.zeros((n_leaves, cap, 2), dtype=jnp.uint32),
+        vals=jnp.zeros((n_leaves, cap, 2), dtype=jnp.uint32),
+        op=jnp.full((n_leaves, cap), IB_EMPTY, dtype=jnp.int32),
+        count=jnp.zeros((n_leaves,), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# inner-node routing
+# ---------------------------------------------------------------------------
+
+
+def _predict(slope, anchor_hi, anchor_lo, khi, klo):
+    """Clamped-below PLA prediction of a local rank (f32; see keys.py for
+    the error-bound argument that makes f32 sufficient)."""
+    below = ~limb_le(anchor_hi, anchor_lo, khi, klo)  # key < anchor
+    delta = limb_sub_to_f32(khi, klo, anchor_hi, anchor_lo)
+    return jnp.where(below, jnp.float32(0.0), slope * delta)
+
+
+def _window_rank(pool_keys, slot, count, pred, eps, khi, klo):
+    """Index of the last key <= k inside the eps window around ``pred``.
+
+    pool_keys: (P, 128, 2); slot/count/pred/khi/klo: (B,).  Returns (B,) rank
+    (may be -1 when the key precedes the window, which only happens for keys
+    below the segment's first entry) and the window base ``lo``.
+    """
+    w = 2 * eps + 2  # floor(p) +/- eps plus rounding slack — covers the bound
+    lo = jnp.clip(
+        jnp.floor(pred).astype(jnp.int32) - eps,
+        0,
+        jnp.maximum(count - w, 0),
+    )
+    idx = lo[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]  # (B, w)
+    rows = pool_keys[slot]  # (B, 128, 2)
+    wk = jnp.take_along_axis(rows, idx[:, :, None], axis=1)  # (B, w, 2)
+    le = limb_le(wk[:, :, 0], wk[:, :, 1], khi[:, None], klo[:, None])
+    in_range = idx < count[:, None]
+    c = jnp.sum((le & in_range).astype(jnp.int32), axis=1)
+    return lo + c - 1, lo
+
+
+def route_one_level(
+    tree: DeviceTree, node: jnp.ndarray, khi: jnp.ndarray, klo: jnp.ndarray, eps: int
+) -> jnp.ndarray:
+    """One inner-node descent step for a wave of requests: node (B,) -> child (B,)."""
+    sf = tree.node_seg_first[node]  # (B, 7, 2)
+    le = limb_le(sf[:, :, 0], sf[:, :, 1], khi[:, None], klo[:, None])  # (B,7)
+    # padded segments hold KEY_MAX -> never <= a real key; segment 0 is the
+    # floor for keys below the node's range.
+    seg = jnp.maximum(jnp.sum(le[:, 1:].astype(jnp.int32), axis=1), 0)
+    bidx = jnp.arange(node.shape[0])
+    a_hi = sf[bidx, seg, 0]
+    a_lo = sf[bidx, seg, 1]
+    slope = tree.node_seg_slope[node, seg]
+    count = tree.node_seg_count[node, seg]
+    slot = tree.node_seg_slot[node, seg]
+    pred = _predict(slope, a_hi, a_lo, khi, klo)
+    rank, _ = _window_rank(tree.pivot_keys, slot, count, pred, eps, khi, klo)
+    rank = jnp.maximum(rank, 0)
+    return jnp.take_along_axis(
+        tree.pivot_child[slot], rank[:, None], axis=1
+    )[:, 0]
+
+
+@partial(jax.jit, static_argnames=("depth", "eps_inner"))
+def traverse(
+    tree: DeviceTree, khi: jnp.ndarray, klo: jnp.ndarray, *, depth: int, eps_inner: int
+) -> jnp.ndarray:
+    """Descend the learned index: request keys (B,) -> leaf ids (B,)."""
+    node = jnp.broadcast_to(tree.root, khi.shape).astype(jnp.int32)
+    for _ in range(depth - 1):
+        node = route_one_level(tree, node, khi, klo, eps_inner)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# leaf access ("the DMA part")
+# ---------------------------------------------------------------------------
+
+
+def leaf_search(
+    tree: DeviceTree, leaf: jnp.ndarray, khi: jnp.ndarray, klo: jnp.ndarray, eps_leaf: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Search the leaf's HBM key array.  Returns (rank, found, vhi, vlo);
+    rank = index of last key <= k within the leaf (-1 if none)."""
+    slot = tree.leaf_slot[leaf]
+    count = tree.leaf_count[leaf]
+    anchor = tree.leaf_anchor[leaf]
+    pred = _predict(tree.leaf_slope[leaf], anchor[:, 0], anchor[:, 1], khi, klo)
+    rank, _ = _window_rank(tree.hbm_keys, slot, count, pred, eps_leaf, khi, klo)
+    safe = jnp.maximum(rank, 0)
+    kk = jnp.take_along_axis(tree.hbm_keys[slot], safe[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    found = (rank >= 0) & limb_eq(kk[:, 0], kk[:, 1], khi, klo)
+    vv = jnp.take_along_axis(tree.hbm_vals[slot], safe[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    return rank, found, vv[:, 0], vv[:, 1]
+
+
+def ib_search(
+    ib: InsertBuffers, leaf: jnp.ndarray, khi: jnp.ndarray, klo: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scan the leaf's insert buffer, newest entry wins (Sec 3.1: GETs check
+    the buffer before the leaf array and may early-exit).
+
+    Returns (present, deleted, vhi, vlo): ``present`` = key has a live PUT as
+    its newest entry; ``deleted`` = newest entry is a tombstone.
+    """
+    bk = ib.keys[leaf]  # (B, cap, 2)
+    bv = ib.vals[leaf]
+    bop = ib.op[leaf]
+    cnt = ib.count[leaf]
+    cap = bk.shape[1]
+    pos = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    match = (
+        limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None])
+        & (pos < cnt[:, None])
+        & (bop != IB_EMPTY)
+    )
+    newest = jnp.max(jnp.where(match, pos, -1), axis=1)  # (B,)
+    has = newest >= 0
+    safe = jnp.maximum(newest, 0)
+    op = jnp.take_along_axis(bop, safe[:, None], axis=1)[:, 0]
+    v = jnp.take_along_axis(bv, safe[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    present = has & (op == IB_PUT)
+    deleted = has & (op == IB_DEL)
+    return present, deleted, v[:, 0], v[:, 1]
+
+
+@partial(jax.jit, static_argnames=("depth", "eps_inner", "eps_leaf"))
+def get_batch(
+    tree: DeviceTree,
+    ib: InsertBuffers,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    depth: int,
+    eps_inner: int,
+    eps_leaf: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full GET path (sans hot cache, which store.py layers in front):
+    traverse -> insert buffer (newest wins) -> leaf HBM probe."""
+    leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
+    ib_present, ib_deleted, ib_vhi, ib_vlo = ib_search(ib, leaf, khi, klo)
+    _, tree_found, t_vhi, t_vlo = leaf_search(tree, leaf, khi, klo, eps_leaf)
+    found = ib_present | (tree_found & ~ib_deleted)
+    vhi = jnp.where(ib_present, ib_vhi, t_vhi)
+    vlo = jnp.where(ib_present, ib_vlo, t_vlo)
+    return vhi, vlo, found
+
+
+# ---------------------------------------------------------------------------
+# range scan (Sec 3.1 RANGE): merge leaf array + insert buffer in key order,
+# walking leaf_next across up to ``max_leaves`` leaves.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
+@partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
+def range_batch(
+    tree: DeviceTree,
+    ib: InsertBuffers,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """RANGE(k_min, limit) for a wave.
+
+    Returns (keys (B,limit,2), vals (B,limit,2), valid (B,limit)): the first
+    ``limit`` live pairs with key >= k_min in ascending key order.  The scan
+    walks at most ``max_leaves`` leaves via ``leaf_next`` — the analogue of
+    the paper's re-descend-and-continue loop, bounded like its 64-pairs-per-
+    response packetisation.  Buffer entries override leaf entries and newer
+    buffer entries override older ones (same visibility rule as GET).
+    """
+    start_leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
+    cap = ib.keys.shape[1]
+    B = khi.shape[0]
+
+    def gather_leaf(leaf, alive):
+        """Candidate entries of one leaf (leaf array + insert buffer)."""
+        slot = tree.leaf_slot[leaf]
+        lk = tree.hbm_keys[slot]  # (B,128,2)
+        lv = tree.hbm_vals[slot]
+        lcnt = tree.leaf_count[leaf]
+        lvalid = (jnp.arange(lk.shape[1])[None, :] < lcnt[:, None]) & alive[:, None]
+        bk = ib.keys[leaf]
+        bv = ib.vals[leaf]
+        bop = ib.op[leaf]
+        bcnt = ib.count[leaf]
+        bvalid = (
+            (jnp.arange(cap)[None, :] < bcnt[:, None])
+            & (bop != IB_EMPTY)
+            & alive[:, None]
+        )
+        keys_h = jnp.concatenate([lk[:, :, 0], bk[:, :, 0]], axis=1)
+        keys_l = jnp.concatenate([lk[:, :, 1], bk[:, :, 1]], axis=1)
+        vals_h = jnp.concatenate([lv[:, :, 0], bv[:, :, 0]], axis=1)
+        vals_l = jnp.concatenate([lv[:, :, 1], bv[:, :, 1]], axis=1)
+        valid = jnp.concatenate([lvalid, bvalid], axis=1)
+        # priority: leaf entries 0; buffer entry j gets j+1 (newest wins).
+        prio = jnp.concatenate(
+            [
+                jnp.zeros((B, lk.shape[1]), dtype=jnp.int32),
+                jnp.broadcast_to(jnp.arange(1, cap + 1, dtype=jnp.int32), (B, cap)),
+            ],
+            axis=1,
+        )
+        is_del = jnp.concatenate(
+            [jnp.zeros((B, lk.shape[1]), dtype=bool), bop == IB_DEL], axis=1
+        )
+        return keys_h, keys_l, vals_h, vals_l, valid, prio, is_del
+
+    parts = []
+    leaf = start_leaf
+    alive = jnp.ones_like(start_leaf, dtype=bool)
+    for _ in range(max_leaves):
+        safe = jnp.maximum(leaf, 0)
+        parts.append(gather_leaf(safe, alive))
+        nxt = tree.leaf_next[safe]
+        alive = alive & (nxt >= 0)
+        leaf = nxt
+
+    keys_h = jnp.concatenate([p[0] for p in parts], axis=1)
+    keys_l = jnp.concatenate([p[1] for p in parts], axis=1)
+    vals_h = jnp.concatenate([p[2] for p in parts], axis=1)
+    vals_l = jnp.concatenate([p[3] for p in parts], axis=1)
+    valid = jnp.concatenate([p[4] for p in parts], axis=1)
+    prio = jnp.concatenate([p[5] for p in parts], axis=1)
+    is_del = jnp.concatenate([p[6] for p in parts], axis=1)
+
+    # drop entries below k_min or invalid by forcing their key to KEY_MAX
+    ge_min = limb_le(khi[:, None], klo[:, None], keys_h, keys_l)
+    live = valid & ge_min
+    pad = jnp.uint32(0xFFFFFFFF)
+    keys_h = jnp.where(live, keys_h, pad)
+    keys_l = jnp.where(live, keys_l, pad)
+
+    # sort each row by (key asc, priority desc); first occurrence of a key
+    # is then its newest version.
+    order = jnp.lexsort((-prio, keys_l, keys_h), axis=-1)
+    keys_h = jnp.take_along_axis(keys_h, order, axis=1)
+    keys_l = jnp.take_along_axis(keys_l, order, axis=1)
+    vals_h = jnp.take_along_axis(vals_h, order, axis=1)
+    vals_l = jnp.take_along_axis(vals_l, order, axis=1)
+    live = jnp.take_along_axis(live, order, axis=1)
+    is_del = jnp.take_along_axis(is_del, order, axis=1)
+
+    first = jnp.concatenate(
+        [
+            jnp.ones((B, 1), dtype=bool),
+            (keys_h[:, 1:] != keys_h[:, :-1]) | (keys_l[:, 1:] != keys_l[:, :-1]),
+        ],
+        axis=1,
+    )
+    keep = live & first & ~is_del
+
+    # compact kept entries into the first `limit` output columns, in order
+    target = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1  # (B, M)
+    in_out = keep & (target < limit)
+    tgt = jnp.where(in_out, target, limit)  # overflow -> scratch column
+    out_kh = jnp.full((B, limit + 1), pad, dtype=jnp.uint32)
+    out_kl = jnp.full((B, limit + 1), pad, dtype=jnp.uint32)
+    out_vh = jnp.zeros((B, limit + 1), dtype=jnp.uint32)
+    out_vl = jnp.zeros((B, limit + 1), dtype=jnp.uint32)
+    rows = jnp.arange(B)[:, None]
+    out_kh = out_kh.at[rows, tgt].set(jnp.where(in_out, keys_h, pad))
+    out_kl = out_kl.at[rows, tgt].set(jnp.where(in_out, keys_l, pad))
+    out_vh = out_vh.at[rows, tgt].set(jnp.where(in_out, vals_h, 0))
+    out_vl = out_vl.at[rows, tgt].set(jnp.where(in_out, vals_l, 0))
+    n_found = jnp.minimum(jnp.sum(keep, axis=1), limit)
+    out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
+    out_keys = jnp.stack([out_kh[:, :limit], out_kl[:, :limit]], axis=-1)
+    out_vals = jnp.stack([out_vh[:, :limit], out_vl[:, :limit]], axis=-1)
+    return out_keys, out_vals, out_valid

@@ -1,0 +1,336 @@
+"""Host-side patching (Sec 3.2.1 / Figure 6).
+
+A patch consumes one leaf's full insert buffer and produces a stitch batch:
+
+  * UPDATE-only patch  -> in-place value writes on the big-memory pool + a
+    buffer clear ("the patcher modifies the values accordingly ... and
+    performs no further action").
+  * structural patch   -> merge buffer into the leaf contents (newest entry
+    wins, tombstones delete), PLA re-segmentation with eps_leaf; a split caps
+    new-leaf fill at the *retrain bound* (0.25 x capacity) so future patches
+    are absorbed without another split.  Parents are rebuilt bottom-up
+    (copy-on-write node granularity — the paper's "the parent must also be
+    rebuilt"), recursing toward the root only while splits escalate.  A root
+    split adds a level.
+
+The paper's safeguards for racy root stitches (UID probes + queue fences)
+map to a structural guarantee here: every plan puts all COPY rows before the
+CONNECT pointer swaps, and the store applies them in that order, so a
+CONNECT can never reference a row that has not landed.
+
+All ids the patch obsoletes are *returned*, not freed — the store quarantines
+them through the epoch manager (Sec 3.2.3).
+
+Interpretation notes (where the paper under-specifies):
+  * inner-node splits distribute segments evenly and cap segments/new-node at
+    ``round(retrain_bound * 7) = 2`` — the inner-node analogue of sparsely
+    populated split leaves;
+  * we maintain a ``leaf_next`` chain for range scans (the paper re-descends
+    per leaf; we keep re-descent as a fallback and test both give identical
+    results).  The extra CONNECT this needs is the predecessor's next-pointer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import pla
+from .keys import KEY_MAX
+from .stitch import StitchBatch
+from .tree import NODE_SEGS, SEG_CAP, TreeImage
+
+OP_PUT = 1
+OP_DEL = 2
+
+
+@dataclass
+class PatchResult:
+    batch: StitchBatch
+    kind: str  # "update" | "structural"
+    new_leaves: List[int] = field(default_factory=list)
+    depth_changed: bool = False
+
+
+def _merge(
+    img: TreeImage, leaf: int, entries: List[Tuple[int, int, int]]
+) -> Tuple[np.ndarray, np.ndarray, bool]:
+    """Apply buffered ops (in order) to the leaf contents.
+
+    Returns (keys, vals, update_only): update_only is True when every op was
+    a PUT to an already-present key (no inserts, no deletes) — the paper's
+    cheap path.
+    """
+    base_keys = img.leaf_keys(leaf)
+    base_vals = img.leaf_vals(leaf)
+    d = dict(zip(base_keys.tolist(), base_vals.tolist()))
+    update_only = True
+    for k, v, op in entries:
+        k = int(k)
+        if op == OP_PUT:
+            if k not in d:
+                update_only = False
+            d[k] = int(v)
+        elif op == OP_DEL:
+            if k in d:
+                del d[k]
+            update_only = False
+    ks = np.array(sorted(d.keys()), dtype=np.uint64)
+    vs = np.array([d[int(k)] for k in ks], dtype=np.uint64)
+    return ks, vs, update_only
+
+
+def _pad_row(values: np.ndarray, fill, width: int = SEG_CAP) -> np.ndarray:
+    dtype = values.dtype if values.size else np.uint64
+    row = np.full(width, fill, dtype=dtype)
+    row[: values.size] = values
+    return row
+
+
+def _emit_leaf(img: TreeImage, batch: StitchBatch, keys, vals, seg: pla.Segment) -> int:
+    """COPY a new leaf (+ its data slot) built from one PLA segment."""
+    leaf = img.alloc("leaves")
+    slot = img.alloc("slots")
+    ks = keys[seg.start : seg.start + seg.count]
+    vs = vals[seg.start : seg.start + seg.count]
+    # image mirror
+    img.leaf_anchor[leaf] = seg.anchor
+    img.leaf_slope[leaf] = seg.slope
+    img.leaf_count[leaf] = seg.count
+    img.leaf_slot[leaf] = slot
+    img.hbm_keys[slot] = _pad_row(ks, KEY_MAX)
+    img.hbm_vals[slot] = _pad_row(vs, 0)
+    # device copies
+    batch.add_copy("leaf_anchor", leaf, np.uint64(seg.anchor))
+    batch.add_copy("leaf_slope", leaf, np.float64(seg.slope))
+    batch.add_copy("leaf_count", leaf, np.int32(seg.count))
+    batch.add_copy("leaf_slot", leaf, np.int32(slot))
+    batch.add_copy("hbm_keys", slot, img.hbm_keys[slot])
+    batch.add_copy("hbm_vals", slot, img.hbm_vals[slot])
+    return leaf
+
+
+def _emit_node(
+    img: TreeImage,
+    batch: StitchBatch,
+    segs: List[pla.Segment],
+    firsts: np.ndarray,
+    children: np.ndarray,
+) -> int:
+    """COPY a new inner node holding the given segments."""
+    node = img.alloc("nodes")
+    img.node_nseg[node] = len(segs)
+    img.node_seg_first[node] = np.full(NODE_SEGS, KEY_MAX, dtype=np.uint64)
+    img.node_seg_slope[node] = 0.0
+    img.node_seg_count[node] = 0
+    img.node_seg_slot[node] = -1
+    for j, seg in enumerate(segs):
+        slot = img.alloc("pivots")
+        img.node_seg_first[node, j] = seg.anchor
+        img.node_seg_slope[node, j] = seg.slope
+        img.node_seg_count[node, j] = seg.count
+        img.node_seg_slot[node, j] = slot
+        sl = slice(seg.start, seg.start + seg.count)
+        img.pivot_keys[slot] = _pad_row(firsts[sl], KEY_MAX)
+        img.pivot_child[slot] = _pad_row(
+            children[sl].astype(np.int32), np.int32(-1)
+        ).astype(np.int32)
+        batch.add_copy("pivot_keys", slot, img.pivot_keys[slot])
+        batch.add_copy("pivot_child", slot, img.pivot_child[slot])
+    batch.add_copy("node_seg_first", node, img.node_seg_first[node])
+    batch.add_copy("node_seg_slope", node, img.node_seg_slope[node])
+    batch.add_copy("node_seg_count", node, img.node_seg_count[node])
+    batch.add_copy("node_seg_slot", node, img.node_seg_slot[node])
+    return node
+
+
+def _free_node(img: TreeImage, batch: StitchBatch, node: int) -> None:
+    batch.frees.append(("nodes", node))
+    for j in range(int(img.node_nseg[node])):
+        batch.frees.append(("pivots", int(img.node_seg_slot[node, j])))
+
+
+def _node_entries(img: TreeImage, node: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Flattened (firsts, children) across all live segments of a node."""
+    firsts, children = [], []
+    for j in range(int(img.node_nseg[node])):
+        slot = int(img.node_seg_slot[node, j])
+        cnt = int(img.node_seg_count[node, j])
+        firsts.append(img.pivot_keys[slot, :cnt])
+        children.append(img.pivot_child[slot, :cnt])
+    return np.concatenate(firsts), np.concatenate(children)
+
+
+def _inner_split_caps(img: TreeImage) -> Tuple[int, int]:
+    segs_per_node = max(1, int(round(img.cfg.retrain_bound * NODE_SEGS)))
+    return segs_per_node, SEG_CAP
+
+
+def plan_patch(
+    img: TreeImage, leaf: int, entries: List[Tuple[int, int, int]]
+) -> PatchResult:
+    """Plan the patch for one full insert buffer. Mutates the host image
+    (allocations + mirror rows + pointer mirrors) and returns the stitch
+    batch the device needs to catch up."""
+    merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
+    batch = StitchBatch()
+    batch.clear_ib.append(leaf)
+
+    if update_only:
+        slot = int(img.leaf_slot[leaf])
+        img.hbm_vals[slot] = _pad_row(merged_vals, 0)
+        batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
+        return PatchResult(batch=batch, kind="update")
+
+    old_anchor = np.uint64(img.leaf_anchor[leaf])
+    old_next = int(img.leaf_next[leaf])
+    old_prev = int(img.leaf_prev[leaf])
+    _, path = img.find_leaf(old_anchor)
+
+    # ---- build replacement leaves ----------------------------------------
+    if merged_keys.size == 0:
+        # all deleted: keep a single empty leaf so routing stays total
+        segs = [pla.Segment(0, 0, old_anchor, 0.0)]
+    else:
+        segs = pla.fit(merged_keys, img.cfg.eps_leaf, SEG_CAP)
+        if len(segs) > 1:  # splitting -> retrain bound (sparse leaves)
+            segs = pla.fit(merged_keys, img.cfg.eps_leaf, img.cfg.split_cap)
+    new_leaves = [
+        _emit_leaf(img, batch, merged_keys, merged_vals, s) for s in segs
+    ]
+
+    # chain: prev -> new[0] -> ... -> new[-1] -> old_next
+    for a, b in zip(new_leaves, new_leaves[1:]):
+        img.leaf_next[a] = b
+        img.leaf_prev[b] = a
+        batch.add_copy("leaf_next", a, np.int32(b))
+    img.leaf_next[new_leaves[-1]] = old_next
+    batch.add_copy("leaf_next", new_leaves[-1], np.int32(old_next))
+    img.leaf_prev[new_leaves[0]] = old_prev
+    if old_next != -1:
+        img.leaf_prev[old_next] = new_leaves[-1]
+    if old_prev != -1:
+        img.leaf_next[old_prev] = new_leaves[0]
+        batch.connects.append(("leaf_next", old_prev, new_leaves[0]))
+    batch.frees.append(("leaves", leaf))
+    batch.frees.append(("slots", int(img.leaf_slot[leaf])))
+
+    # ---- splice into the parent chain ------------------------------------
+    child_ids = np.array(new_leaves, dtype=np.int32)
+    child_firsts = np.array(
+        [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
+    )
+    depth_changed = _splice_up(
+        img, batch, path, child_ids, child_firsts, single_swap_ok=len(new_leaves) == 1
+    )
+    return PatchResult(
+        batch=batch,
+        kind="structural",
+        new_leaves=new_leaves,
+        depth_changed=depth_changed,
+    )
+
+
+def _splice_up(
+    img: TreeImage,
+    batch: StitchBatch,
+    path: List[Tuple[int, int, int]],
+    child_ids: np.ndarray,
+    child_firsts: np.ndarray,
+    single_swap_ok: bool,
+) -> bool:
+    """Replace one child entry with ``child_ids`` bottom-up along ``path``.
+
+    Returns True if the tree depth changed (root split).
+    """
+    depth_changed = False
+    level = len(path) - 1
+    while True:
+        if level < 0:
+            # we replaced the root itself
+            if len(child_ids) == 1:
+                img.root = int(child_ids[0])
+                batch.connects.append(("root", img.root, img.depth))
+            else:
+                # root split: build levels until a single node remains
+                while len(child_ids) > 1:
+                    segs = pla.fit(child_firsts, img.cfg.eps_inner, SEG_CAP)
+                    nodes = []
+                    for i in range(0, len(segs), NODE_SEGS):
+                        group = segs[i : i + NODE_SEGS]
+                        # re-anchor group segments to a zero-based start
+                        base = group[0].start
+                        shifted = [
+                            pla.Segment(s.start - base, s.count, s.anchor, s.slope)
+                            for s in group
+                        ]
+                        lo = base
+                        hi = group[-1].start + group[-1].count
+                        nodes.append(
+                            _emit_node(
+                                img,
+                                batch,
+                                shifted,
+                                child_firsts[lo:hi],
+                                child_ids[lo:hi],
+                            )
+                        )
+                    child_ids = np.array(nodes, dtype=np.int32)
+                    child_firsts = np.array(
+                        [img.node_seg_first[n, 0] for n in nodes], dtype=np.uint64
+                    )
+                    img.depth += 1
+                    depth_changed = True
+                img.root = int(child_ids[0])
+                batch.connects.append(("root", img.root, img.depth))
+            return depth_changed
+
+        node, seg, pos = path[level]
+        if single_swap_ok and len(child_ids) == 1:
+            # Figure 6 fast path: one pointer swap in the (unchanged) parent
+            slot = int(img.node_seg_slot[node, seg])
+            img.pivot_child[slot, pos] = int(child_ids[0])
+            batch.connects.append(
+                ("pivot_child", slot, pos, int(child_ids[0]))
+            )
+            return depth_changed
+
+        # rebuild this node with the entry at (seg, pos) replaced
+        firsts, children = _node_entries(img, node)
+        flat_pos = (
+            sum(int(img.node_seg_count[node, j]) for j in range(seg)) + pos
+        )
+        firsts = np.concatenate(
+            [firsts[:flat_pos], child_firsts, firsts[flat_pos + 1 :]]
+        )
+        children = np.concatenate(
+            [children[:flat_pos], child_ids, children[flat_pos + 1 :]]
+        ).astype(np.int32)
+        segs = pla.fit(firsts, img.cfg.eps_inner, SEG_CAP)
+        max_segs, _ = _inner_split_caps(img)
+        if len(segs) <= NODE_SEGS:
+            groups = [segs]
+        else:
+            per = max_segs  # retrain bound: sparse new nodes
+            groups = [segs[i : i + per] for i in range(0, len(segs), per)]
+        nodes = []
+        for group in groups:
+            base = group[0].start
+            shifted = [
+                pla.Segment(s.start - base, s.count, s.anchor, s.slope)
+                for s in group
+            ]
+            lo = base
+            hi = group[-1].start + group[-1].count
+            nodes.append(
+                _emit_node(img, batch, shifted, firsts[lo:hi], children[lo:hi])
+            )
+        _free_node(img, batch, node)
+        child_ids = np.array(nodes, dtype=np.int32)
+        child_firsts = np.array(
+            [img.node_seg_first[n, 0] for n in nodes], dtype=np.uint64
+        )
+        single_swap_ok = len(nodes) == 1
+        level -= 1

@@ -1,0 +1,221 @@
+"""Stitch command streams — how host-side tree changes reach the device tree
+(Sec 3.2.2 / Figures 6-7).
+
+A stitch batch mirrors the paper's protocol exactly:
+
+  * **COPY** commands write fully-formed new nodes / pivot slots / leaves /
+    data slots into *free* pool rows.  The host has pre-computed every
+    destination id (paper: "the host has pre-calculated every destination
+    address in the DPA memory space"), so applying copies allocates nothing
+    and touches nothing reachable from the current root.
+  * **CONNECT** commands are the pointer swaps that make the copies visible:
+    a parent pivot_child entry, a leaf_next link, or the root id.  They are
+    applied strictly after all copies of the batch.
+
+Atomicity contract (tested): a traversal against the tree state *between*
+``apply_copies`` and ``apply_connects`` sees exactly the old tree; after
+``apply_connects`` exactly the new tree.  Request waves never run in the
+middle of either call (they are single functional updates), which is the
+batched analogue of the paper's in-order stitcher queues + queue fences.
+
+``payload_bytes()`` is the number of bytes that must move host -> device for
+the batch; the benchmarks push it through the measured 120 MB/s host->DPA
+stitch bandwidth to reproduce the paper's INSERT / bulk-load bottleneck
+(Secs 4.2.7-4.2.8).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .keys import split_u64
+from .tree import DeviceTree, NODE_SEGS, SEG_CAP
+from .lookup import InsertBuffers
+from . import insert_buffer
+
+
+@dataclass
+class StitchBatch:
+    """One patch result: COPY rows per pool + CONNECT pointer swaps."""
+
+    # COPY — pool name -> (row indices (n,), row payloads (n, ...)) in numpy.
+    # Pools: node_nseg, node_seg_first(u64), node_seg_slope, node_seg_count,
+    #        node_seg_slot, pivot_keys(u64), pivot_child, leaf_anchor(u64),
+    #        leaf_slope, leaf_count, leaf_slot, leaf_next,
+    #        hbm_keys(u64), hbm_vals(u64)
+    copies: Dict[str, Tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    # CONNECT — list of ("pivot_child", slot, pos, child) |
+    #           ("leaf_next", leaf, next) | ("root", node_id, depth) |
+    #           ("node_seg", node, seg, first,slope,count,slot,nseg)  (in-node
+    #            segment swap used only by value-size-preserving ops)
+    connects: List[tuple] = field(default_factory=list)
+    # leaves whose insert buffers this patch consumed (cleared at connect time)
+    clear_ib: List[int] = field(default_factory=list)
+    # pool rows that become garbage once the connect is visible (epoch-freed)
+    frees: List[Tuple[str, int]] = field(default_factory=list)
+    # pure value updates (no structure change): (slot, values-row u64)
+    value_updates: List[Tuple[int, np.ndarray]] = field(default_factory=list)
+
+    def add_copy(self, pool: str, idx: int, row: np.ndarray) -> None:
+        ids, rows = self.copies.get(pool, (None, None))
+        if ids is None:
+            self.copies[pool] = (
+                np.array([idx], dtype=np.int32),
+                np.asarray(row)[None],
+            )
+        else:
+            self.copies[pool] = (
+                np.append(ids, np.int32(idx)),
+                np.concatenate([rows, np.asarray(row)[None]], axis=0),
+            )
+
+    def payload_bytes(self) -> int:
+        """All bytes the batch moves (host writes + host->DPA stitches)."""
+        return self.dpa_bytes() + self.host_bytes()
+
+    def dpa_bytes(self) -> int:
+        """Bytes crossing the host->DPA-memory path — the 120 MB/s bottleneck
+        of Secs 4.2.7/4.2.8.  Only NIC-resident pools count: nodes, pivots,
+        leaf metadata.  Leaf key/value arrays live in host memory in the
+        paper ("for leaves, only model parameters and DMA addresses are
+        transferred"), so hbm_* copies and value updates are host-local."""
+        total = 0
+        for pool, (ids, rows) in self.copies.items():
+            if pool.startswith("hbm_"):
+                continue
+            total += rows.size * rows.dtype.itemsize + ids.size * 4
+        total += 16 * len(self.connects)
+        return total
+
+    def host_bytes(self) -> int:
+        """Host-memory-local bytes (leaf data writes + value updates)."""
+        total = 0
+        for pool, (ids, rows) in self.copies.items():
+            if pool.startswith("hbm_"):
+                total += rows.size * rows.dtype.itemsize + ids.size * 4
+        for _, vals in self.value_updates:
+            total += vals.size * vals.dtype.itemsize + 8
+        return total
+
+
+_U64_POOLS = {
+    "node_seg_first",
+    "pivot_keys",
+    "leaf_anchor",
+    "hbm_keys",
+    "hbm_vals",
+}
+_F32_POOLS = {"node_seg_slope", "leaf_slope"}
+
+
+def apply_copies(tree: DeviceTree, batch: StitchBatch) -> DeviceTree:
+    """Write COPY rows into free pool rows. Old tree stays fully reachable."""
+    upd = {}
+    for pool, (ids, rows) in batch.copies.items():
+        # node_nseg has no device twin: segment count is implied by KEY_MAX
+        # padding in node_seg_first; skip it.
+        if pool == "node_nseg":
+            continue
+        arr = getattr(tree, pool)
+        if pool in _U64_POOLS:
+            payload = jnp.asarray(split_u64(rows.astype(np.uint64)))
+        elif pool in _F32_POOLS:
+            payload = jnp.asarray(rows, dtype=jnp.float32)
+        else:
+            payload = jnp.asarray(rows, dtype=arr.dtype)
+        upd[pool] = arr.at[jnp.asarray(ids, dtype=jnp.int32)].set(payload)
+    for slot, vals in batch.value_updates:
+        pool = upd.get("hbm_vals", tree.hbm_vals)
+        upd["hbm_vals"] = pool.at[slot].set(
+            jnp.asarray(split_u64(vals.astype(np.uint64)))
+        )
+    return tree._replace(**upd)
+
+
+def apply_connects(
+    tree: DeviceTree, ib: InsertBuffers, batch: StitchBatch
+) -> Tuple[DeviceTree, InsertBuffers]:
+    """Flip the pointers — the visibility point of the whole patch."""
+    upd: Dict[str, jnp.ndarray] = {}
+
+    def cur(name):
+        return upd.get(name, getattr(tree, name))
+
+    for c in batch.connects:
+        kind = c[0]
+        if kind == "pivot_child":
+            _, slot, pos, child = c
+            upd["pivot_child"] = cur("pivot_child").at[slot, pos].set(child)
+        elif kind == "leaf_next":
+            _, leaf, nxt = c
+            upd["leaf_next"] = cur("leaf_next").at[leaf].set(nxt)
+        elif kind == "root":
+            _, node, _depth = c
+            upd["root"] = jnp.asarray(node, dtype=jnp.int32)
+        else:  # pragma: no cover - defensive
+            raise ValueError(f"unknown connect {kind}")
+    tree = tree._replace(**upd)
+    if batch.clear_ib:
+        ib = insert_buffer.clear_rows(ib, np.array(batch.clear_ib, dtype=np.int32))
+    return tree, ib
+
+
+def bulk_load_batch(img) -> StitchBatch:
+    """The bulk-load stitch stream (Sec 3.2.4): COPY every live row, one final
+    root CONNECT.  Used both to assemble the initial device tree and to
+    measure bulk-load payload bytes for the 120 MB/s bandwidth model."""
+    batch = StitchBatch()
+    live_nodes = sorted(set(range(img.node_nseg.shape[0])) - set(img.free_nodes))
+    live_pivots = sorted(set(range(img.pivot_keys.shape[0])) - set(img.free_pivots))
+    live_leaves = sorted(set(range(img.leaf_anchor.shape[0])) - set(img.free_leaves))
+    live_slots = sorted(set(range(img.hbm_keys.shape[0])) - set(img.free_slots))
+    for n in live_nodes:
+        batch.add_copy("node_seg_first", n, img.node_seg_first[n])
+        batch.add_copy("node_seg_slope", n, img.node_seg_slope[n])
+        batch.add_copy("node_seg_count", n, img.node_seg_count[n])
+        batch.add_copy("node_seg_slot", n, img.node_seg_slot[n])
+    for p in live_pivots:
+        batch.add_copy("pivot_keys", p, img.pivot_keys[p])
+        batch.add_copy("pivot_child", p, img.pivot_child[p])
+    for l in live_leaves:
+        batch.add_copy("leaf_anchor", l, np.uint64(img.leaf_anchor[l]))
+        batch.add_copy("leaf_slope", l, np.float64(img.leaf_slope[l]))
+        batch.add_copy("leaf_count", l, np.int32(img.leaf_count[l]))
+        batch.add_copy("leaf_slot", l, np.int32(img.leaf_slot[l]))
+        batch.add_copy("leaf_next", l, np.int32(img.leaf_next[l]))
+    for s in live_slots:
+        batch.add_copy("hbm_keys", s, img.hbm_keys[s])
+        batch.add_copy("hbm_vals", s, img.hbm_vals[s])
+    batch.connects.append(("root", img.root, img.depth))
+    return batch
+
+
+def empty_device_tree(img) -> DeviceTree:
+    """Pool-shaped empty device tree (pre-bulk-load state)."""
+    from .keys import KEY_MAX
+
+    cap_nodes = img.node_nseg.shape[0]
+    cap_pivots = img.pivot_keys.shape[0]
+    cap_leaves = img.leaf_anchor.shape[0]
+    cap_slots = img.hbm_keys.shape[0]
+    pad = np.uint32(0xFFFFFFFF)
+    return DeviceTree(
+        root=jnp.asarray(-1, dtype=jnp.int32),
+        node_seg_first=jnp.full((cap_nodes, NODE_SEGS, 2), pad, dtype=jnp.uint32),
+        node_seg_slope=jnp.zeros((cap_nodes, NODE_SEGS), dtype=jnp.float32),
+        node_seg_count=jnp.zeros((cap_nodes, NODE_SEGS), dtype=jnp.int32),
+        node_seg_slot=jnp.full((cap_nodes, NODE_SEGS), -1, dtype=jnp.int32),
+        pivot_keys=jnp.full((cap_pivots, SEG_CAP, 2), pad, dtype=jnp.uint32),
+        pivot_child=jnp.full((cap_pivots, SEG_CAP), -1, dtype=jnp.int32),
+        leaf_anchor=jnp.full((cap_leaves, 2), pad, dtype=jnp.uint32),
+        leaf_slope=jnp.zeros((cap_leaves,), dtype=jnp.float32),
+        leaf_count=jnp.zeros((cap_leaves,), dtype=jnp.int32),
+        leaf_slot=jnp.full((cap_leaves,), -1, dtype=jnp.int32),
+        leaf_next=jnp.full((cap_leaves,), -1, dtype=jnp.int32),
+        hbm_keys=jnp.full((cap_slots, SEG_CAP, 2), pad, dtype=jnp.uint32),
+        hbm_vals=jnp.zeros((cap_slots, SEG_CAP, 2), dtype=jnp.uint32),
+    )

@@ -1,0 +1,381 @@
+"""DPA-Store facade: the full KV store wired together.
+
+The public surface is the paper's stateless-client protocol: batched GET /
+INSERT / UPDATE / DELETE / RANGE over u64 keys and u64 values.  One call =
+one *request wave* (the batched analogue of a volley of UDP packets hitting
+the DPA thread grid).  Internals:
+
+  request wave -> steering hash -> hot cache probe -> learned-index traversal
+  -> insert buffer / leaf HBM access -> responses
+  full insert buffers -> host patcher -> stitch batch -> COPY, CONNECT
+  -> epoch advance -> quarantined ids reclaimed
+
+Write statuses mirror the wire protocol: OK, RETRY (buffer full — the paper's
+traverser re-enqueue; ``auto_retry`` hides it behind the patch cycle like a
+client library would).
+
+Counters track everything the paper measures (stitched bytes for the
+120 MB/s bound, patch kinds, cache hits, wave counts) so the benchmarks can
+derive MOPS figures through the latency model without instrument-on-demand
+hacks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import hotcache, insert_buffer, lookup, patch, stitch
+from .epoch import EpochManager
+from .hotcache import CacheConfig, CacheState
+from .keys import KEY_MAX, join_u64, limb_hash_np, split_u64
+from .lookup import IB_DEL, IB_PUT, InsertBuffers
+from .tree import TreeConfig, TreeImage, build_image
+
+STATUS_OK = insert_buffer.STATUS_OK
+STATUS_RETRY = insert_buffer.STATUS_RETRY
+
+
+def _pad_pow2(n: int, minimum: int = 8) -> int:
+    p = minimum
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class StoreStats:
+    waves: int = 0
+    gets: int = 0
+    puts: int = 0
+    deletes: int = 0
+    ranges: int = 0
+    cache_hits: int = 0
+    cache_probes: int = 0
+    patches_update: int = 0
+    patches_structural: int = 0
+    new_leaves: int = 0
+    stitched_bytes: int = 0  # total batch bytes (host + DPA paths)
+    stitched_dpa_bytes: int = 0  # host->DPA bytes (the 120 MB/s path)
+    bulk_load_bytes: int = 0
+    bulk_load_dpa_bytes: int = 0
+    retries: int = 0
+    reclaimed: int = 0
+
+
+class DPAStore:
+    """Single-shard DPA-Store (the distributed wrapper lives in
+    ``repro.distributed.kvshard``)."""
+
+    def __init__(
+        self,
+        keys: np.ndarray,
+        vals: np.ndarray,
+        tree_cfg: TreeConfig = TreeConfig(),
+        cache_cfg: Optional[CacheConfig] = CacheConfig(),
+        bulk_load_via_stitch: bool = False,
+        epoch_grace: int = 2,
+    ):
+        keys = np.asarray(keys, dtype=np.uint64)
+        vals = np.asarray(vals, dtype=np.uint64)
+        assert np.all(keys < KEY_MAX), "2^64-1 is a reserved sentinel"
+        self.cfg = tree_cfg
+        self.image: TreeImage = build_image(keys, vals, tree_cfg)
+        bulk = stitch.bulk_load_batch(self.image)
+        self.stats = StoreStats()
+        self.stats.bulk_load_bytes = bulk.payload_bytes()
+        self.stats.bulk_load_dpa_bytes = bulk.dpa_bytes()
+        if bulk_load_via_stitch:
+            tree0 = stitch.empty_device_tree(self.image)
+            tree0 = stitch.apply_copies(tree0, bulk)
+            self.tree, _ = stitch.apply_connects(
+                tree0,
+                lookup.make_insert_buffers(
+                    self.image.leaf_anchor.shape[0], tree_cfg.ib_cap
+                ),
+                bulk,
+            )
+        else:
+            self.tree = self.image.to_device()
+        self.ib: InsertBuffers = lookup.make_insert_buffers(
+            self.image.leaf_anchor.shape[0], tree_cfg.ib_cap
+        )
+        self.cache_cfg = cache_cfg
+        self.cache: Optional[CacheState] = (
+            hotcache.make_cache(cache_cfg) if cache_cfg else None
+        )
+        self.epochs = EpochManager(grace=epoch_grace)
+
+    # ------------------------------------------------------------------ util
+    @property
+    def depth(self) -> int:
+        return self.image.depth
+
+    def _limbs(self, keys_u64: np.ndarray, pad_to: int):
+        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        n = keys_u64.size
+        padded = np.full(pad_to, 0, dtype=np.uint64)
+        padded[:n] = keys_u64
+        limbs = split_u64(padded)
+        active = np.zeros(pad_to, dtype=bool)
+        active[:n] = True
+        return (
+            jnp.asarray(limbs[:, 0]),
+            jnp.asarray(limbs[:, 1]),
+            jnp.asarray(active),
+        )
+
+    def _steer(self, khi, klo):
+        if self.cache_cfg is None:
+            return jnp.zeros_like(khi, dtype=jnp.int32)
+        return hotcache.steer(khi, klo, self.cache_cfg.n_threads)
+
+    def _end_wave(self):
+        self.stats.waves += 1
+        self.epochs.advance()
+        self.stats.reclaimed += self.epochs.reclaim(self.image)
+
+    # ------------------------------------------------------------------ GET
+    def get(self, keys_u64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched point lookup: returns (values u64, found bool)."""
+        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        n = keys_u64.size
+        B = _pad_pow2(n)
+        khi, klo, active = self._limbs(keys_u64, B)
+        use_cache = self.cache is not None
+        if use_cache:
+            tid = self._steer(khi, klo)
+            c_hit, c_vhi, c_vlo = hotcache.probe(
+                self.cache, tid, khi, klo, cfg=self.cache_cfg
+            )
+        vhi, vlo, found = lookup.get_batch(
+            self.tree,
+            self.ib,
+            khi,
+            klo,
+            depth=self.depth,
+            eps_inner=self.cfg.eps_inner,
+            eps_leaf=self.cfg.eps_leaf,
+        )
+        if use_cache:
+            out_vhi = jnp.where(c_hit, c_vhi, vhi)
+            out_vlo = jnp.where(c_hit, c_vlo, vlo)
+            out_found = c_hit | found
+            eligible = found & ~c_hit & active
+            self.cache = hotcache.admit(
+                self.cache,
+                tid,
+                khi,
+                klo,
+                vhi,
+                vlo,
+                eligible,
+                cfg=self.cache_cfg,
+                wave=self.stats.waves & 0xFFFFFFFF,
+            )
+            self.stats.cache_hits += int(jnp.sum(c_hit & active))
+            self.stats.cache_probes += n
+        else:
+            out_vhi, out_vlo, out_found = vhi, vlo, found
+        self.stats.gets += n
+        self._end_wave()
+        vals = join_u64(
+            np.stack(
+                [np.asarray(out_vhi)[:n], np.asarray(out_vlo)[:n]], axis=-1
+            )
+        )
+        return vals, np.asarray(out_found)[:n]
+
+    # ---------------------------------------------------------------- writes
+    def _write(
+        self, keys_u64, vals_u64, op_code: int, auto_retry: bool = True
+    ) -> np.ndarray:
+        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        vals_u64 = (
+            np.zeros_like(keys_u64)
+            if vals_u64 is None
+            else np.asarray(vals_u64, dtype=np.uint64)
+        )
+        n = keys_u64.size
+        statuses = np.full(n, STATUS_RETRY, dtype=np.int32)
+        pending = np.arange(n)
+        first = True
+        stalled = 0
+        while pending.size and (auto_retry or first):
+            first = False
+            st = self._write_wave(keys_u64[pending], vals_u64[pending], op_code)
+            statuses[pending] = st
+            self._process_full_leaves()
+            next_pending = pending[st == STATUS_RETRY]
+            if next_pending.size == pending.size:
+                # no lane landed: drain the responsible buffers so the
+                # re-send can succeed (paper: client re-sends after timeout,
+                # by which time the patch cycle has emptied the buffer)
+                stalled += 1
+                self._flush_leaves_of(keys_u64[next_pending])
+                if stalled >= 3:  # defensive; cannot happen after a flush
+                    break
+            else:
+                stalled = 0
+            if next_pending.size:
+                self.stats.retries += next_pending.size
+            pending = next_pending
+        return statuses
+
+    def _write_wave(self, keys_u64, vals_u64, op_code: int) -> np.ndarray:
+        n = keys_u64.size
+        B = _pad_pow2(n)
+        khi, klo, active = self._limbs(keys_u64, B)
+        vv = np.zeros(B, dtype=np.uint64)
+        vv[:n] = vals_u64
+        vlimbs = split_u64(vv)
+        vhi = jnp.asarray(vlimbs[:, 0])
+        vlo = jnp.asarray(vlimbs[:, 1])
+        leaf = lookup.traverse(
+            self.tree, khi, klo, depth=self.depth, eps_inner=self.cfg.eps_inner
+        )
+        op = jnp.full(B, op_code, dtype=jnp.int32)
+        self.ib, status = insert_buffer.append_wave(
+            self.ib, leaf, khi, klo, vhi, vlo, op, active
+        )
+        if self.cache is not None:
+            # UPDATE/DELETE invalidate cached entries (paper Sec 3.1.2)
+            tid = self._steer(khi, klo)
+            self.cache = hotcache.invalidate(
+                self.cache, tid, khi, klo, active, cfg=self.cache_cfg
+            )
+        self._end_wave()
+        return np.asarray(status)[:n]
+
+    def put(self, keys_u64, vals_u64, auto_retry: bool = True) -> np.ndarray:
+        """INSERT or UPDATE (the buffer treats both as PUT; the patcher
+        classifies the patch)."""
+        st = self._write(keys_u64, vals_u64, IB_PUT, auto_retry)
+        self.stats.puts += np.asarray(keys_u64).size
+        return st
+
+    insert = put
+    update = put
+
+    def delete(self, keys_u64, auto_retry: bool = True) -> np.ndarray:
+        st = self._write(keys_u64, None, IB_DEL, auto_retry)
+        self.stats.deletes += np.asarray(keys_u64).size
+        return st
+
+    # ---------------------------------------------------------------- range
+    def range(
+        self, start_keys_u64, limit: int = 10, max_leaves: int = 4
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """RANGE(k_min, limit) per request: returns (keys (B, limit), vals
+        (B, limit), count (B,)) — ascending, live entries only."""
+        start_keys_u64 = np.asarray(start_keys_u64, dtype=np.uint64)
+        n = start_keys_u64.size
+        B = _pad_pow2(n)
+        khi, klo, _ = self._limbs(start_keys_u64, B)
+        rk, rv, valid = lookup.range_batch(
+            self.tree,
+            self.ib,
+            khi,
+            klo,
+            depth=self.depth,
+            eps_inner=self.cfg.eps_inner,
+            limit=limit,
+            max_leaves=max_leaves,
+        )
+        self.stats.ranges += n
+        self._end_wave()
+        rk = np.asarray(rk)[:n]
+        rv = np.asarray(rv)[:n]
+        valid = np.asarray(valid)[:n]
+        keys_out = join_u64(rk)
+        vals_out = join_u64(rv)
+        keys_out[~valid] = 0
+        vals_out[~valid] = 0
+        return keys_out, vals_out, valid.sum(axis=1)
+
+    # ------------------------------------------------------------ patch path
+    def _process_full_leaves(self) -> int:
+        counts = np.asarray(self.ib.count)
+        full = np.where(counts >= self.cfg.ib_cap)[0]
+        for leaf in full:
+            self._patch_leaf(int(leaf))
+        return full.size
+
+    def _flush_leaves_of(self, keys_u64: np.ndarray) -> None:
+        """Patch the (non-empty) buffers responsible for RETRYing keys."""
+        for k in np.asarray(keys_u64, dtype=np.uint64):
+            leaf, _ = self.image.find_leaf(k)
+            if int(np.asarray(self.ib.count)[leaf]) > 0:
+                self._patch_leaf(int(leaf))
+
+    def flush(self) -> int:
+        """Patch every non-empty insert buffer (test/benchmark helper)."""
+        counts = np.asarray(self.ib.count)
+        leaves = np.where(counts > 0)[0]
+        for leaf in leaves:
+            self._patch_leaf(int(leaf))
+        return leaves.size
+
+    def _patch_leaf(self, leaf: int) -> None:
+        cnt = int(np.asarray(self.ib.count)[leaf])
+        if cnt == 0:
+            return
+        kk = join_u64(np.asarray(self.ib.keys)[leaf, :cnt])
+        vv = join_u64(np.asarray(self.ib.vals)[leaf, :cnt])
+        oo = np.asarray(self.ib.op)[leaf, :cnt]
+        entries = [(int(k), int(v), int(o)) for k, v, o in zip(kk, vv, oo)]
+        result = patch.plan_patch(self.image, leaf, entries)
+        # COPY then CONNECT — the stitch atomicity contract
+        self.tree = stitch.apply_copies(self.tree, result.batch)
+        self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, result.batch)
+        for pool, idx in result.batch.frees:
+            self.epochs.defer_free(pool, idx)
+        # Patches run with no wave in flight (host-serialized), so every
+        # traverser has trivially "moved on": advancing the epoch here is the
+        # degenerate-but-sound case of the paper's packet-counter epoch.
+        self.epochs.advance()
+        self.stats.reclaimed += self.epochs.reclaim(self.image)
+        self.stats.stitched_bytes += result.batch.payload_bytes()
+        self.stats.stitched_dpa_bytes += result.batch.dpa_bytes()
+        if result.kind == "update":
+            self.stats.patches_update += 1
+        else:
+            self.stats.patches_structural += 1
+            self.stats.new_leaves += len(result.new_leaves)
+
+    # ------------------------------------------------------------- analysis
+    def memory_report(self) -> Dict[str, float]:
+        """Table-1 style accounting: index overhead vs raw KV bytes."""
+        idx = self.image.index_bytes()
+        data = self.image.data_bytes()
+        return {
+            "index_bytes": idx,
+            "data_bytes": data,
+            "rel_overhead": idx / max(data, 1),
+            "nic_bytes_total": idx + data,  # what would sit in DPA memory if
+            # values were NIC-resident; DPA-Store keeps values host-side
+            "dpa_resident_bytes": idx,
+        }
+
+    def items(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All live pairs in key order (stitched tree + buffered writes)."""
+        base = {}
+        for k, v in self.image.iter_items():
+            base[int(k)] = int(v)
+        counts = np.asarray(self.ib.count)
+        ops = np.asarray(self.ib.op)
+        ibk = np.asarray(self.ib.keys)
+        ibv = np.asarray(self.ib.vals)
+        for leaf in np.where(counts > 0)[0]:
+            for j in range(int(counts[leaf])):
+                k = int(join_u64(ibk[leaf, j]))
+                if ops[leaf, j] == IB_PUT:
+                    base[k] = int(join_u64(ibv[leaf, j]))
+                elif ops[leaf, j] == IB_DEL:
+                    base.pop(k, None)
+        ks = np.array(sorted(base.keys()), dtype=np.uint64)
+        vs = np.array([base[int(k)] for k in ks], dtype=np.uint64)
+        return ks, vs

@@ -1,0 +1,95 @@
+"""Elastic scaling: re-mesh planning + restart contract.
+
+The checkpoint layout is mesh-independent (full logical arrays), so scaling
+is: pick the new mesh -> recompute shardings -> restore -> continue.  This
+module owns the "pick the new mesh" part and the invariants that make the
+restart exact:
+
+  * global batch stays fixed (per-host batch changes) so the loss
+    trajectory is unchanged;
+  * the data pipeline is step-indexed, so re-slicing is a pure function of
+    (step, shard, n_shards);
+  * model-axis size must keep dividing the sharded dims — candidate meshes
+    are filtered accordingly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def candidate_meshes(n_devices: int) -> List[MeshPlan]:
+    """(data, model) factorisations, model <= 64 (TP beyond one pod's worth
+    of fast links is never worth it)."""
+    out = []
+    m = 1
+    while m <= min(64, n_devices):
+        if n_devices % m == 0:
+            out.append(MeshPlan((n_devices // m, m), ("data", "model")))
+        m *= 2
+    return out
+
+
+def plan_remesh(
+    cfg: ArchConfig,
+    n_devices: int,
+    global_batch: int,
+    prefer_model: Optional[int] = None,
+) -> MeshPlan:
+    """Choose the mesh for a changed device count.
+
+    Constraints: model axis must divide d_ff / head counts actually sharded;
+    data axis must divide the global batch.  Preference: keep the model axis
+    as before (minimises resharding traffic), else the largest feasible.
+    """
+
+    def ok(plan: MeshPlan) -> bool:
+        data, model = plan.shape
+        if global_batch % data != 0:
+            return False
+        if cfg.d_ff and cfg.d_ff % model != 0:
+            return False
+        if cfg.n_heads and cfg.n_heads % model != 0:
+            return False
+        if cfg.vocab_size % model != 0:
+            return False
+        return True
+
+    cands = [p for p in candidate_meshes(n_devices) if ok(p)]
+    if not cands:
+        raise ValueError(f"no feasible mesh for {n_devices} devices")
+    if prefer_model is not None:
+        for p in cands:
+            if p.shape[1] == prefer_model:
+                return p
+    return max(cands, key=lambda p: p.shape[1])
+
+
+def restart_report(old_devices: int, new_devices: int, plan: MeshPlan) -> dict:
+    return {
+        "old_devices": old_devices,
+        "new_devices": new_devices,
+        "mesh": {"shape": plan.shape, "axes": plan.axes},
+        "contract": [
+            "restore checkpoint (mesh-independent layout)",
+            "recompute param/opt shardings for the new mesh",
+            "data pipeline re-slices by (step, shard, n_shards)",
+            "global batch unchanged -> identical loss trajectory",
+        ],
+    }

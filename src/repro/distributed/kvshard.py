@@ -1,0 +1,209 @@
+"""Distributed DPA-Store: request routing across shards via shard_map.
+
+The paper steers requests to DPA threads by key hash (UDP port selection).
+Scaled out, the same pattern shards the store over the mesh 'data' axis:
+
+  clients -> hash(key) % n_shards -> all_to_all -> owner shard's
+  traversal (hot cache -> learned index -> leaf) -> all_to_all back
+
+Each shard owns an independent sub-store (its own tree pools, insert
+buffers, caches) covering its hash slice of the key space — clients stay
+stateless (they only hash).  The exchange uses fixed per-shard-pair
+capacity with overflow -> RETRY status, the batched analogue of the paper's
+receive-queue overflow handling (Sec 3.1.3).
+
+Two execution paths share the same routing math:
+
+  * ``serve_wave_sharded`` — shard_map over the production mesh (the
+    dry-run lowers this: proof the KV service itself distributes);
+  * ``serve_wave_emulated`` — vmap over the shard dim on one device
+    (CPU tests; bit-identical routing results).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import lookup
+from repro.core.keys import limb_hash
+from repro.core.tree import DeviceTree
+from repro.core.lookup import InsertBuffers
+
+SALT_SHARD = 11
+
+
+def shard_of(khi, klo, n_shards: int):
+    return (limb_hash(khi, klo, SALT_SHARD) % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def _bucketize(khi, klo, n_shards: int, cap: int):
+    """Group a shard's local requests by destination shard into fixed
+    (n_shards, cap) buckets.  Returns (bk_hi, bk_lo, origin_idx, valid)."""
+    W = khi.shape[0]
+    dest = shard_of(khi, klo, n_shards)
+    order = jnp.argsort(dest, stable=True)
+    dest_s = dest[order]
+    pos = jnp.arange(W, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool), dest_s[1:] != dest_s[:-1]])
+    group_start = jax.lax.cummax(jnp.where(first, pos, 0))
+    rank = pos - group_start
+    ok = rank < cap
+    slot = jnp.where(ok, dest_s * cap + rank, n_shards * cap)
+    bk_hi = jnp.zeros((n_shards * cap,), jnp.uint32).at[slot].set(khi[order], mode="drop")
+    bk_lo = jnp.zeros((n_shards * cap,), jnp.uint32).at[slot].set(klo[order], mode="drop")
+    origin = jnp.full((n_shards * cap,), -1, jnp.int32).at[slot].set(
+        order.astype(jnp.int32), mode="drop"
+    )
+    valid = jnp.zeros((n_shards * cap,), bool).at[slot].set(ok[order], mode="drop")
+    return (
+        bk_hi.reshape(n_shards, cap),
+        bk_lo.reshape(n_shards, cap),
+        origin.reshape(n_shards, cap),
+        valid.reshape(n_shards, cap),
+    )
+
+
+def _local_get(tree, ib, khi, klo, *, depth, eps_inner, eps_leaf):
+    return lookup.get_batch(
+        tree, ib, khi, klo, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+    )
+
+
+def make_serve_wave(n_shards: int, cap: int, *, depth: int, eps_inner: int, eps_leaf: int):
+    """Builds the per-shard wave body (used by both execution paths).
+
+    Inputs per shard: local request tile (W,) + the shard's store state.
+    The all_to_all exchange is abstracted as a callable so the emulated path
+    can transpose in-memory.
+    """
+
+    def body(tree, ib, khi, klo, all_to_all):
+        bk_hi, bk_lo, origin, valid = _bucketize(khi, klo, n_shards, cap)
+        # exchange: row d of my buckets goes to shard d
+        rq_hi = all_to_all(bk_hi)  # (n_shards, cap) requests I now own
+        rq_lo = all_to_all(bk_lo)
+        vhi, vlo, found = _local_get(
+            tree,
+            ib,
+            rq_hi.reshape(-1),
+            rq_lo.reshape(-1),
+            depth=depth,
+            eps_inner=eps_inner,
+            eps_leaf=eps_leaf,
+        )
+        # route responses back
+        rs_vhi = all_to_all(vhi.reshape(n_shards, cap))
+        rs_vlo = all_to_all(vlo.reshape(n_shards, cap))
+        rs_fnd = all_to_all(found.reshape(n_shards, cap).astype(jnp.int32))
+        W = khi.shape[0]
+        out_vhi = jnp.zeros((W,), jnp.uint32)
+        out_vlo = jnp.zeros((W,), jnp.uint32)
+        out_fnd = jnp.zeros((W,), jnp.int32)
+        out_ok = jnp.zeros((W,), bool)
+        flat_origin = origin.reshape(-1)
+        safe = jnp.where(flat_origin >= 0, flat_origin, W)
+        out_vhi = out_vhi.at[safe].set(rs_vhi.reshape(-1), mode="drop")
+        out_vlo = out_vlo.at[safe].set(rs_vlo.reshape(-1), mode="drop")
+        out_fnd = out_fnd.at[safe].set(rs_fnd.reshape(-1), mode="drop")
+        out_ok = out_ok.at[safe].set(valid.reshape(-1), mode="drop")
+        return out_vhi, out_vlo, out_fnd.astype(bool), out_ok
+
+    return body
+
+
+def serve_wave_emulated(
+    stacked_tree: DeviceTree,
+    stacked_ib: InsertBuffers,
+    khi: jnp.ndarray,  # (n_shards, W)
+    klo: jnp.ndarray,
+    *,
+    cap: int,
+    depth: int,
+    eps_inner: int,
+    eps_leaf: int,
+):
+    """Single-device emulation: vmap over the shard dim; the exchange is a
+    transpose of the (shard, dest, cap) bucket tensor."""
+    n_shards = khi.shape[0]
+    body = make_serve_wave(
+        n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+    )
+
+    # The exchange needs cross-shard data, which vmap can't see — so run the
+    # phases manually: bucketize all shards, transpose, serve, transpose.
+    bk = jax.vmap(lambda h, l: _bucketize(h, l, n_shards, cap))(khi, klo)
+    bk_hi, bk_lo, origin, valid = bk
+    rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
+    rq_lo = jnp.swapaxes(bk_lo, 0, 1)
+
+    def per_shard(tree, ib, h, l):
+        return _local_get(
+            tree,
+            ib,
+            h.reshape(-1),
+            l.reshape(-1),
+            depth=depth,
+            eps_inner=eps_inner,
+            eps_leaf=eps_leaf,
+        )
+
+    vhi, vlo, found = jax.vmap(per_shard)(
+        stacked_tree, stacked_ib, rq_hi, rq_lo
+    )
+    # responses back: (dest, src, cap) -> (src, dest, cap)
+    rs_vhi = jnp.swapaxes(vhi.reshape(n_shards, n_shards, cap), 0, 1)
+    rs_vlo = jnp.swapaxes(vlo.reshape(n_shards, n_shards, cap), 0, 1)
+    rs_fnd = jnp.swapaxes(found.reshape(n_shards, n_shards, cap), 0, 1)
+
+    W = khi.shape[1]
+
+    def scatter_back(origin_s, valid_s, vh, vl, fd):
+        safe = jnp.where(origin_s.reshape(-1) >= 0, origin_s.reshape(-1), W)
+        o_vhi = jnp.zeros((W,), jnp.uint32).at[safe].set(vh.reshape(-1), mode="drop")
+        o_vlo = jnp.zeros((W,), jnp.uint32).at[safe].set(vl.reshape(-1), mode="drop")
+        o_fnd = jnp.zeros((W,), bool).at[safe].set(fd.reshape(-1), mode="drop")
+        o_ok = jnp.zeros((W,), bool).at[safe].set(valid_s.reshape(-1), mode="drop")
+        return o_vhi, o_vlo, o_fnd, o_ok
+
+    return jax.vmap(scatter_back)(origin, valid, rs_vhi, rs_vlo, rs_fnd)
+
+
+def serve_wave_sharded(mesh: Mesh, stacked_tree, stacked_ib, *, cap, depth, eps_inner, eps_leaf):
+    """shard_map version over the mesh 'data' axis (dry-run / production).
+
+    Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) with state and
+    requests sharded on their leading shard dim."""
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = mesh.shape["data"]
+    body = make_serve_wave(
+        n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+    )
+
+    def a2a(x):
+        # x (n_shards, cap) per shard: row d -> shard d
+        return jax.lax.all_to_all(
+            x[None], "data", split_axis=1, concat_axis=0, tiled=False
+        ).reshape(x.shape)
+
+    def per_shard(tree, ib, khi, klo):
+        tree = jax.tree.map(lambda a: a[0], tree)
+        ib = jax.tree.map(lambda a: a[0], ib)
+        out = body(tree, ib, khi[0], klo[0], a2a)
+        return tuple(o[None] for o in out)
+
+    state_specs = jax.tree.map(lambda _: P("data"), (stacked_tree, stacked_ib))
+    fn = shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(state_specs[0], state_specs[1], P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P("data"), P("data")),
+        check_rep=False,
+    )
+    return fn

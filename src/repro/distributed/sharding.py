@@ -1,0 +1,209 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Baseline placement (the §Roofline baseline; §Perf iterates from here):
+
+  * tensor parallelism over ``model``: attention heads / d_ff / vocab;
+  * expert parallelism over ``model`` when n_experts divides the axis,
+    otherwise TP inside each expert;
+  * data parallelism over ``data`` (and ``pod`` when present): batch dim of
+    activations; ZeRO-style extra sharding of optimizer moments over
+    ``data`` (params stay TP-sharded — GSPMD all-gathers them per step);
+  * decode caches: batch over DP axes; for long_500k (batch=1) the cache
+    seq dim shards over ``data`` — context parallelism, with GSPMD
+    inserting the cross-shard attention collectives (the §Perf pass
+    replaces this with an explicit LSE-merge shard_map).
+
+Rules are *name-based* over the param tree paths, with the leading
+superblock group dim of ``blocks`` leaves passed through unsharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _maybe(axis: str, dim: int, mesh: Mesh) -> Optional[str]:
+    """Shard only when divisible — uneven GSPMD padding wastes memory on
+    exactly the big cells where it hurts."""
+    return axis if dim % _axis(mesh, axis) == 0 else None
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ArchConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (path is the joined key string)."""
+    in_blocks = ".blocks." in path or path.startswith("blocks.")
+    lead: Tuple[Optional[str], ...] = (None,) if in_blocks else ()
+    body = shape[1:] if in_blocks else shape
+
+    def ps(*axes):
+        return P(*(lead + axes))
+
+    if "embed" in path:
+        return P(_maybe("model", shape[0], mesh), None)
+    if "lm_head" in path:
+        return P(None, _maybe("model", shape[1], mesh))
+    if "final_norm" in path:
+        return P(None)
+    if ".attn." in path or "attn" in path.split(".")[-2:]:
+        # shard the flat (heads*hd) dim only when the HEAD COUNT divides the
+        # axis — otherwise the cut lands inside head_dim and every attention
+        # einsum reshards (glm4's kv=2 heads taught us this the hard way).
+        if path.endswith("wo"):
+            return ps(_maybe("model", cfg.n_heads, mesh), None)
+        if path.endswith("wq"):
+            return ps(None, _maybe("model", cfg.n_heads, mesh))
+        if path.endswith(("wk", "wv")):
+            return ps(None, _maybe("model", cfg.n_kv_heads, mesh))
+    if "moe" in path:
+        if path.endswith("router"):
+            return ps(None, None)
+        ep = _maybe("model", body[0], mesh)  # expert dim
+        if path.endswith(("w_gate", "w_up")):
+            return ps(ep, None, None if ep else _maybe("model", body[2], mesh))
+        if path.endswith("w_down"):
+            return ps(ep, None if ep else _maybe("model", body[1], mesh), None)
+    if "mlp" in path:  # dense or shared expert
+        if path.endswith(("w_gate", "w_up")):
+            return ps(None, _maybe("model", body[1], mesh))
+        if path.endswith("w_down"):
+            return ps(_maybe("model", body[0], mesh), None)
+    if "mamba" in path:
+        if path.endswith("in_proj"):
+            return ps(None, _maybe("model", body[1], mesh))
+        if path.endswith("out_proj"):
+            return ps(_maybe("model", body[0], mesh), None)
+        if path.endswith("conv_w"):
+            return ps(None, _maybe("model", body[1], mesh))
+        if path.endswith(("conv_b", "norm_w")):
+            return ps(_maybe("model", body[0], mesh))
+        if path.endswith(("A_log", "D", "dt_bias")):
+            return ps(_maybe("model", body[0], mesh))
+    if path.endswith(("ln1", "ln2")):
+        return ps(None)
+    # fallback: replicate
+    return P(*((None,) * len(shape)))
+
+
+def _path_str(path) -> str:
+    return ".".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+    )
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh):
+    def spec(path, leaf):
+        sp = param_spec(_path_str(path), leaf.shape, cfg, mesh)
+        if cfg.fsdp:
+            # ZeRO-3/FSDP: params fully sharded; GSPMD all-gathers per use
+            sp = zero_extend(sp, leaf.shape, mesh)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def zero_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO/FSDP: additionally shard one unsharded, divisible dim over
+    'data' (no-op if the spec already uses the data axis)."""
+    d = _axis(mesh, "data")
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    if any(ax == "data" or (isinstance(ax, tuple) and "data" in ax) for ax in axes):
+        return P(*axes)
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if ax is None and dim % d == 0 and dim >= d:
+            axes[i] = "data"
+            return P(*axes)
+    return P(*axes)
+
+
+def opt_specs(cfg: ArchConfig, opt_shape, pspecs, mesh: Mesh, zero: bool = True):
+    """Specs for the optimizer state tree: moments follow their parameter
+    (spec truncated/validated against the moment's actual shape — adafactor
+    vr/vc drop trailing dims), optionally ZeRO-extended over 'data'."""
+    out = {}
+    for key, sub in opt_shape.items():
+        if key == "step":
+            out[key] = P()
+        elif key in ("m", "v", "vr", "vc"):
+            out[key] = jax.tree.map(
+                lambda leaf, sp: _fit_spec(sp, leaf, mesh, zero),
+                sub,
+                pspecs,
+            )
+        else:
+            out[key] = jax.tree.map(lambda leaf: P(*((None,) * leaf.ndim)), sub)
+    return out
+
+
+def _fit_spec(sp: P, leaf, mesh: Mesh, zero: bool) -> P:
+    axes = list(sp)[: leaf.ndim] + [None] * max(0, leaf.ndim - len(sp))
+    for i, (ax, dim) in enumerate(zip(axes, leaf.shape)):
+        if ax is not None and (dim % _axis(mesh, ax) != 0):
+            axes[i] = None
+    spec = P(*axes)
+    return zero_extend(spec, leaf.shape, mesh) if zero else spec
+
+
+def batch_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Optional[P]]:
+    ba = batch_axes(mesh)
+    tok = P(ba, None)
+    if cfg.frontend != "none":
+        return {"tokens": None, "embeds": P(ba, None, None), "labels": tok}
+    return {"tokens": tok, "embeds": None, "labels": tok}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, cache_shape):
+    """Decode-cache specs: batch over DP; context-parallel seq for batch=1;
+    heads/state over model where divisible."""
+    ba = batch_axes(mesh)
+    dp = int(np.prod([_axis(mesh, a) for a in ba]))
+    batch_sharded = shape.global_batch % dp == 0 and shape.global_batch >= dp
+
+    def spec_of(path, leaf):
+        p = _path_str(path)
+        last = p.split(".")[-1]
+        shp = leaf.shape
+        if last in ("k", "v"):  # (G, B, S, Hkv, hd)
+            b_ax = ba if batch_sharded else None
+            s_ax = None
+            if not batch_sharded and shp[2] % _axis(mesh, "data") == 0 and shp[2] > 1:
+                s_ax = "data"  # context parallelism for batch=1 long decode
+            return P(None, b_ax, s_ax, _maybe("model", shp[3], mesh), None)
+        if last == "h":  # (G, B, H, P, N)
+            return P(
+                None,
+                ba if batch_sharded else None,
+                _maybe("model", shp[2], mesh),
+                None,
+                None,
+            )
+        if last == "conv":  # (G, B, K-1, ch)
+            return P(
+                None,
+                ba if batch_sharded else None,
+                None,
+                _maybe("model", shp[3], mesh),
+            )
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )

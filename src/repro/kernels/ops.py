@@ -1,0 +1,232 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+``impl='auto'`` selects the Pallas kernels on TPU backends and the pure-jnp
+reference path on CPU (this container), so the same store code runs in both
+worlds.  ``impl='pallas_interpret'`` forces the kernel bodies through the
+Pallas interpreter — that is what the correctness sweeps use.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hotcache import CacheConfig
+from repro.core.keys import limb_le
+from repro.core.lookup import IB_DEL, IB_EMPTY, InsertBuffers
+from . import ref as _ref
+from .traverse import get_pallas
+from .cache_probe import probe_pallas
+from .range_scan import range_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _pad_to(arr, mult, fill=0):
+    b = arr.shape[0]
+    rem = (-b) % mult
+    if rem == 0:
+        return arr, b
+    pad = jnp.full((rem,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0), b
+
+
+def get(
+    tree,
+    ib,
+    khi,
+    klo,
+    *,
+    depth: int,
+    eps_inner: int,
+    eps_leaf: int,
+    impl: str = "auto",
+    block_requests: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.get(
+            tree, ib, khi, klo, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+        )
+    khi_p, n = _pad_to(khi, block_requests)
+    klo_p, _ = _pad_to(klo, block_requests)
+    vhi, vlo, found = get_pallas(
+        tree,
+        ib,
+        khi_p,
+        klo_p,
+        depth=depth,
+        eps_inner=eps_inner,
+        eps_leaf=eps_leaf,
+        block_requests=block_requests,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return vhi[:n], vlo[:n], found[:n]
+
+
+def cache_probe(
+    cache,
+    tid,
+    khi,
+    klo,
+    *,
+    cfg: CacheConfig,
+    impl: str = "auto",
+    block_requests: int = 128,
+):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.cache_probe(cache, tid, khi, klo, cfg=cfg)
+    khi_p, n = _pad_to(khi, block_requests)
+    klo_p, _ = _pad_to(klo, block_requests)
+    tid_p, _ = _pad_to(tid, block_requests)
+    hit, vhi, vlo = probe_pallas(
+        cache,
+        tid_p,
+        khi_p,
+        klo_p,
+        cfg=cfg,
+        block_requests=block_requests,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return hit[:n], vhi[:n], vlo[:n]
+
+
+def range_scan(
+    tree,
+    ib: InsertBuffers,
+    khi,
+    klo,
+    *,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+    impl: str = "auto",
+    block_requests: int = 64,
+):
+    """Full RANGE op: traversal to the start leaf, Pallas leaf-chain scan,
+    jnp insert-buffer merge epilogue.  Output layout == ref.range_scan."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.range_scan(
+            tree,
+            ib,
+            khi,
+            klo,
+            depth=depth,
+            eps_inner=eps_inner,
+            limit=limit,
+            max_leaves=max_leaves,
+        )
+    from repro.core import lookup
+
+    khi_p, n = _pad_to(khi, block_requests)
+    klo_p, _ = _pad_to(klo, block_requests)
+    start = lookup.traverse(tree, khi_p, klo_p, depth=depth, eps_inner=eps_inner)
+    cap = ib.keys.shape[1]
+    # over-collect so buffered deletes can never starve the final cut
+    inner_limit = limit + max_leaves * cap
+    kh, kl, vh, vl, cnt, visited = range_pallas(
+        tree,
+        start,
+        khi_p,
+        klo_p,
+        limit=inner_limit,
+        max_leaves=max_leaves,
+        block_requests=block_requests,
+        interpret=(impl == "pallas_interpret"),
+    )
+    out = _merge_ib_epilogue(
+        ib, khi_p, klo_p, kh, kl, vh, vl, cnt, visited, limit=limit
+    )
+    return tuple(o[:n] for o in out)
+
+
+def _merge_ib_epilogue(
+    ib: InsertBuffers, khi, klo, kh, kl, vh, vl, cnt, visited, *, limit: int
+):
+    """Merge insert-buffer entries of the visited leaves into the stitched
+    scan results (newest wins, tombstones delete) — the DPA-side temp-buffer
+    merge of the paper, vectorised."""
+    B, L = kh.shape
+    cap = ib.keys.shape[1]
+    M = visited.shape[1]
+    pad = jnp.uint32(0xFFFFFFFF)
+
+    # stitched part: priority 0
+    s_valid = jnp.arange(L)[None, :] < cnt[:, None]
+    s_prio = jnp.zeros((B, L), dtype=jnp.int32)
+    s_del = jnp.zeros((B, L), dtype=bool)
+
+    # buffered part: gather (B, M*cap)
+    leaf_safe = jnp.maximum(visited, 0)  # (B, M)
+    bk = ib.keys[leaf_safe]  # (B, M, cap, 2)
+    bv = ib.vals[leaf_safe]
+    bo = ib.op[leaf_safe]
+    bc = ib.count[leaf_safe]
+    alive = (visited >= 0)[:, :, None]
+    pos = jnp.arange(cap)[None, None, :]
+    b_valid = alive & (pos < bc[:, :, None]) & (bo != IB_EMPTY)
+    # only keys >= k_min participate
+    b_valid &= limb_le(khi[:, None, None], klo[:, None, None], bk[..., 0], bk[..., 1])
+    b_prio = jnp.broadcast_to(
+        jnp.arange(1, cap + 1, dtype=jnp.int32)[None, None, :], bo.shape
+    )
+    b_del = bo == IB_DEL
+
+    def flat(x):
+        return x.reshape(B, -1)
+
+    keys_h = jnp.concatenate([kh, flat(bk[..., 0])], axis=1)
+    keys_l = jnp.concatenate([kl, flat(bk[..., 1])], axis=1)
+    vals_h = jnp.concatenate([vh, flat(bv[..., 0])], axis=1)
+    vals_l = jnp.concatenate([vl, flat(bv[..., 1])], axis=1)
+    valid = jnp.concatenate([s_valid, flat(b_valid)], axis=1)
+    prio = jnp.concatenate([s_prio, flat(b_prio)], axis=1)
+    is_del = jnp.concatenate([s_del, flat(b_del)], axis=1)
+
+    keys_h = jnp.where(valid, keys_h, pad)
+    keys_l = jnp.where(valid, keys_l, pad)
+    order = jnp.lexsort((-prio, keys_l, keys_h), axis=-1)
+    keys_h = jnp.take_along_axis(keys_h, order, axis=1)
+    keys_l = jnp.take_along_axis(keys_l, order, axis=1)
+    vals_h = jnp.take_along_axis(vals_h, order, axis=1)
+    vals_l = jnp.take_along_axis(vals_l, order, axis=1)
+    valid = jnp.take_along_axis(valid, order, axis=1)
+    is_del = jnp.take_along_axis(is_del, order, axis=1)
+    first = jnp.concatenate(
+        [
+            jnp.ones((B, 1), dtype=bool),
+            (keys_h[:, 1:] != keys_h[:, :-1]) | (keys_l[:, 1:] != keys_l[:, :-1]),
+        ],
+        axis=1,
+    )
+    keep = valid & first & ~is_del
+    target = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    in_out = keep & (target < limit)
+    tgt = jnp.where(in_out, target, limit)
+    rows = jnp.arange(B)[:, None]
+    out_kh = jnp.full((B, limit + 1), pad, dtype=jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, keys_h, pad)
+    )
+    out_kl = jnp.full((B, limit + 1), pad, dtype=jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, keys_l, pad)
+    )
+    out_vh = jnp.zeros((B, limit + 1), dtype=jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, vals_h, 0)
+    )
+    out_vl = jnp.zeros((B, limit + 1), dtype=jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, vals_l, 0)
+    )
+    n_found = jnp.minimum(jnp.sum(keep, axis=1), limit)
+    out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
+    out_keys = jnp.stack([out_kh[:, :limit], out_kl[:, :limit]], axis=-1)
+    out_vals = jnp.stack([out_vh[:, :limit], out_vl[:, :limit]], axis=-1)
+    return out_keys, out_vals, out_valid

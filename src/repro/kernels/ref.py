@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every kernel (the semantic ground truth).
+
+These are thin re-exports of ``repro.core.lookup`` / ``repro.core.hotcache``
+— the reference implementations the kernels are tile-level versions of.
+Tests sweep shapes/dtypes and assert kernel == oracle exactly (integer keys:
+no tolerance needed; where floats participate the prediction windows make
+the result integer-exact by construction).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import hotcache, lookup
+from repro.core.hotcache import CacheConfig
+
+
+def get(tree, ib, khi, klo, *, depth, eps_inner, eps_leaf):
+    """Oracle for kernels.traverse.get_pallas."""
+    return lookup.get_batch(
+        tree, ib, khi, klo, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+    )
+
+
+def cache_probe(cache, tid, khi, klo, *, cfg: CacheConfig):
+    """Oracle for kernels.cache_probe.probe_pallas."""
+    return hotcache.probe(cache, tid, khi, klo, cfg=cfg)
+
+
+def range_scan(tree, ib, khi, klo, *, depth, eps_inner, limit, max_leaves):
+    """Oracle for the full RANGE op (kernel + ib-merge epilogue)."""
+    return lookup.range_batch(
+        tree,
+        ib,
+        khi,
+        klo,
+        depth=depth,
+        eps_inner=eps_inner,
+        limit=limit,
+        max_leaves=max_leaves,
+    )

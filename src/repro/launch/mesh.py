@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run forces a 512-host-device platform and
+smoke tests must keep seeing the single real device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (DP/ZeRO/context-parallel), ``model`` (TP/EP), plus the
+    cross-pod ``pod`` axis (pure DP — the slowest links carry only gradient
+    reductions).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

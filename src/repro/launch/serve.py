@@ -1,0 +1,87 @@
+"""Serving driver: run the DPA-Store KV service (the paper's system) or an
+LM decode loop, batched.
+
+    # the paper's workload: a KV service handling GET/INSERT/RANGE waves
+    PYTHONPATH=src python -m repro.launch.serve --kv --n-keys 100000 --waves 20
+
+    # LM decode on a reduced config
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core import DPAStore, TreeConfig
+from repro.core.datasets import sparse, zipf_indices
+from repro.models import lm
+from repro.serving.engine import Engine, ServeConfig
+
+
+def serve_kv(args):
+    keys = sparse(args.n_keys, seed=1)
+    store = DPAStore(keys, keys ^ np.uint64(0xC0FFEE), TreeConfig())
+    rng = np.random.default_rng(0)
+    idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
+    t0 = time.time()
+    served = 0
+    for w in range(args.waves):
+        q = keys[idx[w * args.wave_size : (w + 1) * args.wave_size]]
+        kind = w % 4
+        if kind < 2:  # GET-heavy mix
+            vals, found = store.get(q)
+            assert found.all()
+        elif kind == 2:  # UPDATE
+            store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
+        else:  # RANGE
+            store.range(q[:64], limit=10)
+        served += args.wave_size
+    dt = time.time() - t0
+    print(
+        f"[serve-kv] {served} requests in {dt:.2f}s "
+        f"({served/dt/1e3:.1f} kOPS on CPU; see benchmarks/ for the "
+        f"BlueField-3 model numbers)"
+    )
+    print(f"[serve-kv] stats: {store.stats}")
+
+
+def serve_lm(args):
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = lm.init(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=args.prompt + args.steps + 8))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(toks, args.steps)
+    dt = time.time() - t0
+    print(f"[serve-lm] generated {out.shape} tokens in {dt:.2f}s")
+    print(f"[serve-lm] sample: {out[0][:16].tolist()}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv", action="store_true")
+    ap.add_argument("--n-keys", type=int, default=100_000)
+    ap.add_argument("--waves", type=int, default=16)
+    ap.add_argument("--wave-size", type=int, default=1024)
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args(argv)
+    if args.kv:
+        serve_kv(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""End-to-end training driver.
+
+Single-process reference implementation of the production control loop:
+mesh -> shardings -> (restore | init) -> step loop with checkpointing,
+straggler watchdog, preemption-safe shutdown, and elastic restart.
+
+On a real cluster this same file runs under ``jax.distributed.initialize``
+with one process per host; everything below is process-count agnostic
+because shardings come from the mesh and data comes from the step-indexed
+pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch mixtral-8x7b --reduced --steps 50 --ckpt-dir /tmp/ckpt
+
+XLA flags for real TPU runs (recorded here; harmless on CPU):
+    --xla_tpu_enable_data_parallel_all_reduce_opt=true
+    --xla_tpu_data_parallel_opt_different_sized_ops=true
+    --xla_enable_async_collective_permute=true   (overlap compute/comm)
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, SHAPES, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import sharding as shd
+from repro.distributed.straggler import Watchdog
+from repro.launch.mesh import make_debug_mesh
+from repro.models import lm
+from repro.training import optimizer, train_step as ts
+
+
+def build(cfg, shape, mesh, tcfg):
+    params_shape = jax.eval_shape(lambda: lm.init(cfg, jax.random.key(0)))
+    pspecs = shd.param_specs(cfg, params_shape, mesh)
+    p_sh = shd.to_shardings(pspecs, mesh)
+    opt_shape = jax.eval_shape(lambda: optimizer.init(tcfg.opt, params_shape))
+    ospecs = shd.opt_specs(cfg, opt_shape, pspecs, mesh, zero=True)
+    state_sh = {"params": p_sh, "opt": shd.to_shardings(ospecs, mesh)}
+    if tcfg.grad_compression:
+        from repro.training import compress
+
+        err_shape = jax.eval_shape(lambda: compress.init_error(params_shape))
+        state_sh["err"] = shd.to_shardings(
+            jax.tree.map(lambda l, sp: sp, err_shape, pspecs), mesh
+        )
+    step_fn = jax.jit(
+        ts.make_train_step(cfg, tcfg, grad_shardings=p_sh),
+        donate_argnums=(0,),
+    )
+    return step_fn, state_sh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=0, help="override global batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = SHAPES[args.shape]
+    if args.batch or args.seq:
+        shape = ShapeConfig(
+            "custom",
+            args.seq or shape.seq_len,
+            args.batch or shape.global_batch,
+            "train",
+        )
+    n_dev = len(jax.devices())
+    mesh = make_debug_mesh(data=n_dev, model=1)
+    tcfg = ts.TrainConfig(
+        opt=optimizer.OptConfig(kind=cfg.optimizer, lr=args.lr),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    lm.set_activation_shardings({})
+    step_fn, state_sh = build(cfg, shape, mesh, tcfg)
+    data = SyntheticLM(cfg, shape, DataConfig(seed=7))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    dog = Watchdog()
+
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        start = ckpt.latest_step()
+        like = jax.eval_shape(
+            lambda: ts.init_state(cfg, tcfg, jax.random.key(7))
+        )
+        state = ckpt.restore(start, like, shardings=state_sh)
+        print(f"[train] restored step {start}")
+    else:
+        state = ts.init_state(cfg, tcfg, jax.random.key(7))
+
+    stop = {"now": False}
+
+    def on_sigterm(signum, frame):  # preemption: checkpoint then exit
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+
+    losses = []
+    for step in range(start, start + args.steps):
+        t0 = time.time()
+        batch = data.global_batch(step)
+        batch = {
+            k: (jnp.asarray(v) if v is not None else None)
+            for k, v in batch.items()
+        }
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        dog.observe(0, dt)
+        dog.end_step()
+        print(f"[train] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt and ((step + 1) % args.ckpt_every == 0 or stop["now"]):
+            ckpt.save(step + 1, state)
+        if stop["now"]:
+            print("[train] preemption checkpoint written, exiting")
+            break
+    if ckpt:
+        ckpt.wait()
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,419 @@
+"""Transformer building blocks (pure JAX, shard_map/pjit-friendly).
+
+Attention is *blockwise* (flash-style running-softmax over KV blocks inside
+``lax.scan``) so activation memory stays O(S * block) — materialising a
+32k x 32k score matrix is not an option at the assigned shapes.  Three
+flavours, selected per layer by the config:
+
+  * ``full``   — causal (or bidirectional for encoders) over the whole
+    sequence.  The baseline scans *all* KV blocks with a mask, which costs
+    2x the useful FLOPs on causal cells; the §Perf pass adds the paired
+    block schedule (``causal_scheme='paired'``) that removes the waste.
+  * ``window`` — sliding-window attention (mixtral / h2o-danube): each Q
+    block attends to a fixed-width KV span ending at itself, giving true
+    O(S * window) compute.
+  * ``chunk``  — chunked local attention (llama4 iRoPE): block-diagonal
+    chunks, O(S * chunk) compute.
+
+GQA never materialises repeated KV heads: Q is grouped as (Hkv, G) and
+contracted against the unexpanded KV.  Softmax statistics are f32; outputs
+are cast back to the activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Cost-analysis mode (set via repro.models.lm.set_unroll_scan): replaces the
+# attention-internal lax.map/lax.scan with unrolled Python loops over larger
+# blocks so XLA's cost analysis (which counts a while body once) sees every
+# FLOP.  Numerically identical; only used by the dry-run's clone compiles.
+UNROLL_ATTN = False
+
+
+def set_unroll_attn(flag: bool) -> None:
+    global UNROLL_ATTN
+    UNROLL_ATTN = bool(flag)
+
+
+# §Perf hooks (see EXPERIMENTS.md §Perf) — default-off so the baseline
+# numbers stay the paper-faithful/naive-GSPMD configuration:
+#   'paired_causal'       — triangular pair schedule for full causal
+#                           attention (halves masked-FLOP waste)
+#   'decode_logits_shard' — NamedSharding pinned on decode attention logits
+#                           so GSPMD keeps the context-parallel cache local
+#                           (LSE-merge via small collectives instead of
+#                           gathering the cache)
+PERF_FLAGS: dict = {}
+
+
+def set_perf_flags(**kw) -> None:
+    PERF_FLAGS.clear()
+    PERF_FLAGS.update({k: v for k, v in kw.items() if v is not None})
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x1.astype(jnp.float32) * sin + x2.astype(jnp.float32) * cos,
+        ],
+        axis=-1,
+    )
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention
+# ---------------------------------------------------------------------------
+
+
+def _block_scores(q, k, scale):
+    """q (B, bq, Hkv, G, hd) x k (B, bkv, Hkv, hd) -> (B, Hkv, G, bq, bkv).
+
+    f32 accumulation WITHOUT materialising f32-converted operands
+    (preferred_element_type): an explicit .astype(f32) on a multi-GB decode
+    cache shard writes+reads a converted copy — measured ~3x byte
+    amplification on jamba long_500k (§Perf iteration 4).  bf16 values are
+    exact in f32, so results are bit-identical."""
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def _merge_block(carry, s, v):
+    """Running-softmax merge. carry=(m,l,acc); s (B,Hkv,G,bq,bkv);
+    v (B,bkv,Hkv,hd); acc (B,Hkv,G,bq,hd)."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v, preferred_element_type=jnp.float32
+    )
+    acc = acc * alpha[..., None] + pv
+    return m_new, l, acc
+
+
+def _finish(m, l, acc, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(dtype)  # (B, Hkv, G, bq, hd)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    v: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    *,
+    causal: bool,
+    flavor: str = "full",  # full | window | chunk
+    window: int = 0,
+    chunk: int = 0,
+    q_offset: int = 0,  # global position of q[0] (prefill continuation)
+    block_q: int = 512,
+    block_kv: int = 512,
+    causal_scheme: str = "masked",  # masked | paired (§Perf optimisation)
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    # §Perf ('block_kv'): larger KV blocks divide the running-softmax
+    # (m, l, acc) read-modify-write traffic by the same factor.
+    block_kv = PERF_FLAGS.get("block_kv", block_kv)
+    if UNROLL_ATTN:
+        # few large blocks so the unrolled HLO stays small
+        block_q = max(block_q, Sq // 4)
+        block_kv = max(block_kv, Skv // 4)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    nq, nkv = Sq // block_q, Skv // block_kv
+    qg = q.reshape(B, nq, block_q, Hkv, G, hd)
+    if PERF_FLAGS.get("attn_q_shard") is not None:
+        qg = jax.lax.with_sharding_constraint(qg, PERF_FLAGS["attn_q_shard"])
+    dtype = q.dtype
+
+    q_pos_base = jnp.arange(block_q)
+    kv_pos_base = jnp.arange(block_kv)
+
+    def mask_for(qi_start, kv_start):
+        """(bq, bkv) additive mask given global block offsets."""
+        qp = (q_pos_base + qi_start + q_offset)[:, None]
+        kp = (kv_pos_base + kv_start)[None, :]
+        ok = jnp.ones((block_q, block_kv), dtype=bool)
+        if causal:
+            ok &= kp <= qp
+        if flavor == "window":
+            ok &= kp > qp - window
+        if flavor == "chunk":
+            ok &= (kp // chunk) == (qp // chunk)
+        return jnp.where(ok, 0.0, NEG_INF)
+
+    if flavor == "window" and Skv == Sq and window < Skv:
+        # true sub-quadratic path: fixed-width KV span per Q block
+        span = window + block_q
+        span = min(_round_up(span, 128), Skv)
+        k_pad = jnp.pad(k, ((0, 0), (span, 0), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (span, 0), (0, 0), (0, 0)))
+
+        def per_qblock(qi):
+            qb = jax.lax.dynamic_slice_in_dim(q, qi * block_q, block_q, 1)
+            qb = qb.reshape(B, block_q, Hkv, G, hd)
+            start = qi * block_q + block_q - span + span  # in padded coords
+            kb = jax.lax.dynamic_slice_in_dim(k_pad, start, span, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v_pad, start, span, 1)
+            s = _block_scores(qb, kb, scale)
+            qp = (q_pos_base + qi * block_q + q_offset)[:, None]
+            kp = (jnp.arange(span) + qi * block_q + block_q - span)[None, :]
+            ok = (kp >= 0) & (kp <= qp) & (kp > qp - window)
+            s = s + jnp.where(ok, 0.0, NEG_INF)
+            m = jnp.max(s, axis=-1)
+            p = jnp.exp(s - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb, preferred_element_type=jnp.float32
+            )
+            return _finish(m, l, o, dtype)
+
+        if UNROLL_ATTN:
+            outs = jnp.stack([per_qblock(qi) for qi in range(nq)])
+        else:
+            outs = jax.lax.map(per_qblock, jnp.arange(nq))  # (nq, B, Hkv, G, bq, hd)
+        out = jnp.moveaxis(outs, 0, 1)  # (B, nq, Hkv, G, bq, hd)
+        out = jnp.moveaxis(out, -2, 2)  # (B, nq, bq, Hkv, G, hd)
+        return out.reshape(B, Sq, H, hd)
+
+    if flavor == "chunk" and Skv == Sq and chunk < Skv:
+        # block-diagonal: reshape into chunks and attend within
+        assert Sq % chunk == 0
+        nc = Sq // chunk
+        qc = q.reshape(B * nc, chunk, H, hd)
+        kc = k.reshape(B * nc, chunk, Hkv, hd)
+        vc = v.reshape(B * nc, chunk, Hkv, hd)
+        out = blockwise_attention(
+            qc,
+            kc,
+            vc,
+            causal=causal,
+            flavor="full",
+            q_offset=0,
+            block_q=min(block_q, chunk),
+            block_kv=min(block_kv, chunk),
+        )
+        return out.reshape(B, Sq, H, hd)
+
+    # ---- full (or small-S window/chunk fallback): scan KV blocks ----------
+    # Nested remat: without it the backward of scan(map(scan)) stacks every
+    # (nq x nkv) probability block — measured 16 GiB/device temporaries on
+    # glm4 train_4k.  checkpointing the kv step bounds the live set to one
+    # block's scores plus the small (m, l, acc) carries.
+    kb_all = k.reshape(B, nkv, block_kv, Hkv, hd)
+    vb_all = v.reshape(B, nkv, block_kv, Hkv, hd)
+
+    # §Perf ('attn_pin'): the flat (Hkv*G*hd) projection sharding reshapes
+    # into a mixed (2,8) tile over (Hkv, G) that fwd and bwd disagree on —
+    # SPMD then falls back to "involuntary full rematerialization" of the
+    # f32 score blocks (measured 128 GiB of all-gather per layer at 405B).
+    # Pinning q and the scores to a canonical G-over-model sharding makes
+    # both passes agree.
+    q_sh = PERF_FLAGS.get("attn_q_shard")
+    s_sh = PERF_FLAGS.get("attn_scores_shard")
+
+    use_paired = (
+        (causal_scheme == "paired" or PERF_FLAGS.get("paired_causal"))
+        and flavor == "full"
+        and causal
+        and Sq == Skv
+        and block_q == block_kv
+        and q_offset == 0
+        and nq == nkv
+        and nq >= 2
+        and nq % 2 == 0
+    )
+    if use_paired:
+        return _paired_causal(
+            qg, kb_all, vb_all, scale, block_q, nq, B, Hkv, G, hd, dtype
+        )
+
+    @jax.checkpoint
+    def per_qblock(qi):
+        qb = qg[:, qi]
+
+        @jax.checkpoint
+        def kv_step(carry, kv_idx):
+            kb = kb_all[:, kv_idx]
+            vb = vb_all[:, kv_idx]
+            s = _block_scores(qb, kb, scale)
+            if PERF_FLAGS.get("attn_scores_shard") is not None:
+                s = jax.lax.with_sharding_constraint(
+                    s, PERF_FLAGS["attn_scores_shard"]
+                )
+            s = s + mask_for(qi * block_q, kv_idx * block_kv)
+            return _merge_block(carry, s, vb), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), dtype=jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, hd), dtype=jnp.float32)
+        if UNROLL_ATTN:
+            carry = (m0, l0, a0)
+            for kv_idx in range(nkv):
+                carry, _ = kv_step(carry, kv_idx)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        return _finish(m, l, acc, dtype)
+
+    if UNROLL_ATTN:
+        outs = jnp.stack([per_qblock(qi) for qi in range(nq)])
+    else:
+        outs = jax.lax.map(per_qblock, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1)
+    out = jnp.moveaxis(out, -2, 2)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _paired_causal(qg, kb_all, vb_all, scale, blk, nq, B, Hkv, G, hd, dtype):
+    """Triangular pair schedule (§Perf iteration): Q block p pairs with
+    Q block nq-1-p; the pair's combined causal KV work is a CONSTANT nq+1
+    blocks, so a fixed-trip scan covers exactly the lower triangle — the
+    masked-full baseline computes all nq^2 blocks and throws half away.
+    One block einsum per step => ~2x attention FLOP reduction in HLO.
+    """
+
+    def per_pair(p):
+        a_idx, b_idx = p, nq - 1 - p
+        qa = qg[:, a_idx]
+        qb = qg[:, b_idx]
+
+        @jax.checkpoint
+        def step(carry, t):
+            (ma, la, aa, mb, lb, ab) = carry
+            is_a = t <= p
+            kv_idx = jnp.where(is_a, t, t - p - 1)
+            kb = kb_all[:, kv_idx]
+            vb = vb_all[:, kv_idx]
+            qsel = jnp.where(is_a, qa, qb)
+            s = _block_scores(qsel, kb, scale)
+            qstart = jnp.where(is_a, a_idx * blk, b_idx * blk)
+            qpos = (jnp.arange(blk) + qstart)[:, None]
+            kpos = (jnp.arange(blk) + kv_idx * blk)[None, :]
+            s = s + jnp.where(kpos <= qpos, 0.0, NEG_INF)
+            na = _merge_block((ma, la, aa), s, vb)
+            nb = _merge_block((mb, lb, ab), s, vb)
+            ma, la, aa = (jnp.where(is_a, n, o) for n, o in zip(na, (ma, la, aa)))
+            mb, lb, ab = (jnp.where(is_a, o, n) for n, o in zip(nb, (mb, lb, ab)))
+            return (ma, la, aa, mb, lb, ab), None
+
+        z_m = jnp.full((B, Hkv, G, blk), NEG_INF, dtype=jnp.float32)
+        z_l = jnp.zeros((B, Hkv, G, blk), dtype=jnp.float32)
+        z_a = jnp.zeros((B, Hkv, G, blk, hd), dtype=jnp.float32)
+        carry = (z_m, z_l, z_a, z_m, z_l, z_a)
+        if UNROLL_ATTN:  # cost-analysis clones: loop-free triangle
+            for t in range(nq + 1):
+                carry, _ = step(carry, jnp.int32(t))
+            (ma, la, aa, mb, lb, ab) = carry
+        else:
+            (ma, la, aa, mb, lb, ab), _ = jax.lax.scan(
+                step, carry, jnp.arange(nq + 1, dtype=jnp.int32)
+            )
+        return _finish(ma, la, aa, dtype), _finish(mb, lb, ab, dtype)
+
+    if UNROLL_ATTN:
+        pairs = [per_pair(jnp.int32(p)) for p in range(nq // 2)]
+        outs_a = jnp.stack([p_[0] for p_ in pairs])
+        outs_b = jnp.stack([p_[1] for p_ in pairs])
+    else:
+        outs_a, outs_b = jax.lax.map(per_pair, jnp.arange(nq // 2))
+    # reassemble block order: p from the front, nq-1-p from the back
+    Sq = nq * blk
+    out = jnp.concatenate([outs_a, outs_b[::-1]], axis=0)  # (nq, B,Hkv,G,blk,hd)
+    out = jnp.moveaxis(out, 0, 1)
+    out = jnp.moveaxis(out, -2, 2)
+    H = Hkv * G
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, hd)
+    v_cache: jnp.ndarray,
+    valid_len: jnp.ndarray | int,  # number of live cache positions
+) -> jnp.ndarray:
+    """Single-token decode over a (possibly ring-buffered) cache.  The caller
+    guarantees entries beyond ``valid_len`` are stale; ring buffers pass the
+    full buffer with valid_len == buffer size once warm."""
+    B, S, Hkv, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    s = _block_scores(qg, k_cache, 1.0 / math.sqrt(hd))  # (B,Hkv,G,1,S)
+    # §Perf: pin the logits' S dim to the cache's context-parallel sharding —
+    # GSPMD then LSE-merges with tiny collectives instead of all-gathering
+    # the (multi-GB) cache to every device.
+    lg_sh = PERF_FLAGS.get("decode_logits_shard")
+    if lg_sh is not None:
+        s = jax.lax.with_sharding_constraint(s, lg_sh)
+    pos = jnp.arange(S)[None, None, None, None, :]
+    s = jnp.where(pos < jnp.asarray(valid_len).reshape(-1, 1, 1, 1, 1), s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    out = _finish(m, l, o, q.dtype)  # (B,Hkv,G,1,hd)
+    return jnp.moveaxis(out, -2, 1).reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLP + loss
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask=None):
+    """Token-mean CE in f32. logits (B,S,V), labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

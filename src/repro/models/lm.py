@@ -1,0 +1,483 @@
+"""The LM zoo: one composable stack covering all ten assigned architectures.
+
+Layer heterogeneity (hybrid attn/mamba interleave, chunk/full attention mix,
+MoE cadence) is handled by grouping layers into *superblocks* of the config's
+pattern period and scanning over groups: the HLO contains one superblock body
+regardless of depth (126-layer llama3-405b compiles as a scan of 126 bodies
+-> 1 body), which keeps 512-device AOT compiles tractable.
+
+Caches are pytrees with a leading group dimension so the decode step scans
+them alongside the parameters:
+
+  * full attention   — (G, B, Smax, Hkv, hd) k/v, write cursor = pos
+  * window attention — (G, B, window, Hkv, hd) ring buffer (ring slot =
+    pos % window; RoPE is applied at insert so rotation is harmless)
+  * chunked attention— (G, B, chunk, ...) ring; slots <= pos % chunk are the
+    live current-chunk entries
+  * mamba            — (G, B, H, P, N) state + conv tail: O(1) per token
+
+``init`` is eval_shape-safe: the dry-run materialises parameter
+ShapeDtypeStructs without touching device memory.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .layers import (
+    blockwise_attention,
+    cross_entropy,
+    decode_attention,
+    rms_norm,
+    rope,
+)
+
+DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# activation-sharding constraints (sequence parallelism + sharded-vocab loss)
+#
+# Set by the launcher/dry-run before tracing: a dict of PartitionSpec-like
+# NamedShardings.  ``residual``: applied to the per-layer carry at superblock
+# boundaries (Megatron-style sequence parallelism — the saved residuals under
+# remat then live sharded, which is what makes 405B train_4k fit);
+# ``logits``: keeps the (B, S, V) tensor vocab-sharded through the loss.
+# ---------------------------------------------------------------------------
+_ACT_SHARDINGS: Dict[str, Any] = {}
+
+
+def set_activation_shardings(shardings: Dict[str, Any]) -> None:
+    _ACT_SHARDINGS.clear()
+    _ACT_SHARDINGS.update(shardings or {})
+
+
+def _constrain(x, name: str):
+    s = _ACT_SHARDINGS.get(name)
+    if s is not None:
+        return jax.lax.with_sharding_constraint(x, s)
+    return x
+
+
+# When True, scan-over-groups is replaced by an unrolled Python loop.  Used
+# ONLY by the dry-run's reduced-depth cost clones: XLA's cost analysis counts
+# a `while` body once, so the clones must be loop-free to give exact
+# per-group FLOP/collective slopes for extrapolation.
+UNROLL_SCAN = False
+
+
+def set_unroll_scan(flag: bool) -> None:
+    global UNROLL_SCAN
+    UNROLL_SCAN = bool(flag)
+    from .layers import set_unroll_attn
+
+    set_unroll_attn(flag)
+
+
+def _scan_blocks(body, carry, xs):
+    if not UNROLL_SCAN:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for g in range(length):
+        x_g = jax.tree.map(lambda a: a[g], xs)
+        carry, y = body(carry, x_g)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, scale):
+    return (jax.random.normal(key, shape) * scale).astype(DTYPE)
+
+
+def _slot_init(cfg: ArchConfig, slot: int, key) -> Dict[str, Any]:
+    D = cfg.d_model
+    hd = cfg.head_dim_
+    p: Dict[str, Any] = {"ln1": jnp.ones((D,), dtype=DTYPE)}
+    keys = jax.random.split(key, 8)
+    if cfg.layer_kind(slot) == "attn":
+        p["attn"] = {
+            "wq": _dense(keys[0], (D, cfg.n_heads * hd), D**-0.5),
+            "wk": _dense(keys[1], (D, cfg.n_kv_heads * hd), D**-0.5),
+            "wv": _dense(keys[2], (D, cfg.n_kv_heads * hd), D**-0.5),
+            "wo": _dense(keys[3], (cfg.n_heads * hd, D), (cfg.n_heads * hd) ** -0.5),
+        }
+    else:
+        p["mamba"] = mamba_mod.init(
+            keys[0],
+            D,
+            expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim,
+            state=cfg.ssm_state,
+            conv=cfg.ssm_conv,
+            dtype=DTYPE,
+        )._asdict()
+    mk = cfg.mlp_kind(slot)
+    if mk != "none":
+        p["ln2"] = jnp.ones((D,), dtype=DTYPE)
+    if mk == "dense":
+        F = cfg.d_ff
+        p["mlp"] = {
+            "w_gate": _dense(keys[4], (D, F), D**-0.5),
+            "w_up": _dense(keys[5], (D, F), D**-0.5),
+            "w_down": _dense(keys[6], (F, D), F**-0.5),
+        }
+    elif mk == "moe":
+        p["moe"] = moe_mod.init(keys[4], D, cfg.d_ff, cfg.n_experts, DTYPE)._asdict()
+        if cfg.shared_expert:
+            F = cfg.d_ff
+            p["shared_mlp"] = {
+                "w_gate": _dense(keys[5], (D, F), D**-0.5),
+                "w_up": _dense(keys[6], (D, F), D**-0.5),
+                "w_down": _dense(keys[7], (F, D), F**-0.5),
+            }
+    return p
+
+
+def init(cfg: ArchConfig, key) -> Dict[str, Any]:
+    period = cfg.superblock
+    groups = cfg.n_layers // period
+    keys = jax.random.split(key, period + 3)
+    blocks = []
+    for slot in range(period):
+        gkeys = jax.random.split(keys[slot], groups)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0),
+            *[_slot_init(cfg, slot, gk) for gk in gkeys],
+        )
+        blocks.append(stacked)
+    params = {
+        "embed": _dense(keys[-3], (cfg.vocab_size, cfg.d_model), 1.0),
+        "final_norm": jnp.ones((cfg.d_model,), dtype=DTYPE),
+        "lm_head": _dense(keys[-2], (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5),
+        "blocks": blocks,
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Abstract cache pytree (ShapeDtypeStructs become real arrays under
+    jnp.zeros via init_cache; the dry-run uses the shapes directly)."""
+    period = cfg.superblock
+    groups = cfg.n_layers // period
+    hd = cfg.head_dim_
+    slots = []
+    for slot in range(period):
+        if cfg.layer_kind(slot) == "attn":
+            flavor = cfg.attn_flavor(slot)
+            if flavor == "window":
+                S = min(cfg.window, max_len)
+            elif flavor == "chunk":
+                S = min(cfg.chunk, max_len)
+            else:
+                S = max_len
+            slots.append(
+                {
+                    "k": jax.ShapeDtypeStruct(
+                        (groups, batch, S, cfg.n_kv_heads, hd), DTYPE
+                    ),
+                    "v": jax.ShapeDtypeStruct(
+                        (groups, batch, S, cfg.n_kv_heads, hd), DTYPE
+                    ),
+                }
+            )
+        else:
+            d_in, H = mamba_mod.dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state)
+            slots.append(
+                {
+                    "h": jax.ShapeDtypeStruct(
+                        (groups, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32,
+                    ),
+                    "conv": jax.ShapeDtypeStruct(
+                        (groups, batch, cfg.ssm_conv - 1, d_in + 2 * cfg.ssm_state),
+                        DTYPE,
+                    ),
+                }
+            )
+    return {"slots": slots}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer(cfg, slot, p, x, positions, mode):
+    B, S, D = x.shape
+    hd = cfg.head_dim_
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    # Megatron-SP: residuals stay sequence-sharded; the layer body works on
+    # the gathered full sequence with heads/d_ff sharded.  Without this the
+    # backward weight-gradient einsums materialise FULL unsharded f32
+    # weights (3.25 GiB apiece at 405B).
+    h = _constrain(h, "layer_input")
+    q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    flavor = cfg.attn_flavor(slot)
+    o = blockwise_attention(
+        q,
+        k,
+        v,
+        causal=cfg.causal,
+        flavor=flavor,
+        window=cfg.window,
+        chunk=cfg.chunk,
+    )
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["attn"]["wo"])
+    from .layers import PERF_FLAGS
+
+    if PERF_FLAGS.get("attn_rs"):
+        # §Perf: land the head-sharded partial sums straight in the
+        # sequence-sharded residual layout (reduce-scatter, bf16) instead of
+        # a full f32 all-reduce + separate SP reshard.
+        o = _constrain(o.astype(x.dtype), "residual")
+    new_cache = None
+    if mode == "prefill":
+        if flavor == "window":
+            W = min(cfg.window, S)
+            new_cache = {"k": k[:, -W:], "v": v[:, -W:]}
+        elif flavor == "chunk":
+            C = min(cfg.chunk, S)
+            new_cache = {"k": k[:, -C:], "v": v[:, -C:]}
+        else:
+            new_cache = {"k": k, "v": v}
+    return x + o, new_cache
+
+
+def _mamba_layer(cfg, p, x, mode):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = _constrain(h, "layer_input")  # Megatron-SP gather (see _attn_layer)
+    mp = mamba_mod.MambaParams(**p["mamba"])
+    kw = dict(
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim,
+        state=cfg.ssm_state,
+        conv=cfg.ssm_conv,
+    )
+    if mode == "prefill":
+        o, st = mamba_mod.apply_scan(mp, h, return_state=True, **kw)
+        return x + o, {"h": st.h, "conv": st.conv}
+    o = mamba_mod.apply_scan(mp, h, **kw)
+    return x + o, None
+
+
+def _mlp_layer(cfg, slot, p, x):
+    mk = cfg.mlp_kind(slot)
+    if mk == "none":
+        return x, jnp.float32(0.0)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    h = _constrain(h, "layer_input")  # Megatron-SP gather (see _attn_layer)
+    if mk == "dense":
+        return x + jnp.einsum(
+            "bsf,fd->bsd",
+            jax.nn.silu(
+                jnp.einsum("bsd,df->bsf", h, p["mlp"]["w_gate"]).astype(jnp.float32)
+            ).astype(x.dtype)
+            * jnp.einsum("bsd,df->bsf", h, p["mlp"]["w_up"]),
+            p["mlp"]["w_down"],
+        ), jnp.float32(0.0)
+    from .layers import PERF_FLAGS
+
+    out, aux = moe_mod.apply(
+        moe_mod.MoEParams(**p["moe"]),
+        h,
+        top_k=cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor,
+        combine_dtype=(
+            jnp.bfloat16 if PERF_FLAGS.get("moe_bf16_combine") else jnp.float32
+        ),
+    )
+    if PERF_FLAGS.get("moe_rs"):
+        # §Perf: land the combine directly in the sequence-sharded residual
+        # layout — the partial-sum all-reduce over 'model' becomes a
+        # reduce-scatter (half the bytes), fused with the SP reshard.
+        out = _constrain(out, "residual")
+    if cfg.shared_expert:
+        sm = p["shared_mlp"]
+        out = out + jnp.einsum(
+            "bsf,fd->bsd",
+            jax.nn.silu(
+                jnp.einsum("bsd,df->bsf", h, sm["w_gate"]).astype(jnp.float32)
+            ).astype(x.dtype)
+            * jnp.einsum("bsd,df->bsf", h, sm["w_up"]),
+            sm["w_down"],
+        )
+    return x + out, aux
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: Optional[jnp.ndarray] = None,  # (B, S) int32
+    embeds: Optional[jnp.ndarray] = None,  # (B, S, D) for stubbed frontends
+    mode: str = "train",  # train | prefill
+):
+    """Returns (logits, aux_loss, cache_or_None)."""
+    assert (tokens is None) != (embeds is None)
+    if embeds is None:
+        x = params["embed"][tokens]  # (B,S,D)
+    else:
+        x = embeds.astype(DTYPE)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    period = cfg.superblock
+    want_cache = mode == "prefill"
+
+    def superblock(carry, slot_params):
+        x, aux = carry
+        x = _constrain(x, "residual")
+        caches = []
+        for slot in range(period):
+            p = slot_params[slot]
+            if cfg.layer_kind(slot) == "attn":
+                x, c = _attn_layer(cfg, slot, p, x, positions, mode)
+            else:
+                x, c = _mamba_layer(cfg, p, x, mode)
+            x, a = _mlp_layer(cfg, slot, p, x)
+            aux = aux + a
+            caches.append(c)
+        x = _constrain(x, "residual")
+        return (x, aux), (caches if want_cache else None)
+
+    if cfg.remat == "block":
+        superblock = jax.checkpoint(superblock)
+
+    (x, aux), caches = _scan_blocks(
+        superblock, (x, jnp.float32(0.0)), params["blocks"]
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = _constrain(logits, "logits")
+    cache = {"slots": caches} if want_cache else None
+    return logits, aux, cache
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Causal LM loss (decoders) or masked-unit prediction (encoders)."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    labels = batch["labels"]
+    logits, aux, _ = forward(cfg, params, tokens=tokens, embeds=embeds, mode="train")
+    if cfg.causal:
+        lg = logits[:, :-1]
+        lb = labels[:, 1:]
+    else:
+        lg = logits
+        lb = labels
+    ce = cross_entropy(lg, lb)
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    cache: Dict[str, Any],
+    token: jnp.ndarray,  # (B,) int32 (or (B, D) embeds for stub frontends)
+    pos: jnp.ndarray,  # () int32 current position
+):
+    """One autoregressive step. Returns (logits (B,V), new cache)."""
+    if token.ndim == 1:
+        x = params["embed"][token][:, None, :]  # (B,1,D)
+    else:
+        x = token[:, None, :].astype(DTYPE)
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    period = cfg.superblock
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+
+    def superblock(x, scanned):
+        slot_params, slot_caches = scanned
+        new_caches = []
+        for slot in range(period):
+            p = slot_params[slot]
+            c = slot_caches[slot]
+            if cfg.layer_kind(slot) == "attn":
+                h = rms_norm(x, p["ln1"], cfg.norm_eps)
+                q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"]).reshape(
+                    B, 1, cfg.n_heads, hd
+                )
+                k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"]).reshape(
+                    B, 1, cfg.n_kv_heads, hd
+                )
+                v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"]).reshape(
+                    B, 1, cfg.n_kv_heads, hd
+                )
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+                flavor = cfg.attn_flavor(slot)
+                Smax = c["k"].shape[1]
+                if flavor == "window":
+                    idx = pos % Smax
+                    valid = jnp.minimum(pos + 1, Smax)
+                elif flavor == "chunk":
+                    idx = pos % Smax
+                    valid = (pos % Smax) + 1
+                else:
+                    idx = pos
+                    valid = pos + 1
+                ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k, idx, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v, idx, axis=1)
+                o = decode_attention(q, ck, cv, valid)
+                o = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), p["attn"]["wo"])
+                x = x + o
+                new_caches.append({"k": ck, "v": cv})
+            else:
+                h = rms_norm(x, p["ln1"], cfg.norm_eps)
+                mp = mamba_mod.MambaParams(**p["mamba"])
+                o, st = mamba_mod.apply_step(
+                    mp,
+                    h,
+                    mamba_mod.MambaState(h=c["h"], conv=c["conv"]),
+                    expand=cfg.ssm_expand,
+                    head_dim=cfg.ssm_head_dim,
+                    state=cfg.ssm_state,
+                    conv=cfg.ssm_conv,
+                )
+                x = x + o
+                new_caches.append({"h": st.h, "conv": st.conv})
+            x, _ = _mlp_layer(cfg, slot, p, x)
+        return x, new_caches
+
+    x, new_slots = _scan_blocks(
+        superblock, x, (params["blocks"], cache["slots"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"slots": new_slots}

@@ -1,0 +1,239 @@
+"""Mamba2 (state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of Q
+timesteps the output is a masked (Q x Q) matmul (the "duality" — attention-
+like, MXU-friendly); across chunks a tiny ``lax.scan`` carries the (H, P, N)
+state.  Nothing of size (S, ..., N) is ever materialised: the per-chunk
+temporaries are (B, H, Q, Q) and the carry is (B, H, P, N).  Chunk size
+defaults to 64, chosen so the per-head decay matrices stay ~MXU-shaped
+(64x64) and the temporaries stay well under VMEM-scale tiles when XLA
+fuses.
+
+Decode is the O(1) recurrence: h <- exp(dt*A) h + dt * B (x) x; y = C.h + Dx,
+plus a (conv-1)-deep ring buffer for the depthwise conv.
+
+Layout: ngroups=1 (B/C shared across heads, the released-model default);
+in_proj emits [z | x | B | C | dt] exactly like the reference implementation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MambaParams(NamedTuple):
+    in_proj: jnp.ndarray  # (D, 2*d_in + 2*N + H)
+    conv_w: jnp.ndarray  # (K, d_in + 2*N) depthwise
+    conv_b: jnp.ndarray  # (d_in + 2*N,)
+    A_log: jnp.ndarray  # (H,)
+    D: jnp.ndarray  # (H,)
+    dt_bias: jnp.ndarray  # (H,)
+    norm_w: jnp.ndarray  # (d_in,)
+    out_proj: jnp.ndarray  # (d_in, D)
+
+
+class MambaState(NamedTuple):
+    """Decode state: SSM state + conv ring buffer."""
+
+    h: jnp.ndarray  # (B, H, P, N) f32
+    conv: jnp.ndarray  # (B, K-1, d_in + 2*N)
+
+
+def dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_in = expand * d_model
+    n_heads = d_in // head_dim
+    return d_in, n_heads
+
+
+def init(key, d_model: int, *, expand: int, head_dim: int, state: int, conv: int, dtype) -> MambaParams:
+    d_in, H = dims(d_model, expand, head_dim, state)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * state + H
+    return MambaParams(
+        in_proj=(jax.random.normal(ks[0], (d_model, proj_out)) * d_model**-0.5).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (conv, d_in + 2 * state)) * conv**-0.5).astype(dtype),
+        conv_b=jnp.zeros((d_in + 2 * state,), dtype=dtype),
+        A_log=jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),  # A in [-16, -1]
+        D=jnp.ones((H,), dtype=jnp.float32),
+        dt_bias=jnp.log(
+            jnp.exp(jnp.linspace(1e-3, 1e-1, H, dtype=jnp.float32)) - 1.0
+        ),
+        norm_w=jnp.ones((d_in,), dtype=dtype),
+        out_proj=(jax.random.normal(ks[2], (d_in, d_model)) * d_in**-0.5).astype(dtype),
+    )
+
+
+def _split(p: MambaParams, proj, d_in: int, state: int, H: int):
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * state]
+    dt = proj[..., 2 * d_in + 2 * state :]
+    return z, xBC, dt
+
+
+def _rms(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_scan(
+    p: MambaParams,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    expand: int,
+    head_dim: int,
+    state: int,
+    conv: int,
+    chunk: int = 64,
+    init_state: MambaState | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence SSD (training / prefill)."""
+    B, S, D = x.shape
+    d_in, H = dims(D, expand, head_dim, state)
+    P, N = head_dim, state
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1  # smoke-test sequence lengths; real shapes are 2^k
+    nC = S // chunk
+
+    proj = jnp.einsum("bsd,dp->bsp", x, p.in_proj)
+    z, xBC, dt_raw = _split(p, proj, d_in, N, H)
+
+    # depthwise causal conv over [x|B|C]
+    prev = (
+        init_state.conv
+        if init_state is not None
+        else jnp.zeros((B, conv - 1, d_in + 2 * N), dtype=xBC.dtype)
+    )
+    xin = jnp.concatenate([prev, xBC], axis=1)
+    conv_out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for kk in range(conv):
+        conv_out = conv_out + (
+            xin[:, kk : kk + S].astype(jnp.float32)
+            * p.conv_w[kk].astype(jnp.float32)[None, None, :]
+        )
+    xBC = jax.nn.silu(conv_out + p.conv_b.astype(jnp.float32)).astype(x.dtype)
+    new_conv_tail = xin[:, -(conv - 1) :] if conv > 1 else prev[:, :0]
+
+    xs = xBC[..., :d_in].reshape(B, nC, chunk, H, P)
+    Bmat = xBC[..., d_in : d_in + N].reshape(B, nC, chunk, N)
+    Cmat = xBC[..., d_in + N :].reshape(B, nC, chunk, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p.dt_bias[None, None, :]
+    ).reshape(B, nC, chunk, H)
+    A = -jnp.exp(p.A_log)  # (H,)
+    dA = dt * A[None, None, None, :]  # (B,nC,Q,H) negative
+
+    # ---- intra-chunk (dual / quadratic) ------------------------------------
+    cs = jnp.cumsum(dA, axis=2)  # (B,nC,Q,H)
+    # decay(i,j) = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nC,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal_mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp of a huge positive (i<j) diff is inf and its
+    # cotangent poisons the whole backward pass even though the forward
+    # value is where'd away.
+    L = jnp.exp(jnp.where(causal_mask, diff, -1e30))
+    CB = jnp.einsum("bcin,bcjn->bcij", Cmat.astype(jnp.float32), Bmat.astype(jnp.float32))
+    M = CB[:, :, :, :, None] * L * dt[:, :, None, :, :]  # (B,nC,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xs.astype(jnp.float32))
+
+    # ---- chunk boundary states ---------------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nC,Q,H)
+    Sc = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn",
+        (dt * decay_to_end),
+        Bmat.astype(jnp.float32),
+        xs.astype(jnp.float32),
+    )  # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nC,H)
+
+    h0 = (
+        init_state.h
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), dtype=jnp.float32)
+    )
+
+    def boundary(h, ins):
+        Sc_c, dec_c = ins  # (B,H,P,N), (B,H)
+        h_next = h * dec_c[:, :, None, None] + Sc_c
+        return h_next, h  # emit the state *entering* the chunk
+
+    hT, h_in = jax.lax.scan(
+        boundary,
+        h0,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nC,H,P,N)
+
+    # ---- inter-chunk contribution -------------------------------------------
+    decay_from_start = jnp.exp(cs)  # (B,nC,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        Cmat.astype(jnp.float32),
+        h_in,
+        decay_from_start,
+    )
+    y = y_intra + y_inter + xs.astype(jnp.float32) * p.D[None, None, None, :, None]
+    y = y.reshape(B, S, d_in)
+
+    # gated norm + out projection
+    y = _rms(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p.norm_w
+    )
+    out = jnp.einsum("bsd,dp->bsp", y, p.out_proj)
+    if return_state:
+        return out, MambaState(h=hT, conv=new_conv_tail)
+    return out
+
+
+def apply_step(
+    p: MambaParams,
+    x: jnp.ndarray,  # (B, 1, D)
+    st: MambaState,
+    *,
+    expand: int,
+    head_dim: int,
+    state: int,
+    conv: int,
+) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token decode: O(1) state update."""
+    B, _, D = x.shape
+    d_in, H = dims(D, expand, head_dim, state)
+    P, N = head_dim, state
+    proj = jnp.einsum("bsd,dp->bsp", x, p.in_proj)[:, 0]  # (B, proj)
+    z = proj[:, :d_in]
+    xBC = proj[:, d_in : 2 * d_in + 2 * N]
+    dt_raw = proj[:, 2 * d_in + 2 * N :]
+
+    # conv ring buffer
+    window = jnp.concatenate([st.conv, xBC[:, None, :]], axis=1)  # (B,K,ch)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), p.conv_w.astype(jnp.float32)
+    )
+    xBC = jax.nn.silu(conv_out + p.conv_b.astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs = xBC[:, :d_in].reshape(B, H, P)
+    Bv = xBC[:, d_in : d_in + N]
+    Cv = xBC[:, d_in + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias[None, :])  # (B,H)
+    A = -jnp.exp(p.A_log)
+    dec = jnp.exp(dt * A[None, :])  # (B,H)
+    h = st.h * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bv.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), h) + xs.astype(
+        jnp.float32
+    ) * p.D[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = _rms((y * jax.nn.silu(z[:, None].astype(jnp.float32))).astype(x.dtype), p.norm_w)
+    out = jnp.einsum("bsd,dp->bsp", y, p.out_proj)
+    return out, MambaState(h=h, conv=new_conv)

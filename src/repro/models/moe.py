@@ -1,0 +1,156 @@
+"""Mixture-of-Experts MLP with capacity-bounded sorted dispatch (EP-ready).
+
+Gather-based grouped matmul: tokens are ranked within their routed expert
+(stable sort), capacity-clipped, gathered into a dense (E, C, D) tensor,
+pushed through per-expert SwiGLU weights with a single batched einsum, and
+combined back weighted by the router gate.  No (tokens x E x C) one-hot
+dispatch tensor is ever materialised (it would be ~40 TB at prefill_32k),
+and every shape is static so the op shards cleanly: expert dim over the
+'model' axis when divisible (expert parallelism), otherwise d_ff over
+'model' (tensor parallelism inside each expert).
+
+Capacity overflow drops tokens (standard practice); the auxiliary
+load-balancing loss keeps the router from collapsing.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # (D, E)
+    w_gate: jnp.ndarray  # (E, D, F)
+    w_up: jnp.ndarray  # (E, D, F)
+    w_down: jnp.ndarray  # (E, F, D)
+
+
+def init(key, d_model: int, d_ff: int, n_experts: int, dtype) -> MoEParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    return MoEParams(
+        router=(jax.random.normal(k1, (d_model, n_experts)) * s_in).astype(jnp.float32),
+        w_gate=(jax.random.normal(k2, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        w_up=(jax.random.normal(k3, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        w_down=(jax.random.normal(k4, (n_experts, d_ff, d_model)) * s_out).astype(dtype),
+    )
+
+
+def apply(
+    p: MoEParams,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    combine_dtype=jnp.float32,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E = p.router.shape[1]
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p.router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    from .layers import PERF_FLAGS
+
+    if PERF_FLAGS.get("moe_decode_gather") and T * top_k <= E:
+        # §Perf (decode, tiny T): the dense capacity formulation reads EVERY
+        # expert's weights for a handful of tokens — at jamba long_500k that
+        # is ~18 GB/device/token.  Gather only the routed experts' weights
+        # (T*k rows of (D,F)): bytes drop to top_k/E of the expert pool.
+        eflat = eids.reshape(-1)
+        xt = jnp.repeat(xf, top_k, axis=0)  # (Tk, D)
+        wg = p.w_gate[eflat]  # (Tk, D, F) — only routed experts touched
+        wu = p.w_up[eflat]
+        wd = p.w_down[eflat]
+        g = jnp.einsum("td,tdf->tf", xt, wg)
+        u = jnp.einsum("td,tdf->tf", xt, wu)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        y = jnp.einsum("tf,tfd->td", h, wd)  # (Tk, D)
+        tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+        out = jnp.zeros((T, D), dtype=jnp.float32)
+        out = out.at[tok].add(
+            y.astype(jnp.float32) * gate_vals.reshape(-1, 1)
+        )
+        frac = jnp.mean(jax.nn.one_hot(eids[:, 0], E, dtype=jnp.float32), axis=0)
+        aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+        return out.astype(x.dtype).reshape(B, S, D), aux
+
+    # aux loss (Switch-style): E * sum_e fraction_tokens_e * mean_prob_e
+    frac = jnp.mean(
+        jax.nn.one_hot(eids[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # ---- sorted dispatch ---------------------------------------------------
+    TK = T * top_k
+    flat_eid = eids.reshape(TK)
+    flat_gate = gate_vals.reshape(TK)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32)[:, None], top_k, 1).reshape(TK)
+    order = jnp.argsort(flat_eid, stable=True)
+    eid_s = flat_eid[order]
+    tok_s = flat_tok[order]
+    gate_s = flat_gate[order]
+    # rank within expert: position - index of the expert group's first entry
+    pos = jnp.arange(TK, dtype=jnp.int32)
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), eid_s[1:] != eid_s[:-1]]
+    )
+    group_start = jax.lax.cummax(jnp.where(is_first, pos, 0))
+    rank = pos - group_start
+
+    C = max(1, int(round(TK / E * capacity_factor)))
+    keep = rank < C
+    slot = jnp.where(keep, eid_s * C + rank, E * C)  # OOB -> dropped
+
+    gathered = jnp.zeros((E * C, D), dtype=x.dtype)
+    gathered = gathered.at[slot].set(xf[tok_s], mode="drop")
+    gathered = gathered.reshape(E, C, D)
+    if PERF_FLAGS.get("moe_gathered_shard") is not None:
+        # §Perf: pin the dispatch layout so the scatter lands C-over-data
+        # once instead of resharding between scatter, expert matmul and
+        # combine.
+        gathered = jax.lax.with_sharding_constraint(
+            gathered, PERF_FLAGS["moe_gathered_shard"]
+        )
+
+    # ---- per-expert SwiGLU --------------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", gathered, p.w_gate)
+    u = jnp.einsum("ecd,edf->ecf", gathered, p.w_up)
+    if PERF_FLAGS.get("moe_decode_local") is not None:
+        # §Perf (decode): pin the expert intermediates so GSPMD contracts
+        # over the weights' FSDP ('data') dim with PARTIAL SUMS + a tiny
+        # psum of the (E, C, F) activations, instead of all-gathering every
+        # expert's full weight per token (measured 18 GB/device/step on
+        # jamba long_500k).  The flag value is the NamedSharding for
+        # (E, C, F) intermediates: experts over 'model', rest replicated.
+        sh = PERF_FLAGS["moe_decode_local"]
+        g = jax.lax.with_sharding_constraint(g, sh)
+        u = jax.lax.with_sharding_constraint(u, sh)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p.w_down)
+    # §Perf ('moe_y_shard'): the F-sharded contraction leaves (E, C, D)
+    # partial sums that GSPMD all-reduces at FULL f32 size (40 GB/layer at
+    # mixtral prefill_32k).  Casting to bf16 first halves the wire bytes and
+    # pinning a D-over-model sharding turns the all-reduce into a
+    # reduce-scatter (1/16th the bytes).
+    if PERF_FLAGS.get("moe_bf16_combine"):
+        y = y.astype(x.dtype)
+    if PERF_FLAGS.get("moe_y_shard") is not None:
+        y = jax.lax.with_sharding_constraint(y, PERF_FLAGS["moe_y_shard"])
+    y = y.reshape(E * C, D)
+
+    # ---- weighted combine ---------------------------------------------------
+    contrib = y[jnp.minimum(slot, E * C - 1)] * gate_s[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), dtype=combine_dtype)
+    tok_tgt = jnp.where(keep, tok_s, T)
+    out = out.at[tok_tgt].add(contrib.astype(combine_dtype), mode="drop")
+    return out.astype(x.dtype).reshape(B, S, D), aux

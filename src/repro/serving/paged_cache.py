@@ -1,0 +1,130 @@
+"""Paged KV cache whose page table IS a DPA-Store learned index.
+
+The bridge between the paper and the LM serving stack (DESIGN.md §3): a
+paged KV cache needs an *ordered* map
+
+    key   = (seq_id << BLOCK_BITS) | block_idx      (u64, ordered)
+    value = pool slot id
+
+with exactly the store's two read ops: point GET (find a block to append
+into) and RANGE (collect a sequence's blocks, in order, for attention) —
+plus INSERT when a sequence grows a new block.  The insert-buffer / patch /
+stitch machinery gives the same concurrency story as for the KV service:
+lock-free lookups while the host restructures the index.
+
+The KV block *pool* plays "host memory" (big, HBM); the page-table index
+plays "DPA memory" (small, fast).  ``kernels/paged_gather.py`` fuses the
+range lookup's slot list with the pool gather.
+
+This module is deliberately layer-agnostic: one PagedCache instance manages
+one (kv_heads, head_dim) pool; a model wraps one per attention slot group.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPAStore, TreeConfig
+from repro.core.hotcache import CacheConfig
+
+BLOCK_BITS = 20  # up to 2^20 blocks per sequence
+_SENTINEL_SEQ = (1 << 43) - 1  # bulk-load seed key (real seqs stay below)
+
+
+def page_key(seq_id: int, block_idx: int) -> int:
+    return (int(seq_id) << BLOCK_BITS) | int(block_idx)
+
+
+class PagedCache:
+    def __init__(
+        self,
+        n_blocks: int,
+        block_size: int,
+        kv_heads: int,
+        head_dim: int,
+        dtype=jnp.bfloat16,
+        tree_cfg: TreeConfig = TreeConfig(ib_cap=32, growth=8.0),
+    ):
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.pool_k = jnp.zeros((n_blocks, block_size, kv_heads, head_dim), dtype)
+        self.pool_v = jnp.zeros((n_blocks, block_size, kv_heads, head_dim), dtype)
+        self.free: List[int] = list(range(n_blocks - 1, -1, -1))
+        # the learned page table — a real DPA-Store (bulk-loaded with one
+        # sentinel mapping; the store requires a non-empty tree)
+        seed_key = np.array([page_key(_SENTINEL_SEQ, 0)], dtype=np.uint64)
+        self.table = DPAStore(
+            seed_key,
+            np.array([0], dtype=np.uint64),
+            tree_cfg,
+            cache_cfg=CacheConfig(n_threads=16, admit_shift=0),
+        )
+        self.seq_len: Dict[int, int] = {}  # live length per sequence
+
+    # ------------------------------------------------------------ write path
+    def append(self, seq_id: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Append one token's (kv_heads, head_dim) K/V for a sequence."""
+        pos = self.seq_len.get(seq_id, 0)
+        block_idx, offset = divmod(pos, self.block_size)
+        key = np.array([page_key(seq_id, block_idx)], dtype=np.uint64)
+        if offset == 0:
+            slot = self.free.pop()
+            self.table.put(key, np.array([slot], dtype=np.uint64))
+        else:
+            vals, found = self.table.get(key)
+            assert found[0], f"page table lost block {seq_id}/{block_idx}"
+            slot = int(vals[0])
+        self.pool_k = self.pool_k.at[slot, offset].set(k.astype(self.pool_k.dtype))
+        self.pool_v = self.pool_v.at[slot, offset].set(v.astype(self.pool_v.dtype))
+        self.seq_len[seq_id] = pos + 1
+
+    def release(self, seq_id: int) -> int:
+        """Finish a sequence: delete its pages, reclaim pool slots."""
+        n = self.seq_len.pop(seq_id, 0)
+        n_blocks = (n + self.block_size - 1) // self.block_size
+        keys = np.array(
+            [page_key(seq_id, b) for b in range(n_blocks)], dtype=np.uint64
+        )
+        if n_blocks:
+            vals, found = self.table.get(keys)
+            self.free.extend(int(v) for v, f in zip(vals, found) if f)
+            self.table.delete(keys)
+        return n_blocks
+
+    # ------------------------------------------------------------- read path
+    def lookup_slots(self, seq_id: int) -> np.ndarray:
+        """RANGE over the learned index: the sequence's pool slots in block
+        order — the paper's ordered scan doing real serving work."""
+        n = self.seq_len.get(seq_id, 0)
+        n_blocks = (n + self.block_size - 1) // self.block_size
+        if n_blocks == 0:
+            return np.zeros((0,), dtype=np.int32)
+        start = np.array([page_key(seq_id, 0)], dtype=np.uint64)
+        keys, vals, cnt = self.table.range(
+            start, limit=n_blocks, max_leaves=max(4, n_blocks // 16 + 2)
+        )
+        got = int(cnt[0])
+        assert got == n_blocks, f"range returned {got} != {n_blocks} blocks"
+        # guard against unrelated keys (next sequence) — ordered keys make
+        # this a prefix check
+        expect = np.array(
+            [page_key(seq_id, b) for b in range(n_blocks)], dtype=np.uint64
+        )
+        assert np.array_equal(keys[0][:got], expect)
+        return vals[0][:got].astype(np.int32)
+
+    def gather(self, seq_id: int, impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Materialise a sequence's (S_padded, H, hd) K/V via the page table.
+        Returns (k, v, valid_len)."""
+        from repro.kernels import paged_gather
+
+        slots = self.lookup_slots(seq_id)
+        n = self.seq_len.get(seq_id, 0)
+        k = paged_gather.gather(self.pool_k, jnp.asarray(slots), impl=impl)
+        v = paged_gather.gather(self.pool_v, jnp.asarray(slots), impl=impl)
+        S = slots.size * self.block_size
+        return k.reshape(S, *k.shape[2:]), v.reshape(S, *v.shape[2:]), n

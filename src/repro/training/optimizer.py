@@ -1,0 +1,163 @@
+"""Optimizers: AdamW and Adafactor, functional and sharding-transparent.
+
+State pytrees mirror the parameter tree, so every PartitionSpec rule that
+applies to a parameter applies to its moments — that is what lets the ZeRO
+pass in ``distributed/sharding.py`` re-shard optimizer state over the data
+axis without optimizer-specific code.
+
+Adafactor (factored second moment, no first moment by default) exists
+because fp32 Adam m/v for the 398-405B archs is ~19 GB/chip on a 256-chip
+pod — over the v5e HBM budget.  Factored states cut that to ~par with the
+bf16 parameters (the T5/PaLM recipe).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    factored_min: int = 128  # factor second moment only for >=2D leaves this big
+
+
+def init(cfg: OptConfig, params) -> Dict[str, Any]:
+    if cfg.kind == "adamw":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+    if cfg.kind == "adafactor":
+
+        def vrow(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min:
+                return jnp.zeros(p.shape[:-1], dtype=jnp.float32)
+            return jnp.zeros(p.shape, dtype=jnp.float32)
+
+        def vcol(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32)
+            return jnp.zeros((1,), dtype=jnp.float32)  # unused sentinel
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _global_norm(grads):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+
+
+def _sequenced_map(fn, *trees):
+    """tree.map with per-leaf scheduling edges: leaf i+1's inputs pass
+    through an optimization_barrier tied to leaf i's first output, so XLA
+    cannot live-range every leaf's f32 temporaries simultaneously (measured
+    ~25 GB/device of concurrent optimizer chain at 405B; with the chain the
+    peak is ~one leaf's temporaries).  ``fn`` returns a tuple of arrays; the
+    result is a tuple of trees."""
+    flats = [jax.tree.flatten(t) for t in trees]
+    treedef = flats[0][1]
+    rows = list(zip(*[f[0] for f in flats]))
+    outs = []
+    token = None
+    for row in rows:
+        if token is not None:
+            barr = jax.lax.optimization_barrier(tuple(row) + (token,))
+            row = barr[:-1]
+        res = fn(*row)
+        outs.append(res)
+        token = res[0]
+    unzipped = list(zip(*outs))
+    return tuple(jax.tree.unflatten(treedef, list(u)) for u in unzipped)
+
+
+def update(
+    cfg: OptConfig, params, grads, state
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One optimizer step. Returns (new params, new state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    # NOTE: the f32 cast + clip-scale happens inside the per-leaf update so
+    # XLA fuses it leaf-wise — a whole-tree `tree.map(astype(f32))` up front
+    # materialises an extra full-model f32 tree (6.3 GB/device at 405B).
+    step = state["step"] + 1
+
+    if cfg.kind == "adamw":
+        bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+        new_params, new_m, new_v = _sequenced_map(
+            upd, params, grads, state["m"], state["v"]
+        )
+        return (
+            new_params,
+            {"step": step, "m": new_m, "v": new_v},
+            {"grad_norm": gnorm},
+        )
+
+    # ---- adafactor ---------------------------------------------------------
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        factored = p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min
+        if factored:
+            vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr_n / jnp.maximum(
+                jnp.mean(vr_n, axis=-1, keepdims=True), 1e-30
+            )
+            vhat = r[..., None] * vc_n[..., None, :]
+        else:
+            vr_n = decay * vr + (1 - decay) * g2
+            vc_n = vc
+            vhat = vr_n
+        upd_ = g / jnp.sqrt(vhat + cfg.eps)
+        # update clipping (RMS <= 1) — adafactor's stabiliser
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-30)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        new_p = (
+            p.astype(jnp.float32)
+            - cfg.lr * upd_
+            - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        ).astype(p.dtype)
+        return new_p, vr_n, vc_n
+
+    new_params, new_vr, new_vc = _sequenced_map(
+        upd, params, grads, state["vr"], state["vc"]
+    )
+    return (
+        new_params,
+        {"step": step, "vr": new_vr, "vc": new_vc},
+        {"grad_norm": gnorm},
+    )

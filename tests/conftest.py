@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see the 1 real CPU device.  Only launch/dryrun.py forces 512 hosts.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xD9A)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--heavy",
+        action="store_true",
+        default=False,
+        help="run heavy tests (big datasets, deep trees)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--heavy"):
+        return
+    skip = pytest.mark.skip(reason="needs --heavy")
+    for item in items:
+        if "heavy" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: a REDUCED config of each family runs one
+forward + train-grad step (and a prefill->decode handoff for decoders) on
+CPU, asserting output shapes and finiteness.  The FULL configs are exercised
+only by the dry-run (AOT, no allocation)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import lm
+
+
+def _batch(cfg, B=2, S=32):
+    rng = np.random.default_rng(0)
+    if cfg.frontend != "none":
+        emb = rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        batch = {
+            "embeds": jnp.asarray(emb),
+            "tokens": None,
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32
+            ),
+        }
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+        batch = {"tokens": toks, "embeds": None, "labels": toks}
+    return batch
+
+
+@pytest.mark.parametrize("arch_name", sorted(ARCHS.keys()))
+def test_reduced_forward_and_grad(arch_name):
+    cfg = reduced(ARCHS[arch_name])
+    params = lm.init(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    logits, aux, _ = lm.forward(
+        cfg, params, tokens=batch["tokens"], embeds=batch["embeds"], mode="train"
+    )
+    B = 2
+    S = 32
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def scalar_loss(p):
+        total, parts = lm.loss_fn(cfg, p, batch)
+        return total
+
+    loss, grads = jax.value_and_grad(scalar_loss)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))) for g in flat)
+    # at least the embedding and one block got gradient signal
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize(
+    "arch_name",
+    sorted(n for n, c in ARCHS.items() if c.causal),
+)
+def test_reduced_prefill_decode_consistency(arch_name):
+    """decode_step after prefill must reproduce teacher-forced logits."""
+    cfg = reduced(ARCHS[arch_name])
+    params = lm.init(cfg, jax.random.key(1))
+    B, S = 2, 32
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+    if cfg.frontend != "none":
+        emb = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+        full_logits, _, cache = lm.forward(cfg, params, embeds=emb, mode="prefill")
+    else:
+        full_logits, _, cache = lm.forward(cfg, params, tokens=toks, mode="prefill")
+
+    # rebuild a decode cache from the prefill cache, sized to S + 4
+    max_len = S + 4
+    dc = lm.init_cache(cfg, B, max_len)
+    for slot, (pc, dst) in enumerate(zip(cache["slots"], dc["slots"])):
+        if "k" in dst:
+            W = pc["k"].shape[2]
+            dst["k"] = dst["k"].at[:, :, :W].set(pc["k"])
+            dst["v"] = dst["v"].at[:, :, :W].set(pc["v"])
+        else:
+            dst["h"] = pc["h"]
+            dst["conv"] = pc["conv"]
+        dc["slots"][slot] = dst
+
+    # ring caches (window/chunk) only line up when S <= ring size; reduced
+    # configs use window/chunk 16 < S, so validate full-attention archs
+    # exactly and ring archs for finiteness + shape.
+    ring = any(
+        cfg.attn_flavor(i) in ("window", "chunk")
+        for i in range(cfg.superblock)
+        if cfg.layer_kind(i) == "attn"
+    )
+    step_tok = toks[:, -1] if cfg.frontend == "none" else None
+    if cfg.frontend != "none":
+        step_in = emb[:, -1]
+    else:
+        step_in = step_tok
+    logits, dc2 = lm.decode_step(cfg, params, dc, step_in, jnp.int32(S - 1))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    if not ring and not cfg.has_ssm:
+        # exact consistency: decoding token S-1 with the first S-1 cached
+        # equals the teacher-forced logits at position S-1
+        np.testing.assert_allclose(
+            np.asarray(logits, dtype=np.float32),
+            np.asarray(full_logits[:, -1], dtype=np.float32),
+            rtol=2e-2,
+            atol=2e-2,
+        )

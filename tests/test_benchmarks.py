@@ -1,0 +1,74 @@
+"""Benchmark-level reproduction assertions: the paper's claims must hold in
+the implemented system + calibrated models (not just be printed)."""
+
+import numpy as np
+import pytest
+
+from benchmarks.table1_memory import overhead
+from repro.core import perfmodel, rolex_model
+
+
+def test_table1_qualitative_contract():
+    """Ordering + eps sensitivity (paper Table 1): clustered datasets cost
+    much more than smooth ones; eps=16 reclaims osmc/face."""
+    ov = {ds: overhead(ds, 8) for ds in ("sparse", "wiki", "amzn", "osmc", "face")}
+    assert ov["face"] > ov["osmc"] > ov["amzn"] > ov["sparse"]
+    assert ov["face"] > 4 * ov["sparse"]  # the pathological cases hurt
+    assert overhead("osmc", 16) < 0.6 * ov["osmc"]
+    assert overhead("face", 16) < 0.6 * ov["face"]
+
+
+def test_osmc_at_eps16_matches_paper():
+    """Paper: osmc drops from 74% to 35% at eps=16 — our generator lands on
+    the same 35% figure."""
+    assert abs(overhead("osmc", 16) - 0.35) < 0.08
+
+
+def test_insert_is_stitch_bound_not_compute_bound():
+    """Fig 13: DPA-side bytes/insert measured on the real store pushes the
+    model into the ~1-2.5 MOPS band, an order below UPDATE throughput."""
+    from benchmarks.common import build_store
+
+    store = build_store("sparse", n=50_000, cache=False)
+    rng = np.random.default_rng(0)
+    all_keys, _ = store.items()
+    newk = np.setdiff1d(rng.integers(0, 2**63, 9000, dtype=np.uint64), all_keys)[:4096]
+    b0 = store.stats.stitched_dpa_bytes
+    store.put(newk, newk)
+    bpi = (store.stats.stitched_dpa_bytes - b0) / len(newk)
+    ins = perfmodel.insert_mops(bpi, depth=store.depth)
+    upd = perfmodel.update_mops(depth=store.depth)
+    assert ins < upd / 3, (ins, upd)
+    assert 0.2 < ins < 4.0, f"bytes/insert={bpi}"
+
+
+def test_ycsb_relations_match_fig15():
+    """DPA-Store vs ROLEX qualitative wins/losses (Fig 15)."""
+    dpa_get = perfmodel.get_mops(3)
+    dpa_get_osmc = perfmodel.get_mops(3, 16, 16)
+    # GET: DPA-Store wins on sparse/amzn, ROLEX wins on osmc
+    assert dpa_get > rolex_model.get_mops("sparse")
+    assert dpa_get > rolex_model.get_mops("amzn")
+    assert dpa_get_osmc < rolex_model.get_mops("osmc")
+    # RANGE: DPA-Store wins everywhere
+    assert perfmodel.range_mops(3) > rolex_model.range_mops(10)
+    # INSERT: ROLEX wins big
+    assert rolex_model.insert_mops() > 3 * perfmodel.insert_mops(70.0)
+    # YCSB-A on amzn/osmc: DPA-Store exceeds ROLEX (paper Fig 15) — the
+    # patcher ceiling scales with the update FRACTION (resource-separated)
+    for ds, eps in (("amzn", (4, 8)), ("osmc", (16, 16))):
+        blend = perfmodel.mix_mops({"get": 0.5, "update": 0.5}, 3, *eps)
+        assert blend > rolex_model.ycsb_mops("A", ds), (ds, blend)
+
+
+def test_roofline_reader_runs_if_results_exist():
+    from benchmarks import roofline
+
+    rows = roofline.load_all()
+    if not rows:
+        pytest.skip("no dry-run artifacts yet")
+    ok = [r for r in rows if "dominant" in r]
+    assert ok, "dry-run artifacts exist but none analysable"
+    for r in ok:
+        assert r["t_compute_s"] >= 0 and r["t_memory_s"] >= 0
+        assert r["dominant"] in ("compute", "memory", "collective")

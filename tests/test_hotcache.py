@@ -1,0 +1,98 @@
+"""Hot-entry cache: paper's statistical claims + consistency behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hotcache
+from repro.core.hotcache import CacheConfig
+from repro.core.keys import split_u64
+from repro.core import DPAStore
+from repro.core.datasets import sparse, zipf_indices
+
+
+def _limbs(keys):
+    l = split_u64(np.asarray(keys, dtype=np.uint64))
+    return jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+
+
+def test_expected_fp_rate_is_paper_31pct():
+    assert abs(hotcache.expected_fp_rate(CacheConfig()) - 0.31) < 0.02
+
+
+def test_zipf_coverage_over_50pct():
+    """Paper Sec 3.1.2: 16,896 cached entries cover >50 % of Zipf(1.0)
+    requests over a 200 M dataset."""
+    frac = hotcache.zipf_cacheable_fraction(200_000_000, CacheConfig(), alpha=1.0)
+    assert frac > 0.50
+    assert CacheConfig().total_entries == 16_896
+
+
+def test_measured_fp_rate_matches_analytic():
+    """Fill one thread's filter with 96 keys; probe misses; ~31 % pass."""
+    cfg = CacheConfig(n_threads=1)
+    cache = hotcache.make_cache(cfg)
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 2**63, 96, dtype=np.uint64)
+    tid = jnp.zeros(96, dtype=jnp.int32)
+    kh, kl = _limbs(keys)
+    # admit() samples randomly per wave; loop until (almost) all 96 are in
+    for w in range(40):
+        cache = hotcache.admit(
+            cache, tid, kh, kl, kh, kl, jnp.ones(96, dtype=bool), cfg=cfg, wave=w
+        )
+    probes = rng.integers(0, 2**63, 20_000, dtype=np.uint64)
+    probes = np.setdiff1d(probes, keys)
+    ph, pl = _limbs(probes)
+    ptid = jnp.zeros(probes.size, dtype=jnp.int32)
+    hit, _, _ = hotcache.probe(cache, ptid, ph, pl, cfg=cfg)
+    # bloom false positives pass the filter but fail the bucket compare ->
+    # measured as "bloom pass" rate; probe() returns bucket-verified hits,
+    # which must be zero for unseen keys.
+    assert int(jnp.sum(hit)) == 0
+    # measure bloom pass rate directly
+    may = jnp.ones(probes.size, dtype=bool)
+    for h in hotcache._bloom_hashes(ph, pl, cfg.bloom_bits):
+        word = cache.bloom[ptid, (h // 32).astype(jnp.int32)]
+        may &= (word >> (h % 32)) & 1 == 1
+    rate = float(jnp.mean(may.astype(jnp.float32)))
+    expected = hotcache.expected_fp_rate(cfg)
+    assert abs(rate - expected) < 0.06, (rate, expected)
+
+
+def test_cache_hit_correct_and_invalidation():
+    cfg = CacheConfig(n_threads=8, admit_shift=0)  # admit everything
+    cache = hotcache.make_cache(cfg)
+    keys = np.arange(1, 33, dtype=np.uint64) * np.uint64(2**40 + 7)
+    kh, kl = _limbs(keys)
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    vals = keys ^ np.uint64(99)
+    vh, vl = _limbs(vals)
+    cache = hotcache.admit(cache, tid, kh, kl, vh, vl, jnp.ones(32, bool), cfg=cfg)
+    hit, gh, gl = hotcache.probe(cache, tid, kh, kl, cfg=cfg)
+    got = (np.asarray(gh).astype(np.uint64) << np.uint64(32)) | np.asarray(gl)
+    ok = np.asarray(hit)
+    assert ok.mean() > 0.8  # way collisions may evict a few
+    assert np.all(got[ok] == vals[ok])
+    # invalidate half, they must miss afterwards
+    cache = hotcache.invalidate(
+        cache, tid[:16], kh[:16], kl[:16], jnp.ones(16, bool), cfg=cfg
+    )
+    hit2, _, _ = hotcache.probe(cache, tid, kh, kl, cfg=cfg)
+    assert not np.any(np.asarray(hit2)[:16])
+
+
+def test_store_cache_hits_under_zipf_and_consistency():
+    """End-to-end: skewed GETs hit the cache; UPDATEs never serve stale."""
+    keys = sparse(3000, seed=21)
+    vals = keys + np.uint64(1)
+    st = DPAStore(keys, vals)
+    idx = zipf_indices(len(keys), 4000, alpha=0.99, seed=1)
+    for chunk in np.array_split(idx, 8):
+        st.get(keys[chunk])
+    assert st.stats.cache_hits > 0
+    # update the hottest keys; subsequent GETs must see new values
+    hot, counts = np.unique(idx, return_counts=True)
+    hottest = keys[hot[np.argsort(counts)][-50:]]
+    st.put(hottest, hottest ^ np.uint64(0xF00D))
+    v, f = st.get(hottest)
+    assert f.all() and np.all(v == (hottest ^ np.uint64(0xF00D)))

@@ -1,0 +1,159 @@
+"""Kernel == oracle sweeps (interpret mode), per the deliverable contract:
+for each Pallas kernel, sweep shapes/configs and assert exact agreement with
+the pure-jnp ref."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DPAStore, TreeConfig
+from repro.core.hotcache import CacheConfig
+from repro.core import hotcache
+from repro.core.datasets import sparse, dense4x, osmc, face
+from repro.core.keys import split_u64
+from repro.kernels import ops, ref
+
+
+def _mk(n, dataset=sparse, eps=(4, 8), ib_cap=16, seed=7, churn=0):
+    keys = dataset(n, seed=seed)
+    st = DPAStore(
+        keys,
+        keys ^ np.uint64(0x5A5A),
+        TreeConfig(eps_inner=eps[0], eps_leaf=eps[1], ib_cap=ib_cap),
+        cache_cfg=None,
+    )
+    rng = np.random.default_rng(seed + 1)
+    if churn:
+        newk = np.setdiff1d(
+            rng.integers(0, 2**63, churn, dtype=np.uint64), keys
+        )
+        st.put(newk, newk + np.uint64(77))
+        st.delete(keys[10 : 10 + churn // 4])
+    return st, keys, rng
+
+
+def _q(st, keys, rng, n_q):
+    q = np.concatenate(
+        [
+            rng.choice(keys, n_q // 2),
+            rng.integers(0, 2**63, n_q - n_q // 2, dtype=np.uint64),
+        ]
+    )
+    l = split_u64(q)
+    return jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+
+
+@pytest.mark.parametrize(
+    "n,dataset,eps,churn",
+    [
+        (1000, sparse, (4, 8), 0),
+        (4000, sparse, (4, 8), 150),
+        (3000, dense4x, (4, 8), 60),
+        (3000, osmc, (16, 16), 60),
+        (2000, face, (16, 16), 0),
+        (30_000, sparse, (4, 8), 0),  # deeper tree
+        (1000, sparse, (1, 2), 40),  # tiny eps windows
+    ],
+)
+def test_get_kernel_matches_ref(n, dataset, eps, churn):
+    st, keys, rng = _mk(n, dataset, eps, churn=churn)
+    for n_q in (64, 128, 257):  # incl. non-multiple of the tile
+        kh, kl = _q(st, keys, rng, n_q)
+        vh1, vl1, f1 = ops.get(
+            st.tree,
+            st.ib,
+            kh,
+            kl,
+            depth=st.depth,
+            eps_inner=eps[0],
+            eps_leaf=eps[1],
+            impl="pallas_interpret",
+        )
+        vh2, vl2, f2 = ref.get(
+            st.tree, st.ib, kh, kl, depth=st.depth, eps_inner=eps[0], eps_leaf=eps[1]
+        )
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.where(f2, vh1, 0)), np.asarray(jnp.where(f2, vh2, 0))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(jnp.where(f2, vl1, 0)), np.asarray(jnp.where(f2, vl2, 0))
+        )
+
+
+@pytest.mark.parametrize("n_threads,n_buckets", [(8, 24), (176, 24), (16, 8)])
+def test_cache_probe_kernel_matches_ref(n_threads, n_buckets):
+    cfg = CacheConfig(n_threads=n_threads, n_buckets=n_buckets, admit_shift=0)
+    cache = hotcache.make_cache(cfg)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 2**63, 300, dtype=np.uint64)
+    l = split_u64(keys)
+    kh, kl = jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    for w in range(6):
+        cache = hotcache.admit(
+            cache, tid, kh, kl, kl, kh, jnp.ones(300, bool), cfg=cfg, wave=w
+        )
+    probes = np.concatenate([keys[:100], rng.integers(0, 2**63, 60, dtype=np.uint64)])
+    pl_ = split_u64(probes)
+    ph, pl2 = jnp.asarray(pl_[:, 0]), jnp.asarray(pl_[:, 1])
+    ptid = hotcache.steer(ph, pl2, cfg.n_threads)
+    h1, v1h, v1l = ops.cache_probe(
+        cache, ptid, ph, pl2, cfg=cfg, impl="pallas_interpret"
+    )
+    h2, v2h, v2l = ref.cache_probe(cache, ptid, ph, pl2, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(h2, v1h, 0)), np.asarray(jnp.where(h2, v2h, 0))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(h2, v1l, 0)), np.asarray(jnp.where(h2, v2l, 0))
+    )
+
+
+@pytest.mark.parametrize(
+    "n,churn,limit,max_leaves",
+    [
+        (2000, 0, 10, 4),
+        (2000, 120, 10, 4),
+        (4000, 200, 64, 6),  # the paper's 64-per-packet bound
+        (1500, 80, 3, 2),
+    ],
+)
+def test_range_kernel_matches_ref(n, churn, limit, max_leaves):
+    st, keys, rng = _mk(n, sparse, churn=churn, seed=11)
+    starts = np.concatenate(
+        [
+            rng.choice(keys, 20),
+            rng.integers(0, 2**63, 12, dtype=np.uint64),
+            keys[-3:],  # near the end: chain termination
+        ]
+    )
+    l = split_u64(starts)
+    kh, kl = jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+    k1, v1, ok1 = ops.range_scan(
+        st.tree,
+        st.ib,
+        kh,
+        kl,
+        depth=st.depth,
+        eps_inner=st.cfg.eps_inner,
+        limit=limit,
+        max_leaves=max_leaves,
+        impl="pallas_interpret",
+        block_requests=35,
+    )
+    k2, v2, ok2 = ref.range_scan(
+        st.tree,
+        st.ib,
+        kh,
+        kl,
+        depth=st.depth,
+        eps_inner=st.cfg.eps_inner,
+        limit=limit,
+        max_leaves=max_leaves,
+    )
+    np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+    m = np.asarray(ok2)
+    np.testing.assert_array_equal(np.asarray(k1)[m], np.asarray(k2)[m])
+    np.testing.assert_array_equal(np.asarray(v1)[m], np.asarray(v2)[m])

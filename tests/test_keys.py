@@ -1,0 +1,69 @@
+"""Unit + property tests for u64 limb key handling."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.keys import (
+    split_u64,
+    join_u64,
+    limb_lt,
+    limb_le,
+    limb_eq,
+    limb_sub_to_f32,
+    limb_hash,
+    limb_hash_np,
+)
+
+u64s = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+@given(st.lists(u64s, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_split_join_roundtrip(xs):
+    arr = np.array(xs, dtype=np.uint64)
+    assert np.array_equal(join_u64(split_u64(arr)), arr)
+
+
+@given(u64s, u64s)
+@settings(max_examples=200, deadline=None)
+def test_limb_compare_matches_u64(a, b):
+    la = split_u64(np.array([a], dtype=np.uint64))
+    lb = split_u64(np.array([b], dtype=np.uint64))
+    ah, al = jnp.asarray(la[:, 0]), jnp.asarray(la[:, 1])
+    bh, bl = jnp.asarray(lb[:, 0]), jnp.asarray(lb[:, 1])
+    assert bool(limb_lt(ah, al, bh, bl)[0]) == (a < b)
+    assert bool(limb_le(ah, al, bh, bl)[0]) == (a <= b)
+    assert bool(limb_eq(ah, al, bh, bl)[0]) == (a == b)
+
+
+@given(u64s, u64s)
+@settings(max_examples=200, deadline=None)
+def test_limb_sub_error_bound(a, b):
+    """|f32(a-b) - (a-b)| <= (a-b) * 2^-23 — the renormalisation guarantee."""
+    a, b = max(a, b), min(a, b)
+    la = split_u64(np.array([a], dtype=np.uint64))
+    lb = split_u64(np.array([b], dtype=np.uint64))
+    got = float(
+        limb_sub_to_f32(
+            jnp.asarray(la[:, 0]),
+            jnp.asarray(la[:, 1]),
+            jnp.asarray(lb[:, 0]),
+            jnp.asarray(lb[:, 1]),
+        )[0]
+    )
+    true = float(a - b)
+    assert abs(got - true) <= max(true * 2.0**-23, 1e-6)
+
+
+@given(st.lists(u64s, min_size=1, max_size=32), st.integers(0, 7))
+@settings(max_examples=50, deadline=None)
+def test_hash_np_jnp_bitwise_equal(xs, salt):
+    """Client-side (numpy) and DPA-side (jnp) steering hashes must agree."""
+    arr = np.array(xs, dtype=np.uint64)
+    limbs = split_u64(arr)
+    dev = np.asarray(
+        limb_hash(jnp.asarray(limbs[:, 0]), jnp.asarray(limbs[:, 1]), salt)
+    )
+    host = limb_hash_np(arr, salt)
+    assert np.array_equal(dev, host)

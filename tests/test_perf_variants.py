@@ -1,0 +1,74 @@
+"""§Perf optimisation variants must be numerically equivalent to baseline
+(the hillclimb methodology: keep the speedup, prove nothing broke)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import layers, lm
+
+
+def test_paired_causal_equals_masked_fwd_and_grad():
+    q = jax.random.normal(jax.random.key(0), (2, 128, 8, 16))
+    k = jax.random.normal(jax.random.key(1), (2, 128, 4, 16))
+    v = jax.random.normal(jax.random.key(2), (2, 128, 4, 16))
+    a = layers.blockwise_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    b = layers.blockwise_attention(
+        q, k, v, causal=True, block_q=16, block_kv=16, causal_scheme="paired"
+    )
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5
+    )
+    f = lambda scheme: lambda qq: jnp.sum(
+        layers.blockwise_attention(
+            qq, k, v, causal=True, block_q=16, block_kv=16, causal_scheme=scheme
+        ).astype(jnp.float32)
+    )
+    ga = jax.grad(f("masked"))(q)
+    gb = jax.grad(f("paired"))(q)
+    np.testing.assert_allclose(
+        np.asarray(ga, np.float32), np.asarray(gb, np.float32), atol=1e-5
+    )
+
+
+def test_moe_bf16_combine_close_to_f32():
+    cfg = reduced(ARCHS["mixtral-8x7b"])
+    params = lm.init(cfg, jax.random.key(0))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 32)), jnp.int32
+    )
+    base, _, _ = lm.forward(cfg, params, tokens=toks)
+    layers.set_perf_flags(moe_bf16_combine=True)
+    try:
+        opt, _, _ = lm.forward(cfg, params, tokens=toks)
+    finally:
+        layers.set_perf_flags()
+    # bf16 combine adds <= top_k values: tolerance is bf16 epsilon-scale
+    np.testing.assert_allclose(
+        np.asarray(base, np.float32), np.asarray(opt, np.float32), atol=0.15, rtol=0.1
+    )
+
+
+def test_perf_flags_do_not_leak():
+    layers.set_perf_flags(paired_causal=True)
+    layers.set_perf_flags()
+    assert layers.PERF_FLAGS == {}
+
+
+def test_paired_causal_inside_full_model():
+    """End-to-end loss parity on a reduced dense model."""
+    cfg = reduced(ARCHS["deepseek-coder-33b"])
+    params = lm.init(cfg, jax.random.key(3))
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 64)), jnp.int32
+    )
+    batch = {"tokens": toks, "embeds": None, "labels": toks}
+    base, _ = lm.loss_fn(cfg, params, batch)
+    layers.set_perf_flags(paired_causal=True)
+    try:
+        opt, _ = lm.loss_fn(cfg, params, batch)
+    finally:
+        layers.set_perf_flags()
+    assert abs(float(base) - float(opt)) < 1e-3

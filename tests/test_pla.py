@@ -1,0 +1,75 @@
+"""PLA training: the hard eps guarantee is the foundation of the whole store."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pla
+from repro.core.datasets import DATASETS
+
+
+def _check_bound(keys, segs, eps):
+    assert sum(s.count for s in segs) == keys.size  # exact partition
+    start = 0
+    for s in segs:
+        assert s.start == start
+        start += s.count
+        d = (keys[s.start : s.start + s.count] - s.anchor).astype(np.float64)
+        pred = s.slope * d
+        ranks = np.arange(s.count)
+        assert np.all(np.abs(pred - ranks) <= eps + 1e-6)
+
+
+@given(
+    st.lists(
+        st.integers(0, 2**64 - 2), min_size=1, max_size=600, unique=True
+    ),
+    st.sampled_from([1, 4, 8, 16]),
+)
+@settings(max_examples=60, deadline=None)
+def test_eps_bound_property(xs, eps):
+    keys = np.array(sorted(xs), dtype=np.uint64)
+    segs = pla.fit(keys, eps)
+    _check_bound(keys, segs, eps)
+    assert all(s.count <= 128 for s in segs)
+
+
+def test_eps_bound_all_datasets():
+    for name, gen in DATASETS.items():
+        keys = gen(20_000, seed=3)
+        for eps in (4, 8, 16):
+            segs = pla.fit(keys, eps)
+            _check_bound(keys, segs, eps)
+
+
+def test_adversarial_shapes():
+    # consecutive run + huge jump + dense cluster
+    a = np.arange(1000, dtype=np.uint64)
+    b = np.uint64(2**63) + np.arange(0, 5000, 5, dtype=np.uint64)
+    c = np.uint64(2**64 - 10_000) + np.arange(500, dtype=np.uint64) * np.uint64(3)
+    keys = np.concatenate([a, b, c])
+    segs = pla.fit(keys, 8)
+    _check_bound(keys, segs, 8)
+
+
+def test_max_count_respected():
+    keys = np.arange(10_000, dtype=np.uint64) * np.uint64(7)
+    segs = pla.fit(keys, 8, max_count=32)
+    assert all(s.count <= 32 for s in segs)
+    _check_bound(keys, segs, 8)
+
+
+def test_fixed_point_matches_float():
+    """The paper's 128-bit fixed-point evaluation == our float path (+-1)."""
+    rng = np.random.default_rng(7)
+    keys = np.unique(rng.integers(0, 2**64, 5000, dtype=np.uint64))
+    segs = pla.fit(keys, 8)
+    for s in segs[:50]:
+        ks = keys[s.start : s.start + s.count]
+        f = pla.predict_float(s, ks)
+        fp = pla.predict_fixed(s, ks)
+        assert np.all(np.abs(f - fp) <= 1.0)
+
+
+def test_single_key_and_duplicum_free():
+    segs = pla.fit(np.array([42], dtype=np.uint64), 4)
+    assert len(segs) == 1 and segs[0].count == 1 and segs[0].slope == 0.0

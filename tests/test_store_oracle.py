@@ -1,0 +1,175 @@
+"""Store == sorted-dict oracle under arbitrary op interleavings.
+
+Invariant 2 of DESIGN.md: GET/INSERT/UPDATE/DELETE/RANGE agree with a plain
+dict oracle at wave granularity, through any number of patch/stitch cycles
+(including depth growth).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig
+from repro.core.datasets import sparse, dense4x, osmc
+
+
+def _mk_store(n=2000, dataset=sparse, **kw):
+    keys = dataset(n, seed=11)
+    vals = keys ^ np.uint64(0xABCD)
+    return DPAStore(keys, vals, **kw), dict(zip(keys.tolist(), vals.tolist()))
+
+
+def _check_gets(store, oracle, qkeys):
+    v, f = store.get(np.array(qkeys, dtype=np.uint64))
+    for i, k in enumerate(qkeys):
+        if k in oracle:
+            assert f[i], f"key {k} missing"
+            assert int(v[i]) == oracle[k], f"key {k} wrong value"
+        else:
+            assert not f[i], f"phantom key {k}"
+
+
+@given(st.data())
+@settings(max_examples=12, deadline=None)
+def test_random_interleavings(data):
+    store, oracle = _mk_store(800)
+    existing = list(oracle.keys())
+    rng_seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(rng_seed)
+    for _ in range(6):
+        op = data.draw(st.sampled_from(["put_new", "put_old", "delete", "get"]))
+        if op == "put_new":
+            ks = rng.integers(0, 2**63, 40, dtype=np.uint64)
+            ks = np.setdiff1d(ks, np.array(existing, dtype=np.uint64))
+            vs = ks + np.uint64(5)
+            store.put(ks, vs)
+            oracle.update(zip(ks.tolist(), vs.tolist()))
+            existing.extend(ks.tolist())
+        elif op == "put_old":
+            idx = rng.choice(len(existing), min(30, len(existing)), replace=False)
+            ks = np.array([existing[i] for i in idx], dtype=np.uint64)
+            ks = np.array([k for k in ks if k in oracle] or [existing[0]], dtype=np.uint64)
+            vs = ks ^ np.uint64(rng.integers(1, 2**31))
+            store.put(ks, vs)
+            oracle.update(zip(ks.tolist(), vs.tolist()))
+        elif op == "delete":
+            live = [k for k in existing if k in oracle]
+            if live:
+                idx = rng.choice(len(live), min(20, len(live)), replace=False)
+                ks = np.array([live[i] for i in idx], dtype=np.uint64)
+                store.delete(ks)
+                for k in ks.tolist():
+                    oracle.pop(k, None)
+        else:
+            sample = rng.choice(existing, min(50, len(existing)), replace=False)
+            probe = np.concatenate(
+                [sample, rng.integers(0, 2**63, 20, dtype=np.uint64)]
+            )
+            _check_gets(store, oracle, probe.tolist())
+    # final full verification
+    ik, iv = store.items()
+    assert len(ik) == len(oracle)
+    assert np.array_equal(ik, np.array(sorted(oracle.keys()), dtype=np.uint64))
+    for k, v in zip(ik.tolist(), iv.tolist()):
+        assert oracle[k] == v
+    # and after flushing all buffers (structure fully stitched)
+    store.flush()
+    ik2, iv2 = store.items()
+    assert np.array_equal(ik, ik2) and np.array_equal(iv, iv2)
+    _check_gets(store, oracle, list(oracle.keys())[:64])
+
+
+def test_update_only_patch_path():
+    """Pure-update patches take the cheap path (no structural stitches)."""
+    store, oracle = _mk_store(500, tree_cfg=TreeConfig(ib_cap=8))
+    keys = np.array(list(oracle.keys()), dtype=np.uint64)
+    # hammer updates on existing keys only
+    for round_ in range(4):
+        vs = keys ^ np.uint64(round_ + 1)
+        store.put(keys, vs)
+        oracle.update(zip(keys.tolist(), vs.tolist()))
+    store.flush()
+    assert store.stats.patches_update > 0
+    _check_gets(store, oracle, keys[:100].tolist())
+    # update patches must not allocate leaves
+    assert store.stats.patches_structural == 0
+
+
+def test_range_with_buffered_writes_and_deletes():
+    store, oracle = _mk_store(1500)
+    rng = np.random.default_rng(5)
+    ks = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    # buffered inserts between existing keys + deletes of existing keys
+    newk = (ks[:-1:7] + np.uint64(1))[:40]
+    newk = np.array([k for k in newk if k not in oracle], dtype=np.uint64)
+    store.put(newk, newk)
+    oracle.update({int(k): int(k) for k in newk})
+    dels = ks[5:300:9]
+    store.delete(dels)
+    for k in dels.tolist():
+        oracle.pop(k, None)
+
+    sorted_live = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    starts = np.concatenate([ks[[3, 17, 200]], newk[:2], dels[:2]])
+    rk, rv, cnt = store.range(starts, limit=12, max_leaves=6)
+    for i, s in enumerate(starts):
+        exp = sorted_live[sorted_live >= s][:12]
+        got = rk[i][: cnt[i]]
+        assert np.array_equal(got, exp), f"range@{s}"
+        for k, v in zip(got.tolist(), rv[i][: cnt[i]].tolist()):
+            assert oracle[k] == v
+
+
+def test_range_redescend_equivalence():
+    """Paper semantics: ranges re-descend per leaf.  Walking leaf_next and
+    re-descending with last_key+1 must agree."""
+    store, oracle = _mk_store(1200)
+    ks = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    starts = ks[[0, 50, 700]]
+    rk, rv, cnt = store.range(starts, limit=20, max_leaves=8)
+    for i, s in enumerate(starts):
+        # re-descend: fetch one leaf at a time
+        collected = []
+        cur = int(s)
+        while len(collected) < 20:
+            k1, v1, c1 = store.range(
+                np.array([cur], dtype=np.uint64), limit=20, max_leaves=1
+            )
+            got = k1[0][: c1[0]].tolist()
+            if not got:
+                break
+            collected.extend(got)
+            cur = got[-1] + 1
+        assert collected[:20] == rk[i][: cnt[i]].tolist()[:20]
+
+
+def test_depth_growth_under_churn():
+    """Insert far more keys than the bulk load so splits escalate levels."""
+    keys = sparse(300, seed=2)
+    store = DPAStore(keys, keys, TreeConfig(ib_cap=8, growth=40.0))
+    oracle = dict(zip(keys.tolist(), keys.tolist()))
+    d0 = store.depth
+    rng = np.random.default_rng(9)
+    for _ in range(20):
+        ks = rng.integers(0, 2**63, 256, dtype=np.uint64)
+        ks = np.setdiff1d(ks, np.array(list(oracle), dtype=np.uint64))
+        store.put(ks, ks + np.uint64(3))
+        oracle.update({int(k): int(k) + 3 for k in ks.tolist()})
+    ik, iv = store.items()
+    assert len(ik) == len(oracle)
+    probe = list(oracle.keys())[:: max(1, len(oracle) // 128)]
+    _check_gets(store, oracle, probe)
+    assert store.depth >= d0  # depth growth allowed, never breaks lookups
+
+
+@pytest.mark.parametrize("dataset", [dense4x, osmc])
+def test_other_datasets(dataset):
+    store, oracle = _mk_store(1500, dataset=dataset)
+    ks = list(oracle.keys())
+    _check_gets(store, oracle, ks[:100])
+    rng = np.random.default_rng(3)
+    newk = rng.integers(0, 2**63, 200, dtype=np.uint64)
+    newk = np.setdiff1d(newk, np.array(ks, dtype=np.uint64))
+    store.put(newk, newk)
+    oracle.update({int(k): int(k) for k in newk.tolist()})
+    _check_gets(store, oracle, newk[:50].tolist() + ks[:50])
