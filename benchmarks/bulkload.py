@@ -6,10 +6,11 @@ host->DPA bandwidth: the paper loads 192 MB in ~1.6s.
 """
 import numpy as np
 from repro.core import perfmodel
-from .common import N_KEYS, build_store, emit, time_op
+from .common import build_store, emit, n_keys, time_op
 
 def run():
     import time
+    N_KEYS = n_keys()  # mode-aware (smoke shrinks the store)
     t0 = time.perf_counter()
     store = build_store("sparse", cache=False)
     t_build = time.perf_counter() - t0

@@ -6,6 +6,10 @@ BlueField-3 claim); ``derived`` is the paper-comparable quantity obtained by
 pushing the *counted* memory-access structure through the BlueField-3
 latency model (core/perfmodel.py) — the same methodology the paper itself
 uses in Sec 4.2.6 to sanity-check its measurements.
+
+Smoke mode (``python -m benchmarks.run --smoke`` or set_smoke()) shrinks
+store sizes and wave counts so the whole sweep finishes inside a CI job:
+numbers stay schema-valid but are NOT paper-comparable.
 """
 
 from __future__ import annotations
@@ -21,7 +25,32 @@ from repro.core.datasets import DATASETS, load, zipf_indices
 N_KEYS = 200_000  # scaled-down stand-in for the paper's 25-50M
 EPS_BIG = ("osmc", "face")  # datasets the paper runs at eps=16
 
+SMOKE = False
+_SMOKE_DIV = 64  # store-size shrink factor in smoke mode
+_SMOKE_WAVE_DIV = 16  # request-wave shrink factor in smoke mode
+
 ROWS: List[str] = []
+
+
+def set_smoke(on: bool = True) -> None:
+    """Toggle smoke mode: tiny stores + tiny waves, same CSV schema."""
+    global SMOKE
+    SMOKE = on
+
+
+def scaled(n: int) -> int:
+    """Store size under the current mode (smoke shrinks, floor 2048)."""
+    return max(2048, n // _SMOKE_DIV) if SMOKE else n
+
+
+def wave(n: int) -> int:
+    """Request-wave size under the current mode (smoke shrinks, floor 256)."""
+    return max(256, n // _SMOKE_WAVE_DIV) if SMOKE else n
+
+
+def n_keys() -> int:
+    """Mode-aware default store size (modules must not snapshot N_KEYS)."""
+    return scaled(N_KEYS)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -40,7 +69,14 @@ def time_op(fn: Callable, *args, repeats: int = 3, **kw) -> float:
     return sorted(ts)[len(ts) // 2]
 
 
-def build_store(dataset: str, n: int = N_KEYS, cache: bool = True, seed: int = 0) -> DPAStore:
+def build_store(
+    dataset: str,
+    n: int = N_KEYS,
+    cache: bool = True,
+    seed: int = 0,
+    batched_patch: bool = True,
+) -> DPAStore:
+    n = scaled(n)
     eps = 16 if dataset in EPS_BIG else None
     cfg = (
         TreeConfig(eps_inner=eps, eps_leaf=eps)
@@ -51,7 +87,13 @@ def build_store(dataset: str, n: int = N_KEYS, cache: bool = True, seed: int = 0
     vals = keys ^ np.uint64(0x5EED)
     from repro.core.hotcache import CacheConfig
 
-    return DPAStore(keys, vals, cfg, cache_cfg=CacheConfig() if cache else None)
+    return DPAStore(
+        keys,
+        vals,
+        cfg,
+        cache_cfg=CacheConfig() if cache else None,
+        batched_patch=batched_patch,
+    )
 
 
 def store_depth_eps(store: DPAStore):

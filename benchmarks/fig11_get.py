@@ -8,7 +8,7 @@ paper (skewed queues).
 import numpy as np
 from repro.core import perfmodel
 from repro.core.datasets import zipf_indices
-from .common import build_store, emit, time_op
+from .common import build_store, emit, time_op, wave
 
 def run():
     for ds in ("sparse", "sparseBig", "amzn", "osmc"):
@@ -16,13 +16,14 @@ def run():
         store = build_store(ds, n=n or 200_000)
         all_keys, _ = store.items()
         rng = np.random.default_rng(1)
-        uq = rng.choice(all_keys, 4096)
-        t_uni = time_op(store.get, uq) / 4096
+        w = wave(4096)
+        uq = rng.choice(all_keys, w)
+        t_uni = time_op(store.get, uq) / w
         d, ei, el = store.depth, store.cfg.eps_inner, store.cfg.eps_leaf
         m_uni = perfmodel.get_mops(d, ei, el)
         emit(f"fig11/{ds}/uniform", t_uni * 1e6, f"model_mops={m_uni:.1f};depth={d};eps={ei}")
         # zipf: measure the cache hit rate over a few waves
-        idx = zipf_indices(len(all_keys), 32768, alpha=0.99, seed=2)
+        idx = zipf_indices(len(all_keys), wave(32768), alpha=0.99, seed=2)
         h0 = store.stats.cache_hits; p0 = store.stats.cache_probes
         for chunk in np.array_split(idx, 8):
             store.get(all_keys[chunk])

@@ -3,16 +3,69 @@
 ``PYTHONPATH=src python -m benchmarks.run`` — prints ``name,us_per_call,
 derived`` CSV rows for every experiment, plus the roofline table derived
 from the dry-run artifacts (if present).
+
+``--smoke`` runs the same sweep at tiny sizes (see common.set_smoke),
+validates every emitted row against the CSV schema, and writes a
+``BENCH_smoke.json`` artifact — this is the CI benchmark gate: it proves
+the benchmarks still *run* and still emit well-formed rows, not that the
+numbers are paper-comparable.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def validate_rows(rows) -> list:
+    """Each row must be ``name,us_per_call,derived`` with a float middle
+    field.  Returns a list of parse problems (empty = schema OK)."""
+    problems = []
+    for row in rows:
+        parts = row.split(",", 2)
+        if len(parts) != 3:
+            problems.append(f"not 3 fields: {row!r}")
+            continue
+        name, us, derived = parts
+        if not name or "/" not in name:
+            problems.append(f"bad name field: {row!r}")
+        try:
+            float(us)
+        except ValueError:
+            problems.append(f"non-float us_per_call: {row!r}")
+        if not derived:
+            problems.append(f"empty derived field: {row!r}")
+    return problems
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(prog="benchmarks.run")
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes; validate CSV schema; write BENCH_smoke.json",
+    )
+    parser.add_argument(
+        "--out",
+        default="BENCH_smoke.json",
+        help="artifact path for --smoke (default: BENCH_smoke.json)",
+    )
+    args = parser.parse_args(argv)
+
+    from . import common
+
+    if args.smoke:
+        common.set_smoke(True)
+        # fail fast on an unwritable artifact path — not after the sweep
+        try:
+            with open(args.out, "a"):
+                pass
+        except OSError as e:
+            parser.error(f"cannot write --out {args.out}: {e}")
+
     from . import (
         bulkload,
         fig9_threads,
@@ -41,16 +94,39 @@ def main() -> None:
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
-    failures = 0
+    failures = []
+    timings = {}
     for name, mod in modules:
         t0 = time.time()
         try:
             mod.run()
-            print(f"# {name}: done in {time.time()-t0:.1f}s", file=sys.stderr)
+            timings[name] = round(time.time() - t0, 2)
+            print(f"# {name}: done in {timings[name]:.1f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001 — keep the harness sweeping
-            failures += 1
+            failures.append(name)
             print(f"# {name}: FAILED", file=sys.stderr)
             traceback.print_exc()
+
+    if args.smoke:
+        problems = validate_rows(common.ROWS)
+        artifact = {
+            "mode": "smoke",
+            "rows": common.ROWS,
+            "n_rows": len(common.ROWS),
+            "schema_ok": not problems,
+            "schema_problems": problems,
+            "module_seconds": timings,
+            "failed_modules": failures,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# smoke artifact: {args.out} "
+              f"(rows={len(common.ROWS)}, schema_ok={not problems})",
+              file=sys.stderr)
+        if problems:
+            for p in problems:
+                print(f"# schema problem: {p}", file=sys.stderr)
+            sys.exit(1)
     if failures:
         sys.exit(1)
 

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import TreeConfig, build_image
 from repro.core.datasets import load
-from .common import N_KEYS, emit, time_op
+from .common import emit, n_keys, time_op
 
 PAPER = {
     "sparse": 0.32,
@@ -28,7 +28,7 @@ PAPER = {
 
 
 def overhead(dataset: str, eps: int) -> float:
-    keys = load(dataset, N_KEYS, seed=0)
+    keys = load(dataset, n_keys(), seed=0)
     img = build_image(
         keys, keys, TreeConfig(eps_inner=eps, eps_leaf=eps, growth=1.1)
     )
@@ -41,7 +41,7 @@ def run():
         ov = overhead(ds, 8)
         emit(
             f"table1/{ds}@eps8",
-            t * 1e6 / N_KEYS,
+            t * 1e6 / n_keys(),
             f"rel_overhead={ov:.2f};paper={PAPER.get(ds)}",
         )
     for ds in ("osmc", "face"):

@@ -11,6 +11,12 @@ old version can exist.  We keep the paper's safety margin of retiring ids
 only after ``grace`` further epochs so that asynchronous consumers (e.g. a
 client still holding a range cursor) have a bounded validity window.
 
+Flush cycles (the batched patch/stitch pipeline) quarantine all of a cycle's
+obsoleted ids in one ``defer_free_batch`` call after the cycle's CONNECT and
+advance the epoch once per cycle — not once per leaf.  That is what keeps a
+merged stitch batch two-phase safe: nothing freed mid-cycle can be recycled
+into a COPY destination while the old tree still reaches it.
+
 The manager is host-side bookkeeping; ``tests/test_epoch.py`` asserts the
 invariant that an id is never handed back to an allocator while any epoch
 that could reference it is still live.
@@ -42,6 +48,22 @@ class EpochManager:
         retire_at = self.epoch + self.grace
         self._quarantine.append((retire_at, pool, int(idx)))
         self._held[key] = retire_at
+
+    def defer_free_batch(self, frees) -> int:
+        """Quarantine a whole flush cycle's obsoleted ids at once (called
+        after the cycle's CONNECT lands).  Returns how many were deferred."""
+        n = 0
+        for pool, idx in frees:
+            self.defer_free(pool, idx)
+            n += 1
+        return n
+
+    def end_cycle(self, image) -> int:
+        """Cycle-granularity bookkeeping: one epoch advance + reclaim per
+        flush cycle (the per-leaf loop used to do this once per patch).
+        Returns the number of ids handed back to the allocator."""
+        self.advance()
+        return self.reclaim(image)
 
     def reclaim(self, image) -> int:
         """Release quarantined ids whose grace period has elapsed back to the

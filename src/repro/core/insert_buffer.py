@@ -74,11 +74,21 @@ def append_wave(
 
 
 def clear_rows(ib: InsertBuffers, leaves) -> InsertBuffers:
-    """Reset the buffers of the given leaves (the CLEAR part of a stitch)."""
+    """Reset the buffers of the given leaves (the CLEAR part of a stitch).
+
+    The leaf list is shape-bucketed (see core/scatter.py) so merged flush
+    cycles of any size reuse a handful of compiled scatter shapes."""
+    import numpy as np
+
+    from .scatter import pad_pow2_ids
+
+    leaves, _ = pad_pow2_ids(
+        np.asarray(leaves, dtype=np.int32), oob=ib.keys.shape[0]
+    )
     leaves = jnp.asarray(leaves, dtype=jnp.int32)
     return InsertBuffers(
-        keys=ib.keys.at[leaves].set(0),
-        vals=ib.vals.at[leaves].set(0),
-        op=ib.op.at[leaves].set(0),
-        count=ib.count.at[leaves].set(0),
+        keys=ib.keys.at[leaves].set(0, mode="drop"),
+        vals=ib.vals.at[leaves].set(0, mode="drop"),
+        op=ib.op.at[leaves].set(0, mode="drop"),
+        count=ib.count.at[leaves].set(0, mode="drop"),
     )

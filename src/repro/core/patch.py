@@ -54,6 +54,38 @@ class PatchResult:
     depth_changed: bool = False
 
 
+@dataclass
+class BatchPatchResult:
+    """One flush cycle's worth of patches merged into a single stitch batch
+    (the paper's migrate-in-batches write path).  ``results`` keeps the
+    per-leaf classification; every entry aliases the shared ``batch``.
+    ``unplanned`` holds (leaf, entries) the planner stopped short of when a
+    headroom probe said the pools could not absorb another worst-case patch
+    — the store applies this batch, drains, and plans the rest."""
+
+    batch: StitchBatch
+    results: List[PatchResult] = field(default_factory=list)
+    unplanned: List[Tuple[int, List[Tuple[int, int, int]]]] = field(
+        default_factory=list
+    )
+
+    @property
+    def n_update(self) -> int:
+        return sum(1 for r in self.results if r.kind == "update")
+
+    @property
+    def n_structural(self) -> int:
+        return sum(1 for r in self.results if r.kind == "structural")
+
+    @property
+    def new_leaves(self) -> List[int]:
+        return [l for r in self.results for l in r.new_leaves]
+
+    @property
+    def depth_changed(self) -> bool:
+        return any(r.depth_changed for r in self.results)
+
+
 def _merge(
     img: TreeImage, leaf: int, entries: List[Tuple[int, int, int]]
 ) -> Tuple[np.ndarray, np.ndarray, bool]:
@@ -168,22 +200,16 @@ def _inner_split_caps(img: TreeImage) -> Tuple[int, int]:
     return segs_per_node, SEG_CAP
 
 
-def plan_patch(
-    img: TreeImage, leaf: int, entries: List[Tuple[int, int, int]]
-) -> PatchResult:
-    """Plan the patch for one full insert buffer. Mutates the host image
-    (allocations + mirror rows + pointer mirrors) and returns the stitch
-    batch the device needs to catch up."""
-    merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
-    batch = StitchBatch()
-    batch.clear_ib.append(leaf)
-
-    if update_only:
-        slot = int(img.leaf_slot[leaf])
-        img.hbm_vals[slot] = _pad_row(merged_vals, 0)
-        batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
-        return PatchResult(batch=batch, kind="update")
-
+def _plan_leaf_replacement(
+    img: TreeImage,
+    batch: StitchBatch,
+    leaf: int,
+    merged_keys: np.ndarray,
+    merged_vals: np.ndarray,
+) -> Tuple[List[int], List[Tuple[int, int, int]]]:
+    """Leaf-local half of a structural patch: emit replacement leaves, splice
+    the leaf_next chain, free the old leaf.  Parent maintenance is left to
+    the caller.  Returns (new leaf ids, the root->leaf path taken)."""
     old_anchor = np.uint64(img.leaf_anchor[leaf])
     old_next = int(img.leaf_next[leaf])
     old_prev = int(img.leaf_prev[leaf])
@@ -216,6 +242,37 @@ def plan_patch(
         batch.connects.append(("leaf_next", old_prev, new_leaves[0]))
     batch.frees.append(("leaves", leaf))
     batch.frees.append(("slots", int(img.leaf_slot[leaf])))
+    return new_leaves, path
+
+
+def plan_patch(
+    img: TreeImage,
+    leaf: int,
+    entries: List[Tuple[int, int, int]],
+    batch: Optional[StitchBatch] = None,
+) -> PatchResult:
+    """Plan the patch for one full insert buffer. Mutates the host image
+    (allocations + mirror rows + pointer mirrors) and returns the stitch
+    batch the device needs to catch up.
+
+    When ``batch`` is given, commands append to it instead of a fresh batch.
+    This is the per-leaf stream (one parent rebuild per patched leaf) — the
+    semantic oracle; the batched pipeline is ``plan_patch_batch``.
+    """
+    merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
+    if batch is None:
+        batch = StitchBatch()
+    batch.clear_ib.append(leaf)
+
+    if update_only:
+        slot = int(img.leaf_slot[leaf])
+        img.hbm_vals[slot] = _pad_row(merged_vals, 0)
+        batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
+        return PatchResult(batch=batch, kind="update")
+
+    new_leaves, path = _plan_leaf_replacement(
+        img, batch, leaf, merged_keys, merged_vals
+    )
 
     # ---- splice into the parent chain ------------------------------------
     child_ids = np.array(new_leaves, dtype=np.int32)
@@ -233,6 +290,71 @@ def plan_patch(
     )
 
 
+def _emit_node_group(
+    img: TreeImage,
+    batch: StitchBatch,
+    segs: List[pla.Segment],
+    firsts: np.ndarray,
+    children: np.ndarray,
+    per_node: int,
+) -> List[int]:
+    """Emit new nodes holding ``segs`` grouped ``per_node`` segments each
+    (re-anchored to zero-based starts per node)."""
+    nodes = []
+    for i in range(0, len(segs), per_node):
+        group = segs[i : i + per_node]
+        base = group[0].start
+        shifted = [
+            pla.Segment(s.start - base, s.count, s.anchor, s.slope)
+            for s in group
+        ]
+        lo = base
+        hi = group[-1].start + group[-1].count
+        nodes.append(
+            _emit_node(img, batch, shifted, firsts[lo:hi], children[lo:hi])
+        )
+    return nodes
+
+
+def _rebuild_node(
+    img: TreeImage,
+    batch: StitchBatch,
+    firsts: np.ndarray,
+    children: np.ndarray,
+) -> List[int]:
+    """Re-fit one node's flattened entries into new node(s): a single node
+    when the segments still fit, else retrain-bound-sparse split nodes."""
+    segs = pla.fit(firsts, img.cfg.eps_inner, SEG_CAP)
+    max_segs, _ = _inner_split_caps(img)
+    per = len(segs) if len(segs) <= NODE_SEGS else max_segs
+    return _emit_node_group(img, batch, segs, firsts, children, per)
+
+
+def _grow_root(
+    img: TreeImage,
+    batch: StitchBatch,
+    child_ids: np.ndarray,
+    child_firsts: np.ndarray,
+) -> bool:
+    """Make ``child_ids`` the new top of the tree: build levels until a
+    single node remains (root split adds levels), then CONNECT the root."""
+    depth_changed = False
+    while len(child_ids) > 1:
+        segs = pla.fit(child_firsts, img.cfg.eps_inner, SEG_CAP)
+        nodes = _emit_node_group(
+            img, batch, segs, child_firsts, child_ids, NODE_SEGS
+        )
+        child_ids = np.array(nodes, dtype=np.int32)
+        child_firsts = np.array(
+            [img.node_seg_first[n, 0] for n in nodes], dtype=np.uint64
+        )
+        img.depth += 1
+        depth_changed = True
+    img.root = int(child_ids[0])
+    batch.connects.append(("root", img.root, img.depth))
+    return depth_changed
+
+
 def _splice_up(
     img: TreeImage,
     batch: StitchBatch,
@@ -245,47 +367,11 @@ def _splice_up(
 
     Returns True if the tree depth changed (root split).
     """
-    depth_changed = False
     level = len(path) - 1
     while True:
         if level < 0:
             # we replaced the root itself
-            if len(child_ids) == 1:
-                img.root = int(child_ids[0])
-                batch.connects.append(("root", img.root, img.depth))
-            else:
-                # root split: build levels until a single node remains
-                while len(child_ids) > 1:
-                    segs = pla.fit(child_firsts, img.cfg.eps_inner, SEG_CAP)
-                    nodes = []
-                    for i in range(0, len(segs), NODE_SEGS):
-                        group = segs[i : i + NODE_SEGS]
-                        # re-anchor group segments to a zero-based start
-                        base = group[0].start
-                        shifted = [
-                            pla.Segment(s.start - base, s.count, s.anchor, s.slope)
-                            for s in group
-                        ]
-                        lo = base
-                        hi = group[-1].start + group[-1].count
-                        nodes.append(
-                            _emit_node(
-                                img,
-                                batch,
-                                shifted,
-                                child_firsts[lo:hi],
-                                child_ids[lo:hi],
-                            )
-                        )
-                    child_ids = np.array(nodes, dtype=np.int32)
-                    child_firsts = np.array(
-                        [img.node_seg_first[n, 0] for n in nodes], dtype=np.uint64
-                    )
-                    img.depth += 1
-                    depth_changed = True
-                img.root = int(child_ids[0])
-                batch.connects.append(("root", img.root, img.depth))
-            return depth_changed
+            return _grow_root(img, batch, child_ids, child_firsts)
 
         node, seg, pos = path[level]
         if single_swap_ok and len(child_ids) == 1:
@@ -295,7 +381,7 @@ def _splice_up(
             batch.connects.append(
                 ("pivot_child", slot, pos, int(child_ids[0]))
             )
-            return depth_changed
+            return False
 
         # rebuild this node with the entry at (seg, pos) replaced
         firsts, children = _node_entries(img, node)
@@ -308,25 +394,7 @@ def _splice_up(
         children = np.concatenate(
             [children[:flat_pos], child_ids, children[flat_pos + 1 :]]
         ).astype(np.int32)
-        segs = pla.fit(firsts, img.cfg.eps_inner, SEG_CAP)
-        max_segs, _ = _inner_split_caps(img)
-        if len(segs) <= NODE_SEGS:
-            groups = [segs]
-        else:
-            per = max_segs  # retrain bound: sparse new nodes
-            groups = [segs[i : i + per] for i in range(0, len(segs), per)]
-        nodes = []
-        for group in groups:
-            base = group[0].start
-            shifted = [
-                pla.Segment(s.start - base, s.count, s.anchor, s.slope)
-                for s in group
-            ]
-            lo = base
-            hi = group[-1].start + group[-1].count
-            nodes.append(
-                _emit_node(img, batch, shifted, firsts[lo:hi], children[lo:hi])
-            )
+        nodes = _rebuild_node(img, batch, firsts, children)
         _free_node(img, batch, node)
         child_ids = np.array(nodes, dtype=np.int32)
         child_firsts = np.array(
@@ -334,3 +402,191 @@ def _splice_up(
         )
         single_swap_ok = len(nodes) == 1
         level -= 1
+
+
+def plan_patch_batch(
+    img: TreeImage,
+    leaves: List[int],
+    entries_per_leaf: List[List[Tuple[int, int, int]]],
+    headroom_ok=None,
+) -> BatchPatchResult:
+    """Plan every full leaf of a flush cycle into ONE merged stitch batch
+    (Sec 3.2: staged writes migrate to the host in batches and stitch back
+    as a single transaction).
+
+    Two phases, which is where the batching wins over the per-leaf stream:
+
+      1. *Leaf phase* (ascending anchor order): merge each buffer, emit
+         replacement leaves + chain splices.  Parents are untouched, so
+         every root->leaf path is computed against one consistent tree.
+      2. *Tree phase*: group all child replacements by parent and rebuild
+         each affected node ONCE, bottom-up level by level — the per-leaf
+         stream rebuilds a shared parent once per child patched under it,
+         which is exactly the redundant host->device traffic (and node-pool
+         churn) the paper's batching amortizes.  Nodes where every
+         replacement is 1-for-1 take the Figure-6 fast path: pointer-swap
+         CONNECTs only, no rebuild.
+
+    The merged batch stays applicable as all-COPYs-then-all-CONNECTs
+    because ids freed by the plan are only *recorded* in ``batch.frees`` —
+    the store quarantines them after the cycle's connect, so no in-cycle
+    allocation can land on a row the old tree still reaches.
+
+    ``headroom_ok()`` (optional) is probed before each leaf plan after the
+    first: when the pools cannot absorb another worst-case patch the planner
+    stops and returns the rest via ``unplanned`` — the caller applies,
+    drains, and replans.  The first leaf always plans (if the pools truly
+    cannot take one patch, the allocator raises exactly as the per-leaf
+    stream would).
+    """
+    batch = StitchBatch()
+    order = sorted(
+        range(len(leaves)), key=lambda i: int(img.leaf_anchor[leaves[i]])
+    )
+    results: List[PatchResult] = []
+    unplanned: List[Tuple[int, List[Tuple[int, int, int]]]] = []
+    # (path, new_leaf_ids) per structural patch, in anchor order
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]] = []
+    parents_touched = set()  # distinct parents with structural work queued
+
+    # ---- phase 1: leaf-local patches -------------------------------------
+    for k, i in enumerate(order):
+        if (
+            k > 0
+            and headroom_ok is not None
+            and not headroom_ok(len(parents_touched))
+        ):
+            unplanned = [(leaves[j], entries_per_leaf[j]) for j in order[k:]]
+            break
+        leaf = leaves[i]
+        entries = entries_per_leaf[i]
+        merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
+        batch.clear_ib.append(leaf)
+        if update_only:
+            slot = int(img.leaf_slot[leaf])
+            img.hbm_vals[slot] = _pad_row(merged_vals, 0)
+            batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
+            results.append(PatchResult(batch=batch, kind="update"))
+            continue
+        new_leaves, path = _plan_leaf_replacement(
+            img, batch, leaf, merged_keys, merged_vals
+        )
+        repl.append((path, new_leaves))
+        if path:
+            parents_touched.add(path[-1][0])
+        results.append(
+            PatchResult(batch=batch, kind="structural", new_leaves=new_leaves)
+        )
+
+    # ---- phase 2: bottom-up tree maintenance, one rebuild per node -------
+    depth_changed = _maintain_tree(img, batch, repl)
+    for r in results:
+        if r.kind == "structural":
+            r.depth_changed = depth_changed
+    return BatchPatchResult(batch=batch, results=results, unplanned=unplanned)
+
+
+def _maintain_tree(
+    img: TreeImage,
+    batch: StitchBatch,
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]],
+) -> bool:
+    """Phase 2 of the batched planner: propagate child replacements upward,
+    rebuilding every affected inner node at most once per cycle.
+
+    ``repl`` holds (root->leaf path, replacement ids) per structural patch,
+    in ascending anchor order.  Returns True if the tree depth changed.
+    """
+    if not repl:
+        return False
+
+    if img.depth == 1:
+        # the root IS the (single) leaf: re-anchor the top of the tree
+        assert len(repl) == 1, "depth-1 tree has exactly one leaf"
+        _, new_leaves = repl[0]
+        ids = np.array(new_leaves, dtype=np.int32)
+        firsts = np.array(
+            [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
+        )
+        return _grow_root(img, batch, ids, firsts)
+
+    # per level (bottom inner level first): node -> list of replacement
+    # points (flat position computed lazily, seg/pos from the original node)
+    level = img.depth - 2  # index into each path; paths all have this length
+    # pending[node] = list of (seg, pos, child_ids, child_firsts)
+    pending: Dict[int, List[Tuple[int, int, np.ndarray, np.ndarray]]] = {}
+    # where each affected node sits in ITS parent: node -> (seg, pos) + the
+    # parent path prefix (identical for all children of that node)
+    parent_entry: Dict[int, Tuple[List[Tuple[int, int, int]], int, int]] = {}
+
+    for path, new_leaves in repl:
+        node, seg, pos = path[level]
+        ids = np.array(new_leaves, dtype=np.int32)
+        firsts = np.array(
+            [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
+        )
+        pending.setdefault(node, []).append((seg, pos, ids, firsts))
+        parent_entry[node] = (path, None, None)  # path prefix carrier
+
+    depth_changed = False
+    while level >= 0:
+        next_pending: Dict[int, List[Tuple[int, int, np.ndarray, np.ndarray]]] = {}
+        next_parent: Dict[int, Tuple[List[Tuple[int, int, int]], int, int]] = {}
+        for node, points in pending.items():
+            path = parent_entry[node][0]
+            if all(len(p[2]) == 1 for p in points):
+                # Figure 6 fast path: nothing but 1-for-1 pointer swaps
+                for seg, pos, ids, _ in points:
+                    slot = int(img.node_seg_slot[node, seg])
+                    img.pivot_child[slot, pos] = int(ids[0])
+                    batch.connects.append(
+                        ("pivot_child", slot, pos, int(ids[0]))
+                    )
+                continue
+            # rebuild this node once with every replacement point substituted
+            flat_firsts, flat_children = _node_entries(img, node)
+            seg_starts = np.cumsum(
+                [0]
+                + [
+                    int(img.node_seg_count[node, j])
+                    for j in range(int(img.node_nseg[node]) - 1)
+                ]
+            )
+            subs = sorted(
+                (
+                    (int(seg_starts[seg]) + pos, ids, firsts)
+                    for seg, pos, ids, firsts in points
+                ),
+                key=lambda t: t[0],
+            )
+            pieces_f, pieces_c = [], []
+            cur = 0
+            for fp, ids, firsts in subs:
+                pieces_f.append(flat_firsts[cur:fp])
+                pieces_c.append(flat_children[cur:fp])
+                pieces_f.append(firsts)
+                pieces_c.append(ids)
+                cur = fp + 1
+            pieces_f.append(flat_firsts[cur:])
+            pieces_c.append(flat_children[cur:])
+            firsts = np.concatenate(pieces_f)
+            children = np.concatenate(pieces_c).astype(np.int32)
+            nodes = _rebuild_node(img, batch, firsts, children)
+            _free_node(img, batch, node)
+            new_ids = np.array(nodes, dtype=np.int32)
+            new_firsts = np.array(
+                [img.node_seg_first[n, 0] for n in nodes], dtype=np.uint64
+            )
+            if level == 0:
+                # we rebuilt the root: cap the tree (may add levels)
+                depth_changed |= _grow_root(img, batch, new_ids, new_firsts)
+            else:
+                pnode, pseg, ppos = path[level - 1]
+                next_pending.setdefault(pnode, []).append(
+                    (pseg, ppos, new_ids, new_firsts)
+                )
+                next_parent[pnode] = (path, None, None)
+        pending = next_pending
+        parent_entry = next_parent
+        level -= 1
+    return depth_changed

@@ -1,0 +1,41 @@
+"""Shared scatter-shape bucketing.
+
+Merged stitch batches (and buffer clears) produce scatters whose operand
+length varies every cycle, and XLA compiles one scatter kernel per operand
+shape.  Padding lengths to power-of-two buckets (floor 8) with the padding
+ids pointing out of bounds — dropped by ``mode="drop"`` — keeps the compile
+cache down to a handful of shapes per pool.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+_MIN_BUCKET = 8
+
+
+def bucket_len(n: int) -> int:
+    m = _MIN_BUCKET
+    while m < n:
+        m *= 2
+    return m
+
+
+def pad_pow2_ids(
+    ids: np.ndarray, oob: int, rows: Optional[np.ndarray] = None
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Pad (ids[, rows]) to the bucketed length; padding ids are ``oob``
+    (out of bounds -> dropped), padding rows are zeros."""
+    n = ids.shape[0]
+    m = bucket_len(n)
+    if m == n:
+        return ids, rows
+    ids_p = np.full(m, oob, dtype=ids.dtype)
+    ids_p[:n] = ids
+    if rows is None:
+        return ids_p, None
+    rows_p = np.zeros((m,) + rows.shape[1:], dtype=rows.dtype)
+    rows_p[:n] = rows
+    return ids_p, rows_p

@@ -12,6 +12,15 @@ A stitch batch mirrors the paper's protocol exactly:
     a parent pivot_child entry, a leaf_next link, or the root id.  They are
     applied strictly after all copies of the batch.
 
+A batch may hold one leaf's patch or a whole flush cycle's worth (the
+paper's migrate-in-batches / stitch-back write path): ``plan_patch_batch``
+funnels every full leaf of a cycle into a single merged batch, so the host
+crosses to the device once per cycle instead of once per leaf.  Merged
+batches can target the same destination more than once (e.g. two patches
+that each rebuild the shared parent); application is order-equivalent to
+the per-leaf stream because coalescing keeps the *last* write per row and
+connects dedupe last-wins per pointer before the scatter.
+
 Atomicity contract (tested): a traversal against the tree state *between*
 ``apply_copies`` and ``apply_connects`` sees exactly the old tree; after
 ``apply_connects`` exactly the new tree.  Request waves never run in the
@@ -33,6 +42,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from .keys import split_u64
+from .scatter import pad_pow2_ids
 from .tree import DeviceTree, NODE_SEGS, SEG_CAP
 from .lookup import InsertBuffers
 from . import insert_buffer
@@ -40,18 +50,19 @@ from . import insert_buffer
 
 @dataclass
 class StitchBatch:
-    """One patch result: COPY rows per pool + CONNECT pointer swaps."""
+    """One patch (or one merged flush cycle): COPY rows per pool + CONNECT
+    pointer swaps.  COPYs accumulate as (idx, row) items and are coalesced
+    into per-pool scatter arrays on demand — O(1) per append instead of the
+    O(n^2) concat-per-row a growing merged batch would otherwise pay."""
 
-    # COPY — pool name -> (row indices (n,), row payloads (n, ...)) in numpy.
+    # COPY — pool name -> list of (row index, row payload) in numpy.
     # Pools: node_nseg, node_seg_first(u64), node_seg_slope, node_seg_count,
     #        node_seg_slot, pivot_keys(u64), pivot_child, leaf_anchor(u64),
     #        leaf_slope, leaf_count, leaf_slot, leaf_next,
     #        hbm_keys(u64), hbm_vals(u64)
-    copies: Dict[str, Tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    copies: Dict[str, List[Tuple[int, np.ndarray]]] = field(default_factory=dict)
     # CONNECT — list of ("pivot_child", slot, pos, child) |
-    #           ("leaf_next", leaf, next) | ("root", node_id, depth) |
-    #           ("node_seg", node, seg, first,slope,count,slot,nseg)  (in-node
-    #            segment swap used only by value-size-preserving ops)
+    #           ("leaf_next", leaf, next) | ("root", node_id, depth)
     connects: List[tuple] = field(default_factory=list)
     # leaves whose insert buffers this patch consumed (cleared at connect time)
     clear_ib: List[int] = field(default_factory=list)
@@ -59,19 +70,43 @@ class StitchBatch:
     frees: List[Tuple[str, int]] = field(default_factory=list)
     # pure value updates (no structure change): (slot, values-row u64)
     value_updates: List[Tuple[int, np.ndarray]] = field(default_factory=list)
+    # memoized coalesced_copies() (computed once per apply; a transaction's
+    # byte accounting reuses it) — invalidated by add_copy
+    _cc: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] = field(
+        default=None, repr=False, compare=False
+    )
 
     def add_copy(self, pool: str, idx: int, row: np.ndarray) -> None:
-        ids, rows = self.copies.get(pool, (None, None))
-        if ids is None:
-            self.copies[pool] = (
-                np.array([idx], dtype=np.int32),
-                np.asarray(row)[None],
-            )
-        else:
-            self.copies[pool] = (
-                np.append(ids, np.int32(idx)),
-                np.concatenate([rows, np.asarray(row)[None]], axis=0),
-            )
+        self.copies.setdefault(pool, []).append((int(idx), np.asarray(row)))
+        self._cc = None
+
+    def coalesced_copies(self) -> Dict[str, Tuple[np.ndarray, np.ndarray]]:
+        """Per-pool (ids (n,), rows (n, ...)) scatter arrays.  Duplicate row
+        writes (a merged cycle re-patching a row it created) keep the last
+        payload, matching sequential application order."""
+        if self._cc is not None:
+            return self._cc
+        out: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        for pool, items in self.copies.items():
+            last: Dict[int, np.ndarray] = {}
+            for idx, row in items:
+                last[idx] = row
+            ids = np.fromiter(last.keys(), dtype=np.int32, count=len(last))
+            rows = np.stack([np.asarray(r) for r in last.values()], axis=0)
+            out[pool] = (ids, rows)
+        self._cc = out
+        return out
+
+    def coalesced_value_updates(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """(slots (n,), value rows (n, SEG_CAP) u64), last write per slot."""
+        if not self.value_updates:
+            return None
+        last: Dict[int, np.ndarray] = {}
+        for slot, vals in self.value_updates:
+            last[int(slot)] = vals
+        slots = np.fromiter(last.keys(), dtype=np.int32, count=len(last))
+        rows = np.stack([np.asarray(v, dtype=np.uint64) for v in last.values()])
+        return slots, rows
 
     def payload_bytes(self) -> int:
         """All bytes the batch moves (host writes + host->DPA stitches)."""
@@ -84,7 +119,7 @@ class StitchBatch:
         paper ("for leaves, only model parameters and DMA addresses are
         transferred"), so hbm_* copies and value updates are host-local."""
         total = 0
-        for pool, (ids, rows) in self.copies.items():
+        for pool, (ids, rows) in self.coalesced_copies().items():
             if pool.startswith("hbm_"):
                 continue
             total += rows.size * rows.dtype.itemsize + ids.size * 4
@@ -94,7 +129,7 @@ class StitchBatch:
     def host_bytes(self) -> int:
         """Host-memory-local bytes (leaf data writes + value updates)."""
         total = 0
-        for pool, (ids, rows) in self.copies.items():
+        for pool, (ids, rows) in self.coalesced_copies().items():
             if pool.startswith("hbm_"):
                 total += rows.size * rows.dtype.itemsize + ids.size * 4
         for _, vals in self.value_updates:
@@ -112,26 +147,39 @@ _U64_POOLS = {
 _F32_POOLS = {"node_seg_slope", "leaf_slope"}
 
 
+def _pad_pow2_scatter(ids: np.ndarray, rows: np.ndarray, oob: int):
+    """Bucket a scatter's (ids, rows) shapes — see core/scatter.py."""
+    ids, rows = pad_pow2_ids(ids, oob, rows)
+    return ids, rows
+
+
 def apply_copies(tree: DeviceTree, batch: StitchBatch) -> DeviceTree:
-    """Write COPY rows into free pool rows. Old tree stays fully reachable."""
+    """Write COPY rows into free pool rows — one scatter per pool, however
+    many patches the batch merged.  Old tree stays fully reachable."""
     upd = {}
-    for pool, (ids, rows) in batch.copies.items():
+    for pool, (ids, rows) in batch.coalesced_copies().items():
         # node_nseg has no device twin: segment count is implied by KEY_MAX
         # padding in node_seg_first; skip it.
         if pool == "node_nseg":
             continue
         arr = getattr(tree, pool)
+        ids, rows = _pad_pow2_scatter(ids, rows, oob=arr.shape[0])
         if pool in _U64_POOLS:
             payload = jnp.asarray(split_u64(rows.astype(np.uint64)))
         elif pool in _F32_POOLS:
             payload = jnp.asarray(rows, dtype=jnp.float32)
         else:
             payload = jnp.asarray(rows, dtype=arr.dtype)
-        upd[pool] = arr.at[jnp.asarray(ids, dtype=jnp.int32)].set(payload)
-    for slot, vals in batch.value_updates:
+        upd[pool] = arr.at[jnp.asarray(ids, dtype=jnp.int32)].set(
+            payload, mode="drop"
+        )
+    vu = batch.coalesced_value_updates()
+    if vu is not None:
+        slots, rows = vu
         pool = upd.get("hbm_vals", tree.hbm_vals)
-        upd["hbm_vals"] = pool.at[slot].set(
-            jnp.asarray(split_u64(vals.astype(np.uint64)))
+        slots, rows = _pad_pow2_scatter(slots, rows, oob=pool.shape[0])
+        upd["hbm_vals"] = pool.at[jnp.asarray(slots, dtype=jnp.int32)].set(
+            jnp.asarray(split_u64(rows)), mode="drop"
         )
     return tree._replace(**upd)
 
@@ -139,25 +187,55 @@ def apply_copies(tree: DeviceTree, batch: StitchBatch) -> DeviceTree:
 def apply_connects(
     tree: DeviceTree, ib: InsertBuffers, batch: StitchBatch
 ) -> Tuple[DeviceTree, InsertBuffers]:
-    """Flip the pointers — the visibility point of the whole patch."""
-    upd: Dict[str, jnp.ndarray] = {}
+    """Flip the pointers — the visibility point of the whole patch.
 
-    def cur(name):
-        return upd.get(name, getattr(tree, name))
+    Connects are grouped per target pool and applied as one scatter each;
+    duplicate targets (a merged cycle re-swapping the same pointer) keep the
+    last value, which is what applying them in stream order would produce.
+    """
+    upd: Dict[str, jnp.ndarray] = {}
+    pivot_swaps: Dict[Tuple[int, int], int] = {}
+    next_swaps: Dict[int, int] = {}
+    root: Optional[int] = None
 
     for c in batch.connects:
         kind = c[0]
         if kind == "pivot_child":
             _, slot, pos, child = c
-            upd["pivot_child"] = cur("pivot_child").at[slot, pos].set(child)
+            pivot_swaps[(int(slot), int(pos))] = int(child)
         elif kind == "leaf_next":
             _, leaf, nxt = c
-            upd["leaf_next"] = cur("leaf_next").at[leaf].set(nxt)
+            next_swaps[int(leaf)] = int(nxt)
         elif kind == "root":
             _, node, _depth = c
-            upd["root"] = jnp.asarray(node, dtype=jnp.int32)
+            root = int(node)
         else:  # pragma: no cover - defensive
             raise ValueError(f"unknown connect {kind}")
+
+    if pivot_swaps:
+        slots = np.fromiter((k[0] for k in pivot_swaps), dtype=np.int32)
+        poss = np.fromiter((k[1] for k in pivot_swaps), dtype=np.int32)
+        childs = np.fromiter(pivot_swaps.values(), dtype=np.int32)
+        slots, childs = _pad_pow2_scatter(
+            slots, childs, oob=tree.pivot_child.shape[0]
+        )
+        poss_p = np.zeros_like(slots)
+        poss_p[: poss.shape[0]] = poss
+        upd["pivot_child"] = tree.pivot_child.at[
+            jnp.asarray(slots), jnp.asarray(poss_p)
+        ].set(jnp.asarray(childs), mode="drop")
+    if next_swaps:
+        leaves = np.fromiter(next_swaps.keys(), dtype=np.int32)
+        nxts = np.fromiter(next_swaps.values(), dtype=np.int32)
+        leaves, nxts = _pad_pow2_scatter(
+            leaves, nxts, oob=tree.leaf_next.shape[0]
+        )
+        upd["leaf_next"] = tree.leaf_next.at[jnp.asarray(leaves)].set(
+            jnp.asarray(nxts), mode="drop"
+        )
+    if root is not None:
+        upd["root"] = jnp.asarray(root, dtype=jnp.int32)
+
     tree = tree._replace(**upd)
     if batch.clear_ib:
         ib = insert_buffer.clear_rows(ib, np.array(batch.clear_ib, dtype=np.int32))

@@ -33,7 +33,7 @@ from .epoch import EpochManager
 from .hotcache import CacheConfig, CacheState
 from .keys import KEY_MAX, join_u64, limb_hash_np, split_u64
 from .lookup import IB_DEL, IB_PUT, InsertBuffers
-from .tree import TreeConfig, TreeImage, build_image
+from .tree import SEG_CAP, TreeConfig, TreeImage, build_image
 
 STATUS_OK = insert_buffer.STATUS_OK
 STATUS_RETRY = insert_buffer.STATUS_RETRY
@@ -64,6 +64,13 @@ class StoreStats:
     bulk_load_dpa_bytes: int = 0
     retries: int = 0
     reclaimed: int = 0
+    # batched patch/stitch pipeline accounting: a flush *cycle* drains some
+    # set of full buffers; each COPY+CONNECT transaction applied to the
+    # device counts one stitch_apply.  Batched mode: applies == cycles.
+    # Per-leaf oracle mode: applies == patched leaves >= cycles.
+    flush_cycles: int = 0
+    stitch_applies: int = 0
+    patched_leaves: int = 0
 
 
 class DPAStore:
@@ -78,7 +85,13 @@ class DPAStore:
         cache_cfg: Optional[CacheConfig] = CacheConfig(),
         bulk_load_via_stitch: bool = False,
         epoch_grace: int = 2,
+        batched_patch: bool = True,
     ):
+        # batched_patch=True (default): a flush cycle plans every full leaf
+        # into ONE merged stitch batch and applies it as a single COPY+CONNECT
+        # transaction (Sec 3.2 batching).  False keeps the per-leaf stream —
+        # the semantic oracle the equivalence tests compare against.
+        self.batched_patch = batched_patch
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
         assert np.all(keys < KEY_MAX), "2^64-1 is a reserved sentinel"
@@ -300,37 +313,123 @@ class DPAStore:
     def _process_full_leaves(self) -> int:
         counts = np.asarray(self.ib.count)
         full = np.where(counts >= self.cfg.ib_cap)[0]
-        for leaf in full:
-            self._patch_leaf(int(leaf))
-        return full.size
+        return self._patch_cycle([int(l) for l in full])
 
     def _flush_leaves_of(self, keys_u64: np.ndarray) -> None:
         """Patch the (non-empty) buffers responsible for RETRYing keys."""
+        counts = np.asarray(self.ib.count)
+        leaves = []
         for k in np.asarray(keys_u64, dtype=np.uint64):
             leaf, _ = self.image.find_leaf(k)
-            if int(np.asarray(self.ib.count)[leaf]) > 0:
-                self._patch_leaf(int(leaf))
+            if int(counts[leaf]) > 0 and leaf not in leaves:
+                leaves.append(int(leaf))
+        self._patch_cycle(leaves)
 
     def flush(self) -> int:
-        """Patch every non-empty insert buffer (test/benchmark helper)."""
+        """Patch every non-empty insert buffer as one flush cycle."""
         counts = np.asarray(self.ib.count)
         leaves = np.where(counts > 0)[0]
+        return self._patch_cycle([int(l) for l in leaves])
+
+    def _buffer_entries(self, leaves):
+        """Snapshot the buffered ops of the given leaves (host-side read of
+        the staged writes — the 'migrate to host' half of the cycle)."""
+        counts = np.asarray(self.ib.count)
+        ib_keys = np.asarray(self.ib.keys)
+        ib_vals = np.asarray(self.ib.vals)
+        ib_ops = np.asarray(self.ib.op)
+        out = []
         for leaf in leaves:
-            self._patch_leaf(int(leaf))
-        return leaves.size
+            cnt = int(counts[leaf])
+            kk = join_u64(ib_keys[leaf, :cnt])
+            vv = join_u64(ib_vals[leaf, :cnt])
+            oo = ib_ops[leaf, :cnt]
+            out.append([(int(k), int(v), int(o)) for k, v, o in zip(kk, vv, oo)])
+        return out
+
+    def _headroom_ok(self, planned_parents: int = 0) -> bool:
+        """Can the pools absorb one more worst-case patch without recycling?
+
+        A merged transaction cannot reuse the rows it obsoletes (they stay
+        quarantined until after its CONNECT), so the planner probes this
+        before each additional leaf.  Leaf pools: a split re-segments
+        <= SEG_CAP + ib_cap merged keys at split_cap fill.  Node pools: the
+        tree phase rebuilds each of the ``planned_parents`` affected nodes
+        once (budget ~3 new nodes each) plus a possible root-growth chain."""
+        img, cfg = self.image, self.cfg
+        a_leaf = -(-(SEG_CAP + cfg.ib_cap) // cfg.split_cap) + 1
+        # each affected parent rebuilds once into a handful of (retrain-
+        # bound-sparse) nodes of <= NODE_SEGS pivot slots each, plus a
+        # possible root-growth chain of ~one node+slot per level
+        a_node = 4 * (planned_parents + 1) + 2 * self.image.depth + 4
+        a_pivot = 7 * (planned_parents + 1) + 2 * self.image.depth + 4
+        return (
+            len(img.free_leaves) >= a_leaf
+            and len(img.free_slots) >= a_leaf
+            and len(img.free_nodes) >= a_node
+            and len(img.free_pivots) >= a_pivot
+        )
+
+    def _patch_cycle(self, leaves) -> int:
+        """Drain the given buffers as a flush cycle: plan all patches into a
+        merged stitch batch, apply COPYs once, CONNECTs once, then do the
+        cycle's epoch bookkeeping — one host->device transaction per cycle.
+        Only when pool headroom runs out mid-plan does the cycle split into
+        multiple transactions (degrading toward the per-leaf cadence, whose
+        interleaved reclaim keeps the store live).  Falls back to the
+        per-leaf oracle stream when ``batched_patch`` is off."""
+        counts = np.asarray(self.ib.count)
+        leaves = [int(l) for l in leaves if int(counts[int(l)]) > 0]
+        if not leaves:
+            return 0
+        self.stats.flush_cycles += 1
+        if not self.batched_patch:
+            for leaf in leaves:
+                self._patch_leaf(leaf)
+            return len(leaves)
+        pending = list(zip(leaves, self._buffer_entries(leaves)))
+        while pending:
+            chunk_leaves = [l for l, _ in pending]
+            chunk_entries = [e for _, e in pending]
+            result = patch.plan_patch_batch(
+                self.image, chunk_leaves, chunk_entries,
+                headroom_ok=self._headroom_ok,
+            )
+            pending = result.unplanned
+            # COPY then CONNECT — the stitch atomicity contract, once per
+            # transaction (one per cycle unless headroom forced a split)
+            self.tree = stitch.apply_copies(self.tree, result.batch)
+            self.tree, self.ib = stitch.apply_connects(
+                self.tree, self.ib, result.batch
+            )
+            self.stats.stitch_applies += 1
+            # Cycle-granularity epoch bookkeeping: quarantine everything the
+            # transaction obsoleted, advance once.  (Within the transaction
+            # nothing was reclaimed, so no COPY could have landed on a
+            # still-reachable row.)
+            self.epochs.defer_free_batch(result.batch.frees)
+            self.stats.reclaimed += self.epochs.end_cycle(self.image)
+            self.stats.stitched_bytes += result.batch.payload_bytes()
+            self.stats.stitched_dpa_bytes += result.batch.dpa_bytes()
+            self.stats.patches_update += result.n_update
+            self.stats.patches_structural += result.n_structural
+            self.stats.new_leaves += len(result.new_leaves)
+            self.stats.patched_leaves += len(result.results)
+        return len(leaves)
 
     def _patch_leaf(self, leaf: int) -> None:
+        """Per-leaf oracle path: one stitch transaction per patched leaf
+        (the pre-batching stream; kept for equivalence testing)."""
         cnt = int(np.asarray(self.ib.count)[leaf])
         if cnt == 0:
             return
-        kk = join_u64(np.asarray(self.ib.keys)[leaf, :cnt])
-        vv = join_u64(np.asarray(self.ib.vals)[leaf, :cnt])
-        oo = np.asarray(self.ib.op)[leaf, :cnt]
-        entries = [(int(k), int(v), int(o)) for k, v, o in zip(kk, vv, oo)]
+        entries = self._buffer_entries([leaf])[0]
         result = patch.plan_patch(self.image, leaf, entries)
         # COPY then CONNECT — the stitch atomicity contract
         self.tree = stitch.apply_copies(self.tree, result.batch)
         self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, result.batch)
+        self.stats.stitch_applies += 1
+        self.stats.patched_leaves += 1
         for pool, idx in result.batch.frees:
             self.epochs.defer_free(pool, idx)
         # Patches run with no wave in flight (host-serialized), so every

@@ -229,14 +229,18 @@ def build_image(
     keys = np.asarray(keys, dtype=np.uint64)
     vals = np.asarray(vals, dtype=np.uint64)
     assert keys.ndim == 1 and keys.shape == vals.shape
-    assert keys.size > 0, "bulk load requires at least one pair"
     assert bool(np.all(keys[1:] > keys[:-1])), "keys must be sorted unique"
 
-    leaf_segs = pla.fit(keys, cfg.eps_leaf, SEG_CAP)
+    if keys.size == 0:
+        # empty bulk load (e.g. a hash shard that received no keys): one
+        # empty leaf anchored at 0 keeps routing total; inserts fill it.
+        leaf_segs = [pla.Segment(0, 0, np.uint64(0), 0.0)]
+    else:
+        leaf_segs = pla.fit(keys, cfg.eps_leaf, SEG_CAP)
     n_leaves = len(leaf_segs)
 
     # ---- build upper levels over first keys ------------------------------
-    level_firsts = np.array([keys[s.start] for s in leaf_segs], dtype=np.uint64)
+    level_firsts = np.array([s.anchor for s in leaf_segs], dtype=np.uint64)
     levels: List[List[Tuple[pla.Segment, int]]] = []  # per level: (seg, node id base later)
     level_child_firsts = [level_firsts]
     level_segs: List[List[pla.Segment]] = []
@@ -259,10 +263,18 @@ def build_image(
     total_pivot_slots = sum(len(s) for s in level_segs)
 
     if pool_caps is None:
-        cap_nodes = _round_pool(total_nodes, cfg.growth, minimum=32)
-        cap_pivots = _round_pool(total_pivot_slots, cfg.growth, minimum=64)
         cap_leaves = _round_pool(n_leaves, cfg.growth, minimum=64)
         cap_slots = _round_pool(n_leaves, cfg.growth, minimum=64)
+        # node/pivot minimums scale with the leaf pool: when churn grows the
+        # leaf level toward cap_leaves, the inner levels must be able to
+        # follow (batched flush cycles also hold obsoleted node rows in
+        # epoch quarantine across a cycle, which needs transient headroom)
+        cap_nodes = _round_pool(
+            total_nodes, cfg.growth, minimum=max(32, cap_leaves // 32)
+        )
+        cap_pivots = _round_pool(
+            total_pivot_slots, cfg.growth, minimum=max(64, cap_leaves // 8)
+        )
     else:
         cap_nodes, cap_pivots, cap_leaves, cap_slots = pool_caps
 

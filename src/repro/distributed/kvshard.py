@@ -23,7 +23,7 @@ Two execution paths share the same routing math:
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +31,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import lookup
-from repro.core.keys import limb_hash
-from repro.core.tree import DeviceTree
+from repro.core.keys import limb_hash, limb_hash_np
+from repro.core.tree import DeviceTree, TreeConfig
 from repro.core.lookup import InsertBuffers
 
 SALT_SHARD = 11
@@ -40,6 +40,151 @@ SALT_SHARD = 11
 
 def shard_of(khi, klo, n_shards: int):
     return (limb_hash(khi, klo, SALT_SHARD) % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def shard_of_np(keys_u64: np.ndarray, n_shards: int) -> np.ndarray:
+    """Client-side routing hash (bit-identical to the device path)."""
+    return (limb_hash_np(np.asarray(keys_u64, dtype=np.uint64), SALT_SHARD) % n_shards).astype(
+        np.int32
+    )
+
+
+def _pad_stack(arrs):
+    """Stack per-shard pool arrays, zero-padding every dim to the max shape
+    so vmap/shard_map can treat the shard dim uniformly."""
+    if arrs[0].ndim == 0:
+        return jnp.stack(arrs)
+    shape = tuple(max(a.shape[i] for a in arrs) for i in range(arrs[0].ndim))
+    return jnp.stack(
+        [
+            jnp.pad(a, [(0, shape[i] - a.shape[i]) for i in range(a.ndim)])
+            for a in arrs
+        ]
+    )
+
+
+def stack_shards(stores) -> Tuple[DeviceTree, InsertBuffers, int]:
+    """Stack per-shard device trees + insert buffers along a leading shard
+    dim (pool shapes padded to the max).  Returns (tree, ib, depth); all
+    shards must have equal depth for the lockstep traversal."""
+    tree_t = type(stores[0].tree)
+    stacked_tree = tree_t(
+        **{
+            f: _pad_stack([getattr(st.tree, f) for st in stores])
+            for f in tree_t._fields
+        }
+    )
+    ib_t = type(stores[0].ib)
+    stacked_ib = ib_t(
+        **{
+            f: _pad_stack([getattr(st.ib, f) for st in stores])
+            for f in ib_t._fields
+        }
+    )
+    depth = max(st.depth for st in stores)
+    assert all(st.depth == depth for st in stores), "equalise shard sizes"
+    return stacked_tree, stacked_ib, depth
+
+
+class ShardedDPAStore:
+    """Multi-shard DPA-Store facade: hash-routes client batches to per-shard
+    sub-stores and drains each shard's staged writes through the *batched*
+    patch/stitch pipeline — one merged stitch transaction per shard per
+    flush cycle, the scaled-out version of Sec 3.2's batching.
+
+    This is host-side orchestration (each shard is an independent
+    ``DPAStore``); the device-resident wave path for GETs is
+    ``serve_wave_emulated`` / ``serve_wave_sharded`` over ``stacked()``.
+    """
+
+    def __init__(
+        self,
+        keys: np.ndarray,
+        vals: np.ndarray,
+        n_shards: int,
+        tree_cfg: TreeConfig = TreeConfig(),
+        cache_cfg=None,
+        batched_patch: bool = True,
+    ):
+        from repro.core.store import DPAStore
+
+        keys = np.asarray(keys, dtype=np.uint64)
+        vals = np.asarray(vals, dtype=np.uint64)
+        self.n_shards = n_shards
+        self.cfg = tree_cfg
+        h = shard_of_np(keys, n_shards)
+        self.shards: List[DPAStore] = [
+            DPAStore(
+                keys[h == s],
+                vals[h == s],
+                tree_cfg,
+                cache_cfg=cache_cfg,
+                batched_patch=batched_patch,
+            )
+            for s in range(n_shards)
+        ]
+
+    def _route(self, keys_u64: np.ndarray):
+        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        dest = shard_of_np(keys_u64, self.n_shards)
+        return keys_u64, dest
+
+    def put(self, keys_u64, vals_u64) -> np.ndarray:
+        keys_u64, dest = self._route(keys_u64)
+        vals_u64 = np.asarray(vals_u64, dtype=np.uint64)
+        statuses = np.zeros(keys_u64.size, dtype=np.int32)
+        for s in range(self.n_shards):
+            m = dest == s
+            if m.any():
+                statuses[m] = self.shards[s].put(keys_u64[m], vals_u64[m])
+        return statuses
+
+    def delete(self, keys_u64) -> np.ndarray:
+        keys_u64, dest = self._route(keys_u64)
+        statuses = np.zeros(keys_u64.size, dtype=np.int32)
+        for s in range(self.n_shards):
+            m = dest == s
+            if m.any():
+                statuses[m] = self.shards[s].delete(keys_u64[m])
+        return statuses
+
+    def get(self, keys_u64) -> Tuple[np.ndarray, np.ndarray]:
+        keys_u64, dest = self._route(keys_u64)
+        vals = np.zeros(keys_u64.size, dtype=np.uint64)
+        found = np.zeros(keys_u64.size, dtype=bool)
+        for s in range(self.n_shards):
+            m = dest == s
+            if m.any():
+                v, f = self.shards[s].get(keys_u64[m])
+                vals[m] = v
+                found[m] = f
+        return vals, found
+
+    def flush(self) -> int:
+        """One flush cycle per shard (each a single stitch transaction)."""
+        return sum(sh.flush() for sh in self.shards)
+
+    def items(self) -> Tuple[np.ndarray, np.ndarray]:
+        ks, vs = [], []
+        for sh in self.shards:
+            k, v = sh.items()
+            ks.append(k)
+            vs.append(v)
+        order = np.argsort(np.concatenate(ks), kind="stable")
+        return np.concatenate(ks)[order], np.concatenate(vs)[order]
+
+    def stacked(self) -> Tuple[DeviceTree, InsertBuffers, int]:
+        return stack_shards(self.shards)
+
+    def stats_totals(self) -> Dict[str, int]:
+        """Aggregate StoreStats across shards (flush cycle / stitch apply
+        accounting for the benchmarks)."""
+        out: Dict[str, int] = {}
+        for sh in self.shards:
+            for k, v in vars(sh.stats).items():
+                if isinstance(v, (int, np.integer)):
+                    out[k] = out.get(k, 0) + int(v)
+        return out
 
 
 def _bucketize(khi, klo, n_shards: int, cap: int):

@@ -1,13 +1,72 @@
+import os
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
 # must see the 1 real CPU device.  Only launch/dryrun.py forces 512 hosts.
 
+# ---------------------------------------------------------------------------
+# hypothesis fallback: hermetic containers can't pip install; CI installs the
+# real package (requirements.txt), everything else gets the seeded shim so
+# the suite still collects and the property tests still sweep.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - environment dependent
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0xD9A)
+
+
+# ---------------------------------------------------------------------------
+# session-scoped store fixtures: bulk-loading + jit warm-up dominate the
+# wall clock of read-only tests, so share one store per (dataset, n) across
+# the session.  Tests that WRITE must build their own store (or use
+# store_factory) — a shared store is strictly read-only by convention.
+# ---------------------------------------------------------------------------
+_DATASET_CACHE = {}
+
+
+def _load_pairs(dataset: str, n: int, seed: int = 11):
+    key = (dataset, n, seed)
+    if key not in _DATASET_CACHE:
+        from repro.core.datasets import DATASETS
+
+        keys = DATASETS[dataset](n, seed=seed)
+        _DATASET_CACHE[key] = (keys, keys ^ np.uint64(0xABCD))
+    return _DATASET_CACHE[key]
+
+
+@pytest.fixture(scope="session")
+def store_factory():
+    """Build a fresh DPAStore over a session-cached dataset: the expensive
+    key generation is shared, the store itself is private to the test."""
+
+    def make(dataset="sparse", n=2000, seed=11, **store_kw):
+        from repro.core import DPAStore
+
+        keys, vals = _load_pairs(dataset, n, seed)
+        store = DPAStore(keys, vals, **store_kw)
+        return store, dict(zip(keys.tolist(), vals.tolist()))
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def shared_ro_store():
+    """One read-only sparse store (2000 keys, no cache) for lookup-path
+    assertions.  Do NOT write to it — build your own store for that."""
+    from repro.core import DPAStore
+
+    keys, vals = _load_pairs("sparse", 2000)
+    return DPAStore(keys, vals, cache_cfg=None), dict(
+        zip(keys.tolist(), vals.tolist())
+    )
 
 
 def pytest_addoption(parser):

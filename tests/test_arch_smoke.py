@@ -29,7 +29,19 @@ def _batch(cfg, B=2, S=32):
     return batch
 
 
-@pytest.mark.parametrize("arch_name", sorted(ARCHS.keys()))
+# the biggest reduced configs still take tens of seconds each; they run in
+# the nightly full suite, not the CI fast lane
+_SLOW_ARCHS = {"jamba-1.5-large-398b", "llama4-scout-17b-a16e"}
+
+
+def _arch_params(names):
+    return [
+        pytest.param(n, marks=pytest.mark.slow) if n in _SLOW_ARCHS else n
+        for n in names
+    ]
+
+
+@pytest.mark.parametrize("arch_name", _arch_params(sorted(ARCHS.keys())))
 def test_reduced_forward_and_grad(arch_name):
     cfg = reduced(ARCHS[arch_name])
     params = lm.init(cfg, jax.random.key(0))
@@ -57,7 +69,7 @@ def test_reduced_forward_and_grad(arch_name):
 
 @pytest.mark.parametrize(
     "arch_name",
-    sorted(n for n, c in ARCHS.items() if c.causal),
+    _arch_params(sorted(n for n, c in ARCHS.items() if c.causal)),
 )
 def test_reduced_prefill_decode_consistency(arch_name):
     """decode_step after prefill must reproduce teacher-forced logits."""

@@ -25,21 +25,30 @@ def test_osmc_at_eps16_matches_paper():
 
 
 def test_insert_is_stitch_bound_not_compute_bound():
-    """Fig 13: DPA-side bytes/insert measured on the real store pushes the
-    model into the ~1-2.5 MOPS band, an order below UPDATE throughput."""
+    """Fig 13: DPA-side bytes/insert measured on the paper's per-leaf stitch
+    stream pushes the model into the ~1-2.5 MOPS band, an order below UPDATE
+    throughput.  The batched pipeline must then ship measurably FEWER bytes
+    per insert (shared parents rebuilt once per cycle, not once per leaf)."""
     from benchmarks.common import build_store
 
-    store = build_store("sparse", n=50_000, cache=False)
-    rng = np.random.default_rng(0)
-    all_keys, _ = store.items()
-    newk = np.setdiff1d(rng.integers(0, 2**63, 9000, dtype=np.uint64), all_keys)[:4096]
-    b0 = store.stats.stitched_dpa_bytes
-    store.put(newk, newk)
-    bpi = (store.stats.stitched_dpa_bytes - b0) / len(newk)
-    ins = perfmodel.insert_mops(bpi, depth=store.depth)
-    upd = perfmodel.update_mops(depth=store.depth)
+    def bytes_per_insert(batched):
+        store = build_store("sparse", n=50_000, cache=False, batched_patch=batched)
+        rng = np.random.default_rng(0)
+        all_keys, _ = store.items()
+        newk = np.setdiff1d(
+            rng.integers(0, 2**63, 9000, dtype=np.uint64), all_keys
+        )[:4096]
+        b0 = store.stats.stitched_dpa_bytes
+        store.put(newk, newk)
+        return (store.stats.stitched_dpa_bytes - b0) / len(newk), store.depth
+
+    bpi, depth = bytes_per_insert(batched=False)  # the paper's stream
+    ins = perfmodel.insert_mops(bpi, depth=depth)
+    upd = perfmodel.update_mops(depth=depth)
     assert ins < upd / 3, (ins, upd)
     assert 0.2 < ins < 4.0, f"bytes/insert={bpi}"
+    bpi_batched, _ = bytes_per_insert(batched=True)
+    assert bpi_batched < bpi, (bpi_batched, bpi)
 
 
 def test_ycsb_relations_match_fig15():

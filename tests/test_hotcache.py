@@ -82,7 +82,9 @@ def test_cache_hit_correct_and_invalidation():
 
 
 def test_store_cache_hits_under_zipf_and_consistency():
-    """End-to-end: skewed GETs hit the cache; UPDATEs never serve stale."""
+    """End-to-end: skewed GETs hit the cache; UPDATEs never serve stale.
+    (Was the suite's slowest test at >4 min until zipf_indices switched to
+    bounded inverse-CDF sampling; now fast enough for the CI fast lane.)"""
     keys = sparse(3000, seed=21)
     vals = keys + np.uint64(1)
     st = DPAStore(keys, vals)

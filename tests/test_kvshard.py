@@ -4,50 +4,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import DPAStore, TreeConfig
+from repro.core import TreeConfig
 from repro.core.datasets import sparse
 from repro.core.keys import limb_hash_np, split_u64
 from repro.distributed import kvshard
 
 
 def _build_shards(n_shards, keys, vals, tree_cfg):
-    """Partition keys by the routing hash, build one store per shard, stack
-    device trees (pool shapes padded to the max so vmap can stack)."""
-    h = limb_hash_np(keys, kvshard.SALT_SHARD) % n_shards
-    stores = []
-    for s in range(n_shards):
-        ks = keys[h == s]
-        vs = vals[h == s]
-        stores.append(DPAStore(ks, vs, tree_cfg, cache_cfg=None))
-    # pad pools to common shapes, then stack along a shard dim
-    def pad_stack(arrs):
-        if arrs[0].ndim == 0:
-            return jnp.stack(arrs)
-        shape = tuple(max(a.shape[i] for a in arrs) for i in range(arrs[0].ndim))
-        return jnp.stack(
-            [
-                jnp.pad(a, [(0, shape[i] - a.shape[i]) for i in range(a.ndim)])
-                for a in arrs
-            ]
-        )
-
-    tree_t = type(stores[0].tree)
-    stacked_tree = tree_t(
-        **{
-            f: pad_stack([getattr(st.tree, f) for st in stores])
-            for f in tree_t._fields
-        }
-    )
-    ib_t = type(stores[0].ib)
-    stacked_ib = ib_t(
-        **{
-            f: pad_stack([getattr(st.ib, f) for st in stores])
-            for f in ib_t._fields
-        }
-    )
-    depth = max(st.depth for st in stores)
-    assert all(st.depth == depth for st in stores), "equalise shard sizes"
-    return stacked_tree, stacked_ib, stores, depth
+    """Hash-partition into a ShardedDPAStore and stack the shard pools."""
+    sharded = kvshard.ShardedDPAStore(keys, vals, n_shards, tree_cfg)
+    stacked_tree, stacked_ib, depth = sharded.stacked()
+    return stacked_tree, stacked_ib, sharded.shards, depth
 
 
 def test_sharded_serve_matches_local_oracle():
@@ -89,6 +56,58 @@ def test_sharded_serve_matches_local_oracle():
                 assert int(got[i, j]) == oracle[k]
             else:
                 assert not fnd[i, j]
+
+
+def test_sharded_store_write_path_batched():
+    """ShardedDPAStore routes writes to owner shards, drains each shard's
+    staged writes as ONE merged stitch transaction per flush cycle, and
+    agrees with a dict oracle."""
+    keys = sparse(3000, seed=53)
+    vals = keys ^ np.uint64(0xF00D)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards=4, tree_cfg=TreeConfig(ib_cap=8, growth=20.0)
+    )
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    rng = np.random.default_rng(8)
+    newk = np.setdiff1d(rng.integers(0, 2**63, 600, dtype=np.uint64), keys)
+    sharded.put(newk, newk + np.uint64(1))
+    oracle.update({int(k): int(k) + 1 for k in newk})
+    dels = keys[10:400:7]
+    sharded.delete(dels)
+    for k in dels.tolist():
+        oracle.pop(k, None)
+    sharded.flush()
+    totals = sharded.stats_totals()
+    # batched pipeline: one stitch apply per flush cycle per shard
+    assert totals["stitch_applies"] == totals["flush_cycles"]
+    assert totals["patched_leaves"] >= totals["stitch_applies"]
+    ik, iv = sharded.items()
+    assert ik.tolist() == sorted(oracle.keys())
+    assert all(oracle[int(k)] == int(v) for k, v in zip(ik, iv))
+    probe = np.concatenate([ik[:64], dels[:16]])
+    v, f = sharded.get(probe)
+    for i, k in enumerate(probe.tolist()):
+        assert f[i] == (k in oracle)
+        if f[i]:
+            assert int(v[i]) == oracle[k]
+
+
+def test_sharded_store_tolerates_empty_shards():
+    """A hash partition that leaves some shards empty must still build —
+    empty shards bulk-load one empty leaf and fill on insert."""
+    sharded = kvshard.ShardedDPAStore(
+        np.array([5, 9], dtype=np.uint64),
+        np.array([50, 90], dtype=np.uint64),
+        n_shards=4,
+    )
+    v, f = sharded.get(np.array([5, 9, 77], dtype=np.uint64))
+    assert f.tolist() == [True, True, False]
+    assert v[:2].tolist() == [50, 90]
+    new = np.arange(100, 140, dtype=np.uint64)
+    sharded.put(new, new + np.uint64(1))
+    sharded.flush()
+    v, f = sharded.get(new)
+    assert f.all() and (v == new + 1).all()
 
 
 def test_capacity_overflow_reports_retry():

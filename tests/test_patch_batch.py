@@ -1,0 +1,191 @@
+"""Batched patch/stitch pipeline == per-leaf oracle (the tentpole invariant).
+
+``plan_patch_batch`` + vectorized stitch must be semantically identical to
+the per-leaf ``plan_patch`` stream across mixed INSERT/UPDATE/DELETE
+workloads, including multiple leaves splitting in ONE flush cycle — while
+applying exactly one stitch transaction per cycle (vs one per leaf).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig
+from repro.core import patch, stitch
+from repro.core.datasets import sparse, dense4x
+from repro.core.keys import join_u64
+
+
+def _mk_pair(n=1500, ib_cap=8, growth=30.0, dataset=sparse):
+    keys = dataset(n, seed=11)
+    vals = keys ^ np.uint64(0xABCD)
+    cfg = TreeConfig(ib_cap=ib_cap, growth=growth)
+    a = DPAStore(keys, vals, cfg, cache_cfg=None, batched_patch=True)
+    b = DPAStore(keys, vals, cfg, cache_cfg=None, batched_patch=False)
+    return a, b, dict(zip(keys.tolist(), vals.tolist()))
+
+
+def _apply_ops(store, oracle, ops):
+    for kind, ks, vs in ops:
+        if kind == "put":
+            store.put(ks, vs)
+            oracle.update(zip(ks.tolist(), vs.tolist()))
+        else:
+            store.delete(ks)
+            for k in ks.tolist():
+                oracle.pop(k, None)
+
+
+def _gen_ops(seed, oracle_keys):
+    """A mixed op script (new inserts / overwrites / deletes)."""
+    rng = np.random.default_rng(seed)
+    live = list(oracle_keys)
+    ops = []
+    for i in range(5):
+        newk = np.setdiff1d(
+            rng.integers(0, 2**63, 120, dtype=np.uint64),
+            np.array(live, dtype=np.uint64),
+        )
+        ops.append(("put", newk, newk + np.uint64(7)))
+        live.extend(newk.tolist())
+        old = np.array(
+            rng.choice(live, min(60, len(live)), replace=False), dtype=np.uint64
+        )
+        ops.append(("put", old, old ^ np.uint64(i + 1)))
+        dels = np.array(
+            rng.choice(live, min(30, len(live)), replace=False), dtype=np.uint64
+        )
+        ops.append(("del", dels, None))
+    return ops
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=6, deadline=None)
+def test_batched_equals_per_leaf_property(seed):
+    a, b, oracle = _mk_pair()
+    ops = _gen_ops(seed, oracle.keys())
+    oracle_a = dict(oracle)
+    _apply_ops(a, oracle_a, ops)
+    _apply_ops(b, dict(oracle), ops)
+    a.flush()
+    b.flush()
+    ka, va = a.items()
+    kb, vb = b.items()
+    assert np.array_equal(ka, kb)
+    assert np.array_equal(va, vb)
+    assert ka.tolist() == sorted(oracle_a.keys())
+    assert all(oracle_a[int(k)] == int(v) for k, v in zip(ka, va))
+    # batched pipeline: exactly one stitch transaction per flush cycle
+    assert a.stats.stitch_applies == a.stats.flush_cycles
+    # per-leaf oracle: one per patched leaf
+    assert b.stats.stitch_applies == b.stats.patched_leaves
+    assert a.stats.stitch_applies < b.stats.stitch_applies
+
+
+def test_multi_leaf_splits_in_one_cycle(store_factory):
+    """Several leaves split inside ONE flush cycle; still one transaction."""
+    cfg = TreeConfig(ib_cap=8, growth=30.0)
+    a, oracle = store_factory(
+        "sparse", n=1200, tree_cfg=cfg, cache_cfg=None, batched_patch=True
+    )
+    b, _ = store_factory(
+        "sparse", n=1200, tree_cfg=cfg, cache_cfg=None, batched_patch=False
+    )
+    ks = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    # aim dense new keys at several distinct leaves so their buffers all
+    # fill and split within the same flush() cycle
+    targets = ks[:: max(1, ks.size // 6)][:6]
+    newk = np.concatenate(
+        [t + np.arange(1, 30, dtype=np.uint64) for t in targets]
+    )
+    newk = np.unique(newk)
+    newk = np.array(
+        [k for k in newk.tolist() if k not in oracle], dtype=np.uint64
+    )
+    for s in (a, b):
+        s.put(newk, newk, auto_retry=True)
+    c0 = a.stats.flush_cycles
+    p0 = a.stats.patches_structural
+    a.flush()
+    b.flush()
+    assert a.stats.patches_structural > p0 or a.stats.new_leaves > 0
+    ka, va = a.items()
+    kb, vb = b.items()
+    assert np.array_equal(ka, kb) and np.array_equal(va, vb)
+    # lookups through the stitched device tree agree too
+    q = np.concatenate([newk[:64], ks[:64]])
+    va_, fa = a.get(q)
+    vb_, fb = b.get(q)
+    assert np.array_equal(fa, fb) and np.array_equal(va_[fa], vb_[fb])
+
+
+def test_plan_patch_batch_single_merged_batch(store_factory):
+    """The planner funnels all full leaves into ONE StitchBatch whose
+    CONNECTs land strictly after its COPYs (two-phase application)."""
+    store, oracle = store_factory(
+        "sparse", n=1500, tree_cfg=TreeConfig(ib_cap=8), cache_cfg=None
+    )
+    keys = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    rng = np.random.default_rng(2)
+    newk = np.setdiff1d(rng.integers(0, 2**63, 400, dtype=np.uint64), keys)
+    # stage entries for two different leaves by hand
+    leaves, entries = [], []
+    for k in newk:
+        leaf, _ = store.image.find_leaf(np.uint64(k))
+        if leaf not in leaves:
+            leaves.append(int(leaf))
+            entries.append([])
+        entries[leaves.index(int(leaf))].append(
+            (int(k), int(k) + 9, patch.OP_PUT)
+        )
+        if len(leaves) >= 3 and all(len(e) >= 8 for e in entries):
+            break
+    result = patch.plan_patch_batch(store.image, leaves, entries)
+    assert isinstance(result.batch, stitch.StitchBatch)
+    assert len(result.results) == len(leaves)
+    assert result.unplanned == []
+    # all per-leaf results alias the one merged batch
+    assert all(r.batch is result.batch for r in result.results)
+    # atomicity: a traversal between copies and connects sees the old tree
+    mid = stitch.apply_copies(store.tree, result.batch)
+    assert int(mid.root) == int(store.tree.root)
+    new_tree, new_ib = stitch.apply_connects(mid, store.ib, result.batch)
+    # consumed buffers are cleared, staged keys are now resolvable
+    counts = np.asarray(new_ib.count)
+    assert all(counts[l] == 0 for l in leaves)
+
+
+def test_coalesced_copies_last_wins():
+    """Duplicate COPY rows keep the final payload (stream order)."""
+    b = stitch.StitchBatch()
+    b.add_copy("leaf_count", 3, np.int32(1))
+    b.add_copy("leaf_count", 4, np.int32(2))
+    b.add_copy("leaf_count", 3, np.int32(9))
+    ids, rows = b.coalesced_copies()["leaf_count"]
+    got = dict(zip(ids.tolist(), rows.tolist()))
+    assert got == {3: 9, 4: 2}
+
+
+def test_headroom_chunking_still_equivalent():
+    """When pool headroom forces a cycle to split into multiple
+    transactions, semantics must be unchanged (just more applies)."""
+    keys = sparse(600, seed=5)
+    cfg = TreeConfig(ib_cap=8, growth=2.0)  # deliberately tight pools
+    a = DPAStore(keys, keys, cfg, cache_cfg=None, batched_patch=True)
+    b = DPAStore(keys, keys, cfg, cache_cfg=None, batched_patch=False)
+    oracle = dict(zip(keys.tolist(), keys.tolist()))
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        nk = np.setdiff1d(
+            rng.integers(0, 2**63, 150, dtype=np.uint64),
+            np.array(list(oracle), dtype=np.uint64),
+        )
+        for s in (a, b):
+            s.put(nk, nk)
+        oracle.update({int(k): int(k) for k in nk})
+    a.flush()
+    b.flush()
+    ka, va = a.items()
+    kb, vb = b.items()
+    assert np.array_equal(ka, kb) and np.array_equal(va, vb)
+    assert ka.tolist() == sorted(oracle.keys())
