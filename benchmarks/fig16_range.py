@@ -1,0 +1,71 @@
+"""Figure 16 (repo extension): sharded RANGE throughput vs shard count.
+
+The paper's 13 MOPS RANGE figure is single-NIC; this sweep shows what the
+distributed tier does to it.  For each (partition, n_shards, scan length)
+cell we RUN the scatter-gather (range tier) or broadcast (hash tier) path on
+the CPU store — correctness plus the *measured* fan-out feed the model — and
+``derived`` pushes the per-shard BlueField-3 RANGE model through the scaling
+law of the tier:
+
+  * range tier: each request costs ``fanout`` shard-scans, so aggregate
+    throughput is ``n_shards / fanout`` times one shard's model MOPS (the
+    measured fan-out is ~1 for scans that fit the owner's slice);
+  * hash tier: every shard scans every request (broadcast), so aggregate
+    RANGE throughput never exceeds ONE shard's — flat in n_shards.  That gap
+    is the reason the range-partitioned tier exists.
+"""
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.datasets import load
+from repro.distributed.kvshard import ShardedDPAStore
+
+from . import common
+from .common import emit, time_op, wave
+
+SHARDS = (2, 4, 8)
+SHARDS_SMOKE = (2, 4)
+LIMITS = (10, 100)
+WAVE = 1024
+
+
+def run():
+    rng = np.random.default_rng(16)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=9)
+    vals = keys ^ np.uint64(0x5EED)
+    shard_counts = SHARDS_SMOKE if common.SMOKE else SHARDS
+    for n_shards in shard_counts:
+        for part in ("range", "hash"):
+            store = ShardedDPAStore(
+                keys, vals, n_shards, cache_cfg=None, partition=part
+            )
+            depth = max(sh.depth for sh in store.shards)
+            for limit in LIMITS:
+                q = rng.choice(keys, w)
+                # max_leaves sized so the bounded per-shard scan covers the
+                # scan length (SEG_CAP=128-wide leaves)
+                max_leaves = max(4, limit // 16)
+                r0, s0 = store.range_requests, store.range_subqueries
+                t = time_op(
+                    store.range, q, limit, max_leaves, repeats=1
+                ) / w
+                fan = (store.range_subqueries - s0) / max(
+                    store.range_requests - r0, 1
+                )
+                per_shard = perfmodel.range_mops(depth, limit=limit)
+                if part == "range":
+                    m = per_shard * n_shards / max(fan, 1.0)
+                else:  # broadcast: all shards scan -> no scale-out
+                    m = per_shard
+                emit(
+                    f"fig16/{part}/shards{n_shards}/limit{limit}",
+                    t * 1e6,
+                    f"model_mops={m:.1f};fanout={fan:.2f};depth={depth}",
+                )
+
+
+if __name__ == "__main__":
+    run()

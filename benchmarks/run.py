@@ -41,6 +41,26 @@ def validate_rows(rows) -> list:
     return problems
 
 
+def validate_fig16_coverage(rows) -> list:
+    """The sharded-RANGE sweep must cover >= 2 shard counts x 2 scan lengths
+    per partition tier (fig16 rows are ``fig16/<tier>/shards<N>/limit<L>``)."""
+    problems = []
+    for tier in ("range", "hash"):
+        shard_counts, limits = set(), set()
+        for row in rows:
+            name = row.split(",", 1)[0]
+            parts = name.split("/")
+            if len(parts) == 4 and parts[0] == "fig16" and parts[1] == tier:
+                shard_counts.add(parts[2])
+                limits.add(parts[3])
+        if len(shard_counts) < 2 or len(limits) < 2:
+            problems.append(
+                f"fig16/{tier}: need >= 2 shard counts x 2 scan lengths, "
+                f"got shards={sorted(shard_counts)} limits={sorted(limits)}"
+            )
+    return problems
+
+
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument(
@@ -75,6 +95,7 @@ def main(argv=None) -> None:
         fig13_insert_update,
         fig14_models,
         fig15_ycsb,
+        fig16_range,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -91,6 +112,7 @@ def main(argv=None) -> None:
         ("fig13_insert_update", fig13_insert_update),
         ("fig14_models", fig14_models),
         ("fig15_ycsb", fig15_ycsb),
+        ("fig16_range", fig16_range),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -109,6 +131,8 @@ def main(argv=None) -> None:
 
     if args.smoke:
         problems = validate_rows(common.ROWS)
+        if "fig16_range" not in failures:
+            problems += validate_fig16_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,

@@ -203,7 +203,6 @@ def get_batch(
 
 
 @partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
-@partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
 def range_batch(
     tree: DeviceTree,
     ib: InsertBuffers,
@@ -223,7 +222,15 @@ def range_batch(
     the paper's re-descend-and-continue loop, bounded like its 64-pairs-per-
     response packetisation.  Buffer entries override leaf entries and newer
     buffer entries override older ones (same visibility rule as GET).
+
+    Edge cases (exercised in tests/test_range_shard.py): a ``k_min`` above
+    the largest key routes to the last leaf and returns an empty window; a
+    ``k_min`` inside a gap returns the successor keys; ``limit`` must be
+    >= 1 (callers guard ``limit == 0`` — ``store.range`` / ``ops.range_scan``
+    short-circuit it host-side to keep the jit cache free of degenerate
+    shapes).
     """
+    assert limit >= 1, "limit=0 is guarded by the callers"
     start_leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
     cap = ib.keys.shape[1]
     B = khi.shape[0]

@@ -117,6 +117,45 @@ def fit(keys: np.ndarray, eps: float, max_count: int = 128) -> List[Segment]:
 
 
 # ---------------------------------------------------------------------------
+# partition boundary fitting (range-sharded tier)
+# ---------------------------------------------------------------------------
+
+
+def fit_boundaries(keys: np.ndarray, n_parts: int) -> np.ndarray:
+    """Quantile partition boundaries for the range-sharded distributed tier.
+
+    The learned-index idea applied at cluster granularity: a hash partition
+    destroys key order (so RANGE must broadcast), while cutting the *empirical
+    key CDF* at uniform quantiles — the zero-parameter limit of the PLA models
+    this module fits — gives every partition an equal share of the loaded keys
+    AND keeps each partition a contiguous key slice, so a scan only ever
+    touches the owner and its immediate successors.
+
+    Returns the sorted ``(n_parts - 1,)`` u64 array ``b`` of partition *start*
+    keys: partition ``p`` owns ``[b[p-1], b[p])`` with implicit ``b[-1] = 0``
+    and ``b[n_parts-1] = 2^64``.  Route with
+    ``np.searchsorted(b, key, side="right")`` (bit-identical to the device
+    boundary search in ``repro.distributed.rangeshard``).
+
+    With fewer loaded keys than partitions the empirical CDF is meaningless;
+    fall back to a uniform key-space split (the uninformative prior) so every
+    key still has exactly one owner.  Duplicate quantile values (possible only
+    for non-unique inputs) simply leave the intermediate partitions empty.
+    """
+    assert n_parts >= 1
+    if n_parts == 1:
+        return np.zeros((0,), dtype=np.uint64)
+    keys = np.sort(np.asarray(keys, dtype=np.uint64))
+    if keys.size < n_parts:
+        step = (1 << 64) // n_parts
+        return (np.arange(1, n_parts, dtype=np.uint64) * np.uint64(step)).astype(
+            np.uint64
+        )
+    ranks = (np.arange(1, n_parts, dtype=np.int64) * keys.size) // n_parts
+    return keys[ranks].astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
 # prediction — float reference and paper-faithful fixed point
 # ---------------------------------------------------------------------------
 

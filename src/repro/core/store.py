@@ -283,9 +283,25 @@ class DPAStore:
         self, start_keys_u64, limit: int = 10, max_leaves: int = 4
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """RANGE(k_min, limit) per request: returns (keys (B, limit), vals
-        (B, limit), count (B,)) — ascending, live entries only."""
+        (B, limit), count (B,)) — ascending, live entries only (zeros past
+        ``count``).
+
+        Edge cases: ``limit=0`` and empty request batches short-circuit to
+        empty outputs host-side (keeping degenerate shapes out of the jit
+        cache); a ``k_min`` above the largest key or inside an empty window
+        comes back with ``count=0``; the scan is bounded by ``max_leaves``
+        leaves, the paper's re-descend packetisation bound.
+        """
         start_keys_u64 = np.asarray(start_keys_u64, dtype=np.uint64)
         n = start_keys_u64.size
+        if n == 0 or limit <= 0:
+            self.stats.ranges += n
+            shape = (n, max(limit, 0))
+            return (
+                np.zeros(shape, dtype=np.uint64),
+                np.zeros(shape, dtype=np.uint64),
+                np.zeros(n, dtype=np.int64),
+            )
         B = _pad_pow2(n)
         khi, klo, _ = self._limbs(start_keys_u64, B)
         rk, rv, valid = lookup.range_batch(

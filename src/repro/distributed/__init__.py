@@ -1,1 +1,7 @@
-"""repro.distributed subpackage."""
+"""repro.distributed subpackage.
+
+``kvshard``    — sharded DPA-Store facade + hash/range routed GET waves;
+``rangeshard`` — range-partition boundary routing + scatter-gather RANGE;
+``sharding``   — LM parameter/optimizer/cache PartitionSpecs;
+``elastic`` / ``straggler`` — training-side resilience utilities.
+"""

@@ -3,14 +3,25 @@
 The paper steers requests to DPA threads by key hash (UDP port selection).
 Scaled out, the same pattern shards the store over the mesh 'data' axis:
 
-  clients -> hash(key) % n_shards -> all_to_all -> owner shard's
+  clients -> partition(key) -> all_to_all -> owner shard's
   traversal (hot cache -> learned index -> leaf) -> all_to_all back
 
 Each shard owns an independent sub-store (its own tree pools, insert
-buffers, caches) covering its hash slice of the key space — clients stay
-stateless (they only hash).  The exchange uses fixed per-shard-pair
-capacity with overflow -> RETRY status, the batched analogue of the paper's
-receive-queue overflow handling (Sec 3.1.3).
+buffers, caches) covering its slice of the key space — clients stay
+stateless (routing is a pure function of the key).  Two partitions share
+the routing/exchange machinery:
+
+  * ``partition="hash"`` — ``hash(key) % n_shards``, the paper's UDP
+    steering scaled out.  Point ops route to exactly one shard; RANGE
+    cannot be routed and must broadcast (the non-scalable baseline).
+  * ``partition="range"`` — quantile boundaries over the loaded keys
+    (``core.pla.fit_boundaries``): each shard owns a contiguous key slice,
+    so RANGE scatter-gathers to the owner shard and its successors only
+    (``repro.distributed.rangeshard`` holds the device wave).
+
+The exchange uses fixed per-shard-pair capacity with overflow -> RETRY
+status, the batched analogue of the paper's receive-queue overflow handling
+(Sec 3.1.3).
 
 Two execution paths share the same routing math:
 
@@ -18,6 +29,9 @@ Two execution paths share the same routing math:
     dry-run lowers this: proof the KV service itself distributes);
   * ``serve_wave_emulated`` — vmap over the shard dim on one device
     (CPU tests; bit-identical routing results).
+
+Both accept an optional ``route_fn(khi, klo) -> dest`` so the hash and
+range tiers run through the same bucketize/exchange/scatter-back code.
 """
 
 from __future__ import annotations
@@ -87,14 +101,28 @@ def stack_shards(stores) -> Tuple[DeviceTree, InsertBuffers, int]:
 
 
 class ShardedDPAStore:
-    """Multi-shard DPA-Store facade: hash-routes client batches to per-shard
+    """Multi-shard DPA-Store facade: routes client batches to per-shard
     sub-stores and drains each shard's staged writes through the *batched*
     patch/stitch pipeline — one merged stitch transaction per shard per
     flush cycle, the scaled-out version of Sec 3.2's batching.
 
+    ``partition`` selects the routing function:
+
+    * ``"hash"`` (default) — ``hash(key) % n_shards``.  Point ops route to
+      one shard; :meth:`range` must broadcast to every shard and k-way merge
+      (kept as the non-scalable baseline the paper's ordered store exists to
+      avoid).
+    * ``"range"`` — quantile boundaries fitted over the loaded keys
+      (``core.pla.fit_boundaries``); every shard owns a contiguous key
+      slice, so :meth:`range` scatter-gathers over the owner shard and its
+      successors only.  Boundaries are fixed at load time — inserts outside
+      the loaded distribution skew toward the edge shards until a rebalance
+      refits them (ROADMAP follow-on).
+
     This is host-side orchestration (each shard is an independent
-    ``DPAStore``); the device-resident wave path for GETs is
-    ``serve_wave_emulated`` / ``serve_wave_sharded`` over ``stacked()``.
+    ``DPAStore``); the device-resident wave paths are
+    ``serve_wave_emulated`` / ``serve_wave_sharded`` over ``stacked()`` for
+    GET and ``rangeshard.range_wave_emulated`` / ``_sharded`` for RANGE.
     """
 
     def __init__(
@@ -105,14 +133,26 @@ class ShardedDPAStore:
         tree_cfg: TreeConfig = TreeConfig(),
         cache_cfg=None,
         batched_patch: bool = True,
+        partition: str = "hash",
     ):
         from repro.core.store import DPAStore
+        from repro.core import pla
 
+        assert partition in ("hash", "range"), partition
+        assert n_shards >= 1, f"n_shards must be positive, got {n_shards}"
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
         self.n_shards = n_shards
         self.cfg = tree_cfg
-        h = shard_of_np(keys, n_shards)
+        self.partition = partition
+        if partition == "range":
+            self.boundaries = pla.fit_boundaries(keys, n_shards)
+        else:
+            self.boundaries = None
+        h = self.route_np(keys)
+        # scatter-gather accounting (benchmarks report the measured fan-out)
+        self.range_requests = 0
+        self.range_subqueries = 0
         self.shards: List[DPAStore] = [
             DPAStore(
                 keys[h == s],
@@ -124,10 +164,19 @@ class ShardedDPAStore:
             for s in range(n_shards)
         ]
 
+    def route_np(self, keys_u64: np.ndarray) -> np.ndarray:
+        """Owner shard per key (client-side; bit-identical to the device
+        routing of the matching wave path)."""
+        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        if self.partition == "range":
+            return np.searchsorted(
+                self.boundaries, keys_u64, side="right"
+            ).astype(np.int32)
+        return shard_of_np(keys_u64, self.n_shards)
+
     def _route(self, keys_u64: np.ndarray):
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-        dest = shard_of_np(keys_u64, self.n_shards)
-        return keys_u64, dest
+        return keys_u64, self.route_np(keys_u64)
 
     def put(self, keys_u64, vals_u64) -> np.ndarray:
         keys_u64, dest = self._route(keys_u64)
@@ -160,6 +209,85 @@ class ShardedDPAStore:
                 found[m] = f
         return vals, found
 
+    def range(
+        self,
+        start_keys_u64,
+        limit: int = 10,
+        max_leaves: int = 4,
+        fanout: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched RANGE(k_min, limit): (keys (n, limit), vals (n, limit),
+        count (n,)) — globally ascending live entries, zeros past ``count``.
+
+        Range partition: scatter-gather.  Each request is sent to its owner
+        shard (boundary search) and then to successive shards — at most
+        ``fanout`` of them (default: all) and only while the request still
+        needs results — and the gather epilogue stitches the per-shard
+        results, which are disjoint and already ordered, back-to-back.  The
+        per-shard scan is bounded by ``max_leaves`` exactly like the
+        single-store RANGE; a shard whose bounded scan under-fills is
+        stitched to its successor's results, so callers needing exact
+        first-``limit`` semantics size ``max_leaves`` to cover ``limit``.
+
+        Hash partition: keys are scattered by hash, so every shard must scan
+        (broadcast) and the epilogue k-way merges — correct, but aggregate
+        RANGE throughput cannot exceed one shard's.  This is the baseline
+        ``benchmarks/fig16_range.py`` plots against the range tier.
+        """
+        start = np.asarray(start_keys_u64, dtype=np.uint64)
+        n = start.size
+        keys_out = np.zeros((n, max(limit, 0)), dtype=np.uint64)
+        vals_out = np.zeros((n, max(limit, 0)), dtype=np.uint64)
+        counts = np.zeros(n, dtype=np.int64)
+        if n == 0 or limit <= 0:
+            return keys_out, vals_out, counts
+        self.range_requests += n
+        if self.partition == "range":
+            owner = self.route_np(start)
+            fanout = self.n_shards if fanout is None else fanout
+            cols = np.arange(limit)
+            for s in range(self.n_shards):
+                m = (owner <= s) & (s - owner < fanout) & (counts < limit)
+                if not m.any():
+                    continue
+                self.range_subqueries += int(m.sum())
+                rk, rv, rc = self.shards[s].range(
+                    start[m], limit=limit, max_leaves=max_leaves
+                )
+                # vectorized stitch: append each row's first `take` results
+                # at its current fill level
+                idxs = np.where(m)[0]
+                take = np.minimum(rc, limit - counts[idxs])
+                src = cols[None, :] < take[:, None]  # (k, limit)
+                dst_col = counts[idxs][:, None] + cols[None, :]
+                dst_row = np.repeat(idxs, take)
+                keys_out[dst_row, dst_col[src]] = rk[src]
+                vals_out[dst_row, dst_col[src]] = rv[src]
+                counts[idxs] += take
+            return keys_out, vals_out, counts
+        # hash partition: broadcast + k-way merge (keys never hit the
+        # KEY_MAX sentinel — reserved — so it can pad the sort)
+        self.range_subqueries += n * self.n_shards
+        per = [
+            sh.range(start, limit=limit, max_leaves=max_leaves)
+            for sh in self.shards
+        ]
+        allk = np.concatenate([rk for rk, _, _ in per], axis=1)
+        allv = np.concatenate([rv for _, rv, _ in per], axis=1)
+        live = np.concatenate(
+            [np.arange(limit)[None, :] < rc[:, None] for _, _, rc in per],
+            axis=1,
+        )
+        allk = np.where(live, allk, np.uint64(0xFFFFFFFFFFFFFFFF))
+        order = np.argsort(allk, axis=1, kind="stable")[:, :limit]
+        top_k = np.take_along_axis(allk, order, axis=1)
+        top_v = np.take_along_axis(allv, order, axis=1)
+        top_live = np.take_along_axis(live, order, axis=1)
+        keys_out[:] = np.where(top_live, top_k, 0)
+        vals_out[:] = np.where(top_live, top_v, 0)
+        counts[:] = top_live.sum(axis=1)
+        return keys_out, vals_out, counts
+
     def flush(self) -> int:
         """One flush cycle per shard (each a single stitch transaction)."""
         return sum(sh.flush() for sh in self.shards)
@@ -187,11 +315,15 @@ class ShardedDPAStore:
         return out
 
 
-def _bucketize(khi, klo, n_shards: int, cap: int):
+def _bucketize(dest, khi, klo, n_shards: int, cap: int):
     """Group a shard's local requests by destination shard into fixed
-    (n_shards, cap) buckets.  Returns (bk_hi, bk_lo, origin_idx, valid)."""
+    (n_shards, cap) buckets.  Returns (bk_hi, bk_lo, origin_idx, valid).
+
+    ``dest`` is the per-request destination shard; values outside
+    ``[0, n_shards)`` act as a drop sentinel (the request lands in no
+    bucket and its origin slot stays -1) — the range tier uses this for
+    fan-out replicas that run past the last shard."""
     W = khi.shape[0]
-    dest = shard_of(khi, klo, n_shards)
     order = jnp.argsort(dest, stable=True)
     dest_s = dest[order]
     pos = jnp.arange(W, dtype=jnp.int32)
@@ -205,7 +337,10 @@ def _bucketize(khi, klo, n_shards: int, cap: int):
     origin = jnp.full((n_shards * cap,), -1, jnp.int32).at[slot].set(
         order.astype(jnp.int32), mode="drop"
     )
-    valid = jnp.zeros((n_shards * cap,), bool).at[slot].set(ok[order], mode="drop")
+    # NB: ``ok`` lives in the sorted domain like ``slot`` — indexing it by
+    # ``order`` would mix domains and mark landed requests as dropped
+    # (spurious RETRYs under mixed-destination overflow).
+    valid = jnp.zeros((n_shards * cap,), bool).at[slot].set(ok, mode="drop")
     return (
         bk_hi.reshape(n_shards, cap),
         bk_lo.reshape(n_shards, cap),
@@ -220,16 +355,29 @@ def _local_get(tree, ib, khi, klo, *, depth, eps_inner, eps_leaf):
     )
 
 
-def make_serve_wave(n_shards: int, cap: int, *, depth: int, eps_inner: int, eps_leaf: int):
+def make_serve_wave(
+    n_shards: int,
+    cap: int,
+    *,
+    depth: int,
+    eps_inner: int,
+    eps_leaf: int,
+    route_fn=None,
+):
     """Builds the per-shard wave body (used by both execution paths).
 
     Inputs per shard: local request tile (W,) + the shard's store state.
     The all_to_all exchange is abstracted as a callable so the emulated path
-    can transpose in-memory.
+    can transpose in-memory.  ``route_fn(khi, klo) -> dest`` defaults to the
+    hash partition; the range tier passes a boundary search instead.
     """
+    if route_fn is None:
+        route_fn = partial(shard_of, n_shards=n_shards)
 
     def body(tree, ib, khi, klo, all_to_all):
-        bk_hi, bk_lo, origin, valid = _bucketize(khi, klo, n_shards, cap)
+        bk_hi, bk_lo, origin, valid = _bucketize(
+            route_fn(khi, klo), khi, klo, n_shards, cap
+        )
         # exchange: row d of my buckets goes to shard d
         rq_hi = all_to_all(bk_hi)  # (n_shards, cap) requests I now own
         rq_lo = all_to_all(bk_lo)
@@ -272,17 +420,19 @@ def serve_wave_emulated(
     depth: int,
     eps_inner: int,
     eps_leaf: int,
+    route_fn=None,
 ):
     """Single-device emulation: vmap over the shard dim; the exchange is a
     transpose of the (shard, dest, cap) bucket tensor."""
     n_shards = khi.shape[0]
-    body = make_serve_wave(
-        n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
-    )
+    if route_fn is None:
+        route_fn = partial(shard_of, n_shards=n_shards)
 
     # The exchange needs cross-shard data, which vmap can't see — so run the
     # phases manually: bucketize all shards, transpose, serve, transpose.
-    bk = jax.vmap(lambda h, l: _bucketize(h, l, n_shards, cap))(khi, klo)
+    bk = jax.vmap(
+        lambda h, l: _bucketize(route_fn(h, l), h, l, n_shards, cap)
+    )(khi, klo)
     bk_hi, bk_lo, origin, valid = bk
     rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
     rq_lo = jnp.swapaxes(bk_lo, 0, 1)
@@ -319,7 +469,10 @@ def serve_wave_emulated(
     return jax.vmap(scatter_back)(origin, valid, rs_vhi, rs_vlo, rs_fnd)
 
 
-def serve_wave_sharded(mesh: Mesh, stacked_tree, stacked_ib, *, cap, depth, eps_inner, eps_leaf):
+def serve_wave_sharded(
+    mesh: Mesh, stacked_tree, stacked_ib, *, cap, depth, eps_inner, eps_leaf,
+    route_fn=None,
+):
     """shard_map version over the mesh 'data' axis (dry-run / production).
 
     Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) with state and
@@ -328,7 +481,8 @@ def serve_wave_sharded(mesh: Mesh, stacked_tree, stacked_ib, *, cap, depth, eps_
 
     n_shards = mesh.shape["data"]
     body = make_serve_wave(
-        n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf
+        n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf,
+        route_fn=route_fn,
     )
 
     def a2a(x):

@@ -1,0 +1,304 @@
+"""Range-partitioned distributed tier: boundary routing + scatter-gather RANGE.
+
+Why a second partition.  The paper's headline RANGE result (13 MOPS at
+limit=10) relies on leaves being chained in key order; the hash tier
+(``kvshard``) deliberately destroys that order across shards, so a scan
+there must broadcast to every shard and aggregate RANGE throughput can never
+exceed one shard's.  This module keeps the *global* order: the u64 key space
+is cut at quantile boundaries fitted over the loaded keys
+(``core.pla.fit_boundaries`` — the empirical-CDF / learned-index view of
+partitioning), each shard bulk-loads its contiguous slice into its own
+``DPAStore``, and every request is routed by a boundary search that is
+bit-identical between the numpy client (``np.searchsorted(b, k, 'right')``)
+and the device wave (count of boundaries <= key in u32 limb arithmetic).
+
+Scatter-gather RANGE.  A RANGE(k_min, limit) may spill past its owner
+shard's slice, so the wave fans each request out to the owner and its
+``fanout - 1`` successors (successors scan from their first leaf: k_min is
+below their slice, and the bounded leaf-chain walk of
+``lookup.range_batch`` / ``kernels.range_scan`` starts at the floor leaf).
+Because shard slices are disjoint and ascending, the gather epilogue needs
+no merge network: it concatenates each request's per-shard results in shard
+order — already globally sorted — and compacts the first ``limit`` live
+entries.  Fan-out replicas that run past the last shard are dropped at
+bucketize time and count as trivially-complete empties.
+
+RETRY semantics.  The exchange uses the same fixed per-shard-pair capacity
+as the GET wave (``kvshard._bucketize``): a replica that overflows its
+(src, dst) bucket is never silently lost — the request's ``ok`` flag comes
+back False and the client re-sends, the batched analogue of the paper's
+receive-queue overflow handling (Sec 3.1.3).  A request is ``ok`` only if
+*every* in-range replica of its fan-out wave landed.
+
+Execution paths (mirroring ``kvshard``):
+
+  * ``range_wave_emulated`` — vmap over the shard dim on one device; the
+    exchange is a transpose.  CPU tests run this, asserting bit-equality
+    with the host-orchestrated ``ShardedDPAStore.range`` and a single-store
+    oracle.
+  * ``range_wave_sharded`` — shard_map over the mesh 'data' axis with
+    ``all_to_all`` exchanges (production / dry-run lowering).
+
+Host-side orchestration (boundary fitting, per-shard ``DPAStore`` builds,
+the sequential scatter-gather used by benchmarks) lives on
+``kvshard.ShardedDPAStore(partition="range")`` so both tiers share one
+facade.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import lookup
+from repro.core.keys import limb_le, split_u64
+from repro.distributed.kvshard import _bucketize
+
+
+def boundary_limbs(boundaries: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(n_shards-1,) u64 boundary array -> device (hi, lo) u32 limb arrays."""
+    limbs = split_u64(np.asarray(boundaries, dtype=np.uint64))
+    return jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
+
+
+def route_range(b_hi, b_lo, khi, klo):
+    """Owner shard per request key: count of shard-start boundaries <= key
+    (bit-identical to ``np.searchsorted(boundaries, key, side='right')``)."""
+    if b_hi.shape[0] == 0:
+        return jnp.zeros(khi.shape, dtype=jnp.int32)
+    le = limb_le(b_hi[None, :], b_lo[None, :], khi[:, None], klo[:, None])
+    return jnp.sum(le.astype(jnp.int32), axis=1)
+
+
+def make_route_fn(boundaries: np.ndarray):
+    """Device route_fn(khi, klo) for the GET wave paths in ``kvshard``."""
+    b_hi, b_lo = boundary_limbs(boundaries)
+    return partial(route_range, b_hi, b_lo)
+
+
+def _replicate(b_hi, b_lo, khi, klo, n_shards: int, fanout: int):
+    """Fan each request out to its owner shard and ``fanout - 1`` successors.
+
+    Returns (rep_hi, rep_lo, dest, oob) with the replica dim innermost:
+    replica ``j*fanout + f`` of request ``j`` targets ``owner_j + f``.
+    Replicas past the last shard get the ``n_shards`` drop sentinel and are
+    flagged ``oob`` (trivially-complete empties, not RETRYs).
+    """
+    W = khi.shape[0]
+    owner = route_range(b_hi, b_lo, khi, klo)
+    rep_hi = jnp.repeat(khi, fanout)
+    rep_lo = jnp.repeat(klo, fanout)
+    off = jnp.tile(jnp.arange(fanout, dtype=jnp.int32), W)
+    dest = jnp.repeat(owner, fanout) + off
+    oob = dest >= n_shards
+    return rep_hi, rep_lo, jnp.where(oob, n_shards, dest), oob
+
+
+def _gather_epilogue(
+    origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid,
+    *, W: int, fanout: int, limit: int,
+):
+    """Stitch one source shard's fan-out responses into per-request outputs.
+
+    ``origin``/``valid`` are this shard's bucketize maps ((n_dest, cap),
+    origin indexing the W*fanout replica stream); ``rs_*`` are the routed-
+    back responses ((n_dest, cap, limit)).  Per-shard results are disjoint
+    ascending slices, so concatenating a request's replicas in fan-out order
+    is already globally sorted — compact the first ``limit`` live entries.
+    """
+    WF = W * fanout
+    flat_origin = origin.reshape(-1)
+    safe = jnp.where(flat_origin >= 0, flat_origin, WF)
+    r_kh = jnp.zeros((WF, limit), jnp.uint32).at[safe].set(
+        rs_kh.reshape(-1, limit), mode="drop"
+    )
+    r_kl = jnp.zeros((WF, limit), jnp.uint32).at[safe].set(
+        rs_kl.reshape(-1, limit), mode="drop"
+    )
+    r_vh = jnp.zeros((WF, limit), jnp.uint32).at[safe].set(
+        rs_vh.reshape(-1, limit), mode="drop"
+    )
+    r_vl = jnp.zeros((WF, limit), jnp.uint32).at[safe].set(
+        rs_vl.reshape(-1, limit), mode="drop"
+    )
+    r_valid = jnp.zeros((WF, limit), bool).at[safe].set(
+        rs_valid.reshape(-1, limit).astype(bool), mode="drop"
+    )
+    r_ok = jnp.zeros((WF,), bool).at[safe].set(valid.reshape(-1), mode="drop")
+    r_ok = r_ok | oob  # past-the-end replicas are complete empties
+
+    cat_kh = r_kh.reshape(W, fanout * limit)
+    cat_kl = r_kl.reshape(W, fanout * limit)
+    cat_vh = r_vh.reshape(W, fanout * limit)
+    cat_vl = r_vl.reshape(W, fanout * limit)
+    cat_valid = r_valid.reshape(W, fanout * limit)
+
+    target = jnp.cumsum(cat_valid.astype(jnp.int32), axis=1) - 1
+    in_out = cat_valid & (target < limit)
+    tgt = jnp.where(in_out, target, limit)  # overflow -> scratch column
+    rows = jnp.arange(W)[:, None]
+    out_kh = jnp.zeros((W, limit + 1), jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, cat_kh, 0)
+    )
+    out_kl = jnp.zeros((W, limit + 1), jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, cat_kl, 0)
+    )
+    out_vh = jnp.zeros((W, limit + 1), jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, cat_vh, 0)
+    )
+    out_vl = jnp.zeros((W, limit + 1), jnp.uint32).at[rows, tgt].set(
+        jnp.where(in_out, cat_vl, 0)
+    )
+    n_found = jnp.minimum(jnp.sum(cat_valid, axis=1), limit)
+    out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
+    ok = jnp.all(r_ok.reshape(W, fanout), axis=1)
+    return (
+        out_kh[:, :limit],
+        out_kl[:, :limit],
+        out_vh[:, :limit],
+        out_vl[:, :limit],
+        out_valid,
+        ok,
+    )
+
+
+def range_wave_emulated(
+    stacked_tree,
+    stacked_ib,
+    khi: jnp.ndarray,  # (n_shards, W) per-client-shard k_min limbs
+    klo: jnp.ndarray,
+    boundaries: np.ndarray,
+    *,
+    cap: int,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+    fanout: Optional[int] = None,
+):
+    """Single-device emulation of the scatter-gather RANGE wave.
+
+    Returns (out_kh, out_kl, out_vh, out_vl, out_valid, ok), all with a
+    leading (n_shards, W) client layout; rows are ascending live entries
+    with ``out_valid`` a prefix mask.  ``ok=False`` means a capacity
+    overflow dropped part of the fan-out — RETRY, never silent loss.
+    """
+    n_shards, W = khi.shape
+    fanout = n_shards if fanout is None else fanout
+    b_hi, b_lo = boundary_limbs(boundaries)
+
+    rep = jax.vmap(
+        lambda h, l: _replicate(b_hi, b_lo, h, l, n_shards, fanout)
+    )(khi, klo)
+    rep_hi, rep_lo, dest, oob = rep
+    bk_hi, bk_lo, origin, valid = jax.vmap(
+        lambda d, h, l: _bucketize(d, h, l, n_shards, cap)
+    )(dest, rep_hi, rep_lo)
+    rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
+    rq_lo = jnp.swapaxes(bk_lo, 0, 1)
+
+    def per_shard(tree, ib, h, l):
+        return lookup.range_batch(
+            tree,
+            ib,
+            h.reshape(-1),
+            l.reshape(-1),
+            depth=depth,
+            eps_inner=eps_inner,
+            limit=limit,
+            max_leaves=max_leaves,
+        )
+
+    rk, rv, rvalid = jax.vmap(per_shard)(stacked_tree, stacked_ib, rq_hi, rq_lo)
+    # responses back: (dest, src, cap, limit) -> (src, dest, cap, limit)
+    shape = (n_shards, n_shards, cap, limit)
+    rs_kh = jnp.swapaxes(rk[..., 0].reshape(shape), 0, 1)
+    rs_kl = jnp.swapaxes(rk[..., 1].reshape(shape), 0, 1)
+    rs_vh = jnp.swapaxes(rv[..., 0].reshape(shape), 0, 1)
+    rs_vl = jnp.swapaxes(rv[..., 1].reshape(shape), 0, 1)
+    rs_valid = jnp.swapaxes(rvalid.reshape(shape), 0, 1)
+
+    gather = partial(_gather_epilogue, W=W, fanout=fanout, limit=limit)
+    return jax.vmap(gather)(
+        origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid
+    )
+
+
+def range_wave_sharded(
+    mesh: Mesh,
+    stacked_tree,
+    stacked_ib,
+    boundaries: np.ndarray,
+    *,
+    cap: int,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+    fanout: Optional[int] = None,
+):
+    """shard_map scatter-gather RANGE over the mesh 'data' axis.
+
+    Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) with state and
+    requests sharded on their leading shard dim; outputs match
+    ``range_wave_emulated``.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = mesh.shape["data"]
+    F = n_shards if fanout is None else fanout
+    b_hi, b_lo = boundary_limbs(boundaries)
+
+    def a2a(x):
+        # x (n_shards, X) per shard: row d -> shard d
+        return jax.lax.all_to_all(
+            x[None], "data", split_axis=1, concat_axis=0, tiled=False
+        ).reshape(x.shape)
+
+    def per_shard(tree, ib, khi, klo):
+        tree = jax.tree.map(lambda a: a[0], tree)
+        ib = jax.tree.map(lambda a: a[0], ib)
+        h, l = khi[0], klo[0]
+        W = h.shape[0]
+        rep_hi, rep_lo, dest, oob = _replicate(b_hi, b_lo, h, l, n_shards, F)
+        bk_hi, bk_lo, origin, valid = _bucketize(dest, rep_hi, rep_lo, n_shards, cap)
+        rq_hi = a2a(bk_hi)
+        rq_lo = a2a(bk_lo)
+        rk, rv, rvalid = lookup.range_batch(
+            tree,
+            ib,
+            rq_hi.reshape(-1),
+            rq_lo.reshape(-1),
+            depth=depth,
+            eps_inner=eps_inner,
+            limit=limit,
+            max_leaves=max_leaves,
+        )
+        flat = (n_shards, cap * limit)
+        rs_kh = a2a(rk[..., 0].reshape(flat)).reshape(n_shards, cap, limit)
+        rs_kl = a2a(rk[..., 1].reshape(flat)).reshape(n_shards, cap, limit)
+        rs_vh = a2a(rv[..., 0].reshape(flat)).reshape(n_shards, cap, limit)
+        rs_vl = a2a(rv[..., 1].reshape(flat)).reshape(n_shards, cap, limit)
+        rs_valid = a2a(rvalid.astype(jnp.int32).reshape(flat)).reshape(
+            n_shards, cap, limit
+        )
+        outs = _gather_epilogue(
+            origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid,
+            W=W, fanout=F, limit=limit,
+        )
+        return tuple(o[None] for o in outs)
+
+    state_specs = jax.tree.map(lambda _: P("data"), (stacked_tree, stacked_ib))
+    fn = shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(state_specs[0], state_specs[1], P("data"), P("data")),
+        out_specs=tuple(P("data") for _ in range(6)),
+        check_rep=False,
+    )
+    return fn

@@ -113,6 +113,10 @@ def range_scan(
 ):
     """Full RANGE op: traversal to the start leaf, Pallas leaf-chain scan,
     jnp insert-buffer merge epilogue.  Output layout == ref.range_scan."""
+    if limit <= 0:  # degenerate scan: keep 0-width blocks out of the kernel
+        B = khi.shape[0]
+        empty = jnp.zeros((B, 0, 2), dtype=jnp.uint32)
+        return empty, empty, jnp.zeros((B, 0), dtype=bool)
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.range_scan(

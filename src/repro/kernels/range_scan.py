@@ -103,6 +103,7 @@ def range_pallas(
     visited_leaves (B, max_leaves))."""
     B = khi.shape[0]
     assert B % block_requests == 0
+    assert limit >= 1, "0-width output blocks break the kernel; ops.range_scan guards limit=0"
     grid = (B // block_requests,)
     kernel = functools.partial(_range_kernel, limit=limit, max_leaves=max_leaves)
     vmem = lambda arr: pl.BlockSpec(arr.shape, lambda i: tuple([0] * arr.ndim))

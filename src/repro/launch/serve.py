@@ -4,6 +4,10 @@ LM decode loop, batched.
     # the paper's workload: a KV service handling GET/INSERT/RANGE waves
     PYTHONPATH=src python -m repro.launch.serve --kv --n-keys 100000 --waves 20
 
+    # sharded: hash tier (RANGE broadcasts) vs range tier (scatter-gather)
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition hash --shards 4
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition range --shards 4
+
     # LM decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
 """
@@ -25,7 +29,15 @@ from repro.serving.engine import Engine, ServeConfig
 
 def serve_kv(args):
     keys = sparse(args.n_keys, seed=1)
-    store = DPAStore(keys, keys ^ np.uint64(0xC0FFEE), TreeConfig())
+    vals = keys ^ np.uint64(0xC0FFEE)
+    if args.partition == "single":
+        store = DPAStore(keys, vals, TreeConfig())
+    else:
+        from repro.distributed.kvshard import ShardedDPAStore
+
+        store = ShardedDPAStore(
+            keys, vals, args.shards, TreeConfig(), partition=args.partition
+        )
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
     t0 = time.time()
@@ -34,11 +46,11 @@ def serve_kv(args):
         q = keys[idx[w * args.wave_size : (w + 1) * args.wave_size]]
         kind = w % 4
         if kind < 2:  # GET-heavy mix
-            vals, found = store.get(q)
+            _, found = store.get(q)
             assert found.all()
         elif kind == 2:  # UPDATE
             store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
-        else:  # RANGE
+        else:  # RANGE (scatter-gather on the range tier; broadcast on hash)
             store.range(q[:64], limit=10)
         served += args.wave_size
     dt = time.time() - t0
@@ -47,7 +59,16 @@ def serve_kv(args):
         f"({served/dt/1e3:.1f} kOPS on CPU; see benchmarks/ for the "
         f"BlueField-3 model numbers)"
     )
-    print(f"[serve-kv] stats: {store.stats}")
+    if args.partition == "single":
+        print(f"[serve-kv] stats: {store.stats}")
+    else:
+        fan = store.range_subqueries / max(store.range_requests, 1)
+        print(
+            f"[serve-kv] partition={args.partition} shards={args.shards} "
+            f"range fan-out={fan:.2f} sub-queries/request "
+            f"(range tier: owner+successors; hash tier: always {args.shards})"
+        )
+        print(f"[serve-kv] shard stats totals: {store.stats_totals()}")
 
 
 def serve_lm(args):
@@ -68,6 +89,20 @@ def serve_lm(args):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--kv", action="store_true")
+    ap.add_argument(
+        "--partition",
+        choices=["single", "hash", "range"],
+        default="single",
+        help="KV tier: one store, hash-sharded, or range-partitioned "
+        "(quantile boundaries; RANGE scatter-gathers instead of broadcasting)",
+    )
+    def positive_int(v):
+        iv = int(v)
+        if iv < 1:
+            raise argparse.ArgumentTypeError(f"must be >= 1, got {v}")
+        return iv
+
+    ap.add_argument("--shards", type=positive_int, default=4)
     ap.add_argument("--n-keys", type=int, default=100_000)
     ap.add_argument("--waves", type=int, default=16)
     ap.add_argument("--wave-size", type=int, default=1024)

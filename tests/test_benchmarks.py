@@ -70,6 +70,41 @@ def test_ycsb_relations_match_fig15():
         assert blend > rolex_model.ycsb_mops("A", ds), (ds, blend)
 
 
+@pytest.mark.slow
+def test_fig16_smoke_rows_cover_shards_and_scan_lengths():
+    """The sharded-RANGE sweep must emit schema-valid rows for >= 2 shard
+    counts x 2 scan lengths per tier, and the range tier's derived model
+    must scale with shard count while the hash broadcast stays flat."""
+    from benchmarks import common, fig16_range
+    from benchmarks.run import validate_fig16_coverage, validate_rows
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig16_range.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig16_coverage(rows)
+    model, depth = {}, {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        fields = dict(kv.split("=") for kv in derived.split(";"))
+        model[name] = float(fields["model_mops"])
+        depth[name] = int(fields["depth"])
+    assert model["fig16/range/shards4/limit10"] > 1.5 * model["fig16/range/shards2/limit10"]
+    # broadcast tier: the model is one shard's RANGE MOPS regardless of the
+    # shard count (only the per-shard depth, which shrinks with more shards,
+    # may move it — never the scale-out the range tier gets)
+    if depth["fig16/hash/shards4/limit10"] == depth["fig16/hash/shards2/limit10"]:
+        assert model["fig16/hash/shards4/limit10"] == model["fig16/hash/shards2/limit10"]
+    else:  # shallower shards at 4 -> per-shard model can only speed up
+        assert model["fig16/hash/shards4/limit10"] >= model["fig16/hash/shards2/limit10"]
+
+
 def test_roofline_reader_runs_if_results_exist():
     from benchmarks import roofline
 

@@ -1,0 +1,410 @@
+"""Range-partitioned shard tier: boundary fitting, scatter-gather RANGE ==
+single-store oracle, device wave == host orchestration, RETRY on overflow.
+
+The oracle is twofold: a single ``DPAStore`` over the same pairs (the
+sharded tier must be *bit-identical* to it) and a plain sorted numpy array
+(first ``limit`` keys >= k_min), which also pins the single store down.
+``max_leaves`` is always sized so the bounded per-shard leaf walk covers
+``limit`` — truncation semantics are exercised separately in the store
+tests, not conflated with routing.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig, pla
+from repro.core.datasets import dense4x, sparse
+from repro.core.keys import split_u64
+from repro.distributed import kvshard, rangeshard
+
+
+def _np_oracle(sorted_keys, k_min, limit):
+    i = np.searchsorted(sorted_keys, k_min)
+    return sorted_keys[i : i + limit]
+
+
+def _join(hi, lo):
+    return (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo)
+
+
+# ---------------------------------------------------------------------------
+# boundary fitting + routing
+# ---------------------------------------------------------------------------
+
+
+def test_fit_boundaries_quantiles_and_routing():
+    keys = sparse(4000, seed=7)
+    for n_shards in (1, 2, 4, 8):
+        b = pla.fit_boundaries(keys, n_shards)
+        assert b.shape == (n_shards - 1,)
+        assert (np.diff(b.astype(np.uint64)) > 0).all() if b.size > 1 else True
+        owner = np.searchsorted(b, keys, side="right")
+        sizes = np.bincount(owner, minlength=n_shards)
+        # quantile split: every shard within one key of n/n_shards
+        assert sizes.max() - sizes.min() <= 1, sizes
+        # device boundary search is bit-identical to the numpy client
+        limbs = split_u64(keys)
+        b_hi, b_lo = rangeshard.boundary_limbs(b)
+        dev = rangeshard.route_range(
+            b_hi, b_lo, jnp.asarray(limbs[:, 0]), jnp.asarray(limbs[:, 1])
+        )
+        assert (np.asarray(dev) == owner).all()
+
+
+def test_fit_boundaries_fewer_keys_than_parts():
+    b = pla.fit_boundaries(np.array([5, 9], dtype=np.uint64), 4)
+    assert b.shape == (3,)
+    assert (np.diff(b.astype(np.uint64)) > 0).all()  # uniform key-space prior
+
+
+# ---------------------------------------------------------------------------
+# host scatter-gather == single store == numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def _boundary_queries(keys, boundaries):
+    """k_min probes around every shard boundary (the boundary key is the
+    successor shard's first leaf anchor by construction) plus the extremes."""
+    b = np.asarray(boundaries, dtype=np.uint64)
+    return np.concatenate(
+        [
+            b,
+            b - np.uint64(1),
+            b + np.uint64(1),
+            np.array(
+                [0, keys.min(), keys.max(), keys.max() + np.uint64(1)],
+                dtype=np.uint64,
+            ),
+        ]
+    )
+
+
+@pytest.mark.parametrize("dataset", [sparse, dense4x])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_range_scatter_gather_matches_single_store(dataset, n_shards):
+    keys = dataset(4000, seed=7)
+    vals = keys ^ np.uint64(0xAB)
+    single = DPAStore(keys, vals, cache_cfg=None)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None
+    )
+    rng = np.random.default_rng(n_shards)
+    q = np.concatenate(
+        [
+            rng.choice(keys, 24),
+            rng.integers(0, 2**63, 24, dtype=np.uint64),
+            _boundary_queries(keys, sharded.boundaries),
+        ]
+    )
+    rk1, rv1, rc1 = single.range(q, limit=10, max_leaves=8)
+    rk2, rv2, rc2 = sharded.range(q, limit=10, max_leaves=8)
+    assert (rc1 == rc2).all()
+    assert (rk1 == rk2).all() and (rv1 == rv2).all()
+    sk = np.sort(keys)
+    for i, k in enumerate(q):
+        exp = _np_oracle(sk, k, 10)
+        assert rc2[i] == exp.size
+        assert (rk2[i, : exp.size] == exp).all()
+        assert (rv2[i, : exp.size] == (exp ^ np.uint64(0xAB))).all()
+
+
+def test_hash_broadcast_range_matches_single_store():
+    keys = sparse(3000, seed=9)
+    vals = keys ^ np.uint64(0xCD)
+    single = DPAStore(keys, vals, cache_cfg=None)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 4, partition="hash", cache_cfg=None
+    )
+    rng = np.random.default_rng(3)
+    q = np.concatenate(
+        [rng.choice(keys, 32), rng.integers(0, 2**63, 16, dtype=np.uint64)]
+    )
+    rk1, rv1, rc1 = single.range(q, limit=10, max_leaves=8)
+    rk2, rv2, rc2 = sharded.range(q, limit=10, max_leaves=8)
+    assert (rc1 == rc2).all() and (rk1 == rk2).all() and (rv1 == rv2).all()
+    # broadcast: every shard scanned every request
+    assert sharded.range_subqueries == q.size * 4
+
+
+@pytest.mark.slow
+def test_range_scatter_gather_with_buffered_writes():
+    """Unflushed inserts + tombstones must merge identically on both tiers
+    (same visibility rule as GET), before and after the flush cycle."""
+    keys = sparse(3000, seed=11)
+    vals = keys ^ np.uint64(0xF0)
+    cfg = TreeConfig(ib_cap=8, growth=20.0)
+    single = DPAStore(keys, vals, cfg, cache_cfg=None)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 4, tree_cfg=cfg, partition="range", cache_cfg=None
+    )
+    rng = np.random.default_rng(4)
+    newk = np.setdiff1d(rng.integers(0, 2**63, 400, dtype=np.uint64), keys)
+    dels = keys[5:900:11]
+    for store in (single, sharded):
+        store.put(newk, newk + np.uint64(7))
+        store.delete(dels)
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    oracle.update({int(k): int(k) + 7 for k in newk})
+    for k in dels.tolist():
+        oracle.pop(k, None)
+    sk = np.sort(np.array(sorted(oracle.keys()), dtype=np.uint64))
+    q = np.concatenate(
+        [rng.choice(keys, 16), rng.choice(newk, 8), dels[:8],
+         _boundary_queries(keys, sharded.boundaries)]
+    )
+    for flushed in (False, True):
+        if flushed:
+            single.flush()
+            sharded.flush()
+        rk1, rv1, rc1 = single.range(q, limit=10, max_leaves=8)
+        rk2, rv2, rc2 = sharded.range(q, limit=10, max_leaves=8)
+        assert (rc1 == rc2).all(), f"flushed={flushed}"
+        assert (rk1 == rk2).all() and (rv1 == rv2).all()
+        for i, k in enumerate(q):
+            exp = _np_oracle(sk, k, 10)
+            assert rc2[i] == exp.size, (flushed, i, hex(int(k)))
+            assert (rk2[i, : exp.size] == exp).all()
+            assert all(
+                int(rv2[i, j]) == oracle[int(rk2[i, j])] for j in range(exp.size)
+            )
+
+
+# ---------------------------------------------------------------------------
+# device scatter-gather wave (emulated) == host path == oracle; RETRY
+# ---------------------------------------------------------------------------
+
+
+def _wave_fixture(n_shards=4, n_keys=4000, W=16):
+    keys = sparse(n_keys, seed=7)
+    vals = keys ^ np.uint64(0xAB)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None
+    )
+    tree, ib, depth = sharded.stacked()
+    rng = np.random.default_rng(0)
+    qs = np.concatenate(
+        [
+            rng.choice(keys, 2 * W),
+            rng.integers(0, 2**63, 2 * W - 3, dtype=np.uint64),
+            np.array(
+                [0, keys.max(), keys.max() + np.uint64(1)], dtype=np.uint64
+            ),
+        ]
+    ).reshape(n_shards, W)
+    limbs = split_u64(qs)
+    return keys, sharded, tree, ib, depth, qs, limbs
+
+
+def test_range_wave_emulated_matches_oracle():
+    keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
+    W = qs.shape[1]
+    kh, kl, vh, vl, valid, ok = rangeshard.range_wave_emulated(
+        tree,
+        ib,
+        jnp.asarray(limbs[..., 0]),
+        jnp.asarray(limbs[..., 1]),
+        sharded.boundaries,
+        cap=W,
+        depth=depth,
+        eps_inner=4,
+        limit=10,
+        max_leaves=8,
+    )
+    assert bool(jnp.all(ok)), "ample capacity: no RETRY expected"
+    got_k, got_v = _join(kh, kl), _join(vh, vl)
+    va = np.asarray(valid)
+    sk = np.sort(keys)
+    # also bit-identical to the host-orchestrated scatter-gather
+    hk, hv, hc = sharded.range(qs.reshape(-1), limit=10, max_leaves=8)
+    hk = hk.reshape(qs.shape[0], W, 10)
+    hv = hv.reshape(qs.shape[0], W, 10)
+    hc = hc.reshape(qs.shape)
+    for i in range(qs.shape[0]):
+        for j in range(W):
+            exp = _np_oracle(sk, qs[i, j], 10)
+            assert va[i, j].sum() == exp.size
+            assert (got_k[i, j][: exp.size] == exp).all()
+            assert (got_v[i, j][: exp.size] == (exp ^ np.uint64(0xAB))).all()
+            assert hc[i, j] == exp.size
+            assert (hk[i, j][: exp.size] == got_k[i, j][: exp.size]).all()
+            assert (hv[i, j][: exp.size] == got_v[i, j][: exp.size]).all()
+
+
+def test_range_wave_overflow_reports_retry_never_corrupts():
+    keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
+    W = qs.shape[1]
+    kh, kl, vh, vl, valid, ok = rangeshard.range_wave_emulated(
+        tree,
+        ib,
+        jnp.asarray(limbs[..., 0]),
+        jnp.asarray(limbs[..., 1]),
+        sharded.boundaries,
+        cap=2,  # deliberately too small
+        depth=depth,
+        eps_inner=4,
+        limit=10,
+        max_leaves=8,
+    )
+    okn = np.asarray(ok)
+    assert not okn.all(), "tiny capacity must force RETRYs"
+    assert okn.any(), "some fan-outs still fit"
+    got_k = _join(kh, kl)
+    va = np.asarray(valid)
+    sk = np.sort(keys)
+    for i in range(qs.shape[0]):
+        for j in range(W):
+            if not okn[i, j]:
+                continue  # RETRY: client re-sends; content is unspecified
+            exp = _np_oracle(sk, qs[i, j], 10)
+            assert va[i, j].sum() == exp.size
+            assert (got_k[i, j][: exp.size] == exp).all()
+
+
+def test_get_wave_with_range_routing_matches_oracle():
+    keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
+    W = qs.shape[1]
+    vhi, vlo, found, ok = kvshard.serve_wave_emulated(
+        tree,
+        ib,
+        jnp.asarray(limbs[..., 0]),
+        jnp.asarray(limbs[..., 1]),
+        cap=W,
+        depth=depth,
+        eps_inner=4,
+        eps_leaf=8,
+        route_fn=rangeshard.make_route_fn(sharded.boundaries),
+    )
+    assert bool(jnp.all(ok))
+    oracle = dict(zip(keys.tolist(), (keys ^ np.uint64(0xAB)).tolist()))
+    gv = _join(vhi, vlo)
+    fd = np.asarray(found)
+    for i in range(qs.shape[0]):
+        for j in range(W):
+            k = int(qs[i, j])
+            assert fd[i, j] == (k in oracle)
+            if fd[i, j]:
+                assert int(gv[i, j]) == oracle[k]
+
+
+@pytest.mark.slow
+def test_range_wave_sharded_runs_on_one_device_mesh():
+    """The shard_map path must at least run end-to-end on the 1-device CPU
+    mesh (the multi-device lowering is proven by launch/kv_dryrun.py)."""
+    import jax
+    from jax.sharding import Mesh
+
+    keys = sparse(1000, seed=5)
+    vals = keys ^ np.uint64(0x11)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 1, partition="range", cache_cfg=None
+    )
+    tree, ib, depth = sharded.stacked()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    fn = rangeshard.range_wave_sharded(
+        mesh, tree, ib, sharded.boundaries,
+        cap=8, depth=depth, eps_inner=4, limit=5, max_leaves=8,
+    )
+    qs = np.sort(np.random.default_rng(1).choice(keys, 8)).reshape(1, 8)
+    limbs = split_u64(qs)
+    kh, kl, vh, vl, valid, ok = fn(
+        tree, ib, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
+    )
+    assert bool(jnp.all(ok))
+    sk = np.sort(keys)
+    got_k = _join(kh, kl)
+    va = np.asarray(valid)
+    for j in range(8):
+        exp = _np_oracle(sk, qs[0, j], 5)
+        assert va[0, j].sum() == exp.size
+        assert (got_k[0, j][: exp.size] == exp).all()
+
+
+# ---------------------------------------------------------------------------
+# store-level RANGE edge cases (satellite audit)
+# ---------------------------------------------------------------------------
+
+
+def test_store_range_edge_cases(shared_ro_store):
+    store, oracle = shared_ro_store
+    keys = np.sort(np.array(sorted(oracle.keys()), dtype=np.uint64))
+    # limit=0: empty (n, 0) outputs, no device call
+    rk, rv, rc = store.range(keys[:5], limit=0)
+    assert rk.shape == (5, 0) and rv.shape == (5, 0) and rc.tolist() == [0] * 5
+    # empty request batch
+    rk, rv, rc = store.range(np.array([], dtype=np.uint64), limit=4)
+    assert rk.shape == (0, 4) and rc.shape == (0,)
+    # k_min above the max key: empty window
+    rk, rv, rc = store.range(
+        np.array([keys.max() + np.uint64(1)], dtype=np.uint64), limit=4
+    )
+    assert rc.tolist() == [0] and (rk == 0).all()
+    # k_min == max key: exactly one result
+    rk, rv, rc = store.range(np.array([keys.max()]), limit=4)
+    assert rc.tolist() == [1] and rk[0, 0] == keys.max()
+    # k_min exactly at a leaf anchor, and one below it (leaf-boundary cross)
+    live = np.where(store.image.leaf_count > 0)[0]
+    anchors = np.sort(store.image.leaf_anchor[live])
+    anchor = anchors[len(anchors) // 2]
+    for k_min in (anchor, anchor - np.uint64(1)):
+        rk, rv, rc = store.range(np.array([k_min]), limit=6, max_leaves=8)
+        exp = _np_oracle(keys, k_min, 6)
+        assert rc[0] == exp.size and (rk[0, : exp.size] == exp).all()
+
+
+def test_empty_store_range():
+    empty = DPAStore(
+        np.array([], dtype=np.uint64), np.array([], dtype=np.uint64),
+        cache_cfg=None,
+    )
+    rk, rv, rc = empty.range(np.array([0, 5], dtype=np.uint64), limit=4)
+    assert rc.tolist() == [0, 0] and (rk == 0).all()
+
+
+def test_sharded_range_limit_zero_and_empty():
+    keys = sparse(500, seed=3)
+    sharded = kvshard.ShardedDPAStore(
+        keys, keys, 2, partition="range", cache_cfg=None
+    )
+    rk, rv, rc = sharded.range(keys[:3], limit=0)
+    assert rk.shape == (3, 0) and rc.tolist() == [0, 0, 0]
+    rk, rv, rc = sharded.range(np.array([], dtype=np.uint64), limit=5)
+    assert rk.shape == (0, 5) and rc.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# property sweep (hypothesis; the seeded shim runs this hermetically)
+# ---------------------------------------------------------------------------
+
+
+@given(st.data())
+@settings(max_examples=8, deadline=None)
+def test_range_scatter_gather_property(data):
+    n_keys = data.draw(st.integers(min_value=40, max_value=160))
+    n_shards = data.draw(st.sampled_from([2, 3, 4]))
+    limit = data.draw(st.sampled_from([1, 5, 10]))
+    raw = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=2**63),
+            min_size=n_keys,
+            max_size=n_keys,
+            unique=True,
+        )
+    )
+    keys = np.array(sorted(raw), dtype=np.uint64)
+    vals = keys ^ np.uint64(0x77)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None
+    )
+    queries = np.array(
+        [data.draw(st.sampled_from(list(keys))) for _ in range(4)]
+        + [data.draw(st.integers(min_value=0, max_value=2**63)) for _ in range(4)],
+        dtype=np.uint64,
+    )
+    rk, rv, rc = sharded.range(queries, limit=limit, max_leaves=16)
+    for i, k in enumerate(queries):
+        exp = _np_oracle(keys, k, limit)
+        assert rc[i] == exp.size
+        assert (rk[i, : exp.size] == exp).all()
+        assert (rv[i, : exp.size] == (exp ^ np.uint64(0x77))).all()
