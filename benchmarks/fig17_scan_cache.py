@@ -1,0 +1,108 @@
+"""Figure 17 (repo extension): repeated-RANGE throughput with vs without the
+scan-anchor cache, swept over Zipf skew x scan length.
+
+The paper's RANGE workload (13 MOPS at limit=10) re-descends the learned
+index on every scan; the scan-anchor cache (``core/scancache.py``) lets a
+repeated ``RANGE(k_min)`` skip that descent and start the leaf walk at the
+cached anchor.  For each (cache mode, Zipf alpha, limit) cell we RUN
+repeated scan waves drawn Zipf-skewed from a fixed pool of start keys on
+the CPU store — correctness plus the *measured* anchor hit rate feed the
+model — and ``derived`` pushes the hit rate through the BlueField-3 RANGE
+model (``perfmodel.range_mops(anchor_hit_rate=...)``): a hit replaces the
+whole descent with one DPA line, so the win grows with depth and skew and
+shrinks as ``limit`` amortizes the descent over more staged results.
+
+The cache is sized down (``n_threads=8`` -> 768 anchors) against a 4096-key
+scan pool, the same scaled-stand-in treatment the rest of the benchmarks
+apply to the 200M-key paper setup: the pool exceeds the cache so the hit
+rate is set by the skew (alpha=0.99 caches the hot head; alpha=0.6 churns),
+not by the pool fitting trivially.
+
+The smoke lane gates on this module emitting both cache modes x >= 2 skews
+x >= 2 limits, and surfaces the measured hit rates in ``BENCH_smoke.json``
+so the perf trajectory captures cache behaviour over time.
+"""
+
+import numpy as np
+
+from repro.core import perfmodel, scancache
+from repro.core.datasets import load, zipf_indices
+from repro.core.scancache import ScanCacheConfig
+from repro.core.store import DPAStore
+from repro.core.tree import TreeConfig
+
+from . import common
+from .common import emit, time_op, wave
+
+SKEWS = (0.6, 0.9, 0.99)
+SKEWS_SMOKE = (0.9, 0.99)
+LIMITS = (10, 100)
+POOL = 4096  # distinct scan start keys (>> the reduced cache capacity)
+WAVE = 512
+WAVES = 6  # measured waves per cell (first wave warms the cache)
+
+CACHE_CFG = ScanCacheConfig(n_threads=8)  # 768 anchors: scaled stand-in
+
+
+def _reset_cache(store):
+    """Fresh cache population per sweep cell (the store itself — bulk load
+    + jit warm-up — is shared across cells, it is read-only)."""
+    if store.scan_cache_cfg is not None:
+        store.scan_cache = scancache.make_cache(store.scan_cache_cfg)
+
+
+def _reset_counters(store):
+    """Zero the probe counters AFTER the warm wave so the reported hit rate
+    covers exactly the timed waves (the warm wave's cold misses would
+    otherwise under-credit the cache)."""
+    store.stats.scan_probes = 0
+    store.stats.scan_hits = 0
+
+
+def run():
+    rng = np.random.default_rng(17)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=17)
+    vals = keys ^ np.uint64(0x5EED)
+    pool = rng.choice(keys, min(POOL, keys.size), replace=False)
+    skews = SKEWS_SMOKE if common.SMOKE else SKEWS
+    stores = {
+        "cache": DPAStore(
+            keys, vals, TreeConfig(), cache_cfg=None, scan_cache_cfg=CACHE_CFG
+        ),
+        "nocache": DPAStore(
+            keys, vals, TreeConfig(), cache_cfg=None, scan_cache_cfg=None
+        ),
+    }
+    depth = stores["cache"].depth
+    for alpha in skews:
+        idx = zipf_indices(pool.size, (WAVES + 1) * w, alpha=alpha, seed=7)
+        for limit in LIMITS:
+            max_leaves = max(4, limit // 16)
+            for mode, store in stores.items():
+                _reset_cache(store)
+                qs = [
+                    pool[idx[i * w : (i + 1) * w]] for i in range(WAVES + 1)
+                ]
+                store.range(qs[0], limit=limit, max_leaves=max_leaves)  # warm
+                _reset_counters(store)
+
+                def sweep():
+                    for q in qs[1:]:
+                        store.range(q, limit=limit, max_leaves=max_leaves)
+
+                t = time_op(sweep, repeats=1) / (WAVES * w)
+                h = store.stats.scan_hits / max(store.stats.scan_probes, 1)
+                m = perfmodel.range_mops(
+                    depth, limit=limit, anchor_hit_rate=h if mode == "cache" else 0.0
+                )
+                emit(
+                    f"fig17/{mode}/zipf{alpha}/limit{limit}",
+                    t * 1e6,
+                    f"model_mops={m:.1f};hit={h:.2f};depth={depth}",
+                )
+
+
+if __name__ == "__main__":
+    run()

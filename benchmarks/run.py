@@ -61,6 +61,44 @@ def validate_fig16_coverage(rows) -> list:
     return problems
 
 
+def validate_fig17_coverage(rows) -> list:
+    """The scan-anchor-cache sweep must cover both cache modes x >= 2 Zipf
+    skews x >= 2 scan lengths (rows are ``fig17/<mode>/zipf<a>/limit<L>``)."""
+    problems = []
+    for mode in ("cache", "nocache"):
+        skews, limits = set(), set()
+        for row in rows:
+            name = row.split(",", 1)[0]
+            parts = name.split("/")
+            if len(parts) == 4 and parts[0] == "fig17" and parts[1] == mode:
+                skews.add(parts[2])
+                limits.add(parts[3])
+        if len(skews) < 2 or len(limits) < 2:
+            problems.append(
+                f"fig17/{mode}: need >= 2 skews x 2 scan lengths, "
+                f"got skews={sorted(skews)} limits={sorted(limits)}"
+            )
+    return problems
+
+
+def anchor_cache_hit_rates(rows) -> dict:
+    """Measured scan-anchor hit rate per fig17 cache cell (parsed from the
+    ``hit=`` field of the derived column) — surfaced in the smoke artifact
+    so the perf trajectory starts capturing cache behaviour."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig17/cache/"):
+            continue
+        for field in derived.split(";"):
+            if field.startswith("hit="):
+                try:
+                    out[name] = float(field[4:])
+                except ValueError:
+                    pass
+    return out
+
+
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument(
@@ -96,6 +134,7 @@ def main(argv=None) -> None:
         fig14_models,
         fig15_ycsb,
         fig16_range,
+        fig17_scan_cache,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -113,6 +152,7 @@ def main(argv=None) -> None:
         ("fig14_models", fig14_models),
         ("fig15_ycsb", fig15_ycsb),
         ("fig16_range", fig16_range),
+        ("fig17_scan_cache", fig17_scan_cache),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -133,6 +173,8 @@ def main(argv=None) -> None:
         problems = validate_rows(common.ROWS)
         if "fig16_range" not in failures:
             problems += validate_fig16_coverage(common.ROWS)
+        if "fig17_scan_cache" not in failures:
+            problems += validate_fig17_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -141,6 +183,7 @@ def main(argv=None) -> None:
             "schema_problems": problems,
             "module_seconds": timings,
             "failed_modules": failures,
+            "anchor_cache_hit_rates": anchor_cache_hit_rates(common.ROWS),
         }
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=2)

@@ -2,14 +2,16 @@
 
 Layers (bottom-up): keys (u64-as-limbs), pla (host-side model training),
 tree (host image + device pools), lookup (batched traversal semantics),
-insert_buffer / hotcache (NIC-side write/read fast paths), patch + stitch +
-epoch (the RCU update cycle), store (the facade), plus the evaluation
-substrates: btree (baseline), rolex_model (RDMA cost model), perfmodel
-(Sec 4.2.6 analytic model), datasets (SOSD-style key distributions).
+insert_buffer / hotcache / scancache (NIC-side write/read/scan fast paths),
+patch + stitch + epoch (the RCU update cycle), store (the facade), plus the
+evaluation substrates: btree (baseline), rolex_model (RDMA cost model),
+perfmodel (Sec 4.2.6 analytic model), datasets (SOSD-style key
+distributions).
 """
 
 from .tree import TreeConfig, TreeImage, DeviceTree, build_image, SEG_CAP, NODE_SEGS
 from .hotcache import CacheConfig
+from .scancache import ScanCacheConfig
 from .store import DPAStore, StoreStats, STATUS_OK, STATUS_RETRY
 
 __all__ = [
@@ -20,6 +22,7 @@ __all__ = [
     "SEG_CAP",
     "NODE_SEGS",
     "CacheConfig",
+    "ScanCacheConfig",
     "DPAStore",
     "StoreStats",
     "STATUS_OK",

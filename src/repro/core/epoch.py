@@ -25,7 +25,7 @@ that could reference it is still live.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -36,6 +36,12 @@ class EpochManager:
     _quarantine: List[Tuple[int, str, int]] = field(default_factory=list)
     # ids currently quarantined, for the safety assertion
     _held: Dict[Tuple[str, int], int] = field(default_factory=dict)
+    # Quarantine listener, fired once per deferred (pool, id) — the store
+    # uses it to collect leaves a stitch cycle obsoleted so the scan-anchor
+    # cache can drop their anchors before the next wave probes (a leaf id
+    # becomes unsafe to *start a walk at* the moment its CONNECT lands,
+    # which is strictly before its grace period even begins).
+    on_defer: Optional[Callable[[str, int], None]] = None
 
     def advance(self) -> int:
         """Called once per completed request wave."""
@@ -48,6 +54,8 @@ class EpochManager:
         retire_at = self.epoch + self.grace
         self._quarantine.append((retire_at, pool, int(idx)))
         self._held[key] = retire_at
+        if self.on_defer is not None:
+            self.on_defer(pool, int(idx))
 
     def defer_free_batch(self, frees) -> int:
         """Quarantine a whole flush cycle's obsoleted ids at once (called

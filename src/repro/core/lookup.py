@@ -198,40 +198,76 @@ def get_batch(
 
 # ---------------------------------------------------------------------------
 # range scan (Sec 3.1 RANGE): merge leaf array + insert buffer in key order,
-# walking leaf_next across up to ``max_leaves`` leaves.
+# walking leaf_next across up to ``max_leaves`` leaves.  The walk reports
+# whether it was truncated by the leaf bound and where to resume — the
+# device-side continuation the scatter-gather epilogue and the host facade
+# use to re-issue precisely instead of over-sizing ``max_leaves``.
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
-def range_batch(
+class ScanCursor(NamedTuple):
+    """Resume point of a bounded RANGE walk — and, representationally, a
+    scan anchor: (key limbs, leaf id).  For truncated rows ``leaf`` is the
+    first unwalked leaf and ``khi/klo`` the last key emitted (the original
+    ``k_min`` when nothing was); for complete rows ``leaf`` is -1.  A
+    resumed walk starts at ``leaf`` with the original ``k_min`` — every
+    entry of the unwalked suffix is strictly greater than everything
+    already emitted (leaf chain is in key order and buffered writes are
+    leaf-local), so resuming neither duplicates nor skips.  This is the
+    same (key, leaf) pair ``core.scancache`` admits as an anchor."""
+
+    khi: jnp.ndarray  # (B,) u32
+    klo: jnp.ndarray  # (B,) u32
+    leaf: jnp.ndarray  # (B,) i32, -1 = complete
+
+
+def make_cursor(khi, klo, out_keys, n_found, cont_leaf, truncated) -> ScanCursor:
+    """Build the resume cursor from a scan's outputs: last emitted key
+    (falling back to k_min for empty rows) + the first unwalked leaf."""
+    last = jnp.maximum(n_found - 1, 0)
+    last_kh = jnp.take_along_axis(out_keys[..., 0], last[:, None], axis=1)[:, 0]
+    last_kl = jnp.take_along_axis(out_keys[..., 1], last[:, None], axis=1)[:, 0]
+    has = n_found > 0
+    return ScanCursor(
+        khi=jnp.where(has, last_kh, khi),
+        klo=jnp.where(has, last_kl, klo),
+        leaf=jnp.where(truncated, cont_leaf, -1).astype(jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("limit", "max_leaves"))
+def range_batch_from(
     tree: DeviceTree,
     ib: InsertBuffers,
+    start_leaf: jnp.ndarray,
     khi: jnp.ndarray,
     klo: jnp.ndarray,
     *,
-    depth: int,
-    eps_inner: int,
     limit: int,
     max_leaves: int = 4,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """RANGE(k_min, limit) for a wave.
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, ScanCursor]:
+    """RANGE(k_min, limit) for a wave, starting the leaf-chain walk at
+    ``start_leaf`` (a descent result, a cached scan anchor, or a
+    continuation cursor — all the same representation; ``-1`` marks a dead
+    lane that returns empty and untruncated).
 
-    Returns (keys (B,limit,2), vals (B,limit,2), valid (B,limit)): the first
-    ``limit`` live pairs with key >= k_min in ascending key order.  The scan
-    walks at most ``max_leaves`` leaves via ``leaf_next`` — the analogue of
-    the paper's re-descend-and-continue loop, bounded like its 64-pairs-per-
-    response packetisation.  Buffer entries override leaf entries and newer
-    buffer entries override older ones (same visibility rule as GET).
+    Returns (keys (B,limit,2), vals (B,limit,2), valid (B,limit),
+    truncated (B,), cursor): the first ``limit`` live pairs with key >=
+    k_min in ascending key order.  The scan walks at most ``max_leaves``
+    leaves via ``leaf_next`` — the analogue of the paper's re-descend-and-
+    continue loop, bounded like its 64-pairs-per-response packetisation.
+    Buffer entries override leaf entries and newer buffer entries override
+    older ones (same visibility rule as GET).
 
-    Edge cases (exercised in tests/test_range_shard.py): a ``k_min`` above
-    the largest key routes to the last leaf and returns an empty window; a
-    ``k_min`` inside a gap returns the successor keys; ``limit`` must be
-    >= 1 (callers guard ``limit == 0`` — ``store.range`` / ``ops.range_scan``
-    short-circuit it host-side to keep the jit cache free of degenerate
-    shapes).
+    ``truncated`` is True iff the chain continues past the walked window
+    AND fewer than ``limit`` entries were returned — i.e. the response is
+    genuinely incomplete because of the leaf bound, not because the shard's
+    slice ran out (``truncated=False`` with a short row means *exhausted*;
+    the scatter-gather epilogue uses exactly this distinction).  A
+    truncated row emitted every survivor of its window, so resuming at
+    ``cursor.leaf`` with the original ``k_min`` is exact.
     """
     assert limit >= 1, "limit=0 is guarded by the callers"
-    start_leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
     cap = ib.keys.shape[1]
     B = khi.shape[0]
 
@@ -271,13 +307,14 @@ def range_batch(
 
     parts = []
     leaf = start_leaf
-    alive = jnp.ones_like(start_leaf, dtype=bool)
+    alive = start_leaf >= 0
     for _ in range(max_leaves):
         safe = jnp.maximum(leaf, 0)
         parts.append(gather_leaf(safe, alive))
         nxt = tree.leaf_next[safe]
         alive = alive & (nxt >= 0)
         leaf = nxt
+    # after the walk: ``alive`` <=> an unwalked successor exists (= ``leaf``)
 
     keys_h = jnp.concatenate([p[0] for p in parts], axis=1)
     keys_l = jnp.concatenate([p[1] for p in parts], axis=1)
@@ -330,4 +367,37 @@ def range_batch(
     out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
     out_keys = jnp.stack([out_kh[:, :limit], out_kl[:, :limit]], axis=-1)
     out_vals = jnp.stack([out_vh[:, :limit], out_vl[:, :limit]], axis=-1)
-    return out_keys, out_vals, out_valid
+    truncated = alive & (n_found < limit)
+    cursor = make_cursor(khi, klo, out_keys, n_found, leaf, truncated)
+    return out_keys, out_vals, out_valid, truncated, cursor
+
+
+@partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
+def range_batch(
+    tree: DeviceTree,
+    ib: InsertBuffers,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, ScanCursor]:
+    """Descend-then-scan RANGE: ``traverse`` to the floor leaf, then the
+    bounded walk of :func:`range_batch_from` (see there for the output
+    contract incl. ``truncated`` + resume cursor).  The anchor-cached store
+    path skips this wrapper and calls ``range_batch_from`` directly with
+    cached anchors — that skip IS the cache's payoff.
+
+    Edge cases (exercised in tests/test_range_shard.py): a ``k_min`` above
+    the largest key routes to the last leaf and returns an empty window; a
+    ``k_min`` inside a gap returns the successor keys; ``limit`` must be
+    >= 1 (callers guard ``limit == 0`` — ``store.range`` / ``ops.range_scan``
+    short-circuit it host-side to keep the jit cache free of degenerate
+    shapes).
+    """
+    start_leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
+    return range_batch_from(
+        tree, ib, start_leaf, khi, klo, limit=limit, max_leaves=max_leaves
+    )

@@ -1,0 +1,220 @@
+"""Scan-anchor cache: per-thread Bloom filter + 4-way buckets mapping a
+RANGE start key to the leaf where its descent bottomed out (Sec 3.1.2
+extended to the ordered workload).
+
+Paper layout: the NIC-resident read cache of Sec 3.1.2 / Figure 5 serves
+point GETs — each traverser thread owns a cache-line-resident Bloom filter
+plus a small bucket table, and the client steers a key to a fixed thread so
+the cached state is thread-local.  The paper's RANGE path, however, pays a
+full root-to-leaf descent per scan wave (as do the stateless-client RDMA
+B+-trees it compares against), which under Zipf-skewed repeated scans is
+pure overhead: the descent's *endpoint* is stable until the leaf chain
+under it is restitched.
+
+This module applies the same "put the filter where it is free to read" play
+to that endpoint: instead of a value, a bucket entry stores the **scan
+anchor** — the leaf id where `traverse(k_min)` bottomed out.  A hit lets
+`RANGE(k_min, limit)` skip the descent entirely and start the bounded
+leaf-chain walk at the cached anchor; the walk itself re-reads the leaf
+arrays and insert buffers, so buffered PUT/DELETE traffic since admission
+is visible without any cache maintenance.
+
+TPU adaptation mirrors ``hotcache.py``: "threads" are steering shards of
+the request wave, the Bloom words and buckets are tiny VMEM-resident arrays
+(``kernels/cache_probe.anchor_probe_pallas``), keys AND anchors are stored
+so hash collisions are detected exactly.  Two policies differ from the
+point cache:
+
+  * **admission** defaults to admit-everything (``admit_shift=0``): scans
+    are far rarer and far heavier than GETs, so the paper's 1-in-2^k
+    random-admission throttle buys nothing here;
+  * **invalidation** is by *leaf id*, not by key: a stitch cycle that
+    replaces leaves frees their ids through the epoch manager
+    (``epoch.EpochManager.on_defer`` → ``store._patch_cycle``), and every
+    anchor pointing at a freed leaf is dropped before the next wave can
+    probe it.  UPDATE/DELETE waves need no per-key invalidation (the walk
+    merges insert buffers), but the patch cycles they trigger do — that is
+    the stale-anchor hazard ``tests/test_scancache.py`` pins.
+
+A continuation cursor (``lookup.ScanCursor``) and a cache entry share one
+representation — (key limbs, leaf id) — which is what lets the resume path
+of a truncated RANGE and the anchor-probe fast path reuse each other's
+plumbing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .keys import limb_eq, limb_hash
+
+# hash salts (disjoint from hotcache's so the two caches decorrelate;
+# steering reuses hotcache.SALT_STEER so a key lands on the same thread
+# for GET and RANGE — one resident context per thread, as in the paper)
+SALT_SBLOOM = (21, 22, 23)
+SALT_SBUCKET = 24
+SALT_SWAY = 25
+SALT_SADMIT = 26
+
+
+@dataclass(frozen=True)
+class ScanCacheConfig:
+    n_threads: int = 176  # steering shards (paper's traverser grid)
+    bloom_bits: int = 256
+    n_buckets: int = 24  # 24 buckets x 4 ways = 96 anchors/thread
+    ways: int = 4
+    admit_shift: int = 0  # admit every missed scan (scans are rare + heavy)
+
+    @property
+    def entries_per_thread(self) -> int:
+        return self.n_buckets * self.ways
+
+    @property
+    def total_entries(self) -> int:
+        return self.n_threads * self.entries_per_thread
+
+
+class ScanCacheState(NamedTuple):
+    bloom: jnp.ndarray  # (T, bits/32) u32
+    bkey: jnp.ndarray  # (T, NB, W, 2) u32 — the exact scan start key
+    bleaf: jnp.ndarray  # (T, NB, W) i32 — anchor leaf id (-1 = empty)
+    bepoch: jnp.ndarray  # (T, NB, W) i32 — flush-cycle epoch at admit time
+    bvalid: jnp.ndarray  # (T, NB, W) bool
+
+
+def make_cache(cfg: ScanCacheConfig) -> ScanCacheState:
+    T = cfg.n_threads
+    return ScanCacheState(
+        bloom=jnp.zeros((T, cfg.bloom_bits // 32), dtype=jnp.uint32),
+        bkey=jnp.zeros((T, cfg.n_buckets, cfg.ways, 2), dtype=jnp.uint32),
+        bleaf=jnp.full((T, cfg.n_buckets, cfg.ways), -1, dtype=jnp.int32),
+        bepoch=jnp.zeros((T, cfg.n_buckets, cfg.ways), dtype=jnp.int32),
+        bvalid=jnp.zeros((T, cfg.n_buckets, cfg.ways), dtype=bool),
+    )
+
+
+def _bloom_hashes(khi, klo, bits: int):
+    return [limb_hash(khi, klo, s) % jnp.uint32(bits) for s in SALT_SBLOOM]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def probe(
+    cache: ScanCacheState,
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    cfg: ScanCacheConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched anchor lookup: (hit, leaf).  ``leaf`` is only meaningful
+    where ``hit`` — misses carry an arbitrary (but in-pool-safe) id.
+
+    Like the point cache, Bloom-negative probes never pay a bucket access
+    in the counted cost model; the key compare is exact, so a Bloom false
+    positive or bucket collision can only miss, never mis-anchor.
+    """
+    may = jnp.ones_like(khi, dtype=bool)
+    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
+        word = cache.bloom[tid, (h // 32).astype(jnp.int32)]
+        may &= (word >> (h % 32)) & 1 == 1
+    bucket = (limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(cfg.n_buckets)).astype(
+        jnp.int32
+    )
+    bk = cache.bkey[tid, bucket]  # (B, W, 2)
+    bl = cache.bleaf[tid, bucket]  # (B, W)
+    valid = cache.bvalid[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
+    hit_way = jnp.argmax(eq, axis=1)
+    hit = may & jnp.any(eq, axis=1)
+    leaf = jnp.take_along_axis(bl, hit_way[:, None], axis=1)[:, 0]
+    return hit, jnp.where(hit, leaf, 0)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def admit(
+    cache: ScanCacheState,
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    leaf: jnp.ndarray,
+    eligible: jnp.ndarray,  # (B,) bool — fresh descents not already cached
+    *,
+    cfg: ScanCacheConfig,
+    wave: jnp.ndarray | int = 0,
+    epoch: jnp.ndarray | int = 0,
+) -> ScanCacheState:
+    """Admit (k_min -> anchor leaf) entries; same wave-salted random policy
+    and 4-way fill/evict as the point cache.  ``epoch`` tags each entry with
+    the flush-cycle counter at admit time (observability: how old is the
+    cache population relative to the last restitch)."""
+    wave_salt = jnp.asarray(wave, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+    rnd = limb_hash(khi, klo, SALT_SADMIT) ^ wave_salt
+    rnd = rnd * jnp.uint32(0x7FEB352D)
+    rnd = rnd ^ (rnd >> 13)
+    take = eligible & ((rnd >> 7) % jnp.uint32(1 << cfg.admit_shift) == 0)
+    bucket = (limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(cfg.n_buckets)).astype(
+        jnp.int32
+    )
+    ways_valid = cache.bvalid[tid, bucket]  # (B, W)
+    has_free = ~jnp.all(ways_valid, axis=1)
+    first_free = jnp.argmin(ways_valid.astype(jnp.int32), axis=1)
+    victim = (limb_hash(khi, klo, SALT_SWAY) % jnp.uint32(cfg.ways)).astype(jnp.int32)
+    way = jnp.where(has_free, first_free.astype(jnp.int32), victim)
+    T = cache.bkey.shape[0]
+    tid_s = jnp.where(take, tid, T)  # OOB -> dropped
+    bkey = cache.bkey.at[tid_s, bucket, way].set(
+        jnp.stack([khi, klo], -1), mode="drop"
+    )
+    bleaf = cache.bleaf.at[tid_s, bucket, way].set(
+        leaf.astype(jnp.int32), mode="drop"
+    )
+    bepoch = cache.bepoch.at[tid_s, bucket, way].set(
+        jnp.asarray(epoch, dtype=jnp.int32), mode="drop"
+    )
+    bvalid = cache.bvalid.at[tid_s, bucket, way].set(True, mode="drop")
+    # bloom OR via scatter-ADD bit planes (duplicate updates accumulate,
+    # then counts>0 packs back) — same race-free trick as hotcache.admit
+    n_words = cache.bloom.shape[1]
+    planes = jnp.zeros((T + 1, n_words, 32), dtype=jnp.int32)
+    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
+        word = (h // 32).astype(jnp.int32)
+        bit = (h % 32).astype(jnp.int32)
+        planes = planes.at[tid_s, word, bit].add(1, mode="drop")
+    new_bits = (
+        (planes[:T] > 0).astype(jnp.uint32)
+        << jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    ).sum(axis=-1, dtype=jnp.uint32)
+    return ScanCacheState(
+        bloom=cache.bloom | new_bits,
+        bkey=bkey,
+        bleaf=bleaf,
+        bepoch=bepoch,
+        bvalid=bvalid,
+    )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def invalidate_leaves(
+    cache: ScanCacheState, freed_leaves: jnp.ndarray
+) -> Tuple[ScanCacheState, jnp.ndarray]:
+    """Stitch-cycle consistency: drop every anchor whose leaf id is in
+    ``freed_leaves`` ((F,) i32, -1-padded).  Called by the store right after
+    the cycle's CONNECT quarantines the ids (``EpochManager.on_defer``), so
+    a stale anchor can never start a walk on a replaced leaf — neither
+    while the row sits in epoch quarantine (old content, missing the
+    patch's writes) nor after reclaim recycles it (arbitrary content).
+
+    Bloom bits stay set, as in hotcache: they only cause false positives,
+    which the exact key+valid compare absorbs.  Returns (cache, n_dropped).
+    """
+    # -1 padding only matches empty ways (bleaf=-1), which bvalid masks out
+    stale = jnp.any(
+        cache.bleaf[..., None] == freed_leaves[None, None, None, :], axis=-1
+    )
+    stale &= cache.bvalid
+    return cache._replace(bvalid=cache.bvalid & ~stale), jnp.sum(stale)

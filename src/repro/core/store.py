@@ -7,8 +7,10 @@ the DPA thread grid).  Internals:
 
   request wave -> steering hash -> hot cache probe -> learned-index traversal
   -> insert buffer / leaf HBM access -> responses
+  RANGE wave  -> scan-anchor probe (descent skip on hit) -> bounded leaf
+  walk -> truncated rows resume from their cursor until limit/exhaustion
   full insert buffers -> host patcher -> stitch batch -> COPY, CONNECT
-  -> epoch advance -> quarantined ids reclaimed
+  -> epoch advance (+ scan-anchor invalidation) -> quarantined ids reclaimed
 
 Write statuses mirror the wire protocol: OK, RETRY (buffer full — the paper's
 traverser re-enqueue; ``auto_retry`` hides it behind the patch cycle like a
@@ -28,11 +30,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from . import hotcache, insert_buffer, lookup, patch, stitch
+from . import hotcache, insert_buffer, lookup, patch, scancache, stitch
 from .epoch import EpochManager
 from .hotcache import CacheConfig, CacheState
 from .keys import KEY_MAX, join_u64, limb_hash_np, split_u64
 from .lookup import IB_DEL, IB_PUT, InsertBuffers
+from .scancache import ScanCacheConfig, ScanCacheState
 from .tree import SEG_CAP, TreeConfig, TreeImage, build_image
 
 STATUS_OK = insert_buffer.STATUS_OK
@@ -44,6 +47,23 @@ def _pad_pow2(n: int, minimum: int = 8) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def append_range_results(keys_out, vals_out, counts, idxs, rk, rv, rc, limit):
+    """Vectorized stitch shared by the continuation loop and the sharded
+    scatter-gather epilogue: append each row's first ``take`` results at its
+    current fill level.  ``idxs`` maps the sub-batch rows of ``rk``/``rv``/
+    ``rc`` to rows of the accumulators; mutates them in place and returns
+    the per-row appended counts."""
+    cols = np.arange(limit)
+    take = np.minimum(rc, limit - counts[idxs])
+    src = cols[None, :] < take[:, None]  # (k, limit)
+    dst_col = counts[idxs][:, None] + cols[None, :]
+    dst_row = np.repeat(idxs, take)
+    keys_out[dst_row, dst_col[src]] = rk[src]
+    vals_out[dst_row, dst_col[src]] = rv[src]
+    counts[idxs] += take
+    return take
 
 
 @dataclass
@@ -71,6 +91,12 @@ class StoreStats:
     flush_cycles: int = 0
     stitch_applies: int = 0
     patched_leaves: int = 0
+    # scan-anchor cache (RANGE descent skip) + continuation accounting
+    scan_probes: int = 0  # fresh-descent RANGE rows probed against the cache
+    scan_hits: int = 0  # rows whose descent the anchor cache skipped
+    scan_invalidated: int = 0  # anchors dropped by stitch-cycle invalidation
+    range_reissue_rounds: int = 0  # continuation waves after the first
+    range_truncated: int = 0  # rows returned truncated (bounded max_rounds)
 
 
 class DPAStore:
@@ -86,6 +112,7 @@ class DPAStore:
         bulk_load_via_stitch: bool = False,
         epoch_grace: int = 2,
         batched_patch: bool = True,
+        scan_cache_cfg: Optional[ScanCacheConfig] = ScanCacheConfig(),
     ):
         # batched_patch=True (default): a flush cycle plans every full leaf
         # into ONE merged stitch batch and applies it as a single COPY+CONNECT
@@ -120,7 +147,18 @@ class DPAStore:
         self.cache: Optional[CacheState] = (
             hotcache.make_cache(cache_cfg) if cache_cfg else None
         )
+        # Scan-anchor cache (RANGE descent skip): key -> leaf where the
+        # descent bottomed out.  Invalidation is wired through the epoch
+        # manager's quarantine listener — every leaf id a stitch cycle
+        # obsoletes is collected at defer time and its anchors dropped
+        # before the cycle ends (see _apply_scan_invalidation).
+        self.scan_cache_cfg = scan_cache_cfg
+        self.scan_cache: Optional[ScanCacheState] = (
+            scancache.make_cache(scan_cache_cfg) if scan_cache_cfg else None
+        )
+        self._stale_anchor_leaves: List[int] = []
         self.epochs = EpochManager(grace=epoch_grace)
+        self.epochs.on_defer = self._note_deferred_free
 
     # ------------------------------------------------------------------ util
     @property
@@ -150,6 +188,31 @@ class DPAStore:
         self.stats.waves += 1
         self.epochs.advance()
         self.stats.reclaimed += self.epochs.reclaim(self.image)
+
+    # -------------------------------------------- scan-anchor invalidation
+    def _note_deferred_free(self, pool: str, idx: int) -> None:
+        """EpochManager.on_defer listener: collect leaves a stitch cycle
+        obsoleted.  Runs at quarantine time (right after the CONNECT), so
+        the set is complete before the cycle's invalidation flush."""
+        if pool == "leaves" and self.scan_cache is not None:
+            self._stale_anchor_leaves.append(int(idx))
+
+    def _apply_scan_invalidation(self) -> None:
+        """Drop every cached scan anchor whose leaf this cycle replaced.
+        Called inside the patch paths after the cycle's frees are deferred —
+        i.e. before any later wave can probe the cache — so a stale anchor
+        can never start a leaf walk on a restitched chain."""
+        if self.scan_cache is None or not self._stale_anchor_leaves:
+            self._stale_anchor_leaves.clear()
+            return
+        ids = np.asarray(self._stale_anchor_leaves, dtype=np.int32)
+        self._stale_anchor_leaves.clear()
+        padded = np.full(_pad_pow2(ids.size), -1, dtype=np.int32)
+        padded[: ids.size] = ids
+        self.scan_cache, n = scancache.invalidate_leaves(
+            self.scan_cache, jnp.asarray(padded)
+        )
+        self.stats.scan_invalidated += int(n)
 
     # ------------------------------------------------------------------ GET
     def get(self, keys_u64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -286,44 +349,160 @@ class DPAStore:
         (B, limit), count (B,)) — ascending, live entries only (zeros past
         ``count``).
 
+        The scan walks ``max_leaves`` leaves per device wave and *resumes*
+        truncated rows from their continuation cursor until every row hit
+        ``limit`` or exhausted the chain — results are exact for any
+        ``max_leaves`` >= 1 (callers no longer need to size it to cover
+        ``limit``).  ``range_with_state`` exposes the truncation flag and
+        cursor for callers that bound the re-issue rounds themselves.
+
         Edge cases: ``limit=0`` and empty request batches short-circuit to
         empty outputs host-side (keeping degenerate shapes out of the jit
         cache); a ``k_min`` above the largest key or inside an empty window
-        comes back with ``count=0``; the scan is bounded by ``max_leaves``
-        leaves, the paper's re-descend packetisation bound.
+        comes back with ``count=0``.
+        """
+        keys_out, vals_out, counts, _, _, _ = self.range_with_state(
+            start_keys_u64, limit=limit, max_leaves=max_leaves
+        )
+        return keys_out, vals_out, counts
+
+    def _scan_start(self, khi, klo, resume_np: np.ndarray, n_active: int):
+        """Resolve the start leaf of each lane: continuation cursor if
+        resuming, cached anchor on a hit, learned-index descent otherwise.
+        The traversal device call is skipped entirely when no lane needs it
+        — the anchor cache's descent-skip fast path."""
+        B = int(khi.shape[0])
+        start = jnp.asarray(resume_np)  # -1 = fresh descent wanted
+        fresh_np = np.zeros(B, dtype=bool)
+        fresh_np[:n_active] = resume_np[:n_active] < 0
+        hit_np = np.zeros(B, dtype=bool)
+        tid = None
+        if self.scan_cache is not None and fresh_np.any():
+            # steer with the SCAN cache's thread geometry (the point cache
+            # may be differently sized or disabled entirely)
+            tid = hotcache.steer(khi, klo, self.scan_cache_cfg.n_threads)
+            hit, cleaf = scancache.probe(
+                self.scan_cache, tid, khi, klo, cfg=self.scan_cache_cfg
+            )
+            hit_np = np.asarray(hit) & fresh_np
+            self.stats.scan_probes += int(fresh_np.sum())
+            self.stats.scan_hits += int(hit_np.sum())
+            start = jnp.where((start < 0) & jnp.asarray(hit_np), cleaf, start)
+        need_traverse = fresh_np & ~hit_np
+        tstart = None
+        if need_traverse.any():
+            tstart = lookup.traverse(
+                self.tree, khi, klo, depth=self.depth, eps_inner=self.cfg.eps_inner
+            )
+            start = jnp.where(start < 0, tstart, start)
+        if self.scan_cache is not None and tstart is not None:
+            # admit the fresh descents the cache missed (anchor = the leaf
+            # the descent bottomed out at; exact-key entries, so a later
+            # RANGE with the same k_min skips the whole descent)
+            self.scan_cache = scancache.admit(
+                self.scan_cache,
+                tid,
+                khi,
+                klo,
+                tstart,
+                jnp.asarray(need_traverse),
+                cfg=self.scan_cache_cfg,
+                wave=self.stats.waves & 0xFFFFFFFF,
+                epoch=self.stats.flush_cycles,
+            )
+        return start
+
+    def range_with_state(
+        self,
+        start_keys_u64,
+        limit: int = 10,
+        max_leaves: int = 4,
+        max_rounds: Optional[int] = None,
+        start_leaves: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """RANGE with explicit continuation state: returns (keys (n, limit),
+        vals, count (n,), truncated (n,), cursor_leaf (n,), cursor_key (n,)).
+
+        Each device wave probes the scan-anchor cache (fresh rows), walks
+        ``max_leaves`` leaves, and rows that come back *truncated* (chain
+        continues, row under-filled) are re-issued from their cursor —
+        ``max_rounds=None`` loops until limit or exhaustion, a bounded
+        ``max_rounds`` returns honestly-truncated rows with the cursor to
+        resume from (``start_leaves`` accepts those cursors back, -1 = fresh
+        descent; the sharded tier uses this to re-issue only to truncated
+        shards).  ``truncated=False`` with ``count < limit`` means the key
+        space genuinely ran out — the exhausted-vs-bounded distinction the
+        scatter-gather epilogue keys on.
         """
         start_keys_u64 = np.asarray(start_keys_u64, dtype=np.uint64)
         n = start_keys_u64.size
-        if n == 0 or limit <= 0:
-            self.stats.ranges += n
-            shape = (n, max(limit, 0))
-            return (
-                np.zeros(shape, dtype=np.uint64),
-                np.zeros(shape, dtype=np.uint64),
-                np.zeros(n, dtype=np.int64),
-            )
-        B = _pad_pow2(n)
-        khi, klo, _ = self._limbs(start_keys_u64, B)
-        rk, rv, valid = lookup.range_batch(
-            self.tree,
-            self.ib,
-            khi,
-            klo,
-            depth=self.depth,
-            eps_inner=self.cfg.eps_inner,
-            limit=limit,
-            max_leaves=max_leaves,
-        )
+        lim = max(limit, 0)
+        keys_out = np.zeros((n, lim), dtype=np.uint64)
+        vals_out = np.zeros((n, lim), dtype=np.uint64)
+        counts = np.zeros(n, dtype=np.int64)
+        trunc_out = np.zeros(n, dtype=bool)
+        cur_leaf_out = np.full(n, -1, dtype=np.int32)
+        cur_key_out = start_keys_u64.copy()
         self.stats.ranges += n
-        self._end_wave()
-        rk = np.asarray(rk)[:n]
-        rv = np.asarray(rv)[:n]
-        valid = np.asarray(valid)[:n]
-        keys_out = join_u64(rk)
-        vals_out = join_u64(rv)
-        keys_out[~valid] = 0
-        vals_out[~valid] = 0
-        return keys_out, vals_out, valid.sum(axis=1)
+        if n == 0 or limit <= 0:
+            return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
+        idxs = np.arange(n)
+        resume = (
+            np.full(n, -1, dtype=np.int32)
+            if start_leaves is None
+            else np.asarray(start_leaves, dtype=np.int32).copy()
+        )
+        rounds = 0
+        # each round advances every live cursor by >= max_leaves leaves, so
+        # the loop is bounded by the chain length; cap it defensively
+        hard_cap = self.image.leaf_anchor.shape[0] // max(max_leaves, 1) + 2
+        while idxs.size:
+            m = idxs.size
+            B = _pad_pow2(m)
+            khi, klo, _ = self._limbs(start_keys_u64[idxs], B)
+            res_pad = np.full(B, -1, dtype=np.int32)
+            res_pad[:m] = resume
+            start = self._scan_start(khi, klo, res_pad, m)
+            rk, rv, valid, trunc, cursor = lookup.range_batch_from(
+                self.tree,
+                self.ib,
+                start,
+                khi,
+                klo,
+                limit=limit,
+                max_leaves=max_leaves,
+            )
+            self._end_wave()
+            rk = join_u64(np.asarray(rk)[:m])
+            rv = join_u64(np.asarray(rv)[:m])
+            va = np.asarray(valid)[:m]
+            rc = va.sum(axis=1)
+            trunc_np = np.asarray(trunc)[:m]
+            append_range_results(keys_out, vals_out, counts, idxs, rk, rv, rc, limit)
+            # continuation state (informational for complete rows)
+            trunc_out[idxs] = trunc_np
+            cur_leaf_out[idxs] = np.asarray(cursor.leaf)[:m]
+            last_key = join_u64(
+                np.stack(
+                    [np.asarray(cursor.khi)[:m], np.asarray(cursor.klo)[:m]],
+                    axis=-1,
+                )
+            )
+            emitted = rc > 0
+            cur_key_out[idxs[emitted]] = last_key[emitted]
+            cont = trunc_np & (counts[idxs] < limit)
+            rounds += 1
+            if rounds > 1:
+                self.stats.range_reissue_rounds += 1
+            if not cont.any():
+                break
+            if (max_rounds is not None and rounds >= max_rounds) or rounds >= hard_cap:
+                break
+            resume = np.asarray(cursor.leaf)[:m][cont]
+            idxs = idxs[cont]
+        trunc_out &= counts < limit
+        self.stats.range_truncated += int(trunc_out.sum())
+        return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
 
     # ------------------------------------------------------------ patch path
     def _process_full_leaves(self) -> int:
@@ -422,8 +601,12 @@ class DPAStore:
             # Cycle-granularity epoch bookkeeping: quarantine everything the
             # transaction obsoleted, advance once.  (Within the transaction
             # nothing was reclaimed, so no COPY could have landed on a
-            # still-reachable row.)
+            # still-reachable row.)  The on_defer listener collects the
+            # cycle's obsoleted leaves; dropping their scan anchors here —
+            # before the cycle returns — is what keeps a restitched leaf
+            # chain from ever serving a cached-anchor scan.
             self.epochs.defer_free_batch(result.batch.frees)
+            self._apply_scan_invalidation()
             self.stats.reclaimed += self.epochs.end_cycle(self.image)
             self.stats.stitched_bytes += result.batch.payload_bytes()
             self.stats.stitched_dpa_bytes += result.batch.dpa_bytes()
@@ -448,6 +631,7 @@ class DPAStore:
         self.stats.patched_leaves += 1
         for pool, idx in result.batch.frees:
             self.epochs.defer_free(pool, idx)
+        self._apply_scan_invalidation()
         # Patches run with no wave in flight (host-serialized), so every
         # traverser has trivially "moved on": advancing the epoch here is the
         # degenerate-but-sound case of the paper's packet-counter epoch.

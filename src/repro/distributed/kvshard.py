@@ -134,9 +134,11 @@ class ShardedDPAStore:
         cache_cfg=None,
         batched_patch: bool = True,
         partition: str = "hash",
+        scan_cache_cfg="default",
     ):
         from repro.core.store import DPAStore
         from repro.core import pla
+        from repro.core.scancache import ScanCacheConfig
 
         assert partition in ("hash", "range"), partition
         assert n_shards >= 1, f"n_shards must be positive, got {n_shards}"
@@ -150,9 +152,13 @@ class ShardedDPAStore:
         else:
             self.boundaries = None
         h = self.route_np(keys)
-        # scatter-gather accounting (benchmarks report the measured fan-out)
+        # scatter-gather accounting (benchmarks report the measured fan-out
+        # and the continuation re-issue traffic)
         self.range_requests = 0
         self.range_subqueries = 0
+        self.range_reissues = 0
+        if scan_cache_cfg == "default":
+            scan_cache_cfg = ScanCacheConfig()  # per-shard anchor caches
         self.shards: List[DPAStore] = [
             DPAStore(
                 keys[h == s],
@@ -160,6 +166,7 @@ class ShardedDPAStore:
                 tree_cfg,
                 cache_cfg=cache_cfg,
                 batched_patch=batched_patch,
+                scan_cache_cfg=scan_cache_cfg,
             )
             for s in range(n_shards)
         ]
@@ -219,15 +226,18 @@ class ShardedDPAStore:
         """Batched RANGE(k_min, limit): (keys (n, limit), vals (n, limit),
         count (n,)) — globally ascending live entries, zeros past ``count``.
 
-        Range partition: scatter-gather.  Each request is sent to its owner
-        shard (boundary search) and then to successive shards — at most
-        ``fanout`` of them (default: all) and only while the request still
-        needs results — and the gather epilogue stitches the per-shard
-        results, which are disjoint and already ordered, back-to-back.  The
-        per-shard scan is bounded by ``max_leaves`` exactly like the
-        single-store RANGE; a shard whose bounded scan under-fills is
-        stitched to its successor's results, so callers needing exact
-        first-``limit`` semantics size ``max_leaves`` to cover ``limit``.
+        Range partition: scatter-gather with precise re-issue.  Each request
+        is sent to its owner shard (boundary search) and then to successive
+        shards — at most ``fanout`` of them (default: all) and only while
+        the request still needs results.  Within a shard, a sub-query whose
+        bounded ``max_leaves`` walk comes back *truncated* (chain remaining,
+        row under-filled) is re-issued to that same shard from its
+        continuation cursor — never to a successor, which would reorder —
+        until the shard reports *exhausted* (``truncated=False``).  Only
+        then does the epilogue stitch the successor's slice.  Results are
+        therefore exact for any ``max_leaves`` >= 1; ``range_reissues``
+        counts the continuation sub-queries.  Each shard's first descent
+        per sub-query goes through its scan-anchor cache.
 
         Hash partition: keys are scattered by hash, so every shard must scan
         (broadcast) and the epilogue k-way merges — correct, but aggregate
@@ -243,27 +253,36 @@ class ShardedDPAStore:
             return keys_out, vals_out, counts
         self.range_requests += n
         if self.partition == "range":
+            from repro.core.store import append_range_results
+
             owner = self.route_np(start)
             fanout = self.n_shards if fanout is None else fanout
-            cols = np.arange(limit)
             for s in range(self.n_shards):
                 m = (owner <= s) & (s - owner < fanout) & (counts < limit)
                 if not m.any():
                     continue
                 self.range_subqueries += int(m.sum())
-                rk, rv, rc = self.shards[s].range(
-                    start[m], limit=limit, max_leaves=max_leaves
-                )
-                # vectorized stitch: append each row's first `take` results
-                # at its current fill level
                 idxs = np.where(m)[0]
-                take = np.minimum(rc, limit - counts[idxs])
-                src = cols[None, :] < take[:, None]  # (k, limit)
-                dst_col = counts[idxs][:, None] + cols[None, :]
-                dst_row = np.repeat(idxs, take)
-                keys_out[dst_row, dst_col[src]] = rk[src]
-                vals_out[dst_row, dst_col[src]] = rv[src]
-                counts[idxs] += take
+                resume = np.full(idxs.size, -1, dtype=np.int32)
+                while idxs.size:
+                    rk, rv, rc, trunc, cur_leaf, _ = self.shards[
+                        s
+                    ].range_with_state(
+                        start[idxs],
+                        limit=limit,
+                        max_leaves=max_leaves,
+                        max_rounds=1,
+                        start_leaves=resume,
+                    )
+                    append_range_results(
+                        keys_out, vals_out, counts, idxs, rk, rv, rc, limit
+                    )
+                    # bounded-by-max_leaves rows resume at their cursor;
+                    # exhausted rows fall through to the successor shard
+                    again = trunc & (counts[idxs] < limit)
+                    idxs = idxs[again]
+                    resume = cur_leaf[again]
+                    self.range_reissues += int(again.sum())
             return keys_out, vals_out, counts
         # hash partition: broadcast + k-way merge (keys never hit the
         # KEY_MAX sentinel — reserved — so it can pad the sort)

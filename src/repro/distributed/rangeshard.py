@@ -30,6 +30,22 @@ back False and the client re-sends, the batched analogue of the paper's
 receive-queue overflow handling (Sec 3.1.3).  A request is ``ok`` only if
 *every* in-range replica of its fan-out wave landed.
 
+Continuation (exhausted vs bounded).  Each per-shard scan is bounded by
+``max_leaves`` — the paper's 64-pairs-per-response packetisation — so a
+shard can come back short for two very different reasons: its slice ran
+out of keys (*exhausted* — the successor's slice is the correct
+continuation) or the bounded walk was cut mid-slice (*bounded* — stitching
+the successor would leave a gap).  ``lookup.range_batch`` distinguishes
+them with a device-side ``truncated`` flag + resume cursor (last key +
+first unwalked leaf — representationally a scan anchor, see
+``core/scancache``), and the gather epilogue (a) drops contributions past
+the first truncated replica so the wave output is always an exact
+ascending prefix of the oracle answer, and (b) surfaces a per-request
+``truncated`` output.  The host facade re-issues *only* truncated
+sub-queries, and only to the shard that truncated, resuming at the cursor
+(``ShardedDPAStore.range``) — the paper's re-descend-and-continue loop
+with the re-descent replaced by the cursor.
+
 Execution paths (mirroring ``kvshard``):
 
   * ``range_wave_emulated`` — vmap over the shard dim on one device; the
@@ -40,9 +56,11 @@ Execution paths (mirroring ``kvshard``):
     ``all_to_all`` exchanges (production / dry-run lowering).
 
 Host-side orchestration (boundary fitting, per-shard ``DPAStore`` builds,
-the sequential scatter-gather used by benchmarks) lives on
-``kvshard.ShardedDPAStore(partition="range")`` so both tiers share one
-facade.
+the sequential scatter-gather used by benchmarks, the truncated-shard
+re-issue loop) lives on ``kvshard.ShardedDPAStore(partition="range")`` so
+both tiers share one facade; each shard store also carries its own
+scan-anchor cache, so the owner-shard descent of a repeated scan wave is
+skipped entirely.
 """
 
 from __future__ import annotations
@@ -100,7 +118,7 @@ def _replicate(b_hi, b_lo, khi, klo, n_shards: int, fanout: int):
 
 
 def _gather_epilogue(
-    origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid,
+    origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid, rs_trunc,
     *, W: int, fanout: int, limit: int,
 ):
     """Stitch one source shard's fan-out responses into per-request outputs.
@@ -110,6 +128,18 @@ def _gather_epilogue(
     back responses ((n_dest, cap, limit)).  Per-shard results are disjoint
     ascending slices, so concatenating a request's replicas in fan-out order
     is already globally sorted — compact the first ``limit`` live entries.
+
+    ``rs_trunc`` is each replica's device-side continuation flag ("my
+    bounded walk stopped with chain remaining *and* an under-filled row").
+    A truncated replica leaves a *gap* between its last entry and its
+    successor shard's slice, so the epilogue drops every contribution past
+    the first truncated replica — the output is always an exact ascending
+    prefix of the oracle answer — and folds the flag into a per-request
+    ``truncated`` output: True = the prefix under-fills ``limit`` because a
+    bounded walk was cut (re-issue — bigger ``max_leaves`` or the host
+    continuation path), False + under-filled = the key space is genuinely
+    exhausted.  The host orchestration (``ShardedDPAStore.range``)
+    re-issues only the former, and only to the truncated shards.
     """
     WF = W * fanout
     flat_origin = origin.reshape(-1)
@@ -129,6 +159,9 @@ def _gather_epilogue(
     r_valid = jnp.zeros((WF, limit), bool).at[safe].set(
         rs_valid.reshape(-1, limit).astype(bool), mode="drop"
     )
+    r_trunc = jnp.zeros((WF,), bool).at[safe].set(
+        rs_trunc.reshape(-1).astype(bool), mode="drop"
+    )
     r_ok = jnp.zeros((WF,), bool).at[safe].set(valid.reshape(-1), mode="drop")
     r_ok = r_ok | oob  # past-the-end replicas are complete empties
 
@@ -136,7 +169,15 @@ def _gather_epilogue(
     cat_kl = r_kl.reshape(W, fanout * limit)
     cat_vh = r_vh.reshape(W, fanout * limit)
     cat_vl = r_vl.reshape(W, fanout * limit)
-    cat_valid = r_valid.reshape(W, fanout * limit)
+    # a truncated replica breaks contiguity: keep only replicas strictly
+    # before the first truncated one (plus its own — valid prefix — output)
+    r_trunc_wf = r_trunc.reshape(W, fanout)
+    prefix_ok = jnp.cumsum(r_trunc_wf.astype(jnp.int32), axis=1) == (
+        r_trunc_wf.astype(jnp.int32)
+    )  # True through the first truncated replica, False after it
+    cat_valid = (r_valid.reshape(W, fanout, limit) & prefix_ok[:, :, None]).reshape(
+        W, fanout * limit
+    )
 
     target = jnp.cumsum(cat_valid.astype(jnp.int32), axis=1) - 1
     in_out = cat_valid & (target < limit)
@@ -157,6 +198,7 @@ def _gather_epilogue(
     n_found = jnp.minimum(jnp.sum(cat_valid, axis=1), limit)
     out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
     ok = jnp.all(r_ok.reshape(W, fanout), axis=1)
+    truncated = (n_found < limit) & jnp.any(r_trunc.reshape(W, fanout), axis=1)
     return (
         out_kh[:, :limit],
         out_kl[:, :limit],
@@ -164,6 +206,7 @@ def _gather_epilogue(
         out_vl[:, :limit],
         out_valid,
         ok,
+        truncated,
     )
 
 
@@ -183,10 +226,14 @@ def range_wave_emulated(
 ):
     """Single-device emulation of the scatter-gather RANGE wave.
 
-    Returns (out_kh, out_kl, out_vh, out_vl, out_valid, ok), all with a
-    leading (n_shards, W) client layout; rows are ascending live entries
-    with ``out_valid`` a prefix mask.  ``ok=False`` means a capacity
+    Returns (out_kh, out_kl, out_vh, out_vl, out_valid, ok, truncated), all
+    with a leading (n_shards, W) client layout; rows are ascending live
+    entries with ``out_valid`` a prefix mask.  ``ok=False`` means a capacity
     overflow dropped part of the fan-out — RETRY, never silent loss.
+    ``truncated=True`` means a landed replica's bounded walk was cut by
+    ``max_leaves`` while the request under-fills — re-issue (bigger
+    ``max_leaves`` or the host continuation path), as opposed to an
+    under-filled untruncated request, which exhausted the key space.
     """
     n_shards, W = khi.shape
     fanout = n_shards if fanout is None else fanout
@@ -203,7 +250,7 @@ def range_wave_emulated(
     rq_lo = jnp.swapaxes(bk_lo, 0, 1)
 
     def per_shard(tree, ib, h, l):
-        return lookup.range_batch(
+        rk, rv, rvalid, rtrunc, _ = lookup.range_batch(
             tree,
             ib,
             h.reshape(-1),
@@ -213,8 +260,11 @@ def range_wave_emulated(
             limit=limit,
             max_leaves=max_leaves,
         )
+        return rk, rv, rvalid, rtrunc
 
-    rk, rv, rvalid = jax.vmap(per_shard)(stacked_tree, stacked_ib, rq_hi, rq_lo)
+    rk, rv, rvalid, rtrunc = jax.vmap(per_shard)(
+        stacked_tree, stacked_ib, rq_hi, rq_lo
+    )
     # responses back: (dest, src, cap, limit) -> (src, dest, cap, limit)
     shape = (n_shards, n_shards, cap, limit)
     rs_kh = jnp.swapaxes(rk[..., 0].reshape(shape), 0, 1)
@@ -222,10 +272,11 @@ def range_wave_emulated(
     rs_vh = jnp.swapaxes(rv[..., 0].reshape(shape), 0, 1)
     rs_vl = jnp.swapaxes(rv[..., 1].reshape(shape), 0, 1)
     rs_valid = jnp.swapaxes(rvalid.reshape(shape), 0, 1)
+    rs_trunc = jnp.swapaxes(rtrunc.reshape(shape[:3]), 0, 1)
 
     gather = partial(_gather_epilogue, W=W, fanout=fanout, limit=limit)
     return jax.vmap(gather)(
-        origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid
+        origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid, rs_trunc
     )
 
 
@@ -269,7 +320,7 @@ def range_wave_sharded(
         bk_hi, bk_lo, origin, valid = _bucketize(dest, rep_hi, rep_lo, n_shards, cap)
         rq_hi = a2a(bk_hi)
         rq_lo = a2a(bk_lo)
-        rk, rv, rvalid = lookup.range_batch(
+        rk, rv, rvalid, rtrunc, _ = lookup.range_batch(
             tree,
             ib,
             rq_hi.reshape(-1),
@@ -287,8 +338,9 @@ def range_wave_sharded(
         rs_valid = a2a(rvalid.astype(jnp.int32).reshape(flat)).reshape(
             n_shards, cap, limit
         )
+        rs_trunc = a2a(rtrunc.astype(jnp.int32).reshape(n_shards, cap))
         outs = _gather_epilogue(
-            origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid,
+            origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid, rs_trunc,
             W=W, fanout=F, limit=limit,
         )
         return tuple(o[None] for o in outs)
@@ -298,7 +350,7 @@ def range_wave_sharded(
         per_shard,
         mesh=mesh,
         in_specs=(state_specs[0], state_specs[1], P("data"), P("data")),
-        out_specs=tuple(P("data") for _ in range(6)),
+        out_specs=tuple(P("data") for _ in range(7)),
         check_rep=False,
     )
     return fn

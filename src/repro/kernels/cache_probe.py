@@ -1,11 +1,18 @@
-"""Pallas kernel: hot-entry cache probe (Bloom + 4-way bucket compare).
+"""Pallas kernels: cache probes (Bloom + 4-way bucket compare).
 
 The paper keeps each thread's Bloom filter in the spare bytes of its resident
 context cache line, so negative probes are free; bucket hits cost one DPA
 memory line.  TPU mapping: the Bloom words and the bucket array are VMEM-
 resident (they are tiny: 176 x 8 u32 words + 176 x 24 x 4 entries), probed
-lane-parallel across the request tile.  The kernel fuses bloom test + bucket
-compare + value select so a hit never leaves VMEM.
+lane-parallel across the request tile.  Two probes share the structure:
+
+  * ``probe_pallas`` — the point-GET hot-entry cache (Sec 3.1.2 / Fig 5):
+    bloom test + bucket compare + value select fused so a hit never leaves
+    VMEM.
+  * ``anchor_probe_pallas`` — the scan-anchor cache (``core/scancache.py``):
+    identical shape, but the payload is the leaf id where the key's descent
+    bottomed out, so a hit lets RANGE skip the whole traversal and start
+    the leaf-chain walk directly.
 """
 
 from __future__ import annotations
@@ -18,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.hotcache import SALT_BLOOM, SALT_BUCKET, CacheConfig
+from repro.core.scancache import SALT_SBLOOM, SALT_SBUCKET, ScanCacheConfig
 
 
 def _limb_hash(hi, lo, salt: int):
@@ -126,3 +134,102 @@ def probe_pallas(
         interpret=interpret,
     )(cache.bloom, cache.bkey, cache.bval, bvalid_i32, tid, khi, klo)
     return hit.astype(bool), vhi, vlo
+
+
+# ---------------------------------------------------------------------------
+# scan-anchor probe: same bloom + bucket structure, leaf-id payload
+# ---------------------------------------------------------------------------
+
+
+def _anchor_probe_kernel(
+    bloom_ref,  # (T, bits/32) u32   VMEM
+    bkey_ref,  # (T, NB, W, 2) u32  VMEM
+    bleaf_ref,  # (T, NB, W) i32    VMEM
+    bvalid_ref,  # (T, NB, W) i32   VMEM (bool widened)
+    tid_ref,  # (Bt,)
+    khi_ref,
+    klo_ref,
+    hit_ref,
+    leaf_ref,
+    *,
+    bloom_bits: int,
+    n_buckets: int,
+):
+    tid = tid_ref[...]
+    khi = khi_ref[...]
+    klo = klo_ref[...]
+    may = jnp.ones_like(khi, dtype=bool)
+    bloom = bloom_ref[...]
+    for s in SALT_SBLOOM:
+        h = _limb_hash(khi, klo, s) % jnp.uint32(bloom_bits)
+        word = jnp.take_along_axis(
+            jnp.take(bloom, tid, axis=0), (h // 32).astype(jnp.int32)[:, None], axis=1
+        )[:, 0]
+        may &= (word >> (h % 32)) & 1 == 1
+    bucket = (_limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(n_buckets)).astype(
+        jnp.int32
+    )
+    rows_k = jnp.take(bkey_ref[...], tid, axis=0)
+    bk = jnp.take_along_axis(
+        rows_k, bucket[:, None, None, None].repeat(rows_k.shape[2], 2).repeat(2, 3), axis=1
+    )[:, 0]
+    rows_l = jnp.take(bleaf_ref[...], tid, axis=0)
+    bl = jnp.take_along_axis(
+        rows_l, bucket[:, None, None].repeat(rows_l.shape[2], 2), axis=1
+    )[:, 0]
+    rows_val = jnp.take(bvalid_ref[...], tid, axis=0)
+    valid = jnp.take_along_axis(
+        rows_val, bucket[:, None, None].repeat(rows_val.shape[2], 2), axis=1
+    )[:, 0]
+    eq = (
+        (bk[:, :, 0] == khi[:, None])
+        & (bk[:, :, 1] == klo[:, None])
+        & (valid != 0)
+    )
+    way = jnp.argmax(eq, axis=1)
+    hit = may & jnp.any(eq, axis=1)
+    leaf = jnp.take_along_axis(bl, way[:, None], axis=1)[:, 0]
+    hit_ref[...] = hit.astype(jnp.int32)
+    leaf_ref[...] = jnp.where(hit, leaf, 0)
+
+
+def anchor_probe_pallas(
+    cache,
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    cfg: ScanCacheConfig,
+    block_requests: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched scan-anchor probe: (hit, leaf).  Semantics == scancache.probe."""
+    B = khi.shape[0]
+    assert B % block_requests == 0
+    grid = (B // block_requests,)
+    kernel = functools.partial(
+        _anchor_probe_kernel, bloom_bits=cfg.bloom_bits, n_buckets=cfg.n_buckets
+    )
+    vmem = lambda arr: pl.BlockSpec(arr.shape, lambda i: tuple([0] * arr.ndim))
+    tile = pl.BlockSpec((block_requests,), lambda i: (i,))
+    bvalid_i32 = cache.bvalid.astype(jnp.int32)
+    hit, leaf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            vmem(cache.bloom),
+            vmem(cache.bkey),
+            vmem(cache.bleaf),
+            vmem(bvalid_i32),
+            tile,
+            tile,
+            tile,
+        ],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cache.bloom, cache.bkey, cache.bleaf, bvalid_i32, tid, khi, klo)
+    return hit.astype(bool), leaf

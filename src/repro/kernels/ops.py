@@ -13,12 +13,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import lookup
 from repro.core.hotcache import CacheConfig
 from repro.core.keys import limb_le
 from repro.core.lookup import IB_DEL, IB_EMPTY, InsertBuffers
+from repro.core.scancache import ScanCacheConfig
 from . import ref as _ref
 from .traverse import get_pallas
-from .cache_probe import probe_pallas
+from .cache_probe import anchor_probe_pallas, probe_pallas
 from .range_scan import range_pallas
 
 
@@ -98,6 +100,35 @@ def cache_probe(
     return hit[:n], vhi[:n], vlo[:n]
 
 
+def scan_anchor_probe(
+    cache,
+    tid,
+    khi,
+    klo,
+    *,
+    cfg: ScanCacheConfig,
+    impl: str = "auto",
+    block_requests: int = 128,
+):
+    """Scan-anchor cache probe: (hit, leaf) — the RANGE descent-skip path."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.scan_anchor_probe(cache, tid, khi, klo, cfg=cfg)
+    khi_p, n = _pad_to(khi, block_requests)
+    klo_p, _ = _pad_to(klo, block_requests)
+    tid_p, _ = _pad_to(tid, block_requests)
+    hit, leaf = anchor_probe_pallas(
+        cache,
+        tid_p,
+        khi_p,
+        klo_p,
+        cfg=cfg,
+        block_requests=block_requests,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return hit[:n], leaf[:n]
+
+
 def range_scan(
     tree,
     ib: InsertBuffers,
@@ -110,15 +141,28 @@ def range_scan(
     max_leaves: int = 4,
     impl: str = "auto",
     block_requests: int = 64,
+    start_leaf=None,
 ):
-    """Full RANGE op: traversal to the start leaf, Pallas leaf-chain scan,
-    jnp insert-buffer merge epilogue.  Output layout == ref.range_scan."""
+    """Full RANGE op: traversal to the start leaf (skipped when an anchor /
+    continuation ``start_leaf`` is supplied), Pallas leaf-chain scan, jnp
+    insert-buffer merge epilogue.  Output layout == ref.range_scan:
+    (keys, vals, valid, truncated, cursor)."""
     if limit <= 0:  # degenerate scan: keep 0-width blocks out of the kernel
         B = khi.shape[0]
         empty = jnp.zeros((B, 0, 2), dtype=jnp.uint32)
-        return empty, empty, jnp.zeros((B, 0), dtype=bool)
+        return (
+            empty,
+            empty,
+            jnp.zeros((B, 0), dtype=bool),
+            jnp.zeros((B,), dtype=bool),
+            lookup.ScanCursor(khi, klo, jnp.full((B,), -1, dtype=jnp.int32)),
+        )
     impl = _resolve(impl)
     if impl == "ref":
+        if start_leaf is not None:
+            return _ref.range_scan_from(
+                tree, ib, start_leaf, khi, klo, limit=limit, max_leaves=max_leaves
+            )
         return _ref.range_scan(
             tree,
             ib,
@@ -129,15 +173,16 @@ def range_scan(
             limit=limit,
             max_leaves=max_leaves,
         )
-    from repro.core import lookup
-
     khi_p, n = _pad_to(khi, block_requests)
     klo_p, _ = _pad_to(klo, block_requests)
-    start = lookup.traverse(tree, khi_p, klo_p, depth=depth, eps_inner=eps_inner)
+    if start_leaf is None:
+        start = lookup.traverse(tree, khi_p, klo_p, depth=depth, eps_inner=eps_inner)
+    else:
+        start, _ = _pad_to(start_leaf, block_requests, fill=-1)
     cap = ib.keys.shape[1]
     # over-collect so buffered deletes can never starve the final cut
     inner_limit = limit + max_leaves * cap
-    kh, kl, vh, vl, cnt, visited = range_pallas(
+    kh, kl, vh, vl, cnt, visited, next_leaf = range_pallas(
         tree,
         start,
         khi_p,
@@ -147,18 +192,29 @@ def range_scan(
         block_requests=block_requests,
         interpret=(impl == "pallas_interpret"),
     )
-    out = _merge_ib_epilogue(
-        ib, khi_p, klo_p, kh, kl, vh, vl, cnt, visited, limit=limit
+    keys, vals, valid, truncated, cursor = _merge_ib_epilogue(
+        ib, khi_p, klo_p, kh, kl, vh, vl, cnt, visited, next_leaf, limit=limit
     )
-    return tuple(o[:n] for o in out)
+    return (
+        keys[:n],
+        vals[:n],
+        valid[:n],
+        truncated[:n],
+        lookup.ScanCursor(cursor.khi[:n], cursor.klo[:n], cursor.leaf[:n]),
+    )
 
 
 def _merge_ib_epilogue(
-    ib: InsertBuffers, khi, klo, kh, kl, vh, vl, cnt, visited, *, limit: int
+    ib: InsertBuffers, khi, klo, kh, kl, vh, vl, cnt, visited, next_leaf, *, limit: int
 ):
     """Merge insert-buffer entries of the visited leaves into the stitched
     scan results (newest wins, tombstones delete) — the DPA-side temp-buffer
-    merge of the paper, vectorised."""
+    merge of the paper, vectorised.  Also derives the continuation outputs:
+    ``truncated`` (chain continues at ``next_leaf`` AND the merged row
+    under-filled ``limit``) and the resume cursor.  The kernel's over-
+    collection bound (``limit + max_leaves*ib_cap``) guarantees a row that
+    under-fills after the merge really did emit every survivor of its
+    window, so the flag is exact."""
     B, L = kh.shape
     cap = ib.keys.shape[1]
     M = visited.shape[1]
@@ -233,4 +289,6 @@ def _merge_ib_epilogue(
     out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
     out_keys = jnp.stack([out_kh[:, :limit], out_kl[:, :limit]], axis=-1)
     out_vals = jnp.stack([out_vh[:, :limit], out_vl[:, :limit]], axis=-1)
-    return out_keys, out_vals, out_valid
+    truncated = (next_leaf >= 0) & (n_found < limit)
+    cursor = lookup.make_cursor(khi, klo, out_keys, n_found, next_leaf, truncated)
+    return out_keys, out_vals, out_valid, truncated, cursor

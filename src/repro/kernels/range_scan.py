@@ -41,6 +41,7 @@ def _range_kernel(
     out_vl_ref,
     out_n_ref,  # (Bt,)
     out_leaf_ref,  # (Bt, max_leaves) leaf ids visited (-1 pad) for the epilogue
+    out_next_ref,  # (Bt,) first UNwalked leaf (-1 = chain ended): continuation
     *,
     limit: int,
     max_leaves: int,
@@ -83,6 +84,9 @@ def _range_kernel(
         out_vh_ref[i, :] = ovh
         out_vl_ref[i, :] = ovl
         out_n_ref[i] = cnt
+        # ``leaf`` after the loop is the first leaf the bounded walk did NOT
+        # visit — the device-side continuation cursor (-1 = chain exhausted)
+        out_next_ref[i] = leaf
         return 0
 
     jax.lax.fori_loop(0, bt, lane, 0)
@@ -100,7 +104,10 @@ def range_pallas(
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, ...]:
     """Returns (keys_hi (B,L), keys_lo, vals_hi, vals_lo, n (B,),
-    visited_leaves (B, max_leaves))."""
+    visited_leaves (B, max_leaves), next_leaf (B,)).  ``next_leaf`` is the
+    first unwalked leaf (-1 when the chain ended inside the window) — the
+    epilogue combines it with the merged count to derive the ``truncated``
+    flag and resume cursor."""
     B = khi.shape[0]
     assert B % block_requests == 0
     assert limit >= 1, "0-width output blocks break the kernel; ops.range_scan guards limit=0"
@@ -132,6 +139,7 @@ def range_pallas(
             tile2(limit),
             tile1,
             tile2(max_leaves),
+            tile1,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, limit), jnp.uint32),
@@ -140,6 +148,7 @@ def range_pallas(
             jax.ShapeDtypeStruct((B, limit), jnp.uint32),
             jax.ShapeDtypeStruct((B,), jnp.int32),
             jax.ShapeDtypeStruct((B, max_leaves), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
     )(

@@ -13,8 +13,9 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.core import hotcache, lookup
+from repro.core import hotcache, lookup, scancache
 from repro.core.hotcache import CacheConfig
+from repro.core.scancache import ScanCacheConfig
 
 
 def get(tree, ib, khi, klo, *, depth, eps_inner, eps_leaf):
@@ -29,8 +30,14 @@ def cache_probe(cache, tid, khi, klo, *, cfg: CacheConfig):
     return hotcache.probe(cache, tid, khi, klo, cfg=cfg)
 
 
+def scan_anchor_probe(cache, tid, khi, klo, *, cfg: ScanCacheConfig):
+    """Oracle for kernels.cache_probe.anchor_probe_pallas."""
+    return scancache.probe(cache, tid, khi, klo, cfg=cfg)
+
+
 def range_scan(tree, ib, khi, klo, *, depth, eps_inner, limit, max_leaves):
-    """Oracle for the full RANGE op (kernel + ib-merge epilogue)."""
+    """Oracle for the full RANGE op (kernel + ib-merge epilogue), incl. the
+    continuation outputs: (keys, vals, valid, truncated, cursor)."""
     return lookup.range_batch(
         tree,
         ib,
@@ -40,4 +47,11 @@ def range_scan(tree, ib, khi, klo, *, depth, eps_inner, limit, max_leaves):
         eps_inner=eps_inner,
         limit=limit,
         max_leaves=max_leaves,
+    )
+
+
+def range_scan_from(tree, ib, start_leaf, khi, klo, *, limit, max_leaves):
+    """Oracle for the anchor-start / continuation RANGE (descent skipped)."""
+    return lookup.range_batch_from(
+        tree, ib, start_leaf, khi, klo, limit=limit, max_leaves=max_leaves
     )

@@ -8,6 +8,10 @@ LM decode loop, batched.
     PYTHONPATH=src python -m repro.launch.serve --kv --partition hash --shards 4
     PYTHONPATH=src python -m repro.launch.serve --kv --partition range --shards 4
 
+    # RANGE knobs: scan-anchor cache on/off, leaves per continuation round
+    PYTHONPATH=src python -m repro.launch.serve --kv --no-scan-cache
+    PYTHONPATH=src python -m repro.launch.serve --kv --max-leaves 2
+
     # LM decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
 """
@@ -28,15 +32,23 @@ from repro.serving.engine import Engine, ServeConfig
 
 
 def serve_kv(args):
+    from repro.core.scancache import ScanCacheConfig
+
     keys = sparse(args.n_keys, seed=1)
     vals = keys ^ np.uint64(0xC0FFEE)
+    scan_cfg = ScanCacheConfig() if args.scan_cache else None
     if args.partition == "single":
-        store = DPAStore(keys, vals, TreeConfig())
+        store = DPAStore(keys, vals, TreeConfig(), scan_cache_cfg=scan_cfg)
     else:
         from repro.distributed.kvshard import ShardedDPAStore
 
         store = ShardedDPAStore(
-            keys, vals, args.shards, TreeConfig(), partition=args.partition
+            keys,
+            vals,
+            args.shards,
+            TreeConfig(),
+            partition=args.partition,
+            scan_cache_cfg=scan_cfg,
         )
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
@@ -50,8 +62,9 @@ def serve_kv(args):
             assert found.all()
         elif kind == 2:  # UPDATE
             store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
-        else:  # RANGE (scatter-gather on the range tier; broadcast on hash)
-            store.range(q[:64], limit=10)
+        else:  # RANGE (scatter-gather on the range tier; broadcast on hash;
+            # Zipf-repeated start keys exercise the scan-anchor cache)
+            store.range(q[:64], limit=10, max_leaves=args.max_leaves)
         served += args.wave_size
     dt = time.time() - t0
     print(
@@ -60,15 +73,30 @@ def serve_kv(args):
         f"BlueField-3 model numbers)"
     )
     if args.partition == "single":
-        print(f"[serve-kv] stats: {store.stats}")
+        st = store.stats
+        hit = st.scan_hits / max(st.scan_probes, 1)
+        print(
+            f"[serve-kv] scan-anchor cache: {st.scan_hits}/{st.scan_probes} "
+            f"descents skipped ({100*hit:.0f}% hit), "
+            f"{st.scan_invalidated} anchors invalidated by restitch, "
+            f"{st.range_reissue_rounds} continuation re-issue rounds"
+        )
+        print(f"[serve-kv] stats: {st}")
     else:
         fan = store.range_subqueries / max(store.range_requests, 1)
+        tot = store.stats_totals()
+        hit = tot.get("scan_hits", 0) / max(tot.get("scan_probes", 0), 1)
         print(
             f"[serve-kv] partition={args.partition} shards={args.shards} "
-            f"range fan-out={fan:.2f} sub-queries/request "
+            f"range fan-out={fan:.2f} sub-queries/request, "
+            f"{store.range_reissues} truncated-shard re-issues "
             f"(range tier: owner+successors; hash tier: always {args.shards})"
         )
-        print(f"[serve-kv] shard stats totals: {store.stats_totals()}")
+        print(
+            f"[serve-kv] scan-anchor cache: {100*hit:.0f}% descent-skip hit "
+            f"rate across shards"
+        )
+        print(f"[serve-kv] shard stats totals: {tot}")
 
 
 def serve_lm(args):
@@ -103,6 +131,21 @@ def main(argv=None):
         return iv
 
     ap.add_argument("--shards", type=positive_int, default=4)
+    ap.add_argument(
+        "--scan-cache",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="scan-anchor cache: repeated RANGE(k_min) waves skip the "
+        "learned-index descent and start at the cached leaf "
+        "(--no-scan-cache disables; invalidated automatically on restitch)",
+    )
+    ap.add_argument(
+        "--max-leaves",
+        type=positive_int,
+        default=4,
+        help="leaves per RANGE wave; truncated scans resume from their "
+        "continuation cursor, so results are exact for any value",
+    )
     ap.add_argument("--n-keys", type=int, default=100_000)
     ap.add_argument("--waves", type=int, default=16)
     ap.add_argument("--wave-size", type=int, default=1024)

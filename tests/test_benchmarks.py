@@ -105,6 +105,44 @@ def test_fig16_smoke_rows_cover_shards_and_scan_lengths():
         assert model["fig16/hash/shards4/limit10"] >= model["fig16/hash/shards2/limit10"]
 
 
+@pytest.mark.slow
+def test_fig17_smoke_rows_cover_modes_and_report_hits():
+    """The scan-anchor sweep must emit schema-valid rows for both cache
+    modes x >= 2 skews x 2 scan lengths, report a positive measured hit
+    rate under Zipf >= 0.9, and the derived model must show the cache
+    improving short-scan throughput at that skew."""
+    from benchmarks import common, fig17_scan_cache
+    from benchmarks.run import (
+        anchor_cache_hit_rates,
+        validate_fig17_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig17_scan_cache.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig17_coverage(rows)
+    hits = anchor_cache_hit_rates(rows)
+    model = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        fields = dict(kv.split("=") for kv in derived.split(";"))
+        model[name] = float(fields["model_mops"])
+    for alpha in ("zipf0.9", "zipf0.99"):
+        assert hits[f"fig17/cache/{alpha}/limit10"] > 0.0, hits
+        assert (
+            model[f"fig17/cache/{alpha}/limit10"]
+            > model[f"fig17/nocache/{alpha}/limit10"]
+        ), (alpha, model)
+
+
 def test_roofline_reader_runs_if_results_exist():
     from benchmarks import roofline
 

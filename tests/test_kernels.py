@@ -131,7 +131,7 @@ def test_range_kernel_matches_ref(n, churn, limit, max_leaves):
     )
     l = split_u64(starts)
     kh, kl = jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
-    k1, v1, ok1 = ops.range_scan(
+    k1, v1, ok1, t1, c1 = ops.range_scan(
         st.tree,
         st.ib,
         kh,
@@ -143,7 +143,7 @@ def test_range_kernel_matches_ref(n, churn, limit, max_leaves):
         impl="pallas_interpret",
         block_requests=35,
     )
-    k2, v2, ok2 = ref.range_scan(
+    k2, v2, ok2, t2, c2 = ref.range_scan(
         st.tree,
         st.ib,
         kh,
@@ -157,3 +157,74 @@ def test_range_kernel_matches_ref(n, churn, limit, max_leaves):
     m = np.asarray(ok2)
     np.testing.assert_array_equal(np.asarray(k1)[m], np.asarray(k2)[m])
     np.testing.assert_array_equal(np.asarray(v1)[m], np.asarray(v2)[m])
+    # continuation outputs: truncated flag + resume cursor, bit-identical
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(c1.leaf), np.asarray(c2.leaf))
+    tm = np.asarray(t2)
+    np.testing.assert_array_equal(np.asarray(c1.khi)[tm], np.asarray(c2.khi)[tm])
+    np.testing.assert_array_equal(np.asarray(c1.klo)[tm], np.asarray(c2.klo)[tm])
+
+
+def test_range_kernel_anchor_start_matches_ref():
+    """Anchor-start RANGE (descent skipped): kernel == ref when both start
+    at the same cached/continuation leaf, incl. dead -1 lanes."""
+    from repro.core import lookup
+
+    st, keys, rng = _mk(2000, sparse, churn=90, seed=13)
+    starts = rng.choice(keys, 24)
+    l = split_u64(starts)
+    kh, kl = jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+    anchor = lookup.traverse(
+        st.tree, kh, kl, depth=st.depth, eps_inner=st.cfg.eps_inner
+    )
+    anchor = jnp.where(jnp.arange(24) % 5 == 4, -1, anchor)  # dead lanes
+    outs1 = ops.range_scan(
+        st.tree, st.ib, kh, kl,
+        depth=st.depth, eps_inner=st.cfg.eps_inner,
+        limit=8, max_leaves=3, impl="pallas_interpret",
+        block_requests=24, start_leaf=anchor,
+    )
+    outs2 = ref.range_scan_from(
+        st.tree, st.ib, anchor, kh, kl, limit=8, max_leaves=3
+    )
+    for a, b in zip(outs1[:4], outs2[:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(outs1[4].leaf), np.asarray(outs2[4].leaf)
+    )
+    dead = np.arange(24) % 5 == 4
+    assert not np.asarray(outs2[2])[dead].any(), "dead lanes return empty"
+    assert not np.asarray(outs2[3])[dead].any(), "dead lanes never truncate"
+
+
+@pytest.mark.parametrize("n_threads,n_buckets", [(8, 24), (176, 24), (16, 8)])
+def test_anchor_probe_kernel_matches_ref(n_threads, n_buckets):
+    from repro.core import scancache
+    from repro.core.scancache import ScanCacheConfig
+
+    cfg = ScanCacheConfig(n_threads=n_threads, n_buckets=n_buckets)
+    cache = scancache.make_cache(cfg)
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 2**63, 300, dtype=np.uint64)
+    leaves = rng.integers(0, 512, 300).astype(np.int32)
+    l = split_u64(keys)
+    kh, kl = jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    for w in range(4):
+        cache = scancache.admit(
+            cache, tid, kh, kl, jnp.asarray(leaves), jnp.ones(300, bool),
+            cfg=cfg, wave=w,
+        )
+    probes = np.concatenate([keys[:100], rng.integers(0, 2**63, 60, dtype=np.uint64)])
+    pl_ = split_u64(probes)
+    ph, pl2 = jnp.asarray(pl_[:, 0]), jnp.asarray(pl_[:, 1])
+    ptid = hotcache.steer(ph, pl2, cfg.n_threads)
+    h1, l1 = ops.scan_anchor_probe(
+        cache, ptid, ph, pl2, cfg=cfg, impl="pallas_interpret"
+    )
+    h2, l2 = ref.scan_anchor_probe(cache, ptid, ph, pl2, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(h2, l1, 0)), np.asarray(jnp.where(h2, l2, 0))
+    )
+    assert bool(jnp.any(h2)), "admitted keys must probe back"

@@ -1,12 +1,14 @@
 """Range-partitioned shard tier: boundary fitting, scatter-gather RANGE ==
-single-store oracle, device wave == host orchestration, RETRY on overflow.
+single-store oracle, device wave == host orchestration, RETRY on overflow,
+and the continuation machinery (truncated flag + resume cursor + precise
+re-issue) with and without the scan-anchor cache.
 
 The oracle is twofold: a single ``DPAStore`` over the same pairs (the
 sharded tier must be *bit-identical* to it) and a plain sorted numpy array
 (first ``limit`` keys >= k_min), which also pins the single store down.
-``max_leaves`` is always sized so the bounded per-shard leaf walk covers
-``limit`` — truncation semantics are exercised separately in the store
-tests, not conflated with routing.
+Continuation makes results exact for ANY ``max_leaves`` >= 1, so the
+sweeps deliberately include under-sized walks (max_leaves=1 on limit=10)
+that force truncation and re-issue rounds through every layer.
 """
 
 import numpy as np
@@ -200,7 +202,7 @@ def _wave_fixture(n_shards=4, n_keys=4000, W=16):
 def test_range_wave_emulated_matches_oracle():
     keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
     W = qs.shape[1]
-    kh, kl, vh, vl, valid, ok = rangeshard.range_wave_emulated(
+    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
         tree,
         ib,
         jnp.asarray(limbs[..., 0]),
@@ -213,6 +215,7 @@ def test_range_wave_emulated_matches_oracle():
         max_leaves=8,
     )
     assert bool(jnp.all(ok)), "ample capacity: no RETRY expected"
+    assert not bool(jnp.any(trunc)), "max_leaves=8 covers limit=10: complete"
     got_k, got_v = _join(kh, kl), _join(vh, vl)
     va = np.asarray(valid)
     sk = np.sort(keys)
@@ -235,7 +238,7 @@ def test_range_wave_emulated_matches_oracle():
 def test_range_wave_overflow_reports_retry_never_corrupts():
     keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
     W = qs.shape[1]
-    kh, kl, vh, vl, valid, ok = rangeshard.range_wave_emulated(
+    kh, kl, vh, vl, valid, ok, _ = rangeshard.range_wave_emulated(
         tree,
         ib,
         jnp.asarray(limbs[..., 0]),
@@ -308,7 +311,7 @@ def test_range_wave_sharded_runs_on_one_device_mesh():
     )
     qs = np.sort(np.random.default_rng(1).choice(keys, 8)).reshape(1, 8)
     limbs = split_u64(qs)
-    kh, kl, vh, vl, valid, ok = fn(
+    kh, kl, vh, vl, valid, ok, _ = fn(
         tree, ib, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
     )
     assert bool(jnp.all(ok))
@@ -374,6 +377,210 @@ def test_sharded_range_limit_zero_and_empty():
 
 
 # ---------------------------------------------------------------------------
+# device-side continuation: truncated flag + resume cursor, re-issue rounds
+# ---------------------------------------------------------------------------
+
+
+def test_range_truncation_and_resume_cursor(shared_ro_store):
+    """max_rounds=1 with an under-sized walk must return truncated rows
+    whose cursors, when resumed, reconstruct the exact oracle answer."""
+    store, oracle = shared_ro_store
+    keys = np.sort(np.array(sorted(oracle.keys()), dtype=np.uint64))
+    q = np.array([keys.min(), keys[len(keys) // 2]], dtype=np.uint64)
+    limit = 140  # > SEG_CAP=128: a 1-leaf walk can never fill this
+    rk, rv, rc, trunc, cur_leaf, cur_key = store.range_with_state(
+        q, limit=limit, max_leaves=1, max_rounds=1
+    )
+    exp0 = _np_oracle(keys, q[0], limit)
+    assert trunc.all(), "1-leaf walk on a 140-wide scan must truncate"
+    for i in range(q.size):
+        exp = _np_oracle(keys, q[i], limit)
+        assert (rk[i, : rc[i]] == exp[: rc[i]]).all()  # exact prefix
+        if trunc[i]:
+            assert rc[i] < limit and cur_leaf[i] >= 0
+            assert cur_key[i] == rk[i, rc[i] - 1]  # last emitted key
+        else:
+            assert cur_leaf[i] == -1
+    # resume from the cursors: the suffix completes the oracle answer
+    m = np.where(trunc)[0]
+    rk2, rv2, rc2, trunc2, _, _ = store.range_with_state(
+        q[m], limit=limit, max_leaves=64, start_leaves=cur_leaf[m]
+    )
+    for j, i in enumerate(m):
+        exp = _np_oracle(keys, q[i], limit)
+        glued = np.concatenate([rk[i, : rc[i]], rk2[j, : rc2[j]]])[:limit]
+        assert (glued == exp).all()
+    assert exp0.size == limit  # sanity: the oracle really had 40 results
+
+
+def test_range_small_max_leaves_loops_to_exact(store_factory):
+    """.range() with max_leaves=1 must equal the oracle bitwise (the facade
+    loops until limit or exhaustion) and must account its re-issue rounds."""
+    store, oracle = store_factory(cache_cfg=None)
+    keys = np.sort(np.array(sorted(oracle.keys()), dtype=np.uint64))
+    rng = np.random.default_rng(5)
+    q = np.concatenate(
+        [rng.choice(keys, 16), np.array([keys.min(), keys.max()], np.uint64)]
+    )
+    base = store.stats.range_reissue_rounds
+    rk, rv, rc = store.range(q, limit=48, max_leaves=1)
+    assert store.stats.range_reissue_rounds > base, "must have re-issued"
+    assert store.stats.range_truncated == 0, "exhaustive loop: none left over"
+    for i, k in enumerate(q):
+        exp = _np_oracle(keys, k, 48)
+        assert rc[i] == exp.size
+        assert (rk[i, : exp.size] == exp).all()
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("max_leaves", [1, 2])
+def test_sharded_range_truncation_reissue_matches_oracle(n_shards, max_leaves):
+    """Sharded RANGE with under-sized walks: re-issue only to truncated
+    shards, results bitwise-identical to the single store and the numpy
+    oracle."""
+    keys = sparse(3000, seed=21)
+    vals = keys ^ np.uint64(0xBEEF)
+    single = DPAStore(keys, vals, cache_cfg=None)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None
+    )
+    rng = np.random.default_rng(n_shards)
+    q = np.concatenate(
+        [
+            rng.choice(keys, 16),
+            rng.integers(0, 2**63, 8, dtype=np.uint64),
+            _boundary_queries(keys, sharded.boundaries),
+        ]
+    )
+    limit = 140 if max_leaves == 1 else 24  # 140 > SEG_CAP: must truncate
+    rk1, rv1, rc1 = single.range(q, limit=limit, max_leaves=max_leaves)
+    rk2, rv2, rc2 = sharded.range(q, limit=limit, max_leaves=max_leaves)
+    assert (rc1 == rc2).all()
+    assert (rk1 == rk2).all() and (rv1 == rv2).all()
+    if max_leaves == 1:
+        assert sharded.range_reissues > 0, "140 results never fit one leaf"
+    sk = np.sort(keys)
+    for i, k in enumerate(q):
+        exp = _np_oracle(sk, k, limit)
+        assert rc2[i] == exp.size
+        assert (rk2[i, : exp.size] == exp).all()
+
+
+def test_range_wave_truncated_flag_distinguishes_exhausted():
+    """Device wave with an under-sized walk: rows flagged truncated are
+    exactly the under-filled rows with key space remaining; under-filled
+    untruncated rows really exhausted the key space."""
+    keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
+    W = qs.shape[1]
+    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
+        tree,
+        ib,
+        jnp.asarray(limbs[..., 0]),
+        jnp.asarray(limbs[..., 1]),
+        sharded.boundaries,
+        cap=W,
+        depth=depth,
+        eps_inner=4,
+        limit=140,  # > SEG_CAP=128: a 1-leaf walk can never fill
+        max_leaves=1,
+    )
+    okn, tn, va = np.asarray(ok), np.asarray(trunc), np.asarray(valid)
+    got_k = _join(kh, kl)
+    sk = np.sort(keys)
+    assert tn.any(), "limit=140 over 1-leaf walks must truncate somewhere"
+    for i in range(qs.shape[0]):
+        for j in range(W):
+            if not okn[i, j]:
+                continue
+            exp = _np_oracle(sk, qs[i, j], 140)
+            got = int(va[i, j].sum())
+            # always an exact prefix of the oracle
+            assert (got_k[i, j][:got] == exp[:got]).all()
+            if tn[i, j]:
+                assert got < 140, "truncated implies under-filled"
+            else:
+                assert got == exp.size, (i, j)  # complete or exhausted
+
+
+# ---------------------------------------------------------------------------
+# scan-anchor cache: cached RANGE == uncached RANGE == oracle, across
+# flush cycles, shard counts and truncation rounds
+# ---------------------------------------------------------------------------
+
+
+def test_cached_range_equals_uncached_across_flush_cycles():
+    from repro.core.scancache import ScanCacheConfig
+
+    keys = sparse(2500, seed=31)
+    vals = keys ^ np.uint64(0x1CE)
+    cfg = TreeConfig(ib_cap=8, growth=20.0)
+    cached = DPAStore(
+        keys, vals, cfg, cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    plain = DPAStore(keys, vals, cfg, cache_cfg=None, scan_cache_cfg=None)
+    rng = np.random.default_rng(6)
+    q = np.concatenate(
+        [rng.choice(keys, 24), rng.integers(0, 2**63, 8, dtype=np.uint64)]
+    )
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    for round_ in range(3):
+        for ml in (1, 8):
+            r1 = cached.range(q, limit=10, max_leaves=ml)
+            r2 = plain.range(q, limit=10, max_leaves=ml)
+            for a, b in zip(r1, r2):
+                assert (a == b).all(), (round_, ml)
+        sk = np.sort(np.array(sorted(live.keys()), dtype=np.uint64))
+        rk, _, rc = cached.range(q, limit=10, max_leaves=4)
+        for i, k in enumerate(q):
+            exp = _np_oracle(sk, k, 10)
+            assert rc[i] == exp.size and (rk[i, : exp.size] == exp).all()
+        # churn + flush: restitch invalidates anchors; next round re-checks
+        newk = np.setdiff1d(
+            rng.integers(0, 2**63, 150, dtype=np.uint64),
+            np.array(sorted(live.keys()), dtype=np.uint64),
+        )
+        dels = rng.choice(np.array(sorted(live.keys()), np.uint64), 40)
+        for st in (cached, plain):
+            st.put(newk, newk + np.uint64(3))
+            st.delete(dels)
+            st.flush()
+        live.update({int(k): int(k) + 3 for k in newk})
+        for k in dels.tolist():
+            live.pop(k, None)
+    assert cached.stats.scan_hits > 0, "repeated waves must hit"
+    assert cached.stats.scan_invalidated > 0, "restitch must invalidate"
+
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_cached_range_matches_uncached(n_shards):
+    from repro.core.scancache import ScanCacheConfig
+
+    keys = dense4x(2000, seed=13)
+    vals = keys ^ np.uint64(0xF00D)
+    cached = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    plain = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None,
+        scan_cache_cfg=None,
+    )
+    rng = np.random.default_rng(8)
+    q = np.concatenate(
+        [rng.choice(keys, 20), _boundary_queries(keys, cached.boundaries)]
+    )
+    for _ in range(2):  # second pass runs against warm anchor caches
+        for ml in (1, 4):
+            r1 = cached.range(q, limit=12, max_leaves=ml)
+            r2 = plain.range(q, limit=12, max_leaves=ml)
+            for a, b in zip(r1, r2):
+                assert (a == b).all()
+    tot = cached.stats_totals()
+    assert tot["scan_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
 # property sweep (hypothesis; the seeded shim runs this hermetically)
 # ---------------------------------------------------------------------------
 
@@ -384,6 +591,7 @@ def test_range_scatter_gather_property(data):
     n_keys = data.draw(st.integers(min_value=40, max_value=160))
     n_shards = data.draw(st.sampled_from([2, 3, 4]))
     limit = data.draw(st.sampled_from([1, 5, 10]))
+    max_leaves = data.draw(st.sampled_from([1, 4, 16]))
     raw = data.draw(
         st.lists(
             st.integers(min_value=0, max_value=2**63),
@@ -402,7 +610,7 @@ def test_range_scatter_gather_property(data):
         + [data.draw(st.integers(min_value=0, max_value=2**63)) for _ in range(4)],
         dtype=np.uint64,
     )
-    rk, rv, rc = sharded.range(queries, limit=limit, max_leaves=16)
+    rk, rv, rc = sharded.range(queries, limit=limit, max_leaves=max_leaves)
     for i, k in enumerate(queries):
         exp = _np_oracle(keys, k, limit)
         assert rc[i] == exp.size

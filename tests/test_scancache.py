@@ -1,0 +1,237 @@
+"""Scan-anchor cache: probe/admit/invalidate semantics, the stale-anchor
+hazard (a restitched leaf chain must never serve a cached-anchor scan), and
+a property sweep over admit/invalidate interleavings.
+
+The safety argument under test: an anchor is (exact k_min -> leaf id where
+the descent bottomed out).  Buffered writes are visible through a cached
+anchor (the walk merges insert buffers), so UPDATE/DELETE need no per-key
+invalidation — but a patch cycle that REPLACES the leaf does: the old row
+first serves stale content from epoch quarantine, then arbitrary content
+after reclaim.  Invalidation is wired through the epoch manager's
+``on_defer`` listener, so whatever path frees a leaf (batched flush cycle,
+per-leaf oracle stream, write-triggered drain) drops its anchors before the
+cycle returns.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig, hotcache, scancache
+from repro.core.datasets import sparse
+from repro.core.keys import split_u64
+from repro.core.scancache import ScanCacheConfig
+
+
+def _limbs(keys):
+    l = split_u64(np.asarray(keys, dtype=np.uint64))
+    return jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# unit: probe / admit / invalidate
+# ---------------------------------------------------------------------------
+
+
+def test_admit_then_probe_roundtrip():
+    cfg = ScanCacheConfig(n_threads=8)
+    cache = scancache.make_cache(cfg)
+    keys = np.random.default_rng(0).integers(0, 2**63, 200, dtype=np.uint64)
+    leaves = np.arange(200, dtype=np.int32) % 97
+    kh, kl = _limbs(keys)
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    cache = scancache.admit(
+        cache, tid, kh, kl, jnp.asarray(leaves), jnp.ones(200, bool), cfg=cfg
+    )
+    hit, leaf = scancache.probe(cache, tid, kh, kl, cfg=cfg)
+    hitn, leafn = np.asarray(hit), np.asarray(leaf)
+    assert hitn.any()
+    # every hit returns the exact admitted anchor (collisions detected)
+    assert (leafn[hitn] == leaves[hitn]).all()
+    # unknown keys never hit with a wrong anchor
+    other = np.random.default_rng(1).integers(0, 2**63, 64, dtype=np.uint64)
+    other = np.setdiff1d(other, keys)
+    oh, ol = _limbs(other)
+    otid = hotcache.steer(oh, ol, cfg.n_threads)
+    h2, l2 = scancache.probe(cache, otid, oh, ol, cfg=cfg)
+    assert not bool(jnp.any(h2)), "exact-key cache: misses stay misses"
+
+
+def test_invalidate_leaves_drops_only_matching_anchors():
+    cfg = ScanCacheConfig(n_threads=4)
+    cache = scancache.make_cache(cfg)
+    keys = np.arange(1, 121, dtype=np.uint64) * np.uint64(7919)
+    leaves = (np.arange(120) % 10).astype(np.int32)
+    kh, kl = _limbs(keys)
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    cache = scancache.admit(
+        cache, tid, kh, kl, jnp.asarray(leaves), jnp.ones(120, bool), cfg=cfg
+    )
+    freed = jnp.asarray(np.array([3, 7, -1, -1], dtype=np.int32))
+    cache, n = scancache.invalidate_leaves(cache, freed)
+    assert int(n) > 0
+    hit, leaf = scancache.probe(cache, tid, kh, kl, cfg=cfg)
+    hitn, leafn = np.asarray(hit), np.asarray(leaf)
+    stale = np.isin(leaves, [3, 7])
+    assert not hitn[stale].any(), "anchors on freed leaves must be dropped"
+    assert hitn[~stale].any(), "unrelated anchors survive"
+    assert (leafn[hitn] == leaves[hitn]).all()
+
+
+def test_admit_shift_throttles_admission():
+    keys = np.random.default_rng(3).integers(0, 2**63, 400, dtype=np.uint64)
+    kh, kl = _limbs(keys)
+    rates = []
+    for shift in (0, 2):
+        cfg = ScanCacheConfig(n_threads=64, admit_shift=shift)
+        cache = scancache.make_cache(cfg)
+        tid = hotcache.steer(kh, kl, cfg.n_threads)
+        cache = scancache.admit(
+            cache, tid, kh, kl,
+            jnp.zeros(400, jnp.int32), jnp.ones(400, bool), cfg=cfg,
+        )
+        hit, _ = scancache.probe(cache, tid, kh, kl, cfg=cfg)
+        rates.append(float(jnp.mean(hit.astype(jnp.float32))))
+    # shift=0 admits everything (same-wave bucket collisions cost a few %);
+    # shift=2 samples ~1/4 of the stream
+    assert rates[0] > 0.85, rates
+    assert rates[1] < rates[0] / 2, rates
+
+
+# ---------------------------------------------------------------------------
+# store-level: the stale-anchor pin
+# ---------------------------------------------------------------------------
+
+
+def _oracle_range(live, k_min, limit):
+    sk = np.sort(np.array(sorted(live.keys()), dtype=np.uint64))
+    i = np.searchsorted(sk, k_min)
+    return sk[i : i + limit]
+
+
+@pytest.mark.parametrize("batched_patch", [True, False])
+def test_restitched_chain_never_serves_stale_anchor(batched_patch):
+    """Admit anchors, then patch exactly the leaves under them (filling
+    their insert buffers forces the drain) — the post-restitch scan must see
+    every new key and no deleted one, and the invalidation counter must
+    show the anchors were dropped rather than lucky."""
+    keys = sparse(1500, seed=41)
+    vals = keys ^ np.uint64(0xD1)
+    cfg = TreeConfig(ib_cap=4, growth=20.0)
+    store = DPAStore(
+        keys, vals, cfg, cache_cfg=None, batched_patch=batched_patch,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    q = keys[::101].copy()  # scan starts -> anchors admitted
+    r1 = store.range(q, limit=8, max_leaves=4)
+    assert store.stats.scan_probes > 0
+    # write INTO the scanned regions: neighbours of each q key, forcing the
+    # leaves holding the anchors to fill and restitch
+    rng = np.random.default_rng(9)
+    newk = np.unique(
+        np.concatenate([q + np.uint64(d) for d in (1, 2, 3, 4, 5)])
+    )
+    newk = np.setdiff1d(newk, keys)
+    store.put(newk, newk ^ np.uint64(0xD1))
+    live.update({int(k): int(k) ^ 0xD1 for k in newk})
+    dels = q[: q.size // 2]
+    store.delete(dels)
+    for k in dels.tolist():
+        live.pop(int(k), None)
+    store.flush()
+    assert store.stats.scan_invalidated > 0, "restitch must drop anchors"
+    rk, rv, rc = store.range(q, limit=8, max_leaves=4)
+    for i, k in enumerate(q):
+        exp = _oracle_range(live, k, 8)
+        assert rc[i] == exp.size, (i, hex(int(k)))
+        assert (rk[i, : exp.size] == exp).all()
+        assert all(int(rv[i, j]) == live[int(rk[i, j])] for j in range(exp.size))
+
+
+def test_buffered_writes_visible_through_cached_anchor():
+    """Between admit and flush, buffered PUT/DELETE must be visible through
+    a cache-hit scan (the walk merges insert buffers; no invalidation has
+    happened yet)."""
+    keys = sparse(1200, seed=5)
+    vals = keys ^ np.uint64(0x99)
+    store = DPAStore(
+        keys, vals, TreeConfig(ib_cap=16, growth=16.0), cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    q = keys[::97].copy()
+    store.range(q, limit=6, max_leaves=4)  # admit
+    hits_before = store.stats.scan_hits
+    newk = np.setdiff1d(q + np.uint64(1), keys)[:8]
+    store.put(newk, newk)  # buffered, not flushed (ib_cap=16 absorbs)
+    live.update({int(k): int(k) for k in newk})
+    rk, rv, rc = store.range(q, limit=6, max_leaves=4)
+    assert store.stats.scan_hits > hits_before, "second wave must hit"
+    for i, k in enumerate(q):
+        exp = _oracle_range(live, k, 6)
+        assert rc[i] == exp.size
+        assert (rk[i, : exp.size] == exp).all()
+
+
+# ---------------------------------------------------------------------------
+# property sweep: random admit/invalidate interleavings vs dict oracle
+# ---------------------------------------------------------------------------
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_scan_cache_interleaving_property(data):
+    """Random interleavings of PUT / DELETE / FLUSH / RANGE: the cached
+    store must stay bitwise-identical to an uncached twin and to the dict
+    oracle at every step — whatever admit/invalidate pattern emerges."""
+    n_keys = data.draw(st.integers(min_value=60, max_value=140))
+    raw = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=2**63),
+            min_size=n_keys,
+            max_size=n_keys,
+            unique=True,
+        )
+    )
+    keys = np.array(sorted(raw), dtype=np.uint64)
+    vals = keys ^ np.uint64(0x33)
+    cfg = TreeConfig(ib_cap=4, growth=24.0)
+    cached = DPAStore(
+        keys, vals, cfg, cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=4),
+    )
+    plain = DPAStore(keys, vals, cfg, cache_cfg=None, scan_cache_cfg=None)
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    pool = list(keys.tolist())
+    for _ in range(6):
+        op = data.draw(st.sampled_from(["put", "delete", "flush", "range"]))
+        if op == "put":
+            k = np.uint64(data.draw(st.integers(min_value=0, max_value=2**63)))
+            for s in (cached, plain):
+                s.put(np.array([k]), np.array([k ^ np.uint64(0x33)]))
+            live[int(k)] = int(k) ^ 0x33
+            pool.append(int(k))
+        elif op == "delete" and pool:
+            k = np.uint64(data.draw(st.sampled_from(pool)))
+            for s in (cached, plain):
+                s.delete(np.array([k]))
+            live.pop(int(k), None)
+        elif op == "flush":
+            cached.flush()
+            plain.flush()
+        else:
+            qs = np.array(
+                [data.draw(st.sampled_from(pool)) for _ in range(3)],
+                dtype=np.uint64,
+            )
+            ml = data.draw(st.sampled_from([1, 4]))
+            r1 = cached.range(qs, limit=5, max_leaves=ml)
+            r2 = plain.range(qs, limit=5, max_leaves=ml)
+            for a, b in zip(r1, r2):
+                assert (a == b).all()
+            for i, k in enumerate(qs):
+                exp = _oracle_range(live, k, 5)
+                assert r1[2][i] == exp.size
+                assert (r1[0][i, : exp.size] == exp).all()
