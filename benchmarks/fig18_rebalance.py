@@ -1,0 +1,122 @@
+"""Figure 18 (repo extension): range-tier RANGE retention under skewed
+insert storms — online rebalancing on vs off.
+
+The range tier's scatter-gather RANGE win (fig16) assumes the quantile
+boundaries still describe the stored keys.  This sweep breaks that
+assumption on purpose: a Zipf-0.99 (narrow hot band) or sequential
+(log-append) insert storm lands on a static tier's edge shard, after which
+scans over the freshly-inserted hot band all queue on that one shard —
+aggregate RANGE throughput collapses toward a single shard's.  With
+rebalancing on, the planner refits boundaries mid-storm and migrates
+slices, keeping both occupancy and the scan load spread flat.
+
+For each (mode, storm) cell we RUN the storm + scan waves on the CPU store
+and measure: the post-storm occupancy spread, the scatter-gather fan-out,
+and the *owner-load balance* of the hot-band query wave (mean/max of the
+per-shard owner histogram — the queue-imbalance factor).  ``derived``
+pushes those through the BlueField-3 RANGE model: aggregate MOPS =
+per-shard model MOPS x n_shards x balance / fanout, and ``retention`` is
+the post-storm aggregate over the pre-storm aggregate — the quantity the
+rebalance exists to defend (static mode degrades toward 1/n_shards).
+
+The smoke lane gates on both modes x both storms emitting with parseable
+``retention`` and ``spread_after`` fields, surfaced in ``BENCH_smoke.json``
+as ``rebalance_metrics``.
+"""
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.datasets import load, zipf_indices
+from repro.core.tree import TreeConfig
+from repro.distributed.kvshard import ShardedDPAStore
+from repro.distributed.rebalance import RebalanceConfig
+
+from . import common
+from .common import emit, time_op, wave
+
+N_SHARDS = 4
+STORMS = ("zipf0.99", "seq")
+LIMIT = 10
+MAX_LEAVES = 4
+WAVE = 512
+STORM_CAP = 20_000  # heaviest full-mode sweep size (smoke shrinks with n)
+
+
+def _storm_keys(kind: str, loaded: np.ndarray, n: int, rng) -> np.ndarray:
+    if kind == "seq":  # log-append past the loaded maximum
+        return loaded.max() + np.uint64(1) + np.arange(n, dtype=np.uint64) * np.uint64(3)
+    # zipf0.99: insert positions drawn Zipf over the loaded key space, so
+    # the mass lands in a narrow hot band (jitter keeps the keys distinct)
+    pos = zipf_indices(loaded.size, 3 * n, alpha=0.99, seed=18)
+    cand = loaded[pos] + rng.integers(1, 2048, 3 * n).astype(np.uint64)
+    return np.setdiff1d(np.unique(cand), loaded)[:n]
+
+
+def _aggregate_mops(store: ShardedDPAStore, q: np.ndarray, fanout: float) -> float:
+    """Aggregate RANGE MOPS for this query wave through the BlueField-3
+    model: the bottleneck is the most-loaded owner shard, so the aggregate
+    is that shard's model MOPS (at ITS depth — a storm-fattened shard is
+    also deeper) x n_shards x the owner-load balance (mean/max of the
+    owner histogram; 1/n_shards when one shard serves everything), divided
+    by the measured scatter-gather fan-out."""
+    h = np.bincount(store.route_np(q), minlength=store.n_shards)
+    hot = int(np.argmax(h))
+    balance = float(h.mean() / max(h.max(), 1))
+    per_shard = perfmodel.range_mops(store.shards[hot].depth, limit=LIMIT)
+    return per_shard * store.n_shards * balance / max(fanout, 1.0)
+
+
+def run():
+    rng = np.random.default_rng(18)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=18)
+    vals = keys ^ np.uint64(0x5EED)
+    storm_n = min(max(2 * w, n // 2), STORM_CAP)
+    for kind in STORMS:
+        storm = _storm_keys(kind, keys, storm_n, rng)
+        for mode in ("rebalance", "static"):
+            store = ShardedDPAStore(
+                keys,
+                vals,
+                N_SHARDS,
+                TreeConfig(growth=8.0),
+                cache_cfg=None,
+                partition="range",
+                rebalance_cfg=(
+                    RebalanceConfig(spread_trigger=1.25) if mode == "rebalance" else None
+                ),
+            )
+            # pre-storm baseline: scans over the loaded keys (balanced)
+            q0 = rng.choice(keys, w)
+            r0, s0 = store.range_requests, store.range_subqueries
+            store.range(q0, limit=LIMIT, max_leaves=MAX_LEAVES)
+            fan0 = (store.range_subqueries - s0) / max(store.range_requests - r0, 1)
+            mops0 = _aggregate_mops(store, q0, fan0)
+            # the storm, in 8 waves; rebalance mode re-plans between waves
+            for chunk in np.array_split(storm, 8):
+                store.put(chunk, chunk ^ np.uint64(0x5EED))
+                if mode == "rebalance":
+                    store.maybe_rebalance()
+            spread = store.occupancy_spread(flush=True)["ratio"]
+            # post-storm: scans chase the freshly-inserted hot band
+            q1 = rng.choice(storm, w)
+            r0, s0 = store.range_requests, store.range_subqueries
+            t = time_op(
+                store.range, q1, LIMIT, MAX_LEAVES, repeats=1
+            ) / w
+            fan1 = (store.range_subqueries - s0) / max(store.range_requests - r0, 1)
+            mops1 = _aggregate_mops(store, q1, fan1)
+            retention = mops1 / max(mops0, 1e-9)
+            emit(
+                f"fig18/{mode}/{kind}",
+                t * 1e6,
+                f"model_mops={mops1:.1f};retention={retention:.2f};"
+                f"spread_after={spread:.2f};fanout={fan1:.2f};"
+                f"rebalances={store.rebalances};migrated={store.migrated_keys}",
+            )
+
+
+if __name__ == "__main__":
+    run()

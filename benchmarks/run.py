@@ -81,6 +81,58 @@ def validate_fig17_coverage(rows) -> list:
     return problems
 
 
+def derived_fields(derived: str) -> dict:
+    """Parse a row's ``derived`` column (``k=v;k=v;...``) into a dict —
+    the one shared reader for every coverage gate / metric extractor."""
+    return dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+
+
+def validate_fig18_coverage(rows) -> list:
+    """The rebalance sweep must cover both modes x >= 2 storm shapes (rows
+    are ``fig18/<mode>/<storm>``) and every row must carry parseable
+    ``retention`` and ``spread_after`` derived fields — the two quantities
+    the online-rebalance claim rests on."""
+    problems = []
+    for mode in ("rebalance", "static"):
+        storms = set()
+        for row in rows:
+            name, _, derived = row.split(",", 2)
+            parts = name.split("/")
+            if len(parts) == 3 and parts[0] == "fig18" and parts[1] == mode:
+                storms.add(parts[2])
+                fields = derived_fields(derived)
+                for key in ("retention", "spread_after"):
+                    try:
+                        float(fields.get(key, ""))
+                    except ValueError:
+                        problems.append(f"{name}: missing/bad {key} field")
+        if len(storms) < 2:
+            problems.append(
+                f"fig18/{mode}: need >= 2 storm shapes, got {sorted(storms)}"
+            )
+    return problems
+
+
+def rebalance_metrics(rows) -> dict:
+    """Measured occupancy spread + range-MOPS retention per fig18 cell —
+    surfaced in the smoke artifact so the perf trajectory captures how much
+    of the scatter-gather advantage survives a skew storm."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig18/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            out[name] = {
+                "retention": float(fields["retention"]),
+                "spread_after": float(fields["spread_after"]),
+            }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
 def anchor_cache_hit_rates(rows) -> dict:
     """Measured scan-anchor hit rate per fig17 cache cell (parsed from the
     ``hit=`` field of the derived column) — surfaced in the smoke artifact
@@ -135,6 +187,7 @@ def main(argv=None) -> None:
         fig15_ycsb,
         fig16_range,
         fig17_scan_cache,
+        fig18_rebalance,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -153,6 +206,7 @@ def main(argv=None) -> None:
         ("fig15_ycsb", fig15_ycsb),
         ("fig16_range", fig16_range),
         ("fig17_scan_cache", fig17_scan_cache),
+        ("fig18_rebalance", fig18_rebalance),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -175,6 +229,8 @@ def main(argv=None) -> None:
             problems += validate_fig16_coverage(common.ROWS)
         if "fig17_scan_cache" not in failures:
             problems += validate_fig17_coverage(common.ROWS)
+        if "fig18_rebalance" not in failures:
+            problems += validate_fig18_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -184,6 +240,7 @@ def main(argv=None) -> None:
             "module_seconds": timings,
             "failed_modules": failures,
             "anchor_cache_hit_rates": anchor_cache_hit_rates(common.ROWS),
+            "rebalance_metrics": rebalance_metrics(common.ROWS),
         }
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=2)

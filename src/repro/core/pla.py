@@ -26,7 +26,7 @@ path in tests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -153,6 +153,45 @@ def fit_boundaries(keys: np.ndarray, n_parts: int) -> np.ndarray:
         )
     ranks = (np.arange(1, n_parts, dtype=np.int64) * keys.size) // n_parts
     return keys[ranks].astype(np.uint64)
+
+
+def refit_boundaries(
+    sample: np.ndarray,
+    n_parts: int,
+    old: Optional[np.ndarray] = None,
+    damping: float = 1.0,
+) -> np.ndarray:
+    """Incremental boundary refit for *online* rebalancing.
+
+    ``fit_boundaries`` is the load-time fit; under a sustained skewed insert
+    storm the loaded-key quantiles stop describing the live distribution and
+    the edge partitions fatten.  This function refits against a *streaming
+    key sample* (``distributed.rebalance.ReservoirSample``) and, when ``old``
+    boundaries are given, moves each boundary only ``damping`` of the way
+    toward its fresh sample quantile — the same damped-update play every
+    online quantile sketch uses to keep a noisy small sample from thrashing
+    the partition map (each boundary move is a slice *migration*, so a
+    spurious move costs real stitch traffic).
+
+    The result is always sorted non-decreasing (equal adjacent boundaries
+    denote an empty partition, exactly as in ``fit_boundaries``); the
+    interpolation quantizes ``damping`` to a rational (denominator 2^10)
+    and runs in exact Python-int arithmetic, so boundary deltas wider than
+    the f64 mantissa (u64 key spans routinely are) never pick up float
+    rounding.
+    """
+    assert 0.0 < damping <= 1.0, damping
+    target = fit_boundaries(np.asarray(sample, dtype=np.uint64), n_parts)
+    if old is None or damping >= 1.0:
+        return target
+    old = np.asarray(old, dtype=np.uint64)
+    assert old.shape == target.shape, (old.shape, target.shape)
+    num = max(1, round(damping * 1024))
+    out = np.empty_like(target)
+    for i in range(target.size):
+        o, t = int(old[i]), int(target[i])
+        out[i] = np.uint64(o + (t - o) * num // 1024)
+    return np.maximum.accumulate(out)
 
 
 # ---------------------------------------------------------------------------

@@ -69,6 +69,11 @@ class ScanCacheConfig:
     n_buckets: int = 24  # 24 buckets x 4 ways = 96 anchors/thread
     ways: int = 4
     admit_shift: int = 0  # admit every missed scan (scans are rare + heavy)
+    # pagination pre-warm: a truncated scan's continuation cursor is
+    # representationally an anchor — admit it under RANGE(last_key + 1)'s
+    # start key so the client's next page skips the descent
+    # (store._admit_cursor_anchors)
+    admit_cursors: bool = True
 
     @property
     def entries_per_thread(self) -> int:

@@ -95,8 +95,13 @@ class StoreStats:
     scan_probes: int = 0  # fresh-descent RANGE rows probed against the cache
     scan_hits: int = 0  # rows whose descent the anchor cache skipped
     scan_invalidated: int = 0  # anchors dropped by stitch-cycle invalidation
+    scan_cursor_admits: int = 0  # truncated-scan cursors admitted as anchors
     range_reissue_rounds: int = 0  # continuation waves after the first
     range_truncated: int = 0  # rows returned truncated (bounded max_rounds)
+    # slice migration (online rebalance): keys shipped out of / into this
+    # store through extract_slice / ingest_slice
+    migrated_out_keys: int = 0
+    migrated_in_keys: int = 0
 
 
 class DPAStore:
@@ -270,6 +275,7 @@ class DPAStore:
         self, keys_u64, vals_u64, op_code: int, auto_retry: bool = True
     ) -> np.ndarray:
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+        assert np.all(keys_u64 < KEY_MAX), "2^64-1 is a reserved sentinel"
         vals_u64 = (
             np.zeros_like(keys_u64)
             if vals_u64 is None
@@ -502,7 +508,61 @@ class DPAStore:
             idxs = idxs[cont]
         trunc_out &= counts < limit
         self.stats.range_truncated += int(trunc_out.sum())
+        if start_leaves is None:
+            # only fresh client-entry scans admit their cursors: a resumed
+            # call (start_leaves given) is an orchestration round — the
+            # sharded facade re-issues those itself, so its interior
+            # cursors would never be probed and would only evict real
+            # pagination anchors (and cost a host descent each)
+            self._admit_cursor_anchors(trunc_out, cur_key_out)
         return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
+
+    def _admit_cursor_anchors(self, trunc: np.ndarray, last_keys: np.ndarray):
+        """Scan-anchor cursor admission (pagination pre-warm).
+
+        A truncated RANGE's continuation cursor is representationally an
+        anchor (``lookup.ScanCursor`` == scancache entry), and the client's
+        next page is ``RANGE(last_key + 1)`` — admit that key now, mapped to
+        its host-replica descent leaf (``image.find_leaf``: the successor
+        leaf of the truncated walk, or the last walked leaf when the cut key
+        range still reaches into it), so the follow-up wave skips the device
+        descent.  The admitted entry is bit-identical to what a later
+        miss-then-traverse would admit, so the cache's existing safety
+        arguments — buffered writes visible through the walk, restitch
+        invalidation by leaf id — apply unchanged."""
+        if self.scan_cache is None or not self.scan_cache_cfg.admit_cursors:
+            return
+        m = np.where(trunc)[0]
+        if m.size == 0:
+            return
+        nxt = last_keys[m] + np.uint64(1)
+        nxt = nxt[nxt < KEY_MAX]  # 2^64-1 is the reserved sentinel
+        if nxt.size == 0:
+            return
+        leaves = np.array(
+            [self.image.find_leaf(k)[0] for k in nxt], dtype=np.int32
+        )
+        B = _pad_pow2(nxt.size)
+        khi, klo, active = self._limbs(nxt, B)
+        lf = np.full(B, -1, dtype=np.int32)
+        lf[: nxt.size] = leaves
+        tid = hotcache.steer(khi, klo, self.scan_cache_cfg.n_threads)
+        hit, _ = scancache.probe(
+            self.scan_cache, tid, khi, klo, cfg=self.scan_cache_cfg
+        )
+        eligible = active & ~hit
+        self.scan_cache = scancache.admit(
+            self.scan_cache,
+            tid,
+            khi,
+            klo,
+            jnp.asarray(lf),
+            eligible,
+            cfg=self.scan_cache_cfg,
+            wave=self.stats.waves & 0xFFFFFFFF,
+            epoch=self.stats.flush_cycles,
+        )
+        self.stats.scan_cursor_admits += int(np.asarray(eligible).sum())
 
     # ------------------------------------------------------------ patch path
     def _process_full_leaves(self) -> int:
@@ -577,12 +637,19 @@ class DPAStore:
         leaves = [int(l) for l in leaves if int(counts[int(l)]) > 0]
         if not leaves:
             return 0
+        return self._run_patch_cycle(list(zip(leaves, self._buffer_entries(leaves))))
+
+    def _run_patch_cycle(self, pending) -> int:
+        """One flush cycle over explicit ``(leaf, entries)`` work items.
+        Entries normally snapshot the leaf's insert buffer (``_patch_cycle``);
+        ``extract_slice`` synthesizes tombstone entries directly — either way
+        the plan/apply/epoch path is identical."""
+        n_leaves = len(pending)
         self.stats.flush_cycles += 1
         if not self.batched_patch:
-            for leaf in leaves:
-                self._patch_leaf(leaf)
-            return len(leaves)
-        pending = list(zip(leaves, self._buffer_entries(leaves)))
+            for leaf, entries in pending:
+                self._patch_leaf_entries(leaf, entries)
+            return n_leaves
         while pending:
             chunk_leaves = [l for l, _ in pending]
             chunk_entries = [e for _, e in pending]
@@ -614,7 +681,7 @@ class DPAStore:
             self.stats.patches_structural += result.n_structural
             self.stats.new_leaves += len(result.new_leaves)
             self.stats.patched_leaves += len(result.results)
-        return len(leaves)
+        return n_leaves
 
     def _patch_leaf(self, leaf: int) -> None:
         """Per-leaf oracle path: one stitch transaction per patched leaf
@@ -622,7 +689,9 @@ class DPAStore:
         cnt = int(np.asarray(self.ib.count)[leaf])
         if cnt == 0:
             return
-        entries = self._buffer_entries([leaf])[0]
+        self._patch_leaf_entries(leaf, self._buffer_entries([leaf])[0])
+
+    def _patch_leaf_entries(self, leaf: int, entries) -> None:
         result = patch.plan_patch(self.image, leaf, entries)
         # COPY then CONNECT — the stitch atomicity contract
         self.tree = stitch.apply_copies(self.tree, result.batch)
@@ -644,6 +713,118 @@ class DPAStore:
         else:
             self.stats.patches_structural += 1
             self.stats.new_leaves += len(result.new_leaves)
+
+    # ----------------------------------------- slice migration (rebalance)
+    def live_count(self) -> int:
+        """Live keys in the stitched tree (leaf-chain walk — freed pool rows
+        never counted).  Buffered writes are not included; flush first for
+        an exact census (the rebalance planner's occupancy probe does)."""
+        total = 0
+        leaf = self.image.first_leaf()
+        while leaf != -1:
+            total += int(self.image.leaf_count[leaf])
+            leaf = int(self.image.leaf_next[leaf])
+        return total
+
+    def _slice_run(self, k_lo, k_hi) -> List[int]:
+        """Leaf ids of the contiguous run intersecting ``[k_lo, k_hi)`` —
+        descend once to the floor leaf of ``k_lo``, then follow
+        ``leaf_next`` while anchors stay below ``k_hi`` (the same
+        contiguous-run shape the stitch pipeline ships)."""
+        k_lo, k_hi = np.uint64(k_lo), np.uint64(k_hi)
+        if k_lo >= k_hi:
+            return []
+        leaf, _ = self.image.find_leaf(k_lo)
+        run: List[int] = []
+        while leaf != -1 and np.uint64(self.image.leaf_anchor[leaf]) < k_hi:
+            run.append(int(leaf))
+            leaf = int(self.image.leaf_next[leaf])
+        return run
+
+    def count_slice(self, k_lo, k_hi) -> int:
+        """Stitched live keys in ``[k_lo, k_hi)`` (no flush — callers that
+        need buffered writes counted flush first, as the migration path
+        does)."""
+        k_lo, k_hi = np.uint64(k_lo), np.uint64(k_hi)
+        total = 0
+        for leaf in self._slice_run(k_lo, k_hi):
+            lk = self.image.leaf_keys(leaf)
+            total += int(((lk >= k_lo) & (lk < k_hi)).sum())
+        return total
+
+    def snapshot_slice(self, k_lo, k_hi) -> Tuple[np.ndarray, np.ndarray]:
+        """Live pairs in ``[k_lo, k_hi)`` as ascending ``(keys, vals)`` —
+        the copy half of a slice migration.  Flushes staged writes first so
+        the stitched leaf run is the whole truth."""
+        self.flush()
+        k_lo, k_hi = np.uint64(k_lo), np.uint64(k_hi)
+        ks, vs = [], []
+        for leaf in self._slice_run(k_lo, k_hi):
+            lk = self.image.leaf_keys(leaf)
+            m = (lk >= k_lo) & (lk < k_hi)
+            if m.any():
+                ks.append(lk[m].copy())
+                vs.append(self.image.leaf_vals(leaf)[m].copy())
+        if not ks:
+            empty = np.zeros(0, dtype=np.uint64)
+            return empty, empty.copy()
+        return np.concatenate(ks), np.concatenate(vs)
+
+    def extract_slice(self, k_lo, k_hi) -> Tuple[np.ndarray, np.ndarray]:
+        """Detach the live pairs in ``[k_lo, k_hi)``: returns them and
+        removes them from this store — the retire half of a slice
+        migration.  Removal is a leaf run of synthesized tombstones planned
+        through the (batched) patch/stitch pipeline, so it is one stitch
+        transaction with the standard epoch bookkeeping: replaced leaves
+        are quarantined, their scan anchors dropped via the
+        ``EpochManager.on_defer`` listener before the cycle returns, and a
+        fully-emptied leaf stays in the chain as an empty routing stub
+        (``plan_patch`` keeps routing total)."""
+        keys, vals = self.snapshot_slice(k_lo, k_hi)  # flushes
+        if keys.size:
+            k_lo, k_hi = np.uint64(k_lo), np.uint64(k_hi)
+            pending = []
+            for leaf in self._slice_run(k_lo, k_hi):
+                lk = self.image.leaf_keys(leaf)
+                m = (lk >= k_lo) & (lk < k_hi)
+                if m.any():
+                    pending.append(
+                        (leaf, [(int(k), 0, IB_DEL) for k in lk[m]])
+                    )
+            self._run_patch_cycle(pending)
+        self.stats.migrated_out_keys += int(keys.size)
+        return keys, vals
+
+    def ingest_headroom(self) -> int:
+        """Keys this store can absorb via :meth:`ingest_slice` without
+        risking pool exhaustion: conservative — new leaves fill at
+        ``split_cap`` and half the free pool stays reserved for ongoing
+        churn.  The rebalance planner refuses a migration bigger than
+        this."""
+        free = min(len(self.image.free_leaves), len(self.image.free_slots))
+        return max(0, (free // 2) * self.cfg.split_cap)
+
+    def ingest_slice(self, keys_u64, vals_u64, wave: int = 512) -> int:
+        """Bulk-ingest pairs (the receiving half of a slice migration):
+        chunked PUT waves through the insert buffers + batched patch
+        pipeline, then one flush so the slice is fully stitched — and
+        visible to leaf-run walks — when the call returns."""
+        keys = np.asarray(keys_u64, dtype=np.uint64)
+        vals = np.asarray(vals_u64, dtype=np.uint64)
+        for i in range(0, keys.size, wave):
+            st = self.put(keys[i : i + wave], vals[i : i + wave])
+            if not np.all(st == STATUS_OK):
+                # surface pool exhaustion LOUDLY: a silently dropped key
+                # here would be destroyed for good when the migration
+                # retires the donor's copy
+                raise MemoryError(
+                    f"ingest_slice: {int((st != STATUS_OK).sum())} keys "
+                    "failed to land (pool pressure) — raise "
+                    "TreeConfig.growth or shrink the migration"
+                )
+        self.flush()
+        self.stats.migrated_in_keys += int(keys.size)
+        return int(keys.size)
 
     # ------------------------------------------------------------- analysis
     def memory_report(self) -> Dict[str, float]:

@@ -2,6 +2,8 @@
 
 ``kvshard``    — sharded DPA-Store facade + hash/range routed GET waves;
 ``rangeshard`` — range-partition boundary routing + scatter-gather RANGE;
+``rebalance``  — online range-tier rebalancing: two-phase ownership table,
+                 reservoir key sampling, boundary-refit planner;
 ``sharding``   — LM parameter/optimizer/cache PartitionSpecs;
 ``elastic`` / ``straggler`` — training-side resilience utilities.
 """

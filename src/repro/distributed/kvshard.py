@@ -115,9 +115,16 @@ class ShardedDPAStore:
     * ``"range"`` — quantile boundaries fitted over the loaded keys
       (``core.pla.fit_boundaries``); every shard owns a contiguous key
       slice, so :meth:`range` scatter-gathers over the owner shard and its
-      successors only.  Boundaries are fixed at load time — inserts outside
-      the loaded distribution skew toward the edge shards until a rebalance
-      refits them (ROADMAP follow-on).
+      successors only.  Boundaries are *live*: a ``RebalancePlanner``
+      samples the key stream and, when the occupancy spread crosses its
+      trigger, :meth:`rebalance` refits them online and migrates the
+      implied slices between neighbouring shards through the batched
+      patch/stitch pipeline.  The flip is two-phase
+      (``distributed.rebalance.OwnershipTable``): :meth:`begin_rebalance`
+      copies each slice to its receiver and installs the new boundary
+      vector while the old one stays live for one epoch (in-flight waves
+      route by the epoch they were admitted under); :meth:`commit_rebalance`
+      retires the donors' stale copies once those waves have drained.
 
     This is host-side orchestration (each shard is an independent
     ``DPAStore``); the device-resident wave paths are
@@ -135,10 +142,16 @@ class ShardedDPAStore:
         batched_patch: bool = True,
         partition: str = "hash",
         scan_cache_cfg="default",
+        rebalance_cfg="default",
     ):
         from repro.core.store import DPAStore
         from repro.core import pla
         from repro.core.scancache import ScanCacheConfig
+        from repro.distributed.rebalance import (
+            OwnershipTable,
+            RebalanceConfig,
+            RebalancePlanner,
+        )
 
         assert partition in ("hash", "range"), partition
         assert n_shards >= 1, f"n_shards must be positive, got {n_shards}"
@@ -148,9 +161,24 @@ class ShardedDPAStore:
         self.cfg = tree_cfg
         self.partition = partition
         if partition == "range":
-            self.boundaries = pla.fit_boundaries(keys, n_shards)
+            self.ownership = OwnershipTable(pla.fit_boundaries(keys, n_shards))
+            if rebalance_cfg == "default":
+                rebalance_cfg = RebalanceConfig()
+            self.planner = (
+                RebalancePlanner(rebalance_cfg, n_shards)
+                if rebalance_cfg is not None
+                else None
+            )
+            if self.planner is not None:
+                self.planner.observe(keys)  # load-time sample seed
         else:
-            self.boundaries = None
+            self.ownership = None
+            self.planner = None
+        self._pending_moves = []
+        # rebalance accounting
+        self.rebalances = 0
+        self.rebalances_aborted = 0
+        self.migrated_keys = 0
         h = self.route_np(keys)
         # scatter-gather accounting (benchmarks report the measured fan-out
         # and the continuation re-issue traffic)
@@ -171,21 +199,48 @@ class ShardedDPAStore:
             for s in range(n_shards)
         ]
 
-    def route_np(self, keys_u64: np.ndarray) -> np.ndarray:
+    @property
+    def boundaries(self) -> Optional[np.ndarray]:
+        """Current-epoch boundary vector (None on the hash tier)."""
+        return self.ownership.current if self.ownership is not None else None
+
+    @property
+    def boundary_epoch(self) -> int:
+        return self.ownership.epoch if self.ownership is not None else 0
+
+    @property
+    def in_handoff(self) -> bool:
+        return self.ownership is not None and self.ownership.in_handoff
+
+    def boundaries_for_epoch(self, epoch: Optional[int] = None) -> np.ndarray:
+        assert self.ownership is not None, "range tier only"
+        return self.ownership.boundaries_for(epoch)
+
+    def route_np(
+        self, keys_u64: np.ndarray, epoch: Optional[int] = None
+    ) -> np.ndarray:
         """Owner shard per key (client-side; bit-identical to the device
-        routing of the matching wave path)."""
+        routing of the matching wave path).  On the range tier ``epoch``
+        selects the boundary vector a request wave was admitted under
+        (default: current) — during a rebalance handoff both the current
+        and the previous epoch are routable."""
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
         if self.partition == "range":
-            return np.searchsorted(
-                self.boundaries, keys_u64, side="right"
-            ).astype(np.int32)
+            return self.ownership.route(keys_u64, epoch=epoch)
+        assert epoch is None, "hash routing has no boundary epochs"
         return shard_of_np(keys_u64, self.n_shards)
 
     def _route(self, keys_u64: np.ndarray):
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-        return keys_u64, self.route_np(keys_u64)
+        dest = self.route_np(keys_u64)
+        if self.planner is not None and keys_u64.size:
+            self.planner.note_load(dest)
+        return keys_u64, dest
 
     def put(self, keys_u64, vals_u64) -> np.ndarray:
+        if self.planner is not None:
+            # feed the streaming key sample the online refit fits against
+            self.planner.observe(np.asarray(keys_u64, dtype=np.uint64))
         keys_u64, dest = self._route(keys_u64)
         vals_u64 = np.asarray(vals_u64, dtype=np.uint64)
         statuses = np.zeros(keys_u64.size, dtype=np.int32)
@@ -239,6 +294,15 @@ class ShardedDPAStore:
         counts the continuation sub-queries.  Each shard's first descent
         per sub-query goes through its scan-anchor cache.
 
+        Every shard's contribution is confined to its *owned window* under
+        the current boundary epoch: successor sub-queries start at the
+        shard's slice start and entries at/above its slice end are clipped
+        (clearing ``truncated`` — the successor owns the continuation).
+        Steady-state this is a no-op; during a rebalance handoff it keeps a
+        donor's not-yet-retired stale slice copy out of the gather, which
+        is what makes mid-migration RANGE bitwise-equal to the oracle
+        (mirrors ``rangeshard._replicate`` / ``_clip_window`` device-side).
+
         Hash partition: keys are scattered by hash, so every shard must scan
         (broadcast) and the epilogue k-way merges — correct, but aggregate
         RANGE throughput cannot exceed one shard's.  This is the baseline
@@ -256,24 +320,37 @@ class ShardedDPAStore:
             from repro.core.store import append_range_results
 
             owner = self.route_np(start)
+            lb = self.ownership.lower_bounds()
+            ub = self.ownership.upper_bounds()  # KEY_MAX sentinel at the end
             fanout = self.n_shards if fanout is None else fanout
+            cols = np.arange(max(limit, 0))
             for s in range(self.n_shards):
                 m = (owner <= s) & (s - owner < fanout) & (counts < limit)
                 if not m.any():
                     continue
                 self.range_subqueries += int(m.sum())
                 idxs = np.where(m)[0]
+                # owned-window lower bound (successor sub-queries scan from
+                # their slice start; no-op for the owner by routing)
+                sub_start = np.maximum(start[idxs], lb[s])
                 resume = np.full(idxs.size, -1, dtype=np.int32)
                 while idxs.size:
                     rk, rv, rc, trunc, cur_leaf, _ = self.shards[
                         s
                     ].range_with_state(
-                        start[idxs],
+                        sub_start,
                         limit=limit,
                         max_leaves=max_leaves,
                         max_rounds=1,
                         start_leaves=resume,
                     )
+                    # owned-window upper bound: clip entries at/above the
+                    # successor's slice start; a clipped entry proves this
+                    # shard's window is exhausted (clear ``truncated``)
+                    in_win = (cols[None, :] < rc[:, None]) & (rk < ub[s])
+                    rc_clip = in_win.sum(axis=1)
+                    trunc = trunc & (rc_clip == rc)
+                    rc = rc_clip
                     append_range_results(
                         keys_out, vals_out, counts, idxs, rk, rv, rc, limit
                     )
@@ -281,6 +358,7 @@ class ShardedDPAStore:
                     # exhausted rows fall through to the successor shard
                     again = trunc & (counts[idxs] < limit)
                     idxs = idxs[again]
+                    sub_start = sub_start[again]
                     resume = cur_leaf[again]
                     self.range_reissues += int(again.sum())
             return keys_out, vals_out, counts
@@ -313,8 +391,16 @@ class ShardedDPAStore:
 
     def items(self) -> Tuple[np.ndarray, np.ndarray]:
         ks, vs = [], []
-        for sh in self.shards:
+        clip = self.ownership is not None
+        if clip:  # owned-window clip: exact even mid-handoff (a donor's
+            # not-yet-retired slice copy sits outside its window)
+            lb = self.ownership.lower_bounds()
+            ub = self.ownership.upper_bounds()
+        for s, sh in enumerate(self.shards):
             k, v = sh.items()
+            if clip:
+                m = (k >= lb[s]) & (k < ub[s])
+                k, v = k[m], v[m]
             ks.append(k)
             vs.append(v)
         order = np.argsort(np.concatenate(ks), kind="stable")
@@ -322,6 +408,129 @@ class ShardedDPAStore:
 
     def stacked(self) -> Tuple[DeviceTree, InsertBuffers, int]:
         return stack_shards(self.shards)
+
+    # --------------------------------------------- online rebalance (range)
+    def shard_occupancy(self, flush: bool = False) -> np.ndarray:
+        """Live stitched keys per shard.  ``flush=True`` drains staged
+        writes first for an exact census (the planner's trigger probe and
+        the benchmarks do; a slightly stale count is fine for routing)."""
+        if flush:
+            self.flush()
+        return np.array([sh.live_count() for sh in self.shards], dtype=np.int64)
+
+    def occupancy_spread(self, flush: bool = False) -> Dict[str, float]:
+        """Occupancy balance report: max/mean ``ratio`` is the planner's
+        trigger quantity (1.0 = perfectly balanced)."""
+        from repro.distributed.rebalance import RebalancePlanner
+
+        occ = self.shard_occupancy(flush=flush)
+        return {
+            "min": int(occ.min()),
+            "max": int(occ.max()),
+            "mean": float(occ.mean()),
+            "ratio": RebalancePlanner.spread(occ),
+        }
+
+    def begin_rebalance(self, new_boundaries=None) -> List:
+        """Phase 1 of an online rebalance: copy every moving slice into its
+        receiver, then install ``new_boundaries`` as the current boundary
+        epoch while the old vector stays live (the *handoff* epoch).
+
+        From this call on, fresh requests route by the new vector — the
+        receivers own (and hold) the migrated slices; waves admitted
+        earlier keep routing by the epoch they carry
+        (``route_np(keys, epoch=...)``).  Donors still hold their stale
+        copies, made invisible to RANGE by the owned-window clip; call
+        :meth:`commit_rebalance` once the old epoch's waves have drained.
+
+        ``new_boundaries=None`` asks the planner for a refit.  A receiver
+        without enough ingest headroom for the sum of its incoming slices
+        aborts the whole rebalance (the boundary vector is untouched;
+        ``rebalances_aborted`` counts it) — pool pressure must degrade to
+        the status quo, never to a half-moved partition map.  Returns the
+        executed slice moves; an empty list means nothing happened and no
+        handoff was opened (no-op proposal, or headroom abort — told apart
+        by ``rebalances_aborted``).
+        """
+        from repro.distributed.rebalance import plan_moves
+
+        assert self.partition == "range", "rebalancing is a range-tier op"
+        assert not self.in_handoff, "commit the previous rebalance first"
+        if new_boundaries is None:
+            assert self.planner is not None, "no planner: pass boundaries"
+            new_boundaries = self.planner.propose(self.ownership.current)
+        new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
+        moves = [
+            mv
+            for mv in plan_moves(self.ownership.current, new_boundaries)
+            if mv.width > 0
+        ]
+        if not moves:  # no-op proposal: nothing to hand off, no epoch flip
+            return []
+        # headroom precheck before any copy lands.  A cascaded move's slice
+        # can span two donors pre-copy (it hops through the intermediate
+        # shard), so count each slice across ALL shards — exact for the
+        # pre-move state, and every holder is itself a donor, so flushing
+        # the donors makes the stitched counts the whole truth.  Headroom
+        # is checked CUMULATIVELY per receiver: a refit can grow one shard
+        # from both sides, and each slice fitting alone does not mean both
+        # fit together.
+        for s in {mv.donor for mv in moves}:
+            self.shards[s].flush()
+        need: Dict[int, int] = {}
+        for mv in moves:
+            n = sum(sh.count_slice(mv.k_lo, mv.k_hi) for sh in self.shards)
+            need[mv.receiver] = need.get(mv.receiver, 0) + n
+        for receiver, n in need.items():
+            if n > self.shards[receiver].ingest_headroom():
+                self.rebalances_aborted += 1
+                return []
+        for mv in moves:  # copy phase (donors keep serving their slices)
+            k, v = self.shards[mv.donor].snapshot_slice(mv.k_lo, mv.k_hi)
+            self.shards[mv.receiver].ingest_slice(k, v)
+        self.ownership.install(new_boundaries)
+        self._pending_moves = moves
+        return moves
+
+    def commit_rebalance(self) -> int:
+        """Phase 2: retire the donors' stale slice copies (a leaf run of
+        tombstones through the patch/stitch pipeline — which also drops the
+        donors' scan anchors over the migrated leaves via the epoch
+        manager's ``on_defer`` listener) and drop the old boundary vector.
+        Call after the handoff epoch's in-flight waves have drained.
+        Returns the number of keys migrated."""
+        assert self.in_handoff, "begin_rebalance first"
+        migrated = 0
+        for mv in self._pending_moves:
+            k, _ = self.shards[mv.donor].extract_slice(mv.k_lo, mv.k_hi)
+            migrated += int(k.size)
+        self.ownership.retire_previous()
+        self._pending_moves = []
+        self.rebalances += 1
+        self.migrated_keys += migrated
+        return migrated
+
+    def rebalance(self, new_boundaries=None) -> Dict[str, float]:
+        """One synchronous rebalance cycle (begin + commit back-to-back —
+        sound here because the host facade serializes waves; the split API
+        exists for callers, and tests, that interleave).  Returns a summary
+        including the post-rebalance occupancy spread."""
+        moves = self.begin_rebalance(new_boundaries)
+        migrated = self.commit_rebalance() if self.in_handoff else 0
+        report = self.occupancy_spread()
+        report["moves"] = len(moves)
+        report["migrated_keys"] = migrated
+        return report
+
+    def maybe_rebalance(self) -> Optional[Dict[str, float]]:
+        """Planner-gated rebalance: refit + migrate only when the occupancy
+        spread crosses the trigger.  The serve loop (and fig18) calls this
+        once per wave batch; it is cheap when the tier is balanced."""
+        if self.planner is None or self.partition != "range":
+            return None
+        if not self.planner.should_rebalance(self.shard_occupancy(flush=True)):
+            return None
+        return self.rebalance()
 
     def stats_totals(self) -> Dict[str, int]:
         """Aggregate StoreStats across shards (flush cycle / stitch apply

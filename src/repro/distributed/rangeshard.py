@@ -55,6 +55,20 @@ Execution paths (mirroring ``kvshard``):
   * ``range_wave_sharded`` — shard_map over the mesh 'data' axis with
     ``all_to_all`` exchanges (production / dry-run lowering).
 
+Ownership windows (rebalance safety).  Every shard's RANGE contribution is
+confined to its *owned* key window under the wave's boundary vector:
+successor replicas scan from the destination's slice start
+(``_replicate``) and entries at/above the slice end are dropped with the
+``truncated`` flag cleared (``_clip_window``).  Both are steady-state
+no-ops — a shard holds nothing outside its slice — but during an online
+rebalance handoff (``distributed.rebalance``) a donor shard still
+physically holds a migrated-away slice for one boundary epoch, and the
+window clip is what keeps that stale copy invisible to scatter-gather
+waves routed under the new epoch.  Waves admitted under the old epoch keep
+using the old vector (``route_range_epoch`` routes a mixed wave by
+per-request epoch tags), under which the donor still owns the slice — the
+two-phase ownership analogue of the paper's transactional stitch-back.
+
 Host-side orchestration (boundary fitting, per-shard ``DPAStore`` builds,
 the sequential scatter-gather used by benchmarks, the truncated-shard
 re-issue loop) lives on ``kvshard.ShardedDPAStore(partition="range")`` so
@@ -93,6 +107,21 @@ def route_range(b_hi, b_lo, khi, klo):
     return jnp.sum(le.astype(jnp.int32), axis=1)
 
 
+def route_range_epoch(bp_hi, bp_lo, bc_hi, bc_lo, epoch_tag, khi, klo):
+    """Two-phase ownership routing for a mixed in-flight wave.
+
+    During a rebalance handoff two boundary vectors are live
+    (``rebalance.OwnershipTable``); a wave whose requests were admitted
+    under different epochs routes each request by exactly the vector of the
+    epoch it carries (``epoch_tag``: 0 = previous vector, 1 = current) —
+    the device analogue of ``OwnershipTable.route(keys, epoch=...)``, and
+    the same admitted-epoch discipline the paper's packet-counter epochs
+    give a stitch CONNECT."""
+    d_prev = route_range(bp_hi, bp_lo, khi, klo)
+    d_cur = route_range(bc_hi, bc_lo, khi, klo)
+    return jnp.where(epoch_tag > 0, d_cur, d_prev)
+
+
 def make_route_fn(boundaries: np.ndarray):
     """Device route_fn(khi, klo) for the GET wave paths in ``kvshard``."""
     b_hi, b_lo = boundary_limbs(boundaries)
@@ -114,7 +143,42 @@ def _replicate(b_hi, b_lo, khi, klo, n_shards: int, fanout: int):
     off = jnp.tile(jnp.arange(fanout, dtype=jnp.int32), W)
     dest = jnp.repeat(owner, fanout) + off
     oob = dest >= n_shards
+    # Ownership-window lower bound: a successor replica's scan starts at its
+    # destination shard's slice start, not at the original k_min.  In steady
+    # state the walk's >= k_min filter made this a no-op (a shard holds no
+    # keys below its slice); during a rebalance handoff it is load-bearing —
+    # a donor still physically holding a migrated-away slice *below* its
+    # owned window must not contribute those stale keys to the gather.
+    lb_hi = jnp.concatenate([jnp.zeros((1,), jnp.uint32), b_hi])
+    lb_lo = jnp.concatenate([jnp.zeros((1,), jnp.uint32), b_lo])
+    safe_dest = jnp.clip(dest, 0, n_shards - 1)
+    d_hi, d_lo = lb_hi[safe_dest], lb_lo[safe_dest]
+    use_lb = ~limb_le(d_hi, d_lo, rep_hi, rep_lo)  # slice start > k_min
+    rep_hi = jnp.where(use_lb, d_hi, rep_hi)
+    rep_lo = jnp.where(use_lb, d_lo, rep_lo)
     return rep_hi, rep_lo, jnp.where(oob, n_shards, dest), oob
+
+
+def _clip_window(rk, rvalid, rtrunc, ub_hi, ub_lo):
+    """Ownership-window upper bound: drop a shard's contributions at/above
+    its owned slice's end (its successor's start boundary; the last shard's
+    bound is the KEY_MAX sentinel, which no real key reaches).
+
+    Steady-state no-op for the same reason as the lower bound; during a
+    rebalance handoff it hides a donor's stale *above*-window copy.  An
+    entry clipped here proves the shard's window is exhausted, so
+    ``truncated`` is cleared — the successor shard (already in the fan-out)
+    owns the continuation, exactly as for a genuinely exhausted slice."""
+    beyond = limb_le(ub_hi, ub_lo, rk[..., 0], rk[..., 1])  # ub <= key
+    clipped = rvalid & beyond
+    return rvalid & ~beyond, rtrunc & ~jnp.any(clipped, axis=-1)
+
+
+def _upper_bound_limbs(b_hi, b_lo):
+    """(n_shards,) per-shard owned-window upper bounds: the successor's
+    start boundary, KEY_MAX limbs for the last shard."""
+    pad = jnp.full((1,), 0xFFFFFFFF, jnp.uint32)
+    return jnp.concatenate([b_hi, pad]), jnp.concatenate([b_lo, pad])
 
 
 def _gather_epilogue(
@@ -248,8 +312,9 @@ def range_wave_emulated(
     )(dest, rep_hi, rep_lo)
     rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
     rq_lo = jnp.swapaxes(bk_lo, 0, 1)
+    ub_hi, ub_lo = _upper_bound_limbs(b_hi, b_lo)
 
-    def per_shard(tree, ib, h, l):
+    def per_shard(tree, ib, h, l, u_hi, u_lo):
         rk, rv, rvalid, rtrunc, _ = lookup.range_batch(
             tree,
             ib,
@@ -260,10 +325,11 @@ def range_wave_emulated(
             limit=limit,
             max_leaves=max_leaves,
         )
+        rvalid, rtrunc = _clip_window(rk, rvalid, rtrunc, u_hi, u_lo)
         return rk, rv, rvalid, rtrunc
 
     rk, rv, rvalid, rtrunc = jax.vmap(per_shard)(
-        stacked_tree, stacked_ib, rq_hi, rq_lo
+        stacked_tree, stacked_ib, rq_hi, rq_lo, ub_hi, ub_lo
     )
     # responses back: (dest, src, cap, limit) -> (src, dest, cap, limit)
     shape = (n_shards, n_shards, cap, limit)
@@ -304,6 +370,7 @@ def range_wave_sharded(
     n_shards = mesh.shape["data"]
     F = n_shards if fanout is None else fanout
     b_hi, b_lo = boundary_limbs(boundaries)
+    ub_hi, ub_lo = _upper_bound_limbs(b_hi, b_lo)
 
     def a2a(x):
         # x (n_shards, X) per shard: row d -> shard d
@@ -330,6 +397,8 @@ def range_wave_sharded(
             limit=limit,
             max_leaves=max_leaves,
         )
+        s = jax.lax.axis_index("data")
+        rvalid, rtrunc = _clip_window(rk, rvalid, rtrunc, ub_hi[s], ub_lo[s])
         flat = (n_shards, cap * limit)
         rs_kh = a2a(rk[..., 0].reshape(flat)).reshape(n_shards, cap, limit)
         rs_kl = a2a(rk[..., 1].reshape(flat)).reshape(n_shards, cap, limit)

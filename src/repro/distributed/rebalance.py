@@ -1,0 +1,304 @@
+"""Online range-tier rebalancing: boundary refit planning + two-phase
+slice-migration bookkeeping.
+
+Why this exists.  The range tier (``kvshard.ShardedDPAStore(partition=
+"range")``) fixes its quantile boundaries at load time; a sustained skewed
+insert storm then piles new keys into one or two edge shards, and the
+scatter-gather RANGE advantage erodes into a single hot shard's throughput.
+The paper's architecture already contains the cure: structural maintenance
+runs on the *host* while the device keeps serving, and the stitch pipeline
+ships contiguous leaf runs transactionally.  A live rebalance is exactly
+that maintenance applied one level up — the partition map is just the
+zero-parameter learned index over shards (``core.pla.fit_boundaries``), and
+a slice migration is a leaf-run extract on the donor + a bulk ingest on the
+receiver, both riding the existing batched patch/stitch machinery
+(``core.store.extract_slice`` / ``ingest_slice``).
+
+Two-phase ownership (the handoff epoch).  Flipping a boundary while waves
+are in flight needs the same discipline a stitch CONNECT needs: a request
+must be served by the ownership map it was *admitted* under.
+:class:`OwnershipTable` therefore keeps TWO boundary vectors during a
+migration:
+
+  * ``begin_rebalance`` copies each moving slice into its receiver (the
+    donor keeps serving it), then installs the new vector as the current
+    epoch while retaining the old one — the *handoff* epoch.  Requests
+    admitted from now on route by the new vector (the receiver owns the
+    slice and has the copy); waves admitted earlier keep routing by the
+    epoch they carry (``route(keys, epoch=...)`` — the host analogue of the
+    paper's packet-counter epochs).
+  * ``commit_rebalance`` runs after the old epoch's waves have drained:
+    the donor's now-stale copy is extracted (a leaf-run of tombstones
+    through the patch/stitch path, which also drops its scan anchors via
+    ``EpochManager.on_defer``) and the old vector is retired.
+
+During the handoff both shards physically hold the slice.  Point ops are
+safe by routing (exactly one owner per epoch); RANGE is safe because every
+shard's contribution is clipped to its *owned window* under the routing
+epoch (host path in ``kvshard.ShardedDPAStore.range``, device path in
+``rangeshard`` — successor sub-queries start at the shard's lower bound and
+entries at/above its upper bound are dropped), so a stale copy outside a
+shard's window is invisible even to a scatter-gather wave that lands on it.
+Writes admitted during the handoff route to the new owner only; the donor's
+retained copy is a snapshot of the pre-handoff state, which is exactly what
+old-epoch readers are entitled to see.
+
+Planning.  :class:`RebalancePlanner` watches per-shard load and occupancy,
+keeps a reservoir sample of the observed key stream (loaded keys + inserts
+— the streaming analogue of the load-time empirical CDF), and proposes a
+refit (``pla.refit_boundaries``) when the occupancy spread crosses its
+trigger.  :func:`plan_moves` turns an (old, new) boundary pair into ordered
+:class:`SliceMove`\\ s: down-moves (slices shifting toward higher shards)
+run left-to-right and up-moves right-to-left so cascaded moves — a slice
+crossing more than one boundary in a single refit — see each intermediate
+ingest before their own snapshot.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import pla
+
+
+# ---------------------------------------------------------------------------
+# two-phase ownership table
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OwnershipTable:
+    """Boundary vectors by epoch: ``current`` always routes fresh requests;
+    ``previous`` is retained only during a handoff so in-flight waves
+    admitted under the old epoch can still be routed (and audited) by it."""
+
+    current: np.ndarray  # (n_shards - 1,) u64 partition start keys
+    epoch: int = 0
+    previous: Optional[np.ndarray] = None
+
+    def __post_init__(self) -> None:
+        self.current = np.asarray(self.current, dtype=np.uint64)
+
+    @property
+    def in_handoff(self) -> bool:
+        return self.previous is not None
+
+    def boundaries_for(self, epoch: Optional[int] = None) -> np.ndarray:
+        """Boundary vector of ``epoch`` (default: current).  Only the
+        current epoch and — during a handoff — its predecessor are live;
+        anything older has been retired and raises ``KeyError`` (a wave
+        that old must have drained before the previous commit)."""
+        if epoch is None or epoch == self.epoch:
+            return self.current
+        if epoch == self.epoch - 1 and self.previous is not None:
+            return self.previous
+        raise KeyError(
+            f"boundary epoch {epoch} retired (current={self.epoch}, "
+            f"handoff={'yes' if self.in_handoff else 'no'})"
+        )
+
+    def route(self, keys_u64: np.ndarray, epoch: Optional[int] = None) -> np.ndarray:
+        """Owner shard per key under the given epoch's boundaries
+        (bit-identical to the device boundary search)."""
+        b = self.boundaries_for(epoch)
+        return np.searchsorted(
+            b, np.asarray(keys_u64, dtype=np.uint64), side="right"
+        ).astype(np.int32)
+
+    def install(self, new_boundaries: np.ndarray) -> int:
+        """Begin the handoff epoch: the new vector becomes current, the old
+        one stays live for exactly one epoch.  Returns the new epoch."""
+        assert not self.in_handoff, "commit the previous rebalance first"
+        new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
+        assert new_boundaries.shape == self.current.shape
+        assert np.all(
+            new_boundaries[1:] >= new_boundaries[:-1]
+        ), "boundaries must be sorted"
+        self.previous = self.current
+        self.current = new_boundaries
+        self.epoch += 1
+        return self.epoch
+
+    def retire_previous(self) -> None:
+        """End the handoff: the old epoch's waves have drained."""
+        self.previous = None
+
+    # -- owned-window bounds (for RANGE contribution clipping) -------------
+    def lower_bounds(self, epoch: Optional[int] = None) -> np.ndarray:
+        """(n_shards,) u64 inclusive lower bound of each shard's slice."""
+        b = self.boundaries_for(epoch)
+        return np.concatenate([np.zeros(1, dtype=np.uint64), b])
+
+    def upper_bounds(self, epoch: Optional[int] = None) -> np.ndarray:
+        """(n_shards,) u64 exclusive upper bound; the last shard's bound is
+        the reserved KEY_MAX sentinel (no real key reaches it)."""
+        from repro.core.keys import KEY_MAX
+
+        b = self.boundaries_for(epoch)
+        return np.concatenate([b, np.full(1, KEY_MAX, dtype=np.uint64)])
+
+
+# ---------------------------------------------------------------------------
+# migration plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SliceMove:
+    """One contiguous slice ``[k_lo, k_hi)`` migrating donor -> receiver
+    (always adjacent shards; ``boundary`` is the moved vector index)."""
+
+    boundary: int
+    donor: int
+    receiver: int
+    k_lo: int  # inclusive
+    k_hi: int  # exclusive
+
+    @property
+    def width(self) -> int:
+        return self.k_hi - self.k_lo
+
+
+def plan_moves(old_b: np.ndarray, new_b: np.ndarray) -> List[SliceMove]:
+    """Slice moves implied by an (old, new) boundary pair, in an order that
+    makes cascades sound.
+
+    Boundary ``i`` is the start key of shard ``i+1``.  Moving it *up*
+    (``new > old``) grows shard ``i`` by ``[old, new)`` — donor ``i+1``,
+    receiver ``i``; moving it *down* grows shard ``i+1`` by ``[new, old)``
+    — donor ``i``, receiver ``i+1``.  Down-moves are emitted left-to-right
+    and up-moves right-to-left: when adjacent boundaries move past each
+    other's old positions, a slice hops through the intermediate shard, and
+    this order guarantees the intermediate ingest lands before the
+    dependent snapshot (both vectors are sorted, so the dependency only
+    ever points that way).
+    """
+    old_b = np.asarray(old_b, dtype=np.uint64)
+    new_b = np.asarray(new_b, dtype=np.uint64)
+    assert old_b.shape == new_b.shape
+    downs = [
+        SliceMove(i, donor=i, receiver=i + 1, k_lo=int(new_b[i]), k_hi=int(old_b[i]))
+        for i in range(old_b.size)
+        if new_b[i] < old_b[i]
+    ]
+    ups = [
+        SliceMove(i, donor=i + 1, receiver=i, k_lo=int(old_b[i]), k_hi=int(new_b[i]))
+        for i in reversed(range(old_b.size))
+        if new_b[i] > old_b[i]
+    ]
+    return downs + ups
+
+
+# ---------------------------------------------------------------------------
+# streaming key sample
+# ---------------------------------------------------------------------------
+
+
+class ReservoirSample:
+    """Fixed-capacity uniform sample of the observed key stream (algorithm
+    R, vectorized): the empirical-CDF input of the online refit.  Seeded ->
+    deterministic, so a rebalance decision is reproducible from the op
+    trace alone."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._rng = np.random.default_rng(seed)
+        self._buf = np.zeros(capacity, dtype=np.uint64)
+        self._fill = 0
+        self.n_seen = 0
+
+    def observe(self, keys_u64: np.ndarray) -> None:
+        keys = np.asarray(keys_u64, dtype=np.uint64).ravel()
+        if keys.size == 0:
+            return
+        take = min(self.capacity - self._fill, keys.size)
+        if take:
+            self._buf[self._fill : self._fill + take] = keys[:take]
+            self._fill += take
+            self.n_seen += take
+            keys = keys[take:]
+        if keys.size:
+            # element t of the stream replaces a random slot with prob cap/t
+            t = self.n_seen + np.arange(1, keys.size + 1)
+            slots = self._rng.integers(0, t)
+            hit = slots < self.capacity
+            self._buf[slots[hit]] = keys[hit]
+            self.n_seen += keys.size
+
+    def snapshot(self) -> np.ndarray:
+        """Sorted copy of the current sample."""
+        return np.sort(self._buf[: self._fill].copy())
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RebalanceConfig:
+    sample_size: int = 4096  # reservoir capacity (the streaming CDF)
+    spread_trigger: float = 1.4  # max/mean occupancy ratio that arms a refit
+    min_total_keys: int = 512  # below this a refit cannot pay for itself
+    damping: float = 1.0  # fraction of each boundary's quantile move to take
+    seed: int = 0
+
+
+class RebalancePlanner:
+    """Watches per-shard load/occupancy and proposes boundary refits.
+
+    ``observe`` feeds the reservoir (bulk-loaded keys at construction,
+    inserted keys per wave); ``note_load`` accumulates the per-shard request
+    counters the facade's router already computes.  ``should_rebalance``
+    triggers on *occupancy* spread — the quantity a refit provably fixes;
+    load spread is surfaced in :meth:`stats` for the benchmarks but a
+    read-hot shard with balanced occupancy is the hot cache's job, not a
+    migration's."""
+
+    def __init__(self, cfg: RebalanceConfig, n_shards: int):
+        self.cfg = cfg
+        self.n_shards = n_shards
+        self.sample = ReservoirSample(cfg.sample_size, seed=cfg.seed)
+        self.load = np.zeros(n_shards, dtype=np.int64)
+
+    def observe(self, keys_u64: np.ndarray) -> None:
+        self.sample.observe(keys_u64)
+
+    def note_load(self, dest: np.ndarray) -> None:
+        self.load += np.bincount(
+            np.asarray(dest, dtype=np.int64), minlength=self.n_shards
+        )
+
+    @staticmethod
+    def spread(occupancy: np.ndarray) -> float:
+        """max/mean occupancy ratio (1.0 = perfectly balanced)."""
+        occ = np.asarray(occupancy, dtype=np.float64)
+        mean = occ.mean() if occ.size else 0.0
+        return float(occ.max() / mean) if mean > 0 else 1.0
+
+    def should_rebalance(self, occupancy: np.ndarray) -> bool:
+        occ = np.asarray(occupancy, dtype=np.int64)
+        if int(occ.sum()) < self.cfg.min_total_keys:
+            return False
+        return self.spread(occ) >= self.cfg.spread_trigger
+
+    def propose(self, current: np.ndarray) -> np.ndarray:
+        """New boundary vector from the streaming sample (damped toward the
+        fresh quantiles per the config)."""
+        return pla.refit_boundaries(
+            self.sample.snapshot(),
+            self.n_shards,
+            old=current,
+            damping=self.cfg.damping,
+        )
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "sample_fill": int(self.sample._fill),
+            "keys_seen": int(self.sample.n_seen),
+            "load_spread": self.spread(self.load) if self.load.sum() else 1.0,
+        }

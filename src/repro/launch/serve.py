@@ -12,6 +12,10 @@ LM decode loop, batched.
     PYTHONPATH=src python -m repro.launch.serve --kv --no-scan-cache
     PYTHONPATH=src python -m repro.launch.serve --kv --max-leaves 2
 
+    # online rebalancing: skewed fresh inserts + live boundary refits
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
+        --shards 4 --rebalance --rebalance-every 4
+
     # LM decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
 """
@@ -52,6 +56,8 @@ def serve_kv(args):
         )
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
+    rebalancing = args.rebalance and args.partition == "range"
+    fresh_base = keys.max()
     t0 = time.time()
     served = 0
     for w in range(args.waves):
@@ -60,11 +66,29 @@ def serve_kv(args):
         if kind < 2:  # GET-heavy mix
             _, found = store.get(q)
             assert found.all()
-        elif kind == 2:  # UPDATE
-            store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
+        elif kind == 2:
+            if rebalancing:  # sequential fresh-insert storm: the adversarial
+                # edge workload a load-time boundary fit cannot absorb
+                n_new = args.wave_size // 4
+                newk = fresh_base + np.uint64(1) + np.arange(
+                    n_new, dtype=np.uint64
+                ) * np.uint64(3)
+                fresh_base = newk.max()
+                store.put(newk, newk)
+            else:  # UPDATE
+                store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
         else:  # RANGE (scatter-gather on the range tier; broadcast on hash;
             # Zipf-repeated start keys exercise the scan-anchor cache)
             store.range(q[:64], limit=10, max_leaves=args.max_leaves)
+        if rebalancing and (w + 1) % args.rebalance_every == 0:
+            report = store.maybe_rebalance()
+            if report is not None:
+                print(
+                    f"[serve-kv] wave {w}: rebalanced "
+                    f"{report['migrated_keys']} keys across "
+                    f"{report['moves']} slice moves "
+                    f"(occupancy spread -> {report['ratio']:.2f})"
+                )
         served += args.wave_size
     dt = time.time() - t0
     print(
@@ -92,6 +116,16 @@ def serve_kv(args):
             f"{store.range_reissues} truncated-shard re-issues "
             f"(range tier: owner+successors; hash tier: always {args.shards})"
         )
+        if args.partition == "range":
+            spread = store.occupancy_spread(flush=True)
+            print(
+                f"[serve-kv] rebalance: {store.rebalances} cycles "
+                f"({store.rebalances_aborted} aborted), "
+                f"{store.migrated_keys} keys migrated, boundary epoch "
+                f"{store.boundary_epoch}, occupancy spread "
+                f"{spread['ratio']:.2f} (min {spread['min']} / "
+                f"max {spread['max']})"
+            )
         print(
             f"[serve-kv] scan-anchor cache: {100*hit:.0f}% descent-skip hit "
             f"rate across shards"
@@ -145,6 +179,20 @@ def main(argv=None):
         default=4,
         help="leaves per RANGE wave; truncated scans resume from their "
         "continuation cursor, so results are exact for any value",
+    )
+    ap.add_argument(
+        "--rebalance",
+        action=argparse.BooleanOptionalAction,
+        default=False,
+        help="range tier only: replace the UPDATE waves with a sequential "
+        "fresh-insert storm and let the planner refit boundaries + migrate "
+        "slices online when the occupancy spread crosses its trigger",
+    )
+    ap.add_argument(
+        "--rebalance-every",
+        type=positive_int,
+        default=4,
+        help="waves between rebalance-planner probes (with --rebalance)",
     )
     ap.add_argument("--n-keys", type=int, default=100_000)
     ap.add_argument("--waves", type=int, default=16)

@@ -143,6 +143,46 @@ def test_fig17_smoke_rows_cover_modes_and_report_hits():
         ), (alpha, model)
 
 
+@pytest.mark.slow
+def test_fig18_smoke_rows_show_rebalance_retention():
+    """The rebalance sweep must emit schema-valid rows for both modes x 2
+    storm shapes, and the derived metrics must show the claim the feature
+    exists for: under the Zipf-0.99 insert storm the rebalancing tier
+    retains MORE of its range MOPS and ends with a SMALLER occupancy
+    spread than the static tier — with at least one rebalance actually
+    fired."""
+    from benchmarks import common, fig18_rebalance
+    from benchmarks.run import (
+        derived_fields,
+        rebalance_metrics,
+        validate_fig18_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig18_rebalance.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig18_coverage(rows)
+    met = rebalance_metrics(rows)
+    fired = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        fired[name] = int(derived_fields(derived)["rebalances"])
+    for storm in ("zipf0.99", "seq"):
+        on, off = f"fig18/rebalance/{storm}", f"fig18/static/{storm}"
+        assert fired[on] > 0, (storm, rows)
+        assert fired[off] == 0
+        assert met[on]["retention"] > met[off]["retention"], (storm, met)
+        assert met[on]["spread_after"] < met[off]["spread_after"], (storm, met)
+
+
 def test_roofline_reader_runs_if_results_exist():
     from benchmarks import roofline
 

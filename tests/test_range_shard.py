@@ -11,6 +11,8 @@ sweeps deliberately include under-sized walks (max_leaves=1 on limit=10)
 that force truncation and re-issue rounds through every layer.
 """
 
+import os
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -578,6 +580,251 @@ def test_sharded_cached_range_matches_uncached(n_shards):
                 assert (a == b).all()
     tot = cached.stats_totals()
     assert tot["scan_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# wave-equivalence regression net: numpy client == emulated wave ==
+# shard_map wave under both boundary epochs of a live rebalance
+# ---------------------------------------------------------------------------
+
+
+def test_route_range_epoch_tagged_mixed_wave():
+    """Device epoch-tagged routing: a wave whose requests were admitted
+    under different boundary epochs routes each request by exactly its
+    epoch's vector, bit-identical to the numpy ownership table."""
+    rng = np.random.default_rng(71)
+    b_prev = np.sort(rng.integers(1, 2**63, 3, dtype=np.uint64))
+    b_cur = np.sort(rng.integers(1, 2**63, 3, dtype=np.uint64))
+    qs = np.concatenate(
+        [rng.integers(0, 2**63, 40, dtype=np.uint64), b_prev, b_cur]
+    )
+    tag = (np.arange(qs.size) % 2).astype(np.int32)
+    limbs = split_u64(qs)
+    bp_hi, bp_lo = rangeshard.boundary_limbs(b_prev)
+    bc_hi, bc_lo = rangeshard.boundary_limbs(b_cur)
+    dev = rangeshard.route_range_epoch(
+        bp_hi, bp_lo, bc_hi, bc_lo,
+        jnp.asarray(tag), jnp.asarray(limbs[:, 0]), jnp.asarray(limbs[:, 1]),
+    )
+    exp = np.where(
+        tag > 0,
+        np.searchsorted(b_cur, qs, side="right"),
+        np.searchsorted(b_prev, qs, side="right"),
+    )
+    assert (np.asarray(dev) == exp).all()
+
+
+def _epoch_fixture(n_shards):
+    """Range store + a skewed storm + an opened (uncommitted) rebalance:
+    both boundary epochs live, donors still holding migrated slices."""
+    keys = sparse(1400, seed=73)
+    vals = keys ^ np.uint64(0xE70C)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, tree_cfg=TreeConfig(growth=16.0),
+        partition="range", cache_cfg=None,
+    )
+    snap = {
+        "tree_ib_depth": sharded.stacked(),
+        "boundaries": sharded.boundaries.copy(),
+        "epoch": sharded.boundary_epoch,
+        "oracle": dict(zip(*[a.tolist() for a in sharded.items()])),
+    }
+    storm = keys.max() + np.uint64(1) + np.arange(420, dtype=np.uint64) * np.uint64(5)
+    sharded.put(storm, storm ^ np.uint64(0xE70C))
+    sharded.flush()
+    moves = sharded.begin_rebalance(sharded.planner.propose(sharded.boundaries))
+    assert moves and sharded.in_handoff
+    return sharded, snap
+
+
+def _get_wave_equivalence(sharded, tree, ib, depth, boundaries, oracle, W=8):
+    """GET wave: numpy routing == emulated wave results == (when the host
+    has enough devices; CPU CI relies on launch/kv_dryrun.py for the
+    multi-device lowering) shard_map wave, all against ``oracle``."""
+    import jax
+
+    n_shards = sharded.n_shards
+    rng = np.random.default_rng(7)
+    ok_keys = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    qs = np.concatenate(
+        [
+            rng.choice(ok_keys, n_shards * W - 8),
+            rng.integers(0, 2**63, 8, dtype=np.uint64),
+        ]
+    ).reshape(n_shards, W)
+    limbs = split_u64(qs)
+    khi, klo = jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
+    route_fn = rangeshard.make_route_fn(boundaries)
+    # device routing == numpy ownership-table routing, request by request
+    dev_dest = np.asarray(route_fn(khi.reshape(-1), klo.reshape(-1)))
+    np_dest = np.searchsorted(boundaries, qs.reshape(-1), side="right")
+    assert (dev_dest == np_dest).all()
+    outs = kvshard.serve_wave_emulated(
+        tree, ib, khi, klo, cap=n_shards * W, depth=depth,
+        eps_inner=4, eps_leaf=8, route_fn=route_fn,
+    )
+    if len(jax.devices()) >= n_shards:  # pragma: no cover - device dependent
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+        fn = kvshard.serve_wave_sharded(
+            mesh, tree, ib, cap=n_shards * W, depth=depth,
+            eps_inner=4, eps_leaf=8, route_fn=route_fn,
+        )
+        souts = fn(tree, ib, khi, klo)
+        for a, b in zip(outs, souts):
+            assert (np.asarray(a) == np.asarray(b)).all(), "shard_map != vmap"
+    vhi, vlo, found, ok = outs
+    assert bool(jnp.all(ok))
+    got = _join(vhi, vlo)
+    fnd = np.asarray(found)
+    for i in range(n_shards):
+        for j in range(W):
+            k = int(qs[i, j])
+            assert fnd[i, j] == (k in oracle), (i, j, hex(k))
+            if fnd[i, j]:
+                assert int(got[i, j]) == oracle[k]
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_wave_equivalence_across_rebalance_epochs(n_shards):
+    """The cross-layer invariant of a live migration: numpy client,
+    emulated vmap wave and shard_map wave route and serve bit-identically
+    under BOTH live boundary epochs — the old epoch against the
+    pre-migration snapshot it was admitted under, the new epoch against
+    the mid-handoff state — and after commit under the surviving epoch."""
+    sharded, snap = _epoch_fixture(n_shards)
+    tree0, ib0, depth0 = snap["tree_ib_depth"]
+    # old epoch: in-flight waves route by the vector they were admitted
+    # under, against the state snapshot of their admission
+    assert (
+        sharded.route_np(np.array(sorted(snap["oracle"]))[:64], epoch=snap["epoch"])
+        == np.searchsorted(
+            snap["boundaries"],
+            np.array(sorted(snap["oracle"]))[:64],
+            side="right",
+        )
+    ).all()
+    _get_wave_equivalence(
+        sharded, tree0, ib0, depth0, snap["boundaries"], snap["oracle"]
+    )
+    # new epoch, mid-handoff: donors still hold stale copies; point routing
+    # never reaches them and the wave serves the current oracle
+    tree1, ib1, depth1 = sharded.stacked()
+    oracle1 = dict(zip(*[a.tolist() for a in sharded.items()]))
+    _get_wave_equivalence(
+        sharded, tree1, ib1, depth1, sharded.boundaries, oracle1
+    )
+    # mid-handoff RANGE wave: stale slice copies must be window-clipped
+    sk = np.sort(np.array(sorted(oracle1.keys()), dtype=np.uint64))
+    W = 8
+    rng = np.random.default_rng(11)
+    qs = rng.choice(sk, n_shards * W).reshape(n_shards, W)
+    limbs = split_u64(qs)
+    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
+        tree1, ib1, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1]),
+        sharded.boundaries, cap=n_shards * W, depth=depth1, eps_inner=4,
+        limit=10, max_leaves=8,
+    )
+    assert bool(jnp.all(ok))
+    got_k = _join(kh, kl)
+    va = np.asarray(valid)
+    for i in range(n_shards):
+        for j in range(W):
+            exp = _np_oracle(sk, qs[i, j], 10)
+            assert va[i, j].sum() == exp.size, (i, j)
+            assert (got_k[i, j][: exp.size] == exp).all(), (i, j)
+    # after commit only the new epoch survives, donors retired
+    sharded.commit_rebalance()
+    with pytest.raises(KeyError):
+        sharded.route_np(qs.reshape(-1), epoch=snap["epoch"])
+    tree2, ib2, depth2 = sharded.stacked()
+    oracle2 = dict(zip(*[a.tolist() for a in sharded.items()]))
+    _get_wave_equivalence(
+        sharded, tree2, ib2, depth2, sharded.boundaries, oracle2
+    )
+
+
+@pytest.mark.slow
+def test_shard_map_epoch_equivalence_forced_devices():
+    """The shard_map leg of the equivalence net needs one device per shard;
+    CPU CI has one, so this spawns a fresh interpreter with XLA's host
+    device count forced to 4 (the kv_dryrun trick) and asserts shard_map ==
+    emulated == numpy under both epochs of a live rebalance."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import TreeConfig
+from repro.core.datasets import sparse
+from repro.core.keys import split_u64
+from repro.distributed import kvshard, rangeshard
+
+n_shards, W = 4, 8
+keys = sparse(1400, seed=73)
+sharded = kvshard.ShardedDPAStore(
+    keys, keys ^ np.uint64(0xE), n_shards, tree_cfg=TreeConfig(growth=16.0),
+    partition="range", cache_cfg=None,
+)
+snap_state = sharded.stacked()
+snap_b = sharded.boundaries.copy()
+storm = keys.max() + np.uint64(1) + np.arange(500, dtype=np.uint64) * np.uint64(3)
+sharded.put(storm, storm ^ np.uint64(0xE))
+sharded.flush()
+assert sharded.begin_rebalance(sharded.planner.propose(sharded.boundaries))
+mesh = Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+rng = np.random.default_rng(0)
+for label, (tree, ib, depth), b in (
+    ("old-epoch", snap_state, snap_b),
+    ("new-epoch", sharded.stacked(), sharded.boundaries),
+):
+    qs = rng.integers(0, 2**63, (n_shards, W), dtype=np.uint64)
+    limbs = split_u64(qs)
+    khi, klo = jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
+    rf = rangeshard.make_route_fn(b)
+    assert (
+        np.asarray(rf(khi.reshape(-1), klo.reshape(-1)))
+        == np.searchsorted(b, qs.reshape(-1), side="right")
+    ).all(), label
+    em = kvshard.serve_wave_emulated(
+        tree, ib, khi, klo, cap=n_shards * W, depth=depth,
+        eps_inner=4, eps_leaf=8, route_fn=rf,
+    )
+    fn = kvshard.serve_wave_sharded(
+        mesh, tree, ib, cap=n_shards * W, depth=depth,
+        eps_inner=4, eps_leaf=8, route_fn=rf,
+    )
+    sm = fn(tree, ib, khi, klo)
+    for a, c in zip(em, sm):
+        assert (np.asarray(a) == np.asarray(c)).all(), label
+    emr = rangeshard.range_wave_emulated(
+        tree, ib, khi, klo, b, cap=n_shards * W, depth=depth,
+        eps_inner=4, limit=5, max_leaves=8,
+    )
+    rfn = rangeshard.range_wave_sharded(
+        mesh, tree, ib, b, cap=n_shards * W, depth=depth,
+        eps_inner=4, limit=5, max_leaves=8,
+    )
+    smr = rfn(tree, ib, khi, klo)
+    for a, c in zip(emr, smr):
+        assert (np.asarray(a) == np.asarray(c)).all(), label
+print("OK shard_map == emulated == numpy under both epochs")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK shard_map == emulated == numpy" in proc.stdout
 
 
 # ---------------------------------------------------------------------------

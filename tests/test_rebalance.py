@@ -1,0 +1,479 @@
+"""Skew-storm oracle suite for online range-tier rebalancing.
+
+The contract under test: ``ShardedDPAStore(partition="range")`` with live
+boundary refits + slice migrations must stay **bitwise-equal** to a single
+``DPAStore`` oracle (and to a sorted-numpy oracle) for GET/PUT/DELETE/RANGE
+*before, during and after* every rebalance cycle — including forced
+mid-migration interleavings, where the two-phase ownership table holds both
+boundary epochs and donors still physically carry their migrated-away
+slices — and the rebalance must actually shrink the shard occupancy
+spread the storm created.
+
+Storm shapes mirror the ways real insert traffic defeats a load-time
+quantile fit: Zipf-clustered inserts into a narrow key region, sequential
+(log-append) inserts past the loaded maximum, and adversarial inserts
+hammering one existing shard boundary.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig, pla
+from repro.core.datasets import sparse, zipf_indices
+from repro.distributed import kvshard
+from repro.distributed.rebalance import (
+    OwnershipTable,
+    RebalanceConfig,
+    RebalancePlanner,
+    ReservoirSample,
+    plan_moves,
+)
+
+GROWTH = TreeConfig(growth=16.0)
+
+
+def _np_oracle(sorted_keys, k_min, limit):
+    i = np.searchsorted(sorted_keys, k_min)
+    return sorted_keys[i : i + limit]
+
+
+def _assert_bitwise(single, sharded, live, queries, limit=10, max_leaves=4, tag=""):
+    """Sharded tier == single store == dict oracle, bitwise, for GET+RANGE."""
+    r1 = single.range(queries, limit=limit, max_leaves=max_leaves)
+    r2 = sharded.range(queries, limit=limit, max_leaves=max_leaves)
+    for a, b in zip(r1, r2):
+        assert (a == b).all(), tag
+    sk = np.sort(np.array(sorted(live.keys()), dtype=np.uint64))
+    for i, k in enumerate(queries):
+        exp = _np_oracle(sk, k, limit)
+        assert r2[2][i] == exp.size, (tag, i, hex(int(k)))
+        assert (r2[0][i, : exp.size] == exp).all(), tag
+    v1, f1 = single.get(queries)
+    v2, f2 = sharded.get(queries)
+    assert (f1 == f2).all(), tag
+    assert (v1[f1] == v2[f2]).all(), tag  # not-found lanes carry junk
+    for i, k in enumerate(queries):
+        assert f2[i] == (int(k) in live), (tag, hex(int(k)))
+        if f2[i]:
+            assert int(v2[i]) == live[int(k)], tag
+
+
+# ---------------------------------------------------------------------------
+# unit: refit / reservoir / move planning / ownership epochs
+# ---------------------------------------------------------------------------
+
+
+def test_refit_boundaries_quantiles_damping_monotonic():
+    rng = np.random.default_rng(1)
+    sample = rng.integers(0, 2**63, 4000, dtype=np.uint64)
+    full = pla.refit_boundaries(sample, 4)
+    assert (full == pla.fit_boundaries(sample, 4)).all(), "damping=1 == refit"
+    old = pla.fit_boundaries(rng.integers(0, 2**62, 4000, dtype=np.uint64), 4)
+    half = pla.refit_boundaries(sample, 4, old=old, damping=0.5)
+    assert half.shape == old.shape
+    assert np.all(half[1:] >= half[:-1]), "refit boundaries stay sorted"
+    for i in range(old.size):
+        lo, hi = sorted((int(old[i]), int(full[i])))
+        assert lo <= int(half[i]) <= hi, "damped move stays between old/target"
+    # a damped move is a strict fraction when old != target
+    moved = [i for i in range(old.size) if old[i] != full[i]]
+    assert moved and all(half[i] != old[i] for i in moved)
+    # degenerate sample: falls back like fit_boundaries
+    tiny = pla.refit_boundaries(np.array([5], dtype=np.uint64), 4)
+    assert tiny.shape == (3,) and np.all(tiny[1:] >= tiny[:-1])
+
+
+def test_reservoir_sample_deterministic_and_covering():
+    a = ReservoirSample(256, seed=3)
+    b = ReservoirSample(256, seed=3)
+    stream = np.arange(1, 20_001, dtype=np.uint64)
+    for lo in range(0, 20_000, 700):
+        a.observe(stream[lo : lo + 700])
+        b.observe(stream[lo : lo + 700])
+    assert (a.snapshot() == b.snapshot()).all(), "seeded -> deterministic"
+    snap = a.snapshot()
+    assert snap.size == 256 and a.n_seen == 20_000
+    # a uniform sample of a uniform stream has roughly uniform quantiles
+    q = pla.fit_boundaries(snap, 4).astype(np.float64)
+    expect = np.array([0.25, 0.5, 0.75]) * 20_000
+    assert np.all(np.abs(q - expect) < 4_000), q
+
+
+def test_plan_moves_directions_and_cascade_order():
+    old = np.array([100, 200], dtype=np.uint64)
+    up = np.array([150, 260], dtype=np.uint64)  # both boundaries move up
+    moves = plan_moves(old, up)
+    # up-moves emitted right-to-left: boundary 1 before boundary 0
+    assert [m.boundary for m in moves] == [1, 0]
+    assert moves[0].donor == 2 and moves[0].receiver == 1
+    assert (moves[0].k_lo, moves[0].k_hi) == (200, 260)
+    assert moves[1].donor == 1 and moves[1].receiver == 0
+    assert (moves[1].k_lo, moves[1].k_hi) == (100, 150)
+    down = np.array([60, 120], dtype=np.uint64)
+    moves = plan_moves(old, down)
+    # down-moves emitted left-to-right: boundary 0 before boundary 1
+    assert [m.boundary for m in moves] == [0, 1]
+    assert moves[0].donor == 0 and moves[0].receiver == 1
+    assert (moves[0].k_lo, moves[0].k_hi) == (60, 100)
+    # cascade: boundary 1's slice [120, 200) includes [120, 200) of shard 1
+    # *after* shard 1 ingested [60, 100) — ordering makes that sound
+    assert moves[1].donor == 1 and moves[1].receiver == 2
+    assert plan_moves(old, old) == []
+
+
+def test_ownership_table_epochs_and_windows():
+    t = OwnershipTable(np.array([100, 200], dtype=np.uint64))
+    keys = np.array([0, 99, 100, 150, 200, 500], dtype=np.uint64)
+    assert (t.route(keys) == [0, 0, 1, 1, 2, 2]).all()
+    e0 = t.epoch
+    t.install(np.array([120, 220], dtype=np.uint64))
+    assert t.in_handoff and t.epoch == e0 + 1
+    assert (t.route(keys, epoch=e0) == [0, 0, 1, 1, 2, 2]).all()
+    assert (t.route(keys) == [0, 0, 0, 1, 1, 2]).all()
+    assert (t.lower_bounds() == [0, 120, 220]).all()
+    assert t.upper_bounds()[-1] == np.uint64(0xFFFFFFFFFFFFFFFF)
+    t.retire_previous()
+    assert not t.in_handoff
+    with pytest.raises(KeyError):
+        t.route(keys, epoch=e0)
+    with pytest.raises(AssertionError):
+        t.install(np.array([220, 120], dtype=np.uint64))  # unsorted
+
+
+# ---------------------------------------------------------------------------
+# store level: leaf-run extract / ingest roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_extract_ingest_roundtrip_partitions_exactly():
+    keys = sparse(1800, seed=21)
+    vals = keys ^ np.uint64(0x51)
+    donor = DPAStore(keys, vals, GROWTH, cache_cfg=None)
+    recv = DPAStore(keys[:4], vals[:4], GROWTH, cache_cfg=None)
+    k_lo, k_hi = keys[500], keys[900]  # a mid-store contiguous slice
+    # buffered writes inside the slice must migrate too (snapshot flushes)
+    newk = np.setdiff1d(np.arange(1, 40, dtype=np.uint64) * np.uint64(3) + k_lo, keys)
+    donor.put(newk, newk ^ np.uint64(0x51))
+    before = donor.live_count() + int(np.asarray(donor.ib.count).sum())
+    mk, mv = donor.extract_slice(k_lo, k_hi)
+    exp = np.sort(np.concatenate([keys[(keys >= k_lo) & (keys < k_hi)], newk]))
+    assert (mk == exp).all() and (mv == (exp ^ np.uint64(0x51))).all()
+    assert donor.stats.migrated_out_keys == exp.size
+    # donor lost exactly the slice (live_count is exact post-flush)
+    assert donor.live_count() == before - exp.size
+    dk, _ = donor.items()
+    assert not ((dk >= k_lo) & (dk < k_hi)).any(), "slice fully detached"
+    # half-open: k_hi itself stays if live
+    assert (dk == k_hi).any() == (k_hi in keys)
+    recv.ingest_slice(mk, mv)
+    assert recv.stats.migrated_in_keys == exp.size
+    rk, rv = recv.items()
+    got = dict(zip(rk.tolist(), rv.tolist()))
+    for k, v in zip(mk.tolist(), mv.tolist()):
+        assert got[k] == v
+    # empty slice: no-op
+    ek, ev = donor.extract_slice(k_lo, k_lo)
+    assert ek.size == 0 and ev.size == 0
+
+
+def test_extract_slice_drops_scan_anchors_via_on_defer():
+    from repro.core.scancache import ScanCacheConfig
+
+    keys = sparse(1500, seed=23)
+    store = DPAStore(
+        keys, keys, GROWTH, cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    k_lo, k_hi = keys[400], keys[800]
+    inside = keys[(keys >= k_lo) & (keys < k_hi)][::17]
+    store.range(inside, limit=6, max_leaves=4)  # admit anchors in the slice
+    assert store.stats.scan_probes > 0
+    base = store.stats.scan_invalidated
+    store.extract_slice(k_lo, k_hi)
+    assert store.stats.scan_invalidated > base, (
+        "extracting the slice replaces its leaves; their anchors must drop "
+        "through the EpochManager.on_defer listener"
+    )
+    # post-extract scans from the old anchors are exact against the remnant
+    live = {int(k): int(k) for k in keys if not (k_lo <= k < k_hi)}
+    sk = np.sort(np.array(sorted(live.keys()), dtype=np.uint64))
+    rk, _, rc = store.range(inside, limit=6, max_leaves=8)
+    for i, k in enumerate(inside):
+        exp = _np_oracle(sk, k, 6)
+        assert rc[i] == exp.size and (rk[i, : exp.size] == exp).all()
+
+
+# ---------------------------------------------------------------------------
+# skew storms: oracle equality before/during/after + spread shrinks
+# ---------------------------------------------------------------------------
+
+
+def _storm_keys(kind: str, loaded: np.ndarray, n: int, seed: int) -> np.ndarray:
+    """Distinct insert keys shaped like the storm ``kind``."""
+    rng = np.random.default_rng(seed)
+    if kind == "sequential":  # log-append past the loaded maximum
+        return loaded.max() + np.uint64(1) + np.arange(n, dtype=np.uint64) * np.uint64(3)
+    if kind == "edge":  # hammer one existing region (the last quartile)
+        base = loaded[int(loaded.size * 0.75)]
+        return np.setdiff1d(base + rng.integers(1, 8 * n, 2 * n, dtype=np.uint64), loaded)[:n]
+    # zipf: skewed draws from a fresh sorted pool -> mass on its low keys
+    pool = np.setdiff1d(
+        np.sort(rng.integers(0, 2**63, 4 * n, dtype=np.uint64)), loaded
+    )
+    idx = np.unique(zipf_indices(pool.size, 4 * n, alpha=0.99, seed=seed))
+    return pool[idx[:n]]
+
+
+@pytest.mark.parametrize(
+    "kind",
+    ["zipf", "sequential", pytest.param("edge", marks=pytest.mark.slow)],
+)
+def test_skew_storm_oracle_with_rebalancing(kind):
+    """The acceptance pin: sharded-with-rebalancing == single-store oracle
+    bitwise through an insert storm, rebalances actually fire, and the
+    post-rebalance occupancy spread shrinks back under the trigger."""
+    keys = sparse(1600, seed=31)
+    vals = keys ^ np.uint64(0xBA5E)
+    cfg = RebalanceConfig(spread_trigger=1.3, sample_size=2048, seed=7)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 4, tree_cfg=GROWTH, partition="range",
+        cache_cfg=None, rebalance_cfg=cfg,
+    )
+    single = DPAStore(keys, vals, GROWTH, cache_cfg=None)
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    storm = _storm_keys(kind, keys, 600, seed=41)
+    rng = np.random.default_rng(5)
+    waves = np.array_split(storm, 5)
+    peak_spread = sharded.occupancy_spread(flush=True)["ratio"]
+    for w, chunk in enumerate(waves):
+        for st_ in (single, sharded):
+            st_.put(chunk, chunk ^ np.uint64(0xBA5E))
+        live.update({int(k): int(k) ^ 0xBA5E for k in chunk})
+        if w % 2 == 1:  # deletes ride along
+            dels = rng.choice(np.array(sorted(live.keys()), np.uint64), 20)
+            for st_ in (single, sharded):
+                st_.delete(dels)
+            for k in dels.tolist():
+                live.pop(int(k), None)
+        peak_spread = max(peak_spread, sharded.occupancy_spread(flush=True)["ratio"])
+        sharded.maybe_rebalance()
+        q = np.concatenate(
+            [
+                rng.choice(np.array(sorted(live.keys()), np.uint64), 12),
+                rng.choice(chunk, 6),
+                sharded.boundaries,
+            ]
+        )
+        _assert_bitwise(single, sharded, live, q, tag=f"{kind}/wave{w}")
+    assert sharded.rebalances > 0, f"{kind} storm must trigger a rebalance"
+    assert sharded.migrated_keys > 0
+    final = sharded.occupancy_spread(flush=True)["ratio"]
+    assert final < peak_spread, (
+        f"rebalance must shrink the {kind} storm's occupancy spread "
+        f"(peak {peak_spread:.2f} -> final {final:.2f})"
+    )
+    assert final < cfg.spread_trigger + 0.1, final
+    # final state: full census bitwise
+    single.flush()
+    sharded.flush()
+    k1, v1 = single.items()
+    k2, v2 = sharded.items()
+    assert (k1 == k2).all() and (v1 == v2).all()
+
+
+def test_static_boundaries_skew_while_rebalanced_do_not():
+    """The motivating asymmetry: the same sequential storm leaves a static
+    tier with all inserts on one shard, while the rebalancing tier levels
+    out (fig18 measures this; here we pin it functionally)."""
+    keys = sparse(1200, seed=33)
+    mk = lambda cfg: kvshard.ShardedDPAStore(  # noqa: E731
+        keys, keys, 4, tree_cfg=GROWTH, partition="range",
+        cache_cfg=None, rebalance_cfg=cfg,
+    )
+    static = mk(None)
+    live_ = mk(RebalanceConfig(spread_trigger=1.25, seed=1))
+    assert static.planner is None
+    storm = _storm_keys("sequential", keys, 500, seed=2)
+    for chunk in np.array_split(storm, 4):
+        for st_ in (static, live_):
+            st_.put(chunk, chunk)
+        live_.maybe_rebalance()
+    s_static = static.occupancy_spread(flush=True)["ratio"]
+    s_live = live_.occupancy_spread(flush=True)["ratio"]
+    assert s_static > 1.7, s_static  # sequential storm: one fat edge shard
+    assert s_live < 1.5, s_live
+    assert live_.rebalances > 0 and static.rebalances == 0
+
+
+# ---------------------------------------------------------------------------
+# forced mid-migration interleavings (two-phase handoff)
+# ---------------------------------------------------------------------------
+
+
+def test_forced_mid_migration_interleavings():
+    """Ops issued while the handoff epoch is live — donors still hold their
+    stale copies, both boundary vectors are routable — must stay bitwise
+    equal to the oracle; old-epoch routing answers by the old vector."""
+    keys = sparse(1800, seed=35)
+    vals = keys ^ np.uint64(0xC0DE)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 3, tree_cfg=GROWTH, partition="range", cache_cfg=None,
+    )
+    single = DPAStore(keys, vals, GROWTH, cache_cfg=None)
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    storm = _storm_keys("sequential", keys, 400, seed=3)
+    for st_ in (single, sharded):
+        st_.put(storm, storm ^ np.uint64(0xC0DE))
+    live.update({int(k): int(k) ^ 0xC0DE for k in storm})
+    b0 = sharded.boundaries.copy()
+    e0 = sharded.boundary_epoch
+    nb = sharded.planner.propose(b0)
+    assert (nb != b0).any(), "storm must move the proposed boundaries"
+    moves = sharded.begin_rebalance(nb)
+    assert moves and sharded.in_handoff
+    assert sharded.boundary_epoch == e0 + 1
+    rng = np.random.default_rng(9)
+    q = np.concatenate(
+        [
+            rng.choice(np.array(sorted(live.keys()), np.uint64), 16),
+            b0,
+            nb,
+            np.array([0, max(live.keys())], dtype=np.uint64),
+        ]
+    )
+    # epoch-tagged routing: both vectors live, each bit-identical to numpy
+    assert (sharded.route_np(q, epoch=e0) == np.searchsorted(b0, q, "right")).all()
+    assert (sharded.route_np(q) == np.searchsorted(nb, q, "right")).all()
+    # interleaving 1: reads mid-handoff (donor stale copies invisible)
+    _assert_bitwise(single, sharded, live, q, tag="mid/reads")
+    _assert_bitwise(single, sharded, live, q, limit=140, max_leaves=1, tag="mid/trunc")
+    # interleaving 2: writes mid-handoff route to the new owners
+    wk = np.setdiff1d(q + np.uint64(1), np.array(sorted(live.keys()), np.uint64))[:10]
+    for st_ in (single, sharded):
+        st_.put(wk, wk)
+        st_.delete(q[:5])
+    live.update({int(k): int(k) for k in wk})
+    for k in q[:5].tolist():
+        live.pop(int(k), None)
+    _assert_bitwise(single, sharded, live, q, tag="mid/writes")
+    # interleaving 3: a flush cycle mid-handoff (stitches on both sides)
+    single.flush()
+    sharded.flush()
+    _assert_bitwise(single, sharded, live, q, tag="mid/flush")
+    k1, v1 = single.items()
+    k2, v2 = sharded.items()  # owned-window clip makes the census exact
+    assert (k1 == k2).all() and (v1 == v2).all()
+    # commit: donors retire their stale copies, the old epoch dies
+    sharded.commit_rebalance()
+    assert not sharded.in_handoff
+    with pytest.raises(KeyError):
+        sharded.route_np(q, epoch=e0)
+    _assert_bitwise(single, sharded, live, q, tag="post/commit")
+    k1, v1 = single.items()
+    k2, v2 = sharded.items()
+    assert (k1 == k2).all() and (v1 == v2).all()
+
+
+def test_rebalance_api_guards_and_headroom_abort():
+    keys = sparse(900, seed=37)
+    hashed = kvshard.ShardedDPAStore(keys, keys, 2, partition="hash")
+    with pytest.raises(AssertionError):
+        hashed.begin_rebalance(np.array([1], dtype=np.uint64))
+    big = sparse(6000, seed=38)
+    tight = kvshard.ShardedDPAStore(
+        big, big, 2, tree_cfg=TreeConfig(growth=1.0), partition="range",
+        cache_cfg=None,
+    )
+    with pytest.raises(AssertionError):
+        tight.commit_rebalance()  # no handoff in flight
+    b0 = tight.boundaries.copy()
+    # move ~all of shard 1 across: growth=1.0 pools cannot absorb it
+    nb = np.array([big[-8]], dtype=np.uint64)
+    assert tight.begin_rebalance(nb) == []
+    assert tight.rebalances_aborted == 1 and not tight.in_handoff
+    assert (tight.boundaries == b0).all(), "aborted rebalance leaves the map"
+    # double-begin during a real handoff is refused
+    roomy = kvshard.ShardedDPAStore(
+        keys, keys, 2, tree_cfg=GROWTH, partition="range", cache_cfg=None,
+    )
+    roomy.begin_rebalance(np.array([keys[600]], dtype=np.uint64))
+    assert roomy.in_handoff
+    with pytest.raises(AssertionError):
+        roomy.begin_rebalance(np.array([keys[300]], dtype=np.uint64))
+    roomy.commit_rebalance()
+
+
+# ---------------------------------------------------------------------------
+# property sweep: random ops x random migration interleavings vs dict oracle
+# ---------------------------------------------------------------------------
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_rebalance_interleaving_property(data):
+    """Random PUT/DELETE/RANGE/GET/FLUSH interleaved with random begin /
+    commit points and random boundary targets: the sharded tier must stay
+    bitwise-identical to the single store and the dict oracle at every
+    step, whatever migration state it is in."""
+    n_keys = data.draw(st.integers(min_value=60, max_value=140))
+    n_shards = data.draw(st.sampled_from([2, 3]))
+    raw = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=2**63),
+            min_size=n_keys,
+            max_size=n_keys,
+            unique=True,
+        )
+    )
+    keys = np.array(sorted(raw), dtype=np.uint64)
+    vals = keys ^ np.uint64(0x5A)
+    cfg = TreeConfig(ib_cap=4, growth=24.0)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, tree_cfg=cfg, partition="range", cache_cfg=None,
+    )
+    single = DPAStore(keys, vals, cfg, cache_cfg=None)
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    pool = list(keys.tolist())
+    for step in range(8):
+        op = data.draw(
+            st.sampled_from(["put", "delete", "range", "get", "flush", "begin", "commit"])
+        )
+        if op == "put":
+            k = np.uint64(data.draw(st.integers(min_value=0, max_value=2**63)))
+            for s in (single, sharded):
+                s.put(np.array([k]), np.array([k ^ np.uint64(0x5A)]))
+            live[int(k)] = int(k) ^ 0x5A
+            pool.append(int(k))
+        elif op == "delete" and pool:
+            k = np.uint64(data.draw(st.sampled_from(pool)))
+            for s in (single, sharded):
+                s.delete(np.array([k]))
+            live.pop(int(k), None)
+        elif op == "flush":
+            single.flush()
+            sharded.flush()
+        elif op == "begin" and not sharded.in_handoff:
+            # random target: quantiles of a random subset of the live keys
+            sub = [data.draw(st.sampled_from(pool)) for _ in range(8)]
+            nb = pla.fit_boundaries(np.array(sub, dtype=np.uint64), n_shards)
+            sharded.begin_rebalance(nb)
+        elif op == "commit" and sharded.in_handoff:
+            sharded.commit_rebalance()
+        else:
+            qs = np.array(
+                [data.draw(st.sampled_from(pool)) for _ in range(3)],
+                dtype=np.uint64,
+            )
+            ml = data.draw(st.sampled_from([1, 4]))
+            _assert_bitwise(
+                single, sharded, live, qs, limit=5, max_leaves=ml,
+                tag=f"step{step}",
+            )
+    if sharded.in_handoff:
+        sharded.commit_rebalance()
+    single.flush()
+    sharded.flush()
+    k1, v1 = single.items()
+    k2, v2 = sharded.items()
+    assert (k1 == k2).all() and (v1 == v2).all()

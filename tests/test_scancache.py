@@ -176,6 +176,126 @@ def test_buffered_writes_visible_through_cached_anchor():
 
 
 # ---------------------------------------------------------------------------
+# scan-anchor cursor admission (pagination pre-warm)
+# ---------------------------------------------------------------------------
+
+
+def test_cursor_admission_prewarms_pagination():
+    """A truncated scan's cursor is admitted under RANGE(last_key + 1)'s
+    start key, so the classic pagination pattern — client re-issues from
+    one past its last result — hits the anchor cache and skips the
+    descent.  The paginated pages must still reconstruct the exact oracle
+    answer, including across buffered writes landed between pages."""
+    keys = sparse(1600, seed=61)
+    vals = keys ^ np.uint64(0x11)
+    store = DPAStore(
+        keys, vals, TreeConfig(ib_cap=16, growth=16.0), cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    q = keys[::211].copy()
+    # page 1: force truncation (140 > SEG_CAP never fits a 1-leaf walk)
+    rk, rv, rc, trunc, _, cur_key = store.range_with_state(
+        q, limit=140, max_leaves=1, max_rounds=1
+    )
+    assert trunc.all()
+    assert store.stats.scan_cursor_admits == q.size, (
+        "every truncated row's continuation must be admitted"
+    )
+    # a buffered write between pages must stay visible through the anchor
+    newk = np.setdiff1d(cur_key + np.uint64(2), keys)[:4]
+    store.put(newk, newk ^ np.uint64(0x11))
+    live.update({int(k): int(k) ^ 0x11 for k in newk})
+    # page 2: the pagination pattern — RANGE(last_key + 1)
+    nxt = cur_key + np.uint64(1)
+    hits0, probes0 = store.stats.scan_hits, store.stats.scan_probes
+    rk2, rv2, rc2 = store.range(nxt, limit=8, max_leaves=8)
+    hit_rate = (store.stats.scan_hits - hits0) / max(
+        store.stats.scan_probes - probes0, 1
+    )
+    assert hit_rate == 1.0, (
+        f"pre-warmed pagination must hit the anchor cache, got {hit_rate}"
+    )
+    for i, k in enumerate(nxt):
+        exp = _oracle_range(live, k, 8)
+        assert rc2[i] == exp.size
+        assert (rk2[i, : exp.size] == exp).all()
+        assert all(
+            int(rv2[i, j]) == live[int(rk2[i, j])] for j in range(exp.size)
+        )
+    # glued pages == one oracle scan (no duplicate, no gap at the seam)
+    for i in range(q.size):
+        exp = _oracle_range(live, q[i], int(rc[i]) + 8)
+        glued = np.concatenate([rk[i, : rc[i]], rk2[i, : rc2[i]]])
+        assert (glued == exp[: glued.size]).all()
+
+
+def test_cursor_admission_gated_by_config():
+    keys = sparse(1200, seed=63)
+    store = DPAStore(
+        keys, keys, TreeConfig(growth=16.0), cache_cfg=None,
+        scan_cache_cfg=ScanCacheConfig(n_threads=8, admit_cursors=False),
+    )
+    q = keys[::301].copy()
+    _, _, _, trunc, _, _ = store.range_with_state(
+        q, limit=140, max_leaves=1, max_rounds=1
+    )
+    assert trunc.all()
+    assert store.stats.scan_cursor_admits == 0, "flag off: no cursor admits"
+
+
+def test_rebalance_migration_invalidates_anchors_and_cursors():
+    """Mid-migration interleaving (rebalance x scan cache): anchors AND
+    cursor-admitted anchors pointing into a migrated slice are dropped when
+    the donor retires it (extract_slice frees the leaves -> the
+    ``EpochManager.on_defer`` listener -> ``invalidate_leaves``), and the
+    post-migration pagination pattern is still exact — now served by the
+    receiver through the flipped ownership table."""
+    from repro.core import TreeConfig as TC
+    from repro.distributed import kvshard
+
+    keys = sparse(2000, seed=65)
+    vals = keys ^ np.uint64(0x77)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 2, tree_cfg=TC(growth=16.0), partition="range",
+        cache_cfg=None, scan_cache_cfg=ScanCacheConfig(n_threads=8),
+    )
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    b0 = sharded.boundaries.copy()
+    donor = sharded.shards[1]
+    # warm anchors inside shard 1's lower slice (about to migrate to 0) and
+    # leave a truncated-scan cursor admission pointing into the same slice
+    in_slice = keys[(keys >= b0[0])][:48:4].copy()
+    sharded.range(in_slice, limit=6, max_leaves=4)
+    donor.range_with_state(in_slice[:4], limit=140, max_leaves=1, max_rounds=1)
+    assert donor.stats.scan_probes > 0
+    assert donor.stats.scan_cursor_admits > 0
+    inv0 = donor.stats.scan_invalidated
+    # migrate the slice [b0, mid_of_shard1) down... i.e. boundary moves UP
+    new_b = np.array([keys[int(keys.size * 0.75)]], dtype=np.uint64)
+    sharded.begin_rebalance(new_b)
+    # mid-handoff: the donor's anchors still point at leaves it holds; the
+    # facade routes the slice to the receiver, which has the copy
+    rk, rv, rc = sharded.range(in_slice, limit=6, max_leaves=4)
+    sk = np.sort(np.array(sorted(live.keys()), dtype=np.uint64))
+    for i, k in enumerate(in_slice):
+        j = np.searchsorted(sk, k)
+        exp = sk[j : j + 6]
+        assert rc[i] == exp.size and (rk[i, : exp.size] == exp).all()
+    sharded.commit_rebalance()
+    assert donor.stats.scan_invalidated > inv0, (
+        "retiring the migrated slice must drop its scan anchors"
+    )
+    # post-migration: same scans, exact results, served under the new map
+    rk, rv, rc = sharded.range(in_slice, limit=6, max_leaves=4)
+    for i, k in enumerate(in_slice):
+        j = np.searchsorted(sk, k)
+        exp = sk[j : j + 6]
+        assert rc[i] == exp.size and (rk[i, : exp.size] == exp).all()
+        assert all(int(rv[i, j2]) == live[int(rk[i, j2])] for j2 in range(exp.size))
+
+
+# ---------------------------------------------------------------------------
 # property sweep: random admit/invalidate interleavings vs dict oracle
 # ---------------------------------------------------------------------------
 
