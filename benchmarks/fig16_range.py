@@ -49,12 +49,18 @@ def run():
                 # scan length (SEG_CAP=128-wide leaves)
                 max_leaves = max(4, limit // 16)
                 r0, s0 = store.range_requests, store.range_subqueries
+                m0, i0 = store.range_rounds_in_mesh, store.range_reissues
                 t = time_op(
                     store.range, q, limit, max_leaves, repeats=1
                 ) / w
                 fan = (store.range_subqueries - s0) / max(
                     store.range_requests - r0, 1
                 )
+                # continuation accounting: rounds the device loop ran
+                # in-mesh vs host re-issues that survived (steady state: 0 —
+                # the acceptance gate of the in-mesh continuation)
+                rounds = store.range_rounds_in_mesh - m0
+                reissues = store.range_reissues - i0
                 per_shard = perfmodel.range_mops(depth, limit=limit)
                 if part == "range":
                     m = per_shard * n_shards / max(fan, 1.0)
@@ -63,7 +69,8 @@ def run():
                 emit(
                     f"fig16/{part}/shards{n_shards}/limit{limit}",
                     t * 1e6,
-                    f"model_mops={m:.1f};fanout={fan:.2f};depth={depth}",
+                    f"model_mops={m:.1f};fanout={fan:.2f};depth={depth};"
+                    f"rounds_in_mesh={rounds};reissues={reissues}",
                 )
 
 

@@ -92,15 +92,20 @@ def run():
                     for q in qs[1:]:
                         store.range(q, limit=limit, max_leaves=max_leaves)
 
+                m0 = store.stats.range_rounds_in_mesh
+                i0 = store.stats.range_reissue_rounds
                 t = time_op(sweep, repeats=1) / (WAVES * w)
                 h = store.stats.scan_hits / max(store.stats.scan_probes, 1)
+                rounds = store.stats.range_rounds_in_mesh - m0
+                reissues = store.stats.range_reissue_rounds - i0
                 m = perfmodel.range_mops(
                     depth, limit=limit, anchor_hit_rate=h if mode == "cache" else 0.0
                 )
                 emit(
                     f"fig17/{mode}/zipf{alpha}/limit{limit}",
                     t * 1e6,
-                    f"model_mops={m:.1f};hit={h:.2f};depth={depth}",
+                    f"model_mops={m:.1f};hit={h:.2f};depth={depth};"
+                    f"rounds_in_mesh={rounds};reissues={reissues}",
                 )
 
 

@@ -43,16 +43,31 @@ def validate_rows(rows) -> list:
 
 def validate_fig16_coverage(rows) -> list:
     """The sharded-RANGE sweep must cover >= 2 shard counts x 2 scan lengths
-    per partition tier (fig16 rows are ``fig16/<tier>/shards<N>/limit<L>``)."""
+    per partition tier (fig16 rows are ``fig16/<tier>/shards<N>/limit<L>``),
+    and every row must carry parseable ``rounds_in_mesh`` and ``reissues``
+    derived fields — the two quantities the in-mesh continuation claim
+    rests on (steady-state re-issues must be 0: the device loop resumes
+    truncated lanes itself, so a host re-issue is a regression)."""
     problems = []
     for tier in ("range", "hash"):
         shard_counts, limits = set(), set()
         for row in rows:
-            name = row.split(",", 1)[0]
+            name, _, derived = row.split(",", 2)
             parts = name.split("/")
             if len(parts) == 4 and parts[0] == "fig16" and parts[1] == tier:
                 shard_counts.add(parts[2])
                 limits.add(parts[3])
+                fields = derived_fields(derived)
+                for key in ("rounds_in_mesh", "reissues"):
+                    try:
+                        int(fields.get(key, ""))
+                    except ValueError:
+                        problems.append(f"{name}: missing/bad {key} field")
+                if tier == "range" and fields.get("reissues", "") not in ("", "0"):
+                    problems.append(
+                        f"{name}: steady-state host re-issues must be 0, "
+                        f"got {fields['reissues']} (in-mesh loop regression)"
+                    )
         if len(shard_counts) < 2 or len(limits) < 2:
             problems.append(
                 f"fig16/{tier}: need >= 2 shard counts x 2 scan lengths, "
@@ -127,6 +142,27 @@ def rebalance_metrics(rows) -> dict:
             out[name] = {
                 "retention": float(fields["retention"]),
                 "spread_after": float(fields["spread_after"]),
+            }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
+def range_continuation_metrics(rows) -> dict:
+    """``range_rounds_in_mesh`` / ``range_reissues`` per fig16/fig17 cell —
+    surfaced in the smoke artifact so the perf trajectory records how many
+    continuation round-trips the in-mesh loop keeps off the host (and that
+    the host re-issue count stays at its steady-state 0)."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not (name.startswith("fig16/") or name.startswith("fig17/")):
+            continue
+        fields = derived_fields(derived)
+        try:
+            out[name] = {
+                "range_rounds_in_mesh": int(fields["rounds_in_mesh"]),
+                "range_reissues": int(fields["reissues"]),
             }
         except (KeyError, ValueError):
             pass
@@ -241,6 +277,7 @@ def main(argv=None) -> None:
             "failed_modules": failures,
             "anchor_cache_hit_rates": anchor_cache_hit_rates(common.ROWS),
             "rebalance_metrics": rebalance_metrics(common.ROWS),
+            "range_continuation": range_continuation_metrics(common.ROWS),
         }
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=2)

@@ -372,6 +372,155 @@ def range_batch_from(
     return out_keys, out_vals, out_valid, truncated, cursor
 
 
+# ---------------------------------------------------------------------------
+# in-mesh continuation loop: re-walk only truncated lanes from their cursor,
+# entirely on device (jax.lax.while_loop), so a multi-round scan costs one
+# dispatch — the paper's re-descend-and-continue loop with every host
+# round-trip removed (the DPA-to-host hop is what dominates tail latency).
+# ---------------------------------------------------------------------------
+
+
+def continuation_loop(
+    round_fn,
+    start_leaf: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    ub_hi: jnp.ndarray,
+    ub_lo: jnp.ndarray,
+    *,
+    limit: int,
+    max_rounds: int = 0,
+    hard_cap: int,
+):
+    """Drive ``round_fn`` (one bounded walk: ``(start, khi, klo) -> (keys,
+    vals, valid, truncated, cursor)``) inside a ``jax.lax.while_loop`` until
+    every lane hit ``limit``, exhausted its chain, or ran into its owned
+    window — the device-resident analogue of the host re-issue loop.
+
+    Per round, per lane: the walk resumes at the lane's cursor leaf with the
+    original ``k_min`` (exact — see :class:`ScanCursor`), its results are
+    clipped to the lane's owned window ``[.., ub)`` (clipping proves the
+    window is exhausted, so ``truncated`` is cleared — steady-state no-op at
+    the KEY_MAX sentinel), and survivors are appended to the lane's
+    accumulator row.  Only lanes still ``truncated`` with room left stay
+    active; inactive lanes ride along dead (``start=-1`` walks are empty).
+
+    ``max_rounds=0`` loops until quiescence (bounded by ``hard_cap``, the
+    chain-length ceiling — each active lane advances >= ``max_leaves``
+    leaves per round); ``max_rounds>=1`` stops early and reports the
+    leftover lanes ``truncated`` with a live resume cursor, which is what
+    keeps the bounded-round contract of ``range_with_state`` intact.
+
+    Returns (keys (B,limit,2), vals, valid, truncated, cursor, rounds) with
+    the exact output conventions of :func:`range_batch_from` (pad keys /
+    zero vals in dead columns) plus the executed round count (i32 scalar).
+    """
+    B = khi.shape[0]
+    cap_rounds = hard_cap if max_rounds <= 0 else min(max_rounds, hard_cap)
+    pad = jnp.uint32(0xFFFFFFFF)
+    rows = jnp.arange(B)[:, None]
+    cols = jnp.arange(limit, dtype=jnp.int32)[None, :]
+
+    def cond(st):
+        return jnp.any(st["active"]) & (st["rounds"] < cap_rounds)
+
+    def body(st):
+        start = jnp.where(st["active"], st["cur"], jnp.int32(-1))
+        rk, rv, rvalid, rtrunc, cursor = round_fn(start, khi, klo)
+        # owned-window clip, per round: entries at/above the lane's ub are
+        # dropped and prove the window exhausted (clear ``truncated`` — the
+        # continuation belongs to whoever owns the successor window)
+        beyond = limb_le(ub_hi[:, None], ub_lo[:, None], rk[..., 0], rk[..., 1])
+        clipped = rvalid & beyond
+        rvalid = rvalid & ~beyond
+        rtrunc = rtrunc & ~jnp.any(clipped, axis=1)
+        rc = jnp.sum(rvalid, axis=1)
+        # append the round's survivors at each lane's fill level
+        tgt = st["acc_n"][:, None] + cols
+        put = rvalid & (tgt < limit)
+        tgt = jnp.where(put, tgt, limit)  # overflow -> scratch column
+        acc_kh = st["acc_kh"].at[rows, tgt].set(jnp.where(put, rk[..., 0], pad))
+        acc_kl = st["acc_kl"].at[rows, tgt].set(jnp.where(put, rk[..., 1], pad))
+        acc_vh = st["acc_vh"].at[rows, tgt].set(jnp.where(put, rv[..., 0], 0))
+        acc_vl = st["acc_vl"].at[rows, tgt].set(jnp.where(put, rv[..., 1], 0))
+        acc_n = jnp.minimum(st["acc_n"] + rc, limit)
+        active = st["active"] & rtrunc & (acc_n < limit)
+        return dict(
+            acc_kh=acc_kh,
+            acc_kl=acc_kl,
+            acc_vh=acc_vh,
+            acc_vl=acc_vl,
+            acc_n=acc_n,
+            cur=cursor.leaf,
+            active=active,
+            rounds=st["rounds"] + 1,
+        )
+
+    st = jax.lax.while_loop(
+        cond,
+        body,
+        dict(
+            acc_kh=jnp.full((B, limit + 1), pad, dtype=jnp.uint32),
+            acc_kl=jnp.full((B, limit + 1), pad, dtype=jnp.uint32),
+            acc_vh=jnp.zeros((B, limit + 1), dtype=jnp.uint32),
+            acc_vl=jnp.zeros((B, limit + 1), dtype=jnp.uint32),
+            acc_n=jnp.zeros((B,), dtype=jnp.int32),
+            cur=start_leaf.astype(jnp.int32),
+            active=jnp.ones((B,), dtype=bool),
+            rounds=jnp.int32(0),
+        ),
+    )
+    out_keys = jnp.stack([st["acc_kh"][:, :limit], st["acc_kl"][:, :limit]], axis=-1)
+    out_vals = jnp.stack([st["acc_vh"][:, :limit], st["acc_vl"][:, :limit]], axis=-1)
+    out_valid = cols < st["acc_n"][:, None]
+    truncated = st["active"]  # only a bounded max_rounds leaves lanes active
+    cursor = make_cursor(
+        khi, klo, out_keys, st["acc_n"], st["cur"], truncated
+    )
+    return out_keys, out_vals, out_valid, truncated, cursor, st["rounds"]
+
+
+@partial(jax.jit, static_argnames=("limit", "max_leaves", "max_rounds"))
+def range_batch_loop(
+    tree: DeviceTree,
+    ib: InsertBuffers,
+    start_leaf: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    ub_hi: jnp.ndarray,
+    ub_lo: jnp.ndarray,
+    *,
+    limit: int,
+    max_leaves: int = 4,
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, ScanCursor, jnp.ndarray]:
+    """Multi-round RANGE in ONE device dispatch: :func:`range_batch_from`
+    rounds driven by :func:`continuation_loop`.  ``ub_hi``/``ub_lo`` are
+    per-lane exclusive owned-window upper bounds (KEY_MAX limbs = no clip:
+    real keys never reach the sentinel); ``start_leaf`` is a descent
+    result / cached anchor / resume cursor (-1 = dead lane).  See
+    :func:`continuation_loop` for the round invariants and outputs."""
+    n_leaves = tree.leaf_next.shape[0]
+    hard_cap = n_leaves // max(max_leaves, 1) + 2
+
+    def round_fn(start, h, l):
+        return range_batch_from(
+            tree, ib, start, h, l, limit=limit, max_leaves=max_leaves
+        )
+
+    return continuation_loop(
+        round_fn,
+        start_leaf,
+        khi,
+        klo,
+        ub_hi,
+        ub_lo,
+        limit=limit,
+        max_rounds=max_rounds,
+        hard_cap=hard_cap,
+    )
+
+
 @partial(jax.jit, static_argnames=("depth", "eps_inner", "limit", "max_leaves"))
 def range_batch(
     tree: DeviceTree,

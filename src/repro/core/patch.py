@@ -323,7 +323,11 @@ def _rebuild_node(
     children: np.ndarray,
 ) -> List[int]:
     """Re-fit one node's flattened entries into new node(s): a single node
-    when the segments still fit, else retrain-bound-sparse split nodes."""
+    when the segments still fit, else retrain-bound-sparse split nodes.
+    Zero entries (every child removed by a chain compaction) yield zero
+    nodes — the caller drops the node from ITS parent in turn."""
+    if firsts.size == 0:
+        return []
     segs = pla.fit(firsts, img.cfg.eps_inner, SEG_CAP)
     max_segs, _ = _inner_split_caps(img)
     per = len(segs) if len(segs) <= NODE_SEGS else max_segs
@@ -338,6 +342,7 @@ def _grow_root(
 ) -> bool:
     """Make ``child_ids`` the new top of the tree: build levels until a
     single node remains (root split adds levels), then CONNECT the root."""
+    assert len(child_ids) >= 1, "the tree cannot become empty"
     depth_changed = False
     while len(child_ids) > 1:
         segs = pla.fit(child_firsts, img.cfg.eps_inner, SEG_CAP)
@@ -484,6 +489,56 @@ def plan_patch_batch(
         if r.kind == "structural":
             r.depth_changed = depth_changed
     return BatchPatchResult(batch=batch, results=results, unplanned=unplanned)
+
+
+def plan_chain_compaction(
+    img: TreeImage, stubs: List[int]
+) -> Tuple[StitchBatch, int]:
+    """Plan the removal of empty routing-stub leaves as ONE stitch batch.
+
+    ``extract_slice`` (and an all-deleting patch) keeps a fully-emptied
+    leaf in the chain as an empty stub so routing stays total; over many
+    rebalance cycles those stubs accumulate.  Removal is the
+    zero-replacement case of a structural patch: splice the predecessor's
+    ``leaf_next`` past the stub (a CONNECT), free the stub's leaf + slot
+    rows (quarantined by the caller's epoch bookkeeping, which also drops
+    any scan anchors on them), and drop the stub's entry from its parent —
+    ``_maintain_tree`` with an empty replacement list, which rebuilds each
+    affected node once and cascades the drop upward when a node empties
+    out.  Keys that routed to a removed stub route to its predecessor
+    afterwards (the floor search lands one entry earlier), whose chain walk
+    covers the merged window — routing stays total, scans stay exact.
+
+    Callers must pass stubs that are live-empty (``leaf_count == 0``), have
+    an empty insert buffer, and a predecessor in the chain (the head stub
+    is kept so at least one leaf always survives).  Returns (batch,
+    n_removed); stubs whose anchor no longer routes to them are skipped
+    defensively.
+    """
+    batch = StitchBatch()
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]] = []
+    for leaf in stubs:
+        leaf = int(leaf)
+        assert int(img.leaf_count[leaf]) == 0, "only empty stubs are removable"
+        found, path = img.find_leaf(np.uint64(img.leaf_anchor[leaf]))
+        if found != leaf or not path:  # unroutable, or the depth-1 root leaf
+            continue
+        prev = int(img.leaf_prev[leaf])
+        nxt = int(img.leaf_next[leaf])
+        assert prev != -1, "keep the chain head; remove only interior stubs"
+        img.leaf_next[prev] = nxt
+        batch.connects.append(("leaf_next", prev, nxt))
+        if nxt != -1:
+            img.leaf_prev[nxt] = prev
+        img.leaf_prev[leaf] = -1
+        img.leaf_next[leaf] = -1
+        batch.frees.append(("leaves", leaf))
+        batch.frees.append(("slots", int(img.leaf_slot[leaf])))
+        repl.append(
+            (path, [])  # zero replacements: drop the entry from the parent
+        )
+    _maintain_tree(img, batch, repl)
+    return batch, len(repl)
 
 
 def _maintain_tree(

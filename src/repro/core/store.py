@@ -96,8 +96,14 @@ class StoreStats:
     scan_hits: int = 0  # rows whose descent the anchor cache skipped
     scan_invalidated: int = 0  # anchors dropped by stitch-cycle invalidation
     scan_cursor_admits: int = 0  # truncated-scan cursors admitted as anchors
-    range_reissue_rounds: int = 0  # continuation waves after the first
+    range_rounds_in_mesh: int = 0  # continuation rounds run INSIDE the device
+    # loop (rounds after the first of each dispatch) — zero host round-trips
+    range_reissue_rounds: int = 0  # host-orchestrated re-issue waves (the
+    # rare fallback: only bounded-max_rounds callers resuming from a cursor)
     range_truncated: int = 0  # rows returned truncated (bounded max_rounds)
+    # chain compaction: empty routing stubs (left by extract_slice / heavy
+    # deletes) removed from the leaf chain + parents
+    stub_leaves_compacted: int = 0
     # slice migration (online rebalance): keys shipped out of / into this
     # store through extract_slice / ingest_slice
     migrated_out_keys: int = 0
@@ -425,21 +431,33 @@ class DPAStore:
         max_leaves: int = 4,
         max_rounds: Optional[int] = None,
         start_leaves: Optional[np.ndarray] = None,
+        k_max=None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """RANGE with explicit continuation state: returns (keys (n, limit),
         vals, count (n,), truncated (n,), cursor_leaf (n,), cursor_key (n,)).
 
-        Each device wave probes the scan-anchor cache (fresh rows), walks
-        ``max_leaves`` leaves, and rows that come back *truncated* (chain
-        continues, row under-filled) are re-issued from their cursor —
-        ``max_rounds=None`` loops until limit or exhaustion, a bounded
+        ONE device dispatch: the scan-anchor cache resolves fresh rows'
+        start leaves, then ``lookup.range_batch_loop`` runs the multi-round
+        continuation entirely on device (``jax.lax.while_loop`` re-walking
+        only truncated lanes from their cursor) — the host never re-issues.
+        ``max_rounds=None`` loops until limit/exhaustion/window; a bounded
         ``max_rounds`` returns honestly-truncated rows with the cursor to
         resume from (``start_leaves`` accepts those cursors back, -1 = fresh
-        descent; the sharded tier uses this to re-issue only to truncated
-        shards).  ``truncated=False`` with ``count < limit`` means the key
-        space genuinely ran out — the exhausted-vs-bounded distinction the
-        scatter-gather epilogue keys on.
+        descent).  ``k_max`` (scalar or per-row u64, exclusive) clips every
+        round to an owned key window — clipped rows report ``truncated=
+        False`` (the window is exhausted; whoever owns the successor window
+        owns the continuation), which is what lets the sharded facade issue
+        one sub-query per shard mid-rebalance.  ``truncated=False`` with
+        ``count < limit`` means the key space (or window) genuinely ran out
+        — the exhausted-vs-bounded distinction the scatter-gather epilogue
+        keys on.  ``stats.range_rounds_in_mesh`` counts the interior rounds
+        beyond the first; ``stats.range_reissue_rounds`` now only counts
+        host-resumed calls (``start_leaves`` given) — the rare fallback.
         """
+        assert max_rounds is None or max_rounds >= 1, (
+            "max_rounds: None = loop until limit/exhaustion/window; a bound "
+            "must be >= 1 (0 would silently alias the unbounded loop)"
+        )
         start_keys_u64 = np.asarray(start_keys_u64, dtype=np.uint64)
         n = start_keys_u64.size
         lim = max(limit, 0)
@@ -452,60 +470,50 @@ class DPAStore:
         self.stats.ranges += n
         if n == 0 or limit <= 0:
             return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
-        idxs = np.arange(n)
-        resume = (
-            np.full(n, -1, dtype=np.int32)
-            if start_leaves is None
-            else np.asarray(start_leaves, dtype=np.int32).copy()
+        if start_leaves is not None:
+            self.stats.range_reissue_rounds += 1
+        B = _pad_pow2(n)
+        khi, klo, active = self._limbs(start_keys_u64, B)
+        res_pad = np.full(B, -1, dtype=np.int32)
+        if start_leaves is not None:
+            res_pad[:n] = np.asarray(start_leaves, dtype=np.int32)
+        start = self._scan_start(khi, klo, res_pad, n)
+        start = jnp.where(active, start, -1)  # pad rows ride along dead
+        ubs = np.full(B, KEY_MAX, dtype=np.uint64)  # sentinel: no clip
+        if k_max is not None:
+            ubs[:n] = np.asarray(k_max, dtype=np.uint64)
+        ub_limbs = split_u64(ubs)
+        rk, rv, valid, trunc, cursor, rounds = lookup.range_batch_loop(
+            self.tree,
+            self.ib,
+            start,
+            khi,
+            klo,
+            jnp.asarray(ub_limbs[:, 0]),
+            jnp.asarray(ub_limbs[:, 1]),
+            limit=limit,
+            max_leaves=max_leaves,
+            max_rounds=0 if max_rounds is None else max_rounds,
         )
-        rounds = 0
-        # each round advances every live cursor by >= max_leaves leaves, so
-        # the loop is bounded by the chain length; cap it defensively
-        hard_cap = self.image.leaf_anchor.shape[0] // max(max_leaves, 1) + 2
-        while idxs.size:
-            m = idxs.size
-            B = _pad_pow2(m)
-            khi, klo, _ = self._limbs(start_keys_u64[idxs], B)
-            res_pad = np.full(B, -1, dtype=np.int32)
-            res_pad[:m] = resume
-            start = self._scan_start(khi, klo, res_pad, m)
-            rk, rv, valid, trunc, cursor = lookup.range_batch_from(
-                self.tree,
-                self.ib,
-                start,
-                khi,
-                klo,
-                limit=limit,
-                max_leaves=max_leaves,
+        self._end_wave()
+        self.stats.range_rounds_in_mesh += max(int(rounds) - 1, 0)
+        va = np.asarray(valid)[:n]
+        rc = va.sum(axis=1)
+        keys_np = join_u64(np.asarray(rk)[:n])
+        vals_np = join_u64(np.asarray(rv)[:n])
+        keys_out[:] = np.where(va, keys_np, 0)
+        vals_out[:] = np.where(va, vals_np, 0)
+        counts[:] = rc
+        trunc_out[:] = np.asarray(trunc)[:n]
+        cur_leaf_out[:] = np.asarray(cursor.leaf)[:n]
+        last_key = join_u64(
+            np.stack(
+                [np.asarray(cursor.khi)[:n], np.asarray(cursor.klo)[:n]],
+                axis=-1,
             )
-            self._end_wave()
-            rk = join_u64(np.asarray(rk)[:m])
-            rv = join_u64(np.asarray(rv)[:m])
-            va = np.asarray(valid)[:m]
-            rc = va.sum(axis=1)
-            trunc_np = np.asarray(trunc)[:m]
-            append_range_results(keys_out, vals_out, counts, idxs, rk, rv, rc, limit)
-            # continuation state (informational for complete rows)
-            trunc_out[idxs] = trunc_np
-            cur_leaf_out[idxs] = np.asarray(cursor.leaf)[:m]
-            last_key = join_u64(
-                np.stack(
-                    [np.asarray(cursor.khi)[:m], np.asarray(cursor.klo)[:m]],
-                    axis=-1,
-                )
-            )
-            emitted = rc > 0
-            cur_key_out[idxs[emitted]] = last_key[emitted]
-            cont = trunc_np & (counts[idxs] < limit)
-            rounds += 1
-            if rounds > 1:
-                self.stats.range_reissue_rounds += 1
-            if not cont.any():
-                break
-            if (max_rounds is not None and rounds >= max_rounds) or rounds >= hard_cap:
-                break
-            resume = np.asarray(cursor.leaf)[:m][cont]
-            idxs = idxs[cont]
+        )
+        emitted = rc > 0
+        cur_key_out[emitted] = last_key[emitted]
         trunc_out &= counts < limit
         self.stats.range_truncated += int(trunc_out.sum())
         if start_leaves is None:
@@ -794,6 +802,58 @@ class DPAStore:
             self._run_patch_cycle(pending)
         self.stats.migrated_out_keys += int(keys.size)
         return keys, vals
+
+    def stub_count(self) -> int:
+        """Empty routing-stub leaves currently in the chain (the residue of
+        ``extract_slice`` / all-deleting patches)."""
+        n = 0
+        leaf = self.image.first_leaf()
+        while leaf != -1:
+            n += int(self.image.leaf_count[leaf]) == 0
+            leaf = int(self.image.leaf_next[leaf])
+        return n
+
+    def compact_chain(self) -> int:
+        """Remove empty leaf stubs from the chain (and their parent
+        entries) as one stitch transaction — the reclaim pass that keeps
+        ``extract_slice`` residue from accumulating across rebalance
+        cycles.  The chain head is kept (routing stays total with >= 1
+        leaf) and stubs with buffered writes are skipped (they are about
+        to become real leaves again).  Freed rows ride the standard epoch
+        quarantine, which also drops their scan anchors before the call
+        returns.  Returns the number of stubs removed."""
+        ib_counts = np.asarray(self.ib.count)
+        stubs = []
+        prev = -1
+        leaf = self.image.first_leaf()
+        while leaf != -1:
+            nxt = int(self.image.leaf_next[leaf])
+            if (
+                int(self.image.leaf_count[leaf]) == 0
+                and int(ib_counts[leaf]) == 0
+                and prev != -1
+            ):
+                stubs.append(leaf)
+            else:
+                prev = leaf
+            leaf = nxt
+        if not stubs:
+            return 0
+        batch, n = patch.plan_chain_compaction(self.image, stubs)
+        if n == 0:
+            return 0
+        # COPY then CONNECT, then the cycle's epoch bookkeeping — identical
+        # to a flush cycle's tail (see _run_patch_cycle)
+        self.tree = stitch.apply_copies(self.tree, batch)
+        self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, batch)
+        self.stats.stitch_applies += 1
+        self.epochs.defer_free_batch(batch.frees)
+        self._apply_scan_invalidation()
+        self.stats.reclaimed += self.epochs.end_cycle(self.image)
+        self.stats.stitched_bytes += batch.payload_bytes()
+        self.stats.stitched_dpa_bytes += batch.dpa_bytes()
+        self.stats.stub_leaves_compacted += n
+        return n
 
     def ingest_headroom(self) -> int:
         """Keys this store can absorb via :meth:`ingest_slice` without

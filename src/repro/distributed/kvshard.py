@@ -277,31 +277,34 @@ class ShardedDPAStore:
         limit: int = 10,
         max_leaves: int = 4,
         fanout: Optional[int] = None,
+        epoch: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched RANGE(k_min, limit): (keys (n, limit), vals (n, limit),
         count (n,)) — globally ascending live entries, zeros past ``count``.
 
-        Range partition: scatter-gather with precise re-issue.  Each request
-        is sent to its owner shard (boundary search) and then to successive
-        shards — at most ``fanout`` of them (default: all) and only while
-        the request still needs results.  Within a shard, a sub-query whose
-        bounded ``max_leaves`` walk comes back *truncated* (chain remaining,
-        row under-filled) is re-issued to that same shard from its
-        continuation cursor — never to a successor, which would reorder —
-        until the shard reports *exhausted* (``truncated=False``).  Only
-        then does the epilogue stitch the successor's slice.  Results are
-        therefore exact for any ``max_leaves`` >= 1; ``range_reissues``
-        counts the continuation sub-queries.  Each shard's first descent
-        per sub-query goes through its scan-anchor cache.
+        Range partition: scatter-gather with in-mesh continuation.  Each
+        request is sent to its owner shard (boundary search) and then to
+        successive shards — at most ``fanout`` of them (default: all) and
+        only while the request still needs results.  A shard serves its
+        whole sub-query in ONE dispatch: ``range_with_state`` drives the
+        multi-round ``max_leaves`` walk inside a device loop
+        (``lookup.range_batch_loop``), re-walking only truncated lanes from
+        their cursor and clipping every round to the shard's owned window
+        ``[lb, ub)`` — so the steady-state path performs ZERO host
+        re-issues (``range_reissues`` stays 0; interior rounds are counted
+        by ``range_rounds_in_mesh``).  The host fallback — resuming a row
+        from its returned cursor — survives only for the rare case of a
+        bounded device loop (chain-length hard cap).  Results are exact for
+        any ``max_leaves`` >= 1; each shard's first descent per sub-query
+        goes through its scan-anchor cache.
 
-        Every shard's contribution is confined to its *owned window* under
-        the current boundary epoch: successor sub-queries start at the
-        shard's slice start and entries at/above its slice end are clipped
-        (clearing ``truncated`` — the successor owns the continuation).
-        Steady-state this is a no-op; during a rebalance handoff it keeps a
-        donor's not-yet-retired stale slice copy out of the gather, which
-        is what makes mid-migration RANGE bitwise-equal to the oracle
-        (mirrors ``rangeshard._replicate`` / ``_clip_window`` device-side).
+        ``epoch`` selects the boundary epoch the wave was admitted under
+        (default: current) — during a rebalance handoff both epochs are
+        live, and routing, window lower bounds AND the per-round upper
+        clip all follow the admitted epoch, which is what keeps a donor's
+        not-yet-retired stale slice copy invisible and makes mid-migration
+        RANGE bitwise-equal to the oracle under either epoch (mirrors the
+        epoch-tagged ``rangeshard`` device waves).
 
         Hash partition: keys are scattered by hash, so every shard must scan
         (broadcast) and the epilogue k-way merges — correct, but aggregate
@@ -319,11 +322,10 @@ class ShardedDPAStore:
         if self.partition == "range":
             from repro.core.store import append_range_results
 
-            owner = self.route_np(start)
-            lb = self.ownership.lower_bounds()
-            ub = self.ownership.upper_bounds()  # KEY_MAX sentinel at the end
+            owner = self.route_np(start, epoch=epoch)
+            lb = self.ownership.lower_bounds(epoch)
+            ub = self.ownership.upper_bounds(epoch)  # KEY_MAX sentinel last
             fanout = self.n_shards if fanout is None else fanout
-            cols = np.arange(max(limit, 0))
             for s in range(self.n_shards):
                 m = (owner <= s) & (s - owner < fanout) & (counts < limit)
                 if not m.any():
@@ -333,7 +335,7 @@ class ShardedDPAStore:
                 # owned-window lower bound (successor sub-queries scan from
                 # their slice start; no-op for the owner by routing)
                 sub_start = np.maximum(start[idxs], lb[s])
-                resume = np.full(idxs.size, -1, dtype=np.int32)
+                resume = None
                 while idxs.size:
                     rk, rv, rc, trunc, cur_leaf, _ = self.shards[
                         s
@@ -341,21 +343,14 @@ class ShardedDPAStore:
                         sub_start,
                         limit=limit,
                         max_leaves=max_leaves,
-                        max_rounds=1,
                         start_leaves=resume,
+                        k_max=ub[s],
                     )
-                    # owned-window upper bound: clip entries at/above the
-                    # successor's slice start; a clipped entry proves this
-                    # shard's window is exhausted (clear ``truncated``)
-                    in_win = (cols[None, :] < rc[:, None]) & (rk < ub[s])
-                    rc_clip = in_win.sum(axis=1)
-                    trunc = trunc & (rc_clip == rc)
-                    rc = rc_clip
                     append_range_results(
                         keys_out, vals_out, counts, idxs, rk, rv, rc, limit
                     )
-                    # bounded-by-max_leaves rows resume at their cursor;
-                    # exhausted rows fall through to the successor shard
+                    # in-mesh loop: rows come back complete or exhausted;
+                    # a truncated row (device round cap) resumes host-side
                     again = trunc & (counts[idxs] < limit)
                     idxs = idxs[again]
                     sub_start = sub_start[again]
@@ -504,6 +499,12 @@ class ShardedDPAStore:
         for mv in self._pending_moves:
             k, _ = self.shards[mv.donor].extract_slice(mv.k_lo, mv.k_hi)
             migrated += int(k.size)
+        # chain compaction: extract_slice leaves one empty routing stub per
+        # emptied leaf; without this pass they accumulate cycle over cycle
+        # (ingest re-creates leaves at split_cap fill, so an oscillating
+        # storm ratchets the stub count until the pools exhaust)
+        for s in {mv.donor for mv in self._pending_moves}:
+            self.shards[s].compact_chain()
         self.ownership.retire_previous()
         self._pending_moves = []
         self.rebalances += 1
@@ -532,6 +533,14 @@ class ShardedDPAStore:
             return None
         return self.rebalance()
 
+    @property
+    def range_rounds_in_mesh(self) -> int:
+        """Continuation rounds the shards ran inside their device loops
+        (rounds after the first of each dispatch) — the round-trips the
+        in-mesh loop keeps off the host, vs ``range_reissues`` which counts
+        the host round-trips that survived."""
+        return sum(sh.stats.range_rounds_in_mesh for sh in self.shards)
+
     def stats_totals(self) -> Dict[str, int]:
         """Aggregate StoreStats across shards (flush cycle / stitch apply
         accounting for the benchmarks)."""
@@ -543,9 +552,11 @@ class ShardedDPAStore:
         return out
 
 
-def _bucketize(dest, khi, klo, n_shards: int, cap: int):
+def _bucketize(dest, khi, klo, n_shards: int, cap: int, extra=()):
     """Group a shard's local requests by destination shard into fixed
-    (n_shards, cap) buckets.  Returns (bk_hi, bk_lo, origin_idx, valid).
+    (n_shards, cap) buckets.  Returns (bk_hi, bk_lo, origin_idx, valid)
+    plus one bucketed array per ``extra`` payload (same scatter, zero
+    fill) — the range tier ships per-request epoch tags this way.
 
     ``dest`` is the per-request destination shard; values outside
     ``[0, n_shards)`` act as a drop sentinel (the request lands in no
@@ -569,12 +580,20 @@ def _bucketize(dest, khi, klo, n_shards: int, cap: int):
     # ``order`` would mix domains and mark landed requests as dropped
     # (spurious RETRYs under mixed-destination overflow).
     valid = jnp.zeros((n_shards * cap,), bool).at[slot].set(ok, mode="drop")
-    return (
+    outs = (
         bk_hi.reshape(n_shards, cap),
         bk_lo.reshape(n_shards, cap),
         origin.reshape(n_shards, cap),
         valid.reshape(n_shards, cap),
     )
+    bextra = tuple(
+        jnp.zeros((n_shards * cap,), a.dtype)
+        .at[slot]
+        .set(a[order], mode="drop")
+        .reshape(n_shards, cap)
+        for a in extra
+    )
+    return outs + bextra if bextra else outs
 
 
 def _local_get(tree, ib, khi, klo, *, depth, eps_inner, eps_leaf):

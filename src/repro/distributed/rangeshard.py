@@ -30,21 +30,31 @@ back False and the client re-sends, the batched analogue of the paper's
 receive-queue overflow handling (Sec 3.1.3).  A request is ``ok`` only if
 *every* in-range replica of its fan-out wave landed.
 
-Continuation (exhausted vs bounded).  Each per-shard scan is bounded by
-``max_leaves`` — the paper's 64-pairs-per-response packetisation — so a
-shard can come back short for two very different reasons: its slice ran
-out of keys (*exhausted* — the successor's slice is the correct
-continuation) or the bounded walk was cut mid-slice (*bounded* — stitching
-the successor would leave a gap).  ``lookup.range_batch`` distinguishes
-them with a device-side ``truncated`` flag + resume cursor (last key +
-first unwalked leaf — representationally a scan anchor, see
-``core/scancache``), and the gather epilogue (a) drops contributions past
+In-mesh continuation (exhausted vs bounded).  Each per-shard walk is
+bounded by ``max_leaves`` — the paper's 64-pairs-per-response
+packetisation — so a single walk can come back short for two very
+different reasons: the slice ran out of keys (*exhausted* — the
+successor's slice is the correct continuation) or the bounded walk was
+cut mid-slice (*bounded* — stitching the successor would leave a gap).
+``lookup.range_batch_from`` distinguishes them with a device-side
+``truncated`` flag + resume cursor (last key + first unwalked leaf —
+representationally a scan anchor, see ``core/scancache``).  The wave does
+NOT hand that flag back to the host: ``lookup.range_batch_loop`` wraps
+the walk in a ``jax.lax.while_loop`` that re-walks only truncated lanes
+from their cursor, entirely between the two ``all_to_all`` exchanges —
+no collectives inside the loop, so shards iterate independently and a
+multi-round scan never leaves the mesh (the DPA-to-host hop it saves is
+what dominates tail latency in the off-path SmartNIC measurements the
+README cites).  The gather epilogue still (a) drops contributions past
 the first truncated replica so the wave output is always an exact
-ascending prefix of the oracle answer, and (b) surfaces a per-request
-``truncated`` output.  The host facade re-issues *only* truncated
-sub-queries, and only to the shard that truncated, resuming at the cursor
-(``ShardedDPAStore.range``) — the paper's re-descend-and-continue loop
-with the re-descent replaced by the cursor.
+ascending prefix of the oracle answer, and (b) surfaces per-request
+``truncated`` — which with the default unbounded loop only fires on the
+chain-length hard cap; the host facade's cursor resume survives solely as
+that rare fallback (``max_rounds=1`` reproduces the old one-walk wave for
+tests).  Each wave additionally reports per-shard ``rounds`` — the
+round-trips the loop absorbed — which ``benchmarks/fig16_range.py``
+records as ``rounds_in_mesh`` against the (steady-state zero) host
+``reissues``.
 
 Execution paths (mirroring ``kvshard``):
 
@@ -55,26 +65,31 @@ Execution paths (mirroring ``kvshard``):
   * ``range_wave_sharded`` — shard_map over the mesh 'data' axis with
     ``all_to_all`` exchanges (production / dry-run lowering).
 
-Ownership windows (rebalance safety).  Every shard's RANGE contribution is
-confined to its *owned* key window under the wave's boundary vector:
-successor replicas scan from the destination's slice start
-(``_replicate``) and entries at/above the slice end are dropped with the
-``truncated`` flag cleared (``_clip_window``).  Both are steady-state
-no-ops — a shard holds nothing outside its slice — but during an online
+Ownership windows + epoch tags (rebalance safety).  Every shard's RANGE
+contribution is confined to its *owned* key window under the boundary
+vector of the epoch each request was admitted under: requests carry an
+``epoch_tag`` (0 = previous vector, 1 = current) that rides the
+bucketize/all_to_all exchange next to the key limbs, successor replicas
+scan from the destination's slice start under that epoch
+(``_replicate``), and every round of the in-mesh loop clips entries
+at/above the slice end with the ``truncated`` flag cleared (the clip
+lives inside ``lookup.continuation_loop``).  All of it is a steady-state
+no-op — a shard holds nothing outside its slice — but during an online
 rebalance handoff (``distributed.rebalance``) a donor shard still
 physically holds a migrated-away slice for one boundary epoch, and the
-window clip is what keeps that stale copy invisible to scatter-gather
-waves routed under the new epoch.  Waves admitted under the old epoch keep
-using the old vector (``route_range_epoch`` routes a mixed wave by
-per-request epoch tags), under which the donor still owns the slice — the
-two-phase ownership analogue of the paper's transactional stitch-back.
+per-epoch window is what keeps that stale copy invisible to new-epoch
+requests while old-epoch requests of the SAME wave still read it
+(``route_range_epoch`` is the routing half; the production wave builders
+take ``boundaries_prev`` + ``epoch_tag`` directly) — the two-phase
+ownership analogue of the paper's transactional stitch-back.
 
 Host-side orchestration (boundary fitting, per-shard ``DPAStore`` builds,
-the sequential scatter-gather used by benchmarks, the truncated-shard
-re-issue loop) lives on ``kvshard.ShardedDPAStore(partition="range")`` so
-both tiers share one facade; each shard store also carries its own
-scan-anchor cache, so the owner-shard descent of a repeated scan wave is
-skipped entirely.
+the sequential scatter-gather used by benchmarks — one
+``range_with_state`` dispatch per shard with the same in-mesh loop and
+per-epoch window clip, zero steady-state re-issues) lives on
+``kvshard.ShardedDPAStore(partition="range")`` so both tiers share one
+facade; each shard store also carries its own scan-anchor cache, so the
+owner-shard descent of a repeated scan wave is skipped entirely.
 """
 
 from __future__ import annotations
@@ -128,50 +143,44 @@ def make_route_fn(boundaries: np.ndarray):
     return partial(route_range, b_hi, b_lo)
 
 
-def _replicate(b_hi, b_lo, khi, klo, n_shards: int, fanout: int):
-    """Fan each request out to its owner shard and ``fanout - 1`` successors.
+def _replicate(bp_hi, bp_lo, bc_hi, bc_lo, tag, khi, klo, n_shards: int, fanout: int):
+    """Fan each request out to its owner shard and ``fanout - 1`` successors,
+    routing each request under the boundary vector of the epoch it carries
+    (``tag``: 0 = previous, 1 = current; pass the same vector twice for a
+    single-epoch wave).
 
-    Returns (rep_hi, rep_lo, dest, oob) with the replica dim innermost:
-    replica ``j*fanout + f`` of request ``j`` targets ``owner_j + f``.
-    Replicas past the last shard get the ``n_shards`` drop sentinel and are
-    flagged ``oob`` (trivially-complete empties, not RETRYs).
+    Returns (rep_hi, rep_lo, rep_tag, dest, oob) with the replica dim
+    innermost: replica ``j*fanout + f`` of request ``j`` targets
+    ``owner_j + f``.  Replicas past the last shard get the ``n_shards``
+    drop sentinel and are flagged ``oob`` (trivially-complete empties, not
+    RETRYs).
     """
     W = khi.shape[0]
-    owner = route_range(b_hi, b_lo, khi, klo)
+    owner = route_range_epoch(bp_hi, bp_lo, bc_hi, bc_lo, tag, khi, klo)
     rep_hi = jnp.repeat(khi, fanout)
     rep_lo = jnp.repeat(klo, fanout)
+    rep_tag = jnp.repeat(tag, fanout)
     off = jnp.tile(jnp.arange(fanout, dtype=jnp.int32), W)
     dest = jnp.repeat(owner, fanout) + off
     oob = dest >= n_shards
     # Ownership-window lower bound: a successor replica's scan starts at its
-    # destination shard's slice start, not at the original k_min.  In steady
-    # state the walk's >= k_min filter made this a no-op (a shard holds no
-    # keys below its slice); during a rebalance handoff it is load-bearing —
-    # a donor still physically holding a migrated-away slice *below* its
-    # owned window must not contribute those stale keys to the gather.
-    lb_hi = jnp.concatenate([jnp.zeros((1,), jnp.uint32), b_hi])
-    lb_lo = jnp.concatenate([jnp.zeros((1,), jnp.uint32), b_lo])
+    # destination shard's slice start — under the replica's OWN epoch — not
+    # at the original k_min.  In steady state the walk's >= k_min filter
+    # made this a no-op (a shard holds no keys below its slice); during a
+    # rebalance handoff it is load-bearing — a donor still physically
+    # holding a migrated-away slice *below* its owned window must not
+    # contribute those stale keys to the gather.
+    lbp_hi = jnp.concatenate([jnp.zeros((1,), jnp.uint32), bp_hi])
+    lbp_lo = jnp.concatenate([jnp.zeros((1,), jnp.uint32), bp_lo])
+    lbc_hi = jnp.concatenate([jnp.zeros((1,), jnp.uint32), bc_hi])
+    lbc_lo = jnp.concatenate([jnp.zeros((1,), jnp.uint32), bc_lo])
     safe_dest = jnp.clip(dest, 0, n_shards - 1)
-    d_hi, d_lo = lb_hi[safe_dest], lb_lo[safe_dest]
+    d_hi = jnp.where(rep_tag > 0, lbc_hi[safe_dest], lbp_hi[safe_dest])
+    d_lo = jnp.where(rep_tag > 0, lbc_lo[safe_dest], lbp_lo[safe_dest])
     use_lb = ~limb_le(d_hi, d_lo, rep_hi, rep_lo)  # slice start > k_min
     rep_hi = jnp.where(use_lb, d_hi, rep_hi)
     rep_lo = jnp.where(use_lb, d_lo, rep_lo)
-    return rep_hi, rep_lo, jnp.where(oob, n_shards, dest), oob
-
-
-def _clip_window(rk, rvalid, rtrunc, ub_hi, ub_lo):
-    """Ownership-window upper bound: drop a shard's contributions at/above
-    its owned slice's end (its successor's start boundary; the last shard's
-    bound is the KEY_MAX sentinel, which no real key reaches).
-
-    Steady-state no-op for the same reason as the lower bound; during a
-    rebalance handoff it hides a donor's stale *above*-window copy.  An
-    entry clipped here proves the shard's window is exhausted, so
-    ``truncated`` is cleared — the successor shard (already in the fan-out)
-    owns the continuation, exactly as for a genuinely exhausted slice."""
-    beyond = limb_le(ub_hi, ub_lo, rk[..., 0], rk[..., 1])  # ub <= key
-    clipped = rvalid & beyond
-    return rvalid & ~beyond, rtrunc & ~jnp.any(clipped, axis=-1)
+    return rep_hi, rep_lo, rep_tag, jnp.where(oob, n_shards, dest), oob
 
 
 def _upper_bound_limbs(b_hi, b_lo):
@@ -274,6 +283,58 @@ def _gather_epilogue(
     )
 
 
+def _serve_subqueries(
+    tree,
+    ib,
+    rq_hi,
+    rq_lo,
+    rq_tag,
+    rq_live,
+    ub_prev,
+    ub_cur,
+    *,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int,
+    max_rounds: int,
+):
+    """One shard's half of the wave: descend to each landed sub-query's
+    floor leaf, then run the ENTIRE multi-round continuation in a single
+    device loop (``lookup.range_batch_loop``), clipping every round to the
+    sub-query's owned window under the epoch it carries (``rq_tag``).
+    Slots where no request landed (``rq_live`` False) ride along as dead
+    lanes.  Returns (keys, vals, valid, truncated, rounds)."""
+    hf = rq_hi.reshape(-1)
+    lf = rq_lo.reshape(-1)
+    tf = rq_tag.reshape(-1)
+    ub_hi = jnp.where(tf > 0, ub_cur[0], ub_prev[0])
+    ub_lo = jnp.where(tf > 0, ub_cur[1], ub_prev[1])
+    start = lookup.traverse(tree, hf, lf, depth=depth, eps_inner=eps_inner)
+    start = jnp.where(rq_live.reshape(-1) > 0, start, -1)
+    rk, rv, rvalid, rtrunc, _, rounds = lookup.range_batch_loop(
+        tree,
+        ib,
+        start,
+        hf,
+        lf,
+        ub_hi,
+        ub_lo,
+        limit=limit,
+        max_leaves=max_leaves,
+        max_rounds=max_rounds,
+    )
+    return rk, rv, rvalid, rtrunc, rounds
+
+
+def _epoch_inputs(boundaries, boundaries_prev):
+    """(prev, cur) boundary limb pairs; a single-epoch wave repeats cur."""
+    b_hi, b_lo = boundary_limbs(boundaries)
+    if boundaries_prev is None:
+        return (b_hi, b_lo), (b_hi, b_lo)
+    return boundary_limbs(boundaries_prev), (b_hi, b_lo)
+
+
 def range_wave_emulated(
     stacked_tree,
     stacked_ib,
@@ -287,49 +348,69 @@ def range_wave_emulated(
     limit: int,
     max_leaves: int = 4,
     fanout: Optional[int] = None,
+    max_rounds: int = 0,
+    boundaries_prev: Optional[np.ndarray] = None,
+    epoch_tag: Optional[jnp.ndarray] = None,
 ):
-    """Single-device emulation of the scatter-gather RANGE wave.
+    """Single-device emulation of the scatter-gather RANGE wave with the
+    in-mesh continuation loop.
 
-    Returns (out_kh, out_kl, out_vh, out_vl, out_valid, ok, truncated), all
-    with a leading (n_shards, W) client layout; rows are ascending live
-    entries with ``out_valid`` a prefix mask.  ``ok=False`` means a capacity
-    overflow dropped part of the fan-out — RETRY, never silent loss.
-    ``truncated=True`` means a landed replica's bounded walk was cut by
-    ``max_leaves`` while the request under-fills — re-issue (bigger
-    ``max_leaves`` or the host continuation path), as opposed to an
-    under-filled untruncated request, which exhausted the key space.
+    Returns (out_kh, out_kl, out_vh, out_vl, out_valid, ok, truncated,
+    rounds); the first seven carry a leading (n_shards, W) client layout
+    (rows are ascending live entries with ``out_valid`` a prefix mask),
+    ``rounds`` is the per-serving-shard count of continuation rounds the
+    device loop ran ((n_shards,) i32 — ``max(rounds)`` is the wave's
+    wall-clock depth, ``sum(rounds - 1)`` the host round-trips the loop
+    absorbed).  ``ok=False`` means a capacity overflow dropped part of the
+    fan-out — RETRY, never silent loss.  With the default ``max_rounds=0``
+    the loop runs until every lane hit ``limit``, exhausted its chain, or
+    ran into its owned window, so ``truncated`` only surfaces for a
+    bounded ``max_rounds`` (the single-round ``max_rounds=1`` reproduces
+    the old one-walk wave exactly).
+
+    ``epoch_tag`` ((n_shards, W) i32; 0 = previous epoch, 1 = current,
+    requires ``boundaries_prev``) routes a mixed in-flight wave per
+    request: owner search, fan-out lower bounds AND the per-round upper
+    clip all follow the admitted epoch — mid-rebalance the donor's stale
+    copy stays visible to old-epoch requests and invisible to new-epoch
+    ones.
     """
     n_shards, W = khi.shape
     fanout = n_shards if fanout is None else fanout
-    b_hi, b_lo = boundary_limbs(boundaries)
+    (bp_hi, bp_lo), (bc_hi, bc_lo) = _epoch_inputs(boundaries, boundaries_prev)
+    tag = (
+        jnp.asarray(epoch_tag, dtype=jnp.int32)
+        if epoch_tag is not None
+        else jnp.ones((n_shards, W), dtype=jnp.int32)
+    )
 
     rep = jax.vmap(
-        lambda h, l: _replicate(b_hi, b_lo, h, l, n_shards, fanout)
-    )(khi, klo)
-    rep_hi, rep_lo, dest, oob = rep
-    bk_hi, bk_lo, origin, valid = jax.vmap(
-        lambda d, h, l: _bucketize(d, h, l, n_shards, cap)
-    )(dest, rep_hi, rep_lo)
+        lambda h, l, t: _replicate(
+            bp_hi, bp_lo, bc_hi, bc_lo, t, h, l, n_shards, fanout
+        )
+    )(khi, klo, tag)
+    rep_hi, rep_lo, rep_tag, dest, oob = rep
+    bk_hi, bk_lo, origin, valid, bk_tag = jax.vmap(
+        lambda d, h, l, t: _bucketize(d, h, l, n_shards, cap, extra=(t,))
+    )(dest, rep_hi, rep_lo, rep_tag)
     rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
     rq_lo = jnp.swapaxes(bk_lo, 0, 1)
-    ub_hi, ub_lo = _upper_bound_limbs(b_hi, b_lo)
+    rq_tag = jnp.swapaxes(bk_tag, 0, 1)
+    rq_live = jnp.swapaxes(valid, 0, 1).astype(jnp.int32)
+    ubp = _upper_bound_limbs(bp_hi, bp_lo)  # each (n_shards,)
+    ubc = _upper_bound_limbs(bc_hi, bc_lo)
 
-    def per_shard(tree, ib, h, l, u_hi, u_lo):
-        rk, rv, rvalid, rtrunc, _ = lookup.range_batch(
-            tree,
-            ib,
-            h.reshape(-1),
-            l.reshape(-1),
-            depth=depth,
-            eps_inner=eps_inner,
-            limit=limit,
-            max_leaves=max_leaves,
+    def per_shard(tree, ib, h, l, t, live, up_hi, up_lo, uc_hi, uc_lo):
+        return _serve_subqueries(
+            tree, ib, h, l, t, live,
+            (up_hi, up_lo), (uc_hi, uc_lo),
+            depth=depth, eps_inner=eps_inner, limit=limit,
+            max_leaves=max_leaves, max_rounds=max_rounds,
         )
-        rvalid, rtrunc = _clip_window(rk, rvalid, rtrunc, u_hi, u_lo)
-        return rk, rv, rvalid, rtrunc
 
-    rk, rv, rvalid, rtrunc = jax.vmap(per_shard)(
-        stacked_tree, stacked_ib, rq_hi, rq_lo, ub_hi, ub_lo
+    rk, rv, rvalid, rtrunc, rounds = jax.vmap(per_shard)(
+        stacked_tree, stacked_ib, rq_hi, rq_lo, rq_tag, rq_live,
+        ubp[0], ubp[1], ubc[0], ubc[1],
     )
     # responses back: (dest, src, cap, limit) -> (src, dest, cap, limit)
     shape = (n_shards, n_shards, cap, limit)
@@ -341,9 +422,10 @@ def range_wave_emulated(
     rs_trunc = jnp.swapaxes(rtrunc.reshape(shape[:3]), 0, 1)
 
     gather = partial(_gather_epilogue, W=W, fanout=fanout, limit=limit)
-    return jax.vmap(gather)(
+    outs = jax.vmap(gather)(
         origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid, rs_trunc
     )
+    return tuple(outs) + (rounds,)
 
 
 def range_wave_sharded(
@@ -358,19 +440,28 @@ def range_wave_sharded(
     limit: int,
     max_leaves: int = 4,
     fanout: Optional[int] = None,
+    max_rounds: int = 0,
+    boundaries_prev: Optional[np.ndarray] = None,
 ):
-    """shard_map scatter-gather RANGE over the mesh 'data' axis.
+    """shard_map scatter-gather RANGE over the mesh 'data' axis with the
+    in-mesh continuation loop (the per-shard ``lax.while_loop`` contains no
+    collectives — both ``all_to_all`` exchanges bracket it — so shards
+    iterate independently and a multi-round scan never leaves the mesh).
 
-    Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) with state and
-    requests sharded on their leading shard dim; outputs match
-    ``range_wave_emulated``.
+    Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) — or, when
+    ``boundaries_prev`` is given (a live rebalance handoff),
+    fn(stacked_tree, stacked_ib, khi, klo, epoch_tag) with per-request
+    epoch tags — with state and requests sharded on their leading shard
+    dim; outputs match ``range_wave_emulated`` (8 outputs incl. the
+    per-shard ``rounds``).
     """
     from jax.experimental.shard_map import shard_map
 
     n_shards = mesh.shape["data"]
     F = n_shards if fanout is None else fanout
-    b_hi, b_lo = boundary_limbs(boundaries)
-    ub_hi, ub_lo = _upper_bound_limbs(b_hi, b_lo)
+    (bp_hi, bp_lo), (bc_hi, bc_lo) = _epoch_inputs(boundaries, boundaries_prev)
+    ubp = _upper_bound_limbs(bp_hi, bp_lo)
+    ubc = _upper_bound_limbs(bc_hi, bc_lo)
 
     def a2a(x):
         # x (n_shards, X) per shard: row d -> shard d
@@ -378,27 +469,28 @@ def range_wave_sharded(
             x[None], "data", split_axis=1, concat_axis=0, tiled=False
         ).reshape(x.shape)
 
-    def per_shard(tree, ib, khi, klo):
+    def per_shard(tree, ib, khi, klo, tag):
         tree = jax.tree.map(lambda a: a[0], tree)
         ib = jax.tree.map(lambda a: a[0], ib)
-        h, l = khi[0], klo[0]
+        h, l, t = khi[0], klo[0], tag[0]
         W = h.shape[0]
-        rep_hi, rep_lo, dest, oob = _replicate(b_hi, b_lo, h, l, n_shards, F)
-        bk_hi, bk_lo, origin, valid = _bucketize(dest, rep_hi, rep_lo, n_shards, cap)
+        rep_hi, rep_lo, rep_tag, dest, oob = _replicate(
+            bp_hi, bp_lo, bc_hi, bc_lo, t, h, l, n_shards, F
+        )
+        bk_hi, bk_lo, origin, valid, bk_tag = _bucketize(
+            dest, rep_hi, rep_lo, n_shards, cap, extra=(rep_tag,)
+        )
         rq_hi = a2a(bk_hi)
         rq_lo = a2a(bk_lo)
-        rk, rv, rvalid, rtrunc, _ = lookup.range_batch(
-            tree,
-            ib,
-            rq_hi.reshape(-1),
-            rq_lo.reshape(-1),
-            depth=depth,
-            eps_inner=eps_inner,
-            limit=limit,
-            max_leaves=max_leaves,
-        )
+        rq_tag = a2a(bk_tag)
+        rq_live = a2a(valid.astype(jnp.int32))
         s = jax.lax.axis_index("data")
-        rvalid, rtrunc = _clip_window(rk, rvalid, rtrunc, ub_hi[s], ub_lo[s])
+        rk, rv, rvalid, rtrunc, rounds = _serve_subqueries(
+            tree, ib, rq_hi, rq_lo, rq_tag, rq_live,
+            (ubp[0][s], ubp[1][s]), (ubc[0][s], ubc[1][s]),
+            depth=depth, eps_inner=eps_inner, limit=limit,
+            max_leaves=max_leaves, max_rounds=max_rounds,
+        )
         flat = (n_shards, cap * limit)
         rs_kh = a2a(rk[..., 0].reshape(flat)).reshape(n_shards, cap, limit)
         rs_kl = a2a(rk[..., 1].reshape(flat)).reshape(n_shards, cap, limit)
@@ -412,14 +504,26 @@ def range_wave_sharded(
             origin, valid, oob, rs_kh, rs_kl, rs_vh, rs_vl, rs_valid, rs_trunc,
             W=W, fanout=F, limit=limit,
         )
-        return tuple(o[None] for o in outs)
+        return tuple(o[None] for o in outs) + (rounds[None],)
 
     state_specs = jax.tree.map(lambda _: P("data"), (stacked_tree, stacked_ib))
     fn = shard_map(
         per_shard,
         mesh=mesh,
-        in_specs=(state_specs[0], state_specs[1], P("data"), P("data")),
-        out_specs=tuple(P("data") for _ in range(7)),
+        in_specs=(
+            state_specs[0],
+            state_specs[1],
+            P("data"),
+            P("data"),
+            P("data"),
+        ),
+        out_specs=tuple(P("data") for _ in range(8)),
         check_rep=False,
     )
-    return fn
+    if boundaries_prev is not None:
+        return fn  # caller supplies per-request epoch tags
+
+    def single_epoch(tree, ib, khi, klo):
+        return fn(tree, ib, khi, klo, jnp.ones(khi.shape, dtype=jnp.int32))
+
+    return single_epoch

@@ -204,6 +204,106 @@ def range_scan(
     )
 
 
+def range_scan_loop(
+    tree,
+    ib: InsertBuffers,
+    khi,
+    klo,
+    *,
+    depth: int,
+    eps_inner: int,
+    limit: int,
+    max_leaves: int = 4,
+    max_rounds: int = 0,
+    impl: str = "auto",
+    block_requests: int = 64,
+    start_leaf=None,
+    ub_hi=None,
+    ub_lo=None,
+):
+    """In-mesh RANGE: the multi-round continuation of
+    ``lookup.range_batch_loop`` with the per-round walk dispatched to the
+    Pallas kernel (``impl='pallas'``/``'pallas_interpret'``) or the jnp
+    reference.  The kernel's ``next_leaf`` output is the loop-carried
+    cursor state: each ``lax.while_loop`` round feeds it back as the next
+    round's ``start_leaf``, so a scan that needs many bounded walks is
+    still ONE dispatch.  ``ub_hi``/``ub_lo`` are per-row owned-window
+    upper-bound limbs (default: KEY_MAX sentinel = no clip).  Returns
+    (keys, vals, valid, truncated, cursor, rounds)."""
+    B = khi.shape[0]
+    if limit <= 0 or B == 0:
+        empty = jnp.zeros((B, 0, 2), dtype=jnp.uint32)
+        return (
+            empty,
+            empty,
+            jnp.zeros((B, 0), dtype=bool),
+            jnp.zeros((B,), dtype=bool),
+            lookup.ScanCursor(khi, klo, jnp.full((B,), -1, dtype=jnp.int32)),
+            jnp.int32(0),
+        )
+    impl = _resolve(impl)
+    khi_p, n = _pad_to(khi, block_requests)
+    klo_p, _ = _pad_to(klo, block_requests)
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    ub_hi = jnp.full_like(khi, sentinel) if ub_hi is None else ub_hi
+    ub_lo = jnp.full_like(klo, sentinel) if ub_lo is None else ub_lo
+    ub_hi_p, _ = _pad_to(ub_hi, block_requests, fill=sentinel)
+    ub_lo_p, _ = _pad_to(ub_lo, block_requests, fill=sentinel)
+    if start_leaf is None:
+        start = lookup.traverse(tree, khi_p, klo_p, depth=depth, eps_inner=eps_inner)
+        # pad lanes ride along dead (they would otherwise walk from key 0)
+        start = jnp.where(jnp.arange(start.shape[0]) < n, start, -1)
+    else:
+        start, _ = _pad_to(start_leaf, block_requests, fill=-1)
+
+    if impl == "ref":
+        # the jnp device loop IS the reference — dispatch to it wholesale so
+        # the hard cap / round invariants live in exactly one place
+        keys, vals, valid, truncated, cursor, rounds = lookup.range_batch_loop(
+            tree, ib, start, khi_p, klo_p, ub_hi_p, ub_lo_p,
+            limit=limit, max_leaves=max_leaves, max_rounds=max_rounds,
+        )
+    else:
+        cap = ib.keys.shape[1]
+        inner_limit = limit + max_leaves * cap  # see range_scan
+
+        def round_fn(s, h, l):
+            kh, kl, vh, vl, cnt, visited, next_leaf = range_pallas(
+                tree,
+                s,
+                h,
+                l,
+                limit=inner_limit,
+                max_leaves=max_leaves,
+                block_requests=block_requests,
+                interpret=(impl == "pallas_interpret"),
+            )
+            return _merge_ib_epilogue(
+                ib, h, l, kh, kl, vh, vl, cnt, visited, next_leaf, limit=limit
+            )
+
+        n_leaves = tree.leaf_next.shape[0]
+        keys, vals, valid, truncated, cursor, rounds = lookup.continuation_loop(
+            round_fn,
+            start,
+            khi_p,
+            klo_p,
+            ub_hi_p,
+            ub_lo_p,
+            limit=limit,
+            max_rounds=max_rounds,
+            hard_cap=n_leaves // max(max_leaves, 1) + 2,
+        )
+    return (
+        keys[:n],
+        vals[:n],
+        valid[:n],
+        truncated[:n],
+        lookup.ScanCursor(cursor.khi[:n], cursor.klo[:n], cursor.leaf[:n]),
+        rounds,
+    )
+
+
 def _merge_ib_epilogue(
     ib: InsertBuffers, khi, klo, kh, kl, vh, vl, cnt, visited, next_leaf, *, limit: int
 ):

@@ -103,7 +103,8 @@ def serve_kv(args):
             f"[serve-kv] scan-anchor cache: {st.scan_hits}/{st.scan_probes} "
             f"descents skipped ({100*hit:.0f}% hit), "
             f"{st.scan_invalidated} anchors invalidated by restitch, "
-            f"{st.range_reissue_rounds} continuation re-issue rounds"
+            f"{st.range_rounds_in_mesh} continuation rounds in-mesh vs "
+            f"{st.range_reissue_rounds} host re-issue rounds"
         )
         print(f"[serve-kv] stats: {st}")
     else:
@@ -113,8 +114,10 @@ def serve_kv(args):
         print(
             f"[serve-kv] partition={args.partition} shards={args.shards} "
             f"range fan-out={fan:.2f} sub-queries/request, "
-            f"{store.range_reissues} truncated-shard re-issues "
-            f"(range tier: owner+successors; hash tier: always {args.shards})"
+            f"{store.range_rounds_in_mesh} continuation rounds in-mesh, "
+            f"{store.range_reissues} host re-issues (steady state: 0 — the "
+            f"device loop resumes truncated lanes itself; hash tier "
+            f"broadcasts to all {args.shards})"
         )
         if args.partition == "range":
             spread = store.occupancy_spread(flush=True)

@@ -89,6 +89,17 @@ def test_fig16_smoke_rows_cover_shards_and_scan_lengths():
         common.set_smoke(saved_smoke)
     assert not validate_rows(rows)
     assert not validate_fig16_coverage(rows)
+    # continuation accounting is part of the smoke schema now: every fig16
+    # row carries rounds_in_mesh/reissues, and the range tier's steady
+    # state has ZERO host re-issues (the in-mesh loop acceptance gate)
+    from benchmarks.run import range_continuation_metrics
+
+    cont = range_continuation_metrics(rows)
+    for row in rows:
+        name = row.split(",", 1)[0]
+        assert name in cont, f"{name}: missing continuation fields"
+        if name.startswith("fig16/range/"):
+            assert cont[name]["range_reissues"] == 0, (name, cont[name])
     model, depth = {}, {}
     for row in rows:
         name, _, derived = row.split(",", 2)
@@ -181,6 +192,25 @@ def test_fig18_smoke_rows_show_rebalance_retention():
         assert fired[off] == 0
         assert met[on]["retention"] > met[off]["retention"], (storm, met)
         assert met[on]["spread_after"] < met[off]["spread_after"], (storm, met)
+
+
+def test_fig16_gate_rejects_missing_or_nonzero_continuation_fields():
+    """The schema gate itself: a fig16 row without the continuation fields,
+    or a range-tier row reporting host re-issues, must be flagged."""
+    from benchmarks.run import validate_fig16_coverage
+
+    good = [
+        f"fig16/{t}/shards{s}/limit{l},1.0,"
+        f"model_mops=1.0;fanout=1.0;depth=3;rounds_in_mesh=2;reissues=0"
+        for t in ("range", "hash")
+        for s in (2, 4)
+        for l in (10, 100)
+    ]
+    assert not validate_fig16_coverage(good)
+    missing = [r.replace(";rounds_in_mesh=2;reissues=0", "") for r in good]
+    assert any("rounds_in_mesh" in p for p in validate_fig16_coverage(missing))
+    leaked = [r.replace("reissues=0", "reissues=3") for r in good]
+    assert any("re-issues" in p for p in validate_fig16_coverage(leaked))
 
 
 def test_roofline_reader_runs_if_results_exist():

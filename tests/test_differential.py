@@ -1,0 +1,203 @@
+"""Cross-op differential fuzz net: hypothesis-driven interleavings of
+PUT / GET / RANGE / DELETE / flush / rebalance / chain-compaction rounds
+against a plain numpy oracle (a dict + its sorted key view), asserted
+BITWISE after every step, across partition tiers and shard counts.
+
+This is the seed net every future PR inherits: any change to the write
+path, the in-mesh RANGE continuation, epoch-tagged routing, slice
+migration or chain compaction that breaks a cross-op interaction — a
+tombstone resurfacing through a scan, a mid-handoff wave double-serving a
+migrated slice, a compacted stub swallowing a later insert — fails here
+with the generating seed, without anyone having to anticipate the exact
+interleaving.
+
+Two legs: a small always-on leg (fast lane), and a ``slow``-marked broad
+leg sweeping shard counts x both tiers x longer interleavings with
+split-phase (begin ... ops ... commit) rebalances.  The hermetic
+hypothesis shim (tests/_vendor) runs both as seeded deterministic sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig
+from repro.distributed import kvshard
+
+KEY_BOUND = 2**63  # < KEY_MAX - comfortable margin from the sentinel
+
+
+def _np_range_oracle(sorted_keys, oracle, k_min, limit):
+    i = np.searchsorted(sorted_keys, k_min)
+    ks = sorted_keys[i : i + limit]
+    vs = np.array([oracle[int(k)] for k in ks], dtype=np.uint64)
+    return ks, vs
+
+
+def _check_get(store, oracle, q):
+    vals, found = store.get(q)
+    for i, k in enumerate(q):
+        assert bool(found[i]) == (int(k) in oracle), hex(int(k))
+        if found[i]:
+            assert int(vals[i]) == oracle[int(k)], hex(int(k))
+
+
+def _check_range(store, oracle, q, limit, max_leaves, epoch=None):
+    kw = {} if epoch is None else {"epoch": epoch}
+    if isinstance(store, DPAStore):
+        rk, rv, rc = store.range(q, limit=limit, max_leaves=max_leaves)
+    else:
+        rk, rv, rc = store.range(q, limit=limit, max_leaves=max_leaves, **kw)
+    sk = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    for i, k in enumerate(q):
+        ek, ev = _np_range_oracle(sk, oracle, k, limit)
+        assert rc[i] == ek.size, (hex(int(k)), rc[i], ek.size)
+        assert (rk[i, : ek.size] == ek).all(), hex(int(k))
+        assert (rv[i, : ek.size] == ev).all(), hex(int(k))
+        assert (rk[i, ek.size :] == 0).all() and (rv[i, ek.size :] == 0).all()
+
+
+def _check_items(store, oracle):
+    ks, vs = store.items()
+    ek = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    assert ks.size == ek.size, (ks.size, ek.size)
+    assert (ks == ek).all()
+    assert all(int(v) == oracle[int(k)] for k, v in zip(ks, vs))
+
+
+def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
+    """One fuzzed episode: load, interleave ops, verify bitwise throughout."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    keys = np.unique(
+        rng.integers(1, KEY_BOUND, n_keys, dtype=np.uint64)
+    )
+    vals = keys ^ np.uint64(0xD1FF)
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    if n_shards == 0:  # single-store leg rides the same net
+        store = DPAStore(keys, vals, TreeConfig(growth=16.0), cache_cfg=None)
+    else:
+        store = kvshard.ShardedDPAStore(
+            keys, vals, n_shards, TreeConfig(growth=16.0),
+            partition=partition, cache_cfg=None,
+        )
+    sharded = n_shards > 0
+    in_handoff = False
+    handoff_epoch = None
+    # an old-epoch reader is entitled to the PRE-handoff snapshot; once a
+    # write lands during the handoff the live oracle no longer describes
+    # the old epoch's view, so stop issuing old-epoch reads
+    wrote_in_handoff = False
+
+    def some_keys(k=wave):
+        pool = np.array(sorted(oracle.keys()), dtype=np.uint64)
+        if pool.size == 0:
+            return rng.integers(1, KEY_BOUND, k, dtype=np.uint64)
+        return np.concatenate(
+            [
+                rng.choice(pool, k // 2),
+                rng.integers(1, KEY_BOUND, k - k // 2, dtype=np.uint64),
+            ]
+        )
+
+    for _ in range(n_ops):
+        op = data.draw(
+            st.sampled_from(
+                ["put_new", "put_mixed", "delete", "get", "range", "flush"]
+                + (
+                    ["rebalance", "begin_rebalance", "commit_rebalance"]
+                    if sharded and partition == "range"
+                    else []
+                )
+            )
+        )
+        if in_handoff and op in ("put_new", "put_mixed", "delete"):
+            wrote_in_handoff = True
+        if op == "put_new":
+            fresh = np.unique(
+                rng.integers(1, KEY_BOUND, wave, dtype=np.uint64)
+            )
+            fresh = np.setdiff1d(
+                fresh, np.array(sorted(oracle.keys()), dtype=np.uint64)
+            )
+            st_codes = store.put(fresh, fresh ^ np.uint64(0xF))
+            assert (st_codes == 0).all(), "auto-retry must land every PUT"
+            for k in fresh.tolist():
+                oracle[k] = k ^ 0xF
+        elif op == "put_mixed":
+            q = np.unique(some_keys())
+            st_codes = store.put(q, q + np.uint64(3))
+            assert (st_codes == 0).all()
+            for k in q.tolist():
+                oracle[k] = (k + 3) % 2**64
+        elif op == "delete":
+            q = np.unique(some_keys(wave // 2))
+            st_codes = store.delete(q)
+            assert (st_codes == 0).all()
+            for k in q.tolist():
+                oracle.pop(k, None)
+        elif op == "get":
+            _check_get(store, oracle, some_keys())
+        elif op == "range":
+            limit = data.draw(st.sampled_from([1, 7, 33]))
+            max_leaves = data.draw(st.sampled_from([1, 4]))
+            epoch = (
+                handoff_epoch
+                if in_handoff and not wrote_in_handoff and data.draw(st.booleans())
+                else None
+            )
+            _check_range(
+                store, oracle, some_keys(wave // 2), limit, max_leaves,
+                epoch=epoch,
+            )
+        elif op == "flush":
+            store.flush()
+        elif op == "rebalance" and not in_handoff:
+            if store.planner is not None:
+                store.rebalance(store.planner.propose(store.boundaries))
+        elif op == "begin_rebalance" and not in_handoff:
+            if store.planner is not None:
+                moves = store.begin_rebalance(
+                    store.planner.propose(store.boundaries)
+                )
+                if moves:
+                    in_handoff = True
+                    handoff_epoch = store.boundary_epoch - 1
+        elif op == "commit_rebalance" and in_handoff:
+            store.commit_rebalance()
+            in_handoff = False
+            handoff_epoch = None
+            wrote_in_handoff = False
+        if op == "begin_rebalance" and in_handoff:
+            wrote_in_handoff = False
+    if in_handoff:
+        store.commit_rebalance()
+    _check_items(store, oracle)
+    _check_get(store, oracle, some_keys())
+    _check_range(store, oracle, some_keys(wave // 2), 9, 2)
+
+
+@given(st.data())
+@settings(max_examples=5, deadline=None)
+def test_differential_fuzz_fast(data):
+    """Always-on leg: 2-shard range tier, short interleavings."""
+    _run_interleaving(
+        data, n_shards=2, partition="range", n_keys=260, n_ops=6, wave=24
+    )
+
+
+@pytest.mark.slow
+@given(st.data())
+@settings(max_examples=14, deadline=None)
+def test_differential_fuzz_broad(data):
+    """Broad leg: single store + both tiers x shard counts, longer
+    interleavings with split-phase rebalances held open across ops."""
+    n_shards = data.draw(st.sampled_from([0, 1, 2, 4]))
+    partition = data.draw(st.sampled_from(["hash", "range"]))
+    _run_interleaving(
+        data,
+        n_shards=n_shards,
+        partition=partition,
+        n_keys=data.draw(st.sampled_from([120, 420])),
+        n_ops=10,
+        wave=32,
+    )

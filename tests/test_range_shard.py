@@ -204,7 +204,7 @@ def _wave_fixture(n_shards=4, n_keys=4000, W=16):
 def test_range_wave_emulated_matches_oracle():
     keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
     W = qs.shape[1]
-    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
+    kh, kl, vh, vl, valid, ok, trunc, _ = rangeshard.range_wave_emulated(
         tree,
         ib,
         jnp.asarray(limbs[..., 0]),
@@ -240,7 +240,7 @@ def test_range_wave_emulated_matches_oracle():
 def test_range_wave_overflow_reports_retry_never_corrupts():
     keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
     W = qs.shape[1]
-    kh, kl, vh, vl, valid, ok, _ = rangeshard.range_wave_emulated(
+    kh, kl, vh, vl, valid, ok, _, _ = rangeshard.range_wave_emulated(
         tree,
         ib,
         jnp.asarray(limbs[..., 0]),
@@ -313,7 +313,7 @@ def test_range_wave_sharded_runs_on_one_device_mesh():
     )
     qs = np.sort(np.random.default_rng(1).choice(keys, 8)).reshape(1, 8)
     limbs = split_u64(qs)
-    kh, kl, vh, vl, valid, ok, _ = fn(
+    kh, kl, vh, vl, valid, ok, _, _ = fn(
         tree, ib, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
     )
     assert bool(jnp.all(ok))
@@ -416,17 +416,19 @@ def test_range_truncation_and_resume_cursor(shared_ro_store):
 
 
 def test_range_small_max_leaves_loops_to_exact(store_factory):
-    """.range() with max_leaves=1 must equal the oracle bitwise (the facade
-    loops until limit or exhaustion) and must account its re-issue rounds."""
+    """.range() with max_leaves=1 must equal the oracle bitwise (the device
+    loop runs until limit or exhaustion IN ONE dispatch) and must account
+    its interior rounds — with zero host re-issue waves."""
     store, oracle = store_factory(cache_cfg=None)
     keys = np.sort(np.array(sorted(oracle.keys()), dtype=np.uint64))
     rng = np.random.default_rng(5)
     q = np.concatenate(
         [rng.choice(keys, 16), np.array([keys.min(), keys.max()], np.uint64)]
     )
-    base = store.stats.range_reissue_rounds
+    base = store.stats.range_rounds_in_mesh
     rk, rv, rc = store.range(q, limit=48, max_leaves=1)
-    assert store.stats.range_reissue_rounds > base, "must have re-issued"
+    assert store.stats.range_rounds_in_mesh > base, "must have looped in-mesh"
+    assert store.stats.range_reissue_rounds == 0, "no host re-issue waves"
     assert store.stats.range_truncated == 0, "exhaustive loop: none left over"
     for i, k in enumerate(q):
         exp = _np_oracle(keys, k, 48)
@@ -437,9 +439,9 @@ def test_range_small_max_leaves_loops_to_exact(store_factory):
 @pytest.mark.parametrize("n_shards", [2, 4])
 @pytest.mark.parametrize("max_leaves", [1, 2])
 def test_sharded_range_truncation_reissue_matches_oracle(n_shards, max_leaves):
-    """Sharded RANGE with under-sized walks: re-issue only to truncated
-    shards, results bitwise-identical to the single store and the numpy
-    oracle."""
+    """Sharded RANGE with under-sized walks: the continuation runs inside
+    the per-shard device loop (ZERO host re-issues), results bitwise-
+    identical to the single store and the numpy oracle."""
     keys = sparse(3000, seed=21)
     vals = keys ^ np.uint64(0xBEEF)
     single = DPAStore(keys, vals, cache_cfg=None)
@@ -459,8 +461,11 @@ def test_sharded_range_truncation_reissue_matches_oracle(n_shards, max_leaves):
     rk2, rv2, rc2 = sharded.range(q, limit=limit, max_leaves=max_leaves)
     assert (rc1 == rc2).all()
     assert (rk1 == rk2).all() and (rv1 == rv2).all()
+    # the acceptance gate of the in-mesh continuation: a truncated multi-
+    # round scan completes with zero host re-issues in steady state
+    assert sharded.range_reissues == 0, "continuation must stay in-mesh"
     if max_leaves == 1:
-        assert sharded.range_reissues > 0, "140 results never fit one leaf"
+        assert sharded.range_rounds_in_mesh > 0, "140 results never fit one leaf"
     sk = np.sort(keys)
     for i, k in enumerate(q):
         exp = _np_oracle(sk, k, limit)
@@ -469,12 +474,13 @@ def test_sharded_range_truncation_reissue_matches_oracle(n_shards, max_leaves):
 
 
 def test_range_wave_truncated_flag_distinguishes_exhausted():
-    """Device wave with an under-sized walk: rows flagged truncated are
-    exactly the under-filled rows with key space remaining; under-filled
-    untruncated rows really exhausted the key space."""
+    """Device wave with an under-sized walk bounded to ONE round
+    (max_rounds=1 reproduces the pre-loop single-walk wave): rows flagged
+    truncated are exactly the under-filled rows with key space remaining;
+    under-filled untruncated rows really exhausted the key space."""
     keys, sharded, tree, ib, depth, qs, limbs = _wave_fixture()
     W = qs.shape[1]
-    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
+    kh, kl, vh, vl, valid, ok, trunc, rounds = rangeshard.range_wave_emulated(
         tree,
         ib,
         jnp.asarray(limbs[..., 0]),
@@ -485,7 +491,9 @@ def test_range_wave_truncated_flag_distinguishes_exhausted():
         eps_inner=4,
         limit=140,  # > SEG_CAP=128: a 1-leaf walk can never fill
         max_leaves=1,
+        max_rounds=1,
     )
+    assert (np.asarray(rounds) == 1).all(), "bounded wave: exactly one round"
     okn, tn, va = np.asarray(ok), np.asarray(trunc), np.asarray(valid)
     got_k = _join(kh, kl)
     sk = np.sort(keys)
@@ -502,6 +510,89 @@ def test_range_wave_truncated_flag_distinguishes_exhausted():
                 assert got < 140, "truncated implies under-filled"
             else:
                 assert got == exp.size, (i, j)  # complete or exhausted
+
+
+# ---------------------------------------------------------------------------
+# in-mesh continuation loop: the multi-round wave == host-orchestrated
+# resume == oracle, bitwise, for any max_leaves >= 1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("max_leaves", [1, 2, 8])
+def test_inmesh_loop_equals_host_resume_and_oracle(n_shards, max_leaves):
+    """The tentpole invariant: the looped device wave (continuation folded
+    into the shard_map body), the host-orchestrated resume path
+    (``range_with_state`` with an explicit cursor round), and the numpy
+    oracle agree bitwise for under- and well-sized ``max_leaves``."""
+    keys = sparse(2500, seed=41)
+    vals = keys ^ np.uint64(0x1234)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, n_shards, partition="range", cache_cfg=None
+    )
+    tree, ib, depth = sharded.stacked()
+    W = 8
+    rng = np.random.default_rng(n_shards * 7 + max_leaves)
+    qs = np.concatenate(
+        [
+            rng.choice(keys, n_shards * W - 4),
+            rng.integers(0, 2**63, 2, dtype=np.uint64),
+            np.array([keys.min(), keys.max()], dtype=np.uint64),
+        ]
+    ).reshape(n_shards, W)
+    limbs = split_u64(qs)
+    limit = 40  # needs >= 1 full leaf per shard window at max_leaves=1
+    kh, kl, vh, vl, valid, ok, trunc, rounds = rangeshard.range_wave_emulated(
+        tree, ib,
+        jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1]),
+        sharded.boundaries, cap=n_shards * W, depth=depth, eps_inner=4,
+        limit=limit, max_leaves=max_leaves,
+    )
+    assert bool(jnp.all(ok))
+    assert not bool(jnp.any(trunc)), "unbounded loop: nothing left truncated"
+    if max_leaves == 1:
+        assert int(np.asarray(rounds).max()) > 1, "must have looped in-mesh"
+    got_k, got_v = _join(kh, kl), _join(vh, vl)
+    va = np.asarray(valid)
+    sk = np.sort(keys)
+    # host facade (single dispatch per shard, zero host re-issues)
+    hk, hv, hc = sharded.range(qs.reshape(-1), limit=limit, max_leaves=max_leaves)
+    assert sharded.range_reissues == 0
+    # host-orchestrated resume oracle: bounded rounds + explicit cursor
+    single = DPAStore(keys, vals, cache_cfg=None)
+    flat_q = qs.reshape(-1)
+    rk, rv, rc, trunc_h, cur_leaf, _ = single.range_with_state(
+        flat_q, limit=limit, max_leaves=max_leaves, max_rounds=1
+    )
+    guard = 0
+    while trunc_h.any():
+        m = np.where(trunc_h & (rc < limit))[0]
+        if m.size == 0:
+            break
+        rk2, rv2, rc2, t2, cl2, _ = single.range_with_state(
+            flat_q[m], limit=limit, max_leaves=max_leaves, max_rounds=1,
+            start_leaves=cur_leaf[m],
+        )
+        for j, i in enumerate(m):
+            take = min(int(rc2[j]), limit - int(rc[i]))
+            rk[i, rc[i] : rc[i] + take] = rk2[j, :take]
+            rv[i, rc[i] : rc[i] + take] = rv2[j, :take]
+            rc[i] += take
+            trunc_h[i] = t2[j] and rc[i] < limit
+            cur_leaf[i] = cl2[j]
+        guard += 1
+        assert guard < 300, "host resume failed to converge"
+    for i in range(n_shards):
+        for j in range(W):
+            f = i * W + j
+            exp = _np_oracle(sk, qs[i, j], limit)
+            assert va[i, j].sum() == exp.size, (i, j)
+            assert (got_k[i, j][: exp.size] == exp).all(), (i, j)
+            assert (got_v[i, j][: exp.size] == (exp ^ np.uint64(0x1234))).all()
+            assert hc[f] == exp.size
+            assert (hk[f, : exp.size] == exp).all()
+            assert rc[f] == exp.size, f
+            assert (rk[f, : exp.size] == exp).all(), f
 
 
 # ---------------------------------------------------------------------------
@@ -715,25 +806,47 @@ def test_wave_equivalence_across_rebalance_epochs(n_shards):
     _get_wave_equivalence(
         sharded, tree1, ib1, depth1, sharded.boundaries, oracle1
     )
-    # mid-handoff RANGE wave: stale slice copies must be window-clipped
+    # mid-handoff RANGE wave: stale slice copies must be window-clipped.
+    # Run it THREE ways — all-new-epoch tags, all-old-epoch tags, and a
+    # mixed wave — each must serve the same oracle (no writes landed since
+    # the handoff opened, so both epochs are entitled to the same data;
+    # what differs is WHICH shard serves each slice).
     sk = np.sort(np.array(sorted(oracle1.keys()), dtype=np.uint64))
     W = 8
     rng = np.random.default_rng(11)
     qs = rng.choice(sk, n_shards * W).reshape(n_shards, W)
     limbs = split_u64(qs)
-    kh, kl, vh, vl, valid, ok, trunc = rangeshard.range_wave_emulated(
-        tree1, ib1, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1]),
-        sharded.boundaries, cap=n_shards * W, depth=depth1, eps_inner=4,
-        limit=10, max_leaves=8,
-    )
-    assert bool(jnp.all(ok))
-    got_k = _join(kh, kl)
-    va = np.asarray(valid)
-    for i in range(n_shards):
-        for j in range(W):
-            exp = _np_oracle(sk, qs[i, j], 10)
-            assert va[i, j].sum() == exp.size, (i, j)
-            assert (got_k[i, j][: exp.size] == exp).all(), (i, j)
+    tags = {
+        "new": np.ones((n_shards, W), dtype=np.int32),
+        "old": np.zeros((n_shards, W), dtype=np.int32),
+        "mixed": (np.arange(n_shards * W).reshape(n_shards, W) % 2).astype(
+            np.int32
+        ),
+    }
+    for label, tag in tags.items():
+        kh, kl, vh, vl, valid, ok, trunc, _ = rangeshard.range_wave_emulated(
+            tree1, ib1, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1]),
+            sharded.boundaries, cap=n_shards * W * 2, depth=depth1,
+            eps_inner=4, limit=10, max_leaves=8,
+            boundaries_prev=sharded.boundaries_for_epoch(snap["epoch"]),
+            epoch_tag=jnp.asarray(tag),
+        )
+        assert bool(jnp.all(ok)), label
+        assert not bool(jnp.any(trunc)), label
+        got_k = _join(kh, kl)
+        va = np.asarray(valid)
+        for i in range(n_shards):
+            for j in range(W):
+                exp = _np_oracle(sk, qs[i, j], 10)
+                assert va[i, j].sum() == exp.size, (label, i, j)
+                assert (got_k[i, j][: exp.size] == exp).all(), (label, i, j)
+    # host facade, admitted-epoch routing: both epochs equal the oracle
+    for ep in (None, snap["epoch"]):
+        hk, hv, hc = sharded.range(qs.reshape(-1), limit=10, epoch=ep)
+        for idx, k in enumerate(qs.reshape(-1)):
+            exp = _np_oracle(sk, k, 10)
+            assert hc[idx] == exp.size, (ep, idx)
+            assert (hk[idx, : exp.size] == exp).all(), (ep, idx)
     # after commit only the new epoch survives, donors retired
     sharded.commit_rebalance()
     with pytest.raises(KeyError):
@@ -812,6 +925,37 @@ for label, (tree, ib, depth), b in (
     smr = rfn(tree, ib, khi, klo)
     for a, c in zip(emr, smr):
         assert (np.asarray(a) == np.asarray(c)).all(), label
+    # the looped wave: under-sized walks force multi-round in-mesh
+    # continuation; shard_map must stay bit-identical to the emulation,
+    # including the per-shard round counts
+    emr = rangeshard.range_wave_emulated(
+        tree, ib, khi, klo, b, cap=n_shards * W, depth=depth,
+        eps_inner=4, limit=40, max_leaves=1,
+    )
+    rfn = rangeshard.range_wave_sharded(
+        mesh, tree, ib, b, cap=n_shards * W, depth=depth,
+        eps_inner=4, limit=40, max_leaves=1,
+    )
+    smr = rfn(tree, ib, khi, klo)
+    for a, c in zip(emr, smr):
+        assert (np.asarray(a) == np.asarray(c)).all(), ("loop", label)
+    assert not np.asarray(smr[6]).any(), ("loop leaves no truncation", label)
+    assert int(np.asarray(smr[7]).max()) > 1, ("loop must iterate", label)
+# mixed-epoch wave: per-request tags through the production shard_map path
+qs = rng.integers(0, 2**63, (n_shards, W), dtype=np.uint64)
+limbs = split_u64(qs)
+khi, klo = jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
+tag = jnp.asarray((np.arange(n_shards * W).reshape(n_shards, W) % 2).astype(np.int32))
+kw = dict(cap=n_shards * W, depth=sharded.stacked()[2], eps_inner=4,
+          limit=5, max_leaves=8, boundaries_prev=snap_b)
+tree, ib, _ = sharded.stacked()
+emr = rangeshard.range_wave_emulated(
+    tree, ib, khi, klo, sharded.boundaries, epoch_tag=tag, **kw)
+rfn = rangeshard.range_wave_sharded(
+    mesh, tree, ib, sharded.boundaries, **kw)
+smr = rfn(tree, ib, khi, klo, tag)
+for a, c in zip(emr, smr):
+    assert (np.asarray(a) == np.asarray(c)).all(), "mixed-epoch"
 print("OK shard_map == emulated == numpy under both epochs")
 """
     env = dict(os.environ, PYTHONPATH="src")

@@ -477,3 +477,94 @@ def test_rebalance_interleaving_property(data):
     k1, v1 = single.items()
     k2, v2 = sharded.items()
     assert (k1 == k2).all() and (v1 == v2).all()
+
+
+# ---------------------------------------------------------------------------
+# chain compaction: extract_slice stubs must not accumulate across cycles
+# ---------------------------------------------------------------------------
+
+
+def test_compact_chain_reclaims_stubs_and_preserves_oracle():
+    """Direct DPAStore pin: extracting a middle slice leaves empty routing
+    stubs; compact_chain removes them (one stitch transaction), and every
+    op family — GET, RANGE across the compacted gap, PUT back into it —
+    still matches the oracle afterwards."""
+    keys = sparse(3000, seed=47)
+    vals = keys ^ np.uint64(0xC0)
+    store = DPAStore(keys, vals, TreeConfig(growth=8.0), cache_cfg=None)
+    sk = np.sort(keys)
+    lo, hi = sk[800], sk[2200]
+    out_k, _ = store.extract_slice(lo, hi)
+    assert store.stub_count() > 1, "a wide extract must leave stubs"
+    removed = store.compact_chain()
+    assert removed > 0 and store.stats.stub_leaves_compacted == removed
+    assert store.stub_count() <= 1  # only a head-adjacent survivor may stay
+    live = {int(k): int(v) for k, v in zip(keys, vals) if not (lo <= k < hi)}
+    ks, vs = store.items()
+    assert len(ks) == len(live)
+    assert all(int(v) == live[int(k)] for k, v in zip(ks, vs))
+    # RANGE walks across the compacted gap
+    esk = np.array(sorted(live.keys()), dtype=np.uint64)
+    q = np.array([sk[0], lo, lo + np.uint64(9), hi], dtype=np.uint64)
+    rk, _, rc = store.range(q, limit=12, max_leaves=1)
+    for i, k in enumerate(q):
+        exp = _np_oracle(esk, k, 12)
+        assert rc[i] == exp.size and (rk[i, : exp.size] == exp).all(), i
+    # extracted keys are gone; fresh keys route into the merged window
+    gone = np.setdiff1d(out_k, np.array([], dtype=np.uint64))[:16]
+    _, f = store.get(gone)
+    assert not f.any()
+    newk = np.setdiff1d(
+        np.arange(int(lo) + 1, int(lo) + 400, 7, dtype=np.uint64), keys
+    )
+    newk = newk[newk < hi]
+    assert (store.put(newk, newk) == 0).all()
+    store.flush()
+    for k in newk.tolist():
+        live[k] = k
+    ks, vs = store.items()
+    assert len(ks) == len(live)
+    assert all(int(v) == live[int(k)] for k, v in zip(ks, vs))
+
+
+def test_stub_count_bounded_across_rebalance_cycles():
+    """The regression pin: >= 8 oscillating rebalance cycles (slices
+    migrating back and forth between neighbours) must keep the per-shard
+    empty-stub count bounded — before compaction each cycle's
+    extract_slice residue ratcheted the leaf pools toward exhaustion."""
+    keys = sparse(1600, seed=53)
+    vals = keys ^ np.uint64(0x0D)
+    sharded = kvshard.ShardedDPAStore(
+        keys, vals, 4, tree_cfg=GROWTH, partition="range",
+        cache_cfg=None, rebalance_cfg=None,
+    )
+    single = DPAStore(keys, vals, GROWTH, cache_cfg=None)
+    live = dict(zip(keys.tolist(), vals.tolist()))
+    sk = np.sort(keys)
+    base = sharded.boundaries.copy()
+    # two boundary vectors that shift every slice by ~half a shard — wide
+    # enough that every cycle fully empties leaves on the donors
+    shift = (np.diff(np.concatenate([[np.uint64(0)], base])) // np.uint64(2)).astype(np.uint64)
+    alt = base + shift
+    rng = np.random.default_rng(9)
+    stub_counts = []
+    for cycle in range(8):
+        target = alt if cycle % 2 == 0 else base
+        moves = sharded.begin_rebalance(target)
+        assert moves, f"cycle {cycle} must move slices"
+        sharded.commit_rebalance()
+        stubs = sum(sh.stub_count() for sh in sharded.shards)
+        stub_counts.append(stubs)
+        q = np.concatenate(
+            [rng.choice(sk, 10), sharded.boundaries, base[:1], alt[:1]]
+        )
+        _assert_bitwise(single, sharded, live, q, tag=f"cycle{cycle}")
+    totals = sharded.stats_totals()
+    assert totals["stub_leaves_compacted"] > 0, "compaction must have fired"
+    # bounded: never more than one surviving stub per shard, and no growth
+    # trend across cycles (the ratchet this test exists to prevent)
+    assert max(stub_counts) <= sharded.n_shards, stub_counts
+    assert stub_counts[-1] <= stub_counts[0] + sharded.n_shards, stub_counts
+    k1, v1 = single.items()
+    k2, v2 = sharded.items()
+    assert (k1 == k2).all() and (v1 == v2).all()
