@@ -104,7 +104,7 @@ def run():
             q1 = rng.choice(storm, w)
             r0, s0 = store.range_requests, store.range_subqueries
             t = time_op(
-                store.range, q1, LIMIT, MAX_LEAVES, repeats=1
+                store.range, q1, LIMIT, max_leaves=MAX_LEAVES, repeats=1
             ) / w
             fan1 = (store.range_subqueries - s0) / max(store.range_requests - r0, 1)
             mops1 = _aggregate_mops(store, q1, fan1)

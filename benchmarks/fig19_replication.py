@@ -1,0 +1,134 @@
+"""Figure 19 (repo extension): replicated shard groups — the cost of
+durability and the price of a primary failover.
+
+The replication design (``distributed/kvshard.ShardedDPAStore`` with
+``replication=R``) fans every write out synchronously to all in-sync
+replicas of the owning group — an ack therefore means the write is durable
+group-wide, which is where the zero-lost-acked-writes guarantee comes
+from — while reads round-robin across the in-sync set.  That buys two
+measurable quantities this sweep pins per R:
+
+  * **write amplification**: replica writes / client writes, the direct
+    bill for synchronous durability (→ R while every replica is in sync);
+    the derived write MOPS divides the single-group BlueField-3 insert
+    model by the measured amplification — R NICs do R× the work for the
+    same client-visible ingest.
+  * **read capacity**: any in-sync replica serves GETs, so the modeled
+    aggregate read MOPS is per-shard model MOPS × n_shards × R — the
+    scaling replication pays its write bill for.
+
+The ``fig19/failover/r2`` cell RUNS the paper-motivating crash: kill a
+primary mid-workload, keep serving (a follower is promoted under a new
+ownership epoch while the old epoch drains), verify every previously acked
+write is still readable (``lost_acked`` is counted, not assumed), then
+re-replicate the dead slot from the survivor and report the wall-clock
+recovery time and rebuilt key count.
+
+The smoke lane gates on the R sweep emitting parseable ``write_amp`` and
+``model_mops`` fields plus the failover cell's ``lost_acked=0``, surfaced
+in ``BENCH_smoke.json`` as ``replication_metrics``.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.datasets import load
+from repro.core.tree import TreeConfig
+from repro.distributed.kvshard import ShardedDPAStore
+
+from . import common
+from .common import emit, time_op, wave
+
+N_SHARDS = 2
+REPLICATIONS = (1, 2, 3)
+WAVE = 512
+
+
+def _build(keys, vals, r: int) -> ShardedDPAStore:
+    return ShardedDPAStore(
+        keys,
+        vals,
+        N_SHARDS,
+        TreeConfig(growth=8.0),
+        cache_cfg=None,
+        partition="range",
+        replication=r,
+    )
+
+
+def run():
+    rng = np.random.default_rng(19)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=19)
+    vals = keys ^ np.uint64(0x5EED)
+
+    for r in REPLICATIONS:
+        store = _build(keys, vals, r)
+        depth = store.shards[0].depth
+
+        # write lane: fresh inserts fan out to every in-sync replica
+        fresh = keys.max() + np.uint64(1) + np.arange(
+            w, dtype=np.uint64
+        ) * np.uint64(3)
+        b0 = store.stats_totals().get("stitched_dpa_bytes", 0)
+        t_w = time_op(store.put, fresh, fresh, repeats=1) / w
+        store.flush()
+        amp = store.write_amplification
+        bpi = (
+            store.stats_totals().get("stitched_dpa_bytes", 0) - b0
+        ) / max(store.replica_writes, 1)
+        w_mops = (
+            perfmodel.insert_mops(bpi, depth=depth) * N_SHARDS / max(amp, 1.0)
+        )
+        emit(
+            f"fig19/r{r}/write",
+            t_w * 1e6,
+            f"model_mops={w_mops:.1f};write_amp={amp:.2f};"
+            f"acked={store.acked_writes};client={store.client_writes}",
+        )
+
+        # read lane: any in-sync replica serves, so capacity scales with R
+        q = rng.choice(keys, w)
+        t_r = time_op(store.get, q, repeats=1) / w
+        r_mops = perfmodel.get_mops(depth) * N_SHARDS * r
+        emit(
+            f"fig19/r{r}/read",
+            t_r * 1e6,
+            f"model_mops={r_mops:.1f};replicas={r}",
+        )
+
+    # failover lane: crash a primary mid-workload at R=2, count lost acks
+    store = _build(keys, vals, 2)
+    fresh = keys.max() + np.uint64(2) + np.arange(
+        w, dtype=np.uint64
+    ) * np.uint64(5)
+    statuses = store.put(fresh, fresh ^ np.uint64(0xACED))
+    acked = fresh[np.asarray(statuses) == 0]
+    promoted = store.kill_replica(0)  # primary of group 0 dies
+    assert promoted is not None, "a primary kill must promote a follower"
+    v, f = store.get(acked)
+    lost = int(acked.size - f.sum()) + int(
+        (v[np.asarray(f)] != (acked[np.asarray(f)] ^ np.uint64(0xACED))).sum()
+    )
+    store.retire_failover()
+    t0 = time.perf_counter()
+    plan = store.recover_replicas()
+    recovery_s = time.perf_counter() - t0
+    rebuilt = sum(
+        store.groups[rb.group][rb.replica].live_count()
+        for rb in plan.rebuilds
+    )
+    emit(
+        "fig19/failover/r2",
+        recovery_s * 1e6,
+        f"lost_acked={lost};recovery_s={recovery_s:.3f};"
+        f"recovery_keys={rebuilt};rebuilds={plan.n_rebuilds};"
+        f"failovers={store.failovers}",
+    )
+
+
+if __name__ == "__main__":
+    run()

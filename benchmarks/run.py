@@ -128,6 +128,73 @@ def validate_fig18_coverage(rows) -> list:
     return problems
 
 
+def validate_fig19_coverage(rows) -> list:
+    """The replication sweep must cover >= 2 replication factors with
+    parseable ``write_amp`` (write rows) and ``model_mops`` (read rows),
+    and the failover cell must report ``lost_acked=0`` — acked writes
+    surviving a primary crash is THE replication claim, so a nonzero count
+    (or a missing field) fails the smoke gate."""
+    problems = []
+    factors = set()
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "fig19":
+            continue
+        fields = derived_fields(derived)
+        if parts[1].startswith("r") and parts[2] in ("write", "read"):
+            factors.add(parts[1])
+            key = "write_amp" if parts[2] == "write" else "model_mops"
+            try:
+                float(fields.get(key, ""))
+            except ValueError:
+                problems.append(f"{name}: missing/bad {key} field")
+        elif parts[1] == "failover":
+            if fields.get("lost_acked", "") != "0":
+                problems.append(
+                    f"{name}: lost_acked must be 0, got "
+                    f"{fields.get('lost_acked', '<missing>')} "
+                    f"(acked-write durability regression)"
+                )
+            try:
+                float(fields.get("recovery_s", ""))
+            except ValueError:
+                problems.append(f"{name}: missing/bad recovery_s field")
+    if len(factors) < 2:
+        problems.append(
+            f"fig19: need >= 2 replication factors, got {sorted(factors)}"
+        )
+    if not any(r.startswith("fig19/failover/") for r in rows):
+        problems.append("fig19: missing failover cell")
+    return problems
+
+
+def replication_metrics(rows) -> dict:
+    """Write amplification per replication factor + failover recovery
+    numbers — surfaced in the smoke artifact so the perf trajectory
+    records the durability bill and the recovery wall-clock."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig19/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            if name.endswith("/write"):
+                out[name] = {"write_amp": float(fields["write_amp"])}
+            elif name.endswith("/read"):
+                out[name] = {"model_mops": float(fields["model_mops"])}
+            elif "/failover/" in name:
+                out[name] = {
+                    "lost_acked": int(fields["lost_acked"]),
+                    "recovery_s": float(fields["recovery_s"]),
+                    "recovery_keys": int(fields["recovery_keys"]),
+                }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
 def rebalance_metrics(rows) -> dict:
     """Measured occupancy spread + range-MOPS retention per fig18 cell —
     surfaced in the smoke artifact so the perf trajectory captures how much
@@ -224,6 +291,7 @@ def main(argv=None) -> None:
         fig16_range,
         fig17_scan_cache,
         fig18_rebalance,
+        fig19_replication,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -243,6 +311,7 @@ def main(argv=None) -> None:
         ("fig16_range", fig16_range),
         ("fig17_scan_cache", fig17_scan_cache),
         ("fig18_rebalance", fig18_rebalance),
+        ("fig19_replication", fig19_replication),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -267,6 +336,8 @@ def main(argv=None) -> None:
             problems += validate_fig17_coverage(common.ROWS)
         if "fig18_rebalance" not in failures:
             problems += validate_fig18_coverage(common.ROWS)
+        if "fig19_replication" not in failures:
+            problems += validate_fig19_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -277,6 +348,7 @@ def main(argv=None) -> None:
             "failed_modules": failures,
             "anchor_cache_hit_rates": anchor_cache_hit_rates(common.ROWS),
             "rebalance_metrics": rebalance_metrics(common.ROWS),
+            "replication_metrics": replication_metrics(common.ROWS),
             "range_continuation": range_continuation_metrics(common.ROWS),
         }
         with open(args.out, "w") as f:

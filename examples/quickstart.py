@@ -40,11 +40,13 @@ def main():
           f"{store.stats.new_leaves} new leaves stitched)")
 
     # ---- RANGE (ordered scan) ----------------------------------------------
-    rk, rv, cnt = store.range(keys[:4], limit=10)
+    res = store.range(keys[:4], limit=10)  # RangeResult: named fields
+    rk, rv, cnt = res  # ...that still unpacks like the legacy tuple
     all_k, _ = store.items()
     for i in range(4):
         expect = all_k[all_k >= keys[i]][:10]
-        assert np.array_equal(rk[i][: cnt[i]], expect)
+        assert res.counts[i] == expect.size
+        assert np.array_equal(res.keys[i][: cnt[i]], expect)
     print(f"RANGE: ordered scans correct across leaf boundaries")
 
     # ---- DELETE + consistency ----------------------------------------------

@@ -10,11 +10,14 @@ distributions).
 """
 
 from .tree import TreeConfig, TreeImage, DeviceTree, build_image, SEG_CAP, NODE_SEGS
+from .api import KVStore, RangeResult
 from .hotcache import CacheConfig
 from .scancache import ScanCacheConfig
 from .store import DPAStore, StoreStats, STATUS_OK, STATUS_RETRY
 
 __all__ = [
+    "KVStore",
+    "RangeResult",
     "TreeConfig",
     "TreeImage",
     "DeviceTree",

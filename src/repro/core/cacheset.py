@@ -1,0 +1,94 @@
+"""Shared Bloom + N-way bucket admit machinery for the NIC-side caches.
+
+``hotcache`` (point GET -> value) and ``scancache`` (RANGE start ->
+anchor leaf) are the same Figure-5 structure with different payloads:
+a per-thread Bloom filter over admitted keys plus a small set-associative
+bucket table, filled by a wave-salted random admission coin and a
+hash-pseudo-random victim way.  Their admit paths had drifted into two
+copies of the identical scatter math; this module is the single payload-
+generic implementation both wrap (each keeps its own salts, config and
+jit/donation boundary, so the compiled kernels — and their bit-exact
+outputs — are unchanged).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .keys import limb_hash
+
+
+def bloom_hashes(khi, klo, bits: int, salts: Sequence[int]):
+    """One bit index per salt for each key — the k hash functions."""
+    return [limb_hash(khi, klo, s) % jnp.uint32(bits) for s in salts]
+
+
+def admit_set(
+    bloom: jnp.ndarray,  # (T, bits/32) u32
+    bkey: jnp.ndarray,  # (T, NB, W, 2) u32
+    bvalid: jnp.ndarray,  # (T, NB, W) bool
+    payloads: Tuple[jnp.ndarray, ...],  # each (T, NB, W, ...) per-entry state
+    updates: Tuple[jnp.ndarray, ...],  # matching per-request values to store
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    eligible: jnp.ndarray,  # (B,) bool
+    *,
+    n_buckets: int,
+    ways: int,
+    admit_shift: int,
+    bloom_bits: int,
+    bloom_salts: Sequence[int],
+    bucket_salt: int,
+    way_salt: int,
+    admit_salt: int,
+    wave,
+):
+    """One admit wave over a Bloom + N-way bucket cache.
+
+    Admission is wave-salted hash-random (1/2^admit_shift of eligible
+    requests; the wave salt rotates the sampled subset so no key subset is
+    frozen in forever).  Fill takes the first invalid way, else evicts a
+    hash-pseudo-random victim; colliding admissions within a wave resolve
+    arbitrarily, as any racy cache would.  The Bloom OR goes through
+    scatter-ADD one-hot bit planes so duplicate (tid, word, bit) updates
+    accumulate instead of racing.
+
+    Returns ``(bloom, bkey, bvalid, payloads)`` with every array updated.
+    """
+    wave_salt = jnp.asarray(wave, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+    rnd = limb_hash(khi, klo, admit_salt) ^ wave_salt
+    rnd = rnd * jnp.uint32(0x7FEB352D)
+    rnd = rnd ^ (rnd >> 13)
+    take = eligible & ((rnd >> 7) % jnp.uint32(1 << admit_shift) == 0)
+    bucket = (limb_hash(khi, klo, bucket_salt) % jnp.uint32(n_buckets)).astype(
+        jnp.int32
+    )
+    ways_valid = bvalid[tid, bucket]  # (B, W)
+    has_free = ~jnp.all(ways_valid, axis=1)
+    first_free = jnp.argmin(ways_valid.astype(jnp.int32), axis=1)
+    victim = (limb_hash(khi, klo, way_salt) % jnp.uint32(ways)).astype(jnp.int32)
+    way = jnp.where(has_free, first_free.astype(jnp.int32), victim)
+    T = bkey.shape[0]
+    tid_s = jnp.where(take, tid, T)  # OOB -> dropped
+    new_bkey = bkey.at[tid_s, bucket, way].set(
+        jnp.stack([khi, klo], -1), mode="drop"
+    )
+    new_payloads = tuple(
+        p.at[tid_s, bucket, way].set(u, mode="drop")
+        for p, u in zip(payloads, updates)
+    )
+    new_bvalid = bvalid.at[tid_s, bucket, way].set(True, mode="drop")
+    n_words = bloom.shape[1]
+    planes = jnp.zeros((T + 1, n_words, 32), dtype=jnp.int32)
+    for h in bloom_hashes(khi, klo, bloom_bits, bloom_salts):
+        word = (h // 32).astype(jnp.int32)
+        bit = (h % 32).astype(jnp.int32)
+        planes = planes.at[tid_s, word, bit].add(1, mode="drop")
+    new_bits = (
+        (planes[:T] > 0).astype(jnp.uint32)
+        << jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    ).sum(axis=-1, dtype=jnp.uint32)
+    return bloom | new_bits, new_bkey, new_bvalid, new_payloads

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import cacheset
 from .keys import limb_eq, limb_hash
 
 # hash salts (shared with clients — "the client adds data required for cache
@@ -82,7 +83,7 @@ def steer(khi, klo, n_threads: int):
 
 
 def _bloom_hashes(khi, klo, bits: int):
-    return [limb_hash(khi, klo, s) % jnp.uint32(bits) for s in SALT_BLOOM]
+    return cacheset.bloom_hashes(khi, klo, bits, SALT_BLOOM)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -130,43 +131,29 @@ def admit(
     rotates over time (a fixed per-key coin would freeze 1/2^shift of the key
     space in the cache forever).  Way choice is hash-pseudo-random; colliding
     admissions within a wave resolve arbitrarily, as any racy cache would.
+    The scatter math lives in ``cacheset.admit_set`` (shared with the scan-
+    anchor cache); the value pair is this cache's payload.
     """
-    wave_salt = jnp.asarray(wave, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
-    rnd = limb_hash(khi, klo, SALT_ADMIT) ^ wave_salt
-    rnd = rnd * jnp.uint32(0x7FEB352D)
-    rnd = rnd ^ (rnd >> 13)
-    take = eligible & ((rnd >> 7) % jnp.uint32(1 << cfg.admit_shift) == 0)
-    bucket = (limb_hash(khi, klo, SALT_BUCKET) % jnp.uint32(cfg.n_buckets)).astype(jnp.int32)
-    # 4-way set-associative fill: take the first invalid way if one exists,
-    # otherwise evict a hash-pseudo-random victim.
-    ways_valid = cache.bvalid[tid, bucket]  # (B, W)
-    has_free = ~jnp.all(ways_valid, axis=1)
-    first_free = jnp.argmin(ways_valid.astype(jnp.int32), axis=1)
-    victim = (limb_hash(khi, klo, SALT_WAY) % jnp.uint32(cfg.ways)).astype(jnp.int32)
-    way = jnp.where(has_free, first_free.astype(jnp.int32), victim)
-    T = cache.bkey.shape[0]
-    tid_s = jnp.where(take, tid, T)  # OOB -> dropped
-    bkey = cache.bkey.at[tid_s, bucket, way].set(
-        jnp.stack([khi, klo], -1), mode="drop"
+    bloom, bkey, bvalid, (bval,) = cacheset.admit_set(
+        cache.bloom,
+        cache.bkey,
+        cache.bvalid,
+        (cache.bval,),
+        (jnp.stack([vhi, vlo], -1),),
+        tid,
+        khi,
+        klo,
+        eligible,
+        n_buckets=cfg.n_buckets,
+        ways=cfg.ways,
+        admit_shift=cfg.admit_shift,
+        bloom_bits=cfg.bloom_bits,
+        bloom_salts=SALT_BLOOM,
+        bucket_salt=SALT_BUCKET,
+        way_salt=SALT_WAY,
+        admit_salt=SALT_ADMIT,
+        wave=wave,
     )
-    bval = cache.bval.at[tid_s, bucket, way].set(
-        jnp.stack([vhi, vlo], -1), mode="drop"
-    )
-    bvalid = cache.bvalid.at[tid_s, bucket, way].set(True, mode="drop")
-    # bloom OR via scatter-ADD on one-hot bit planes: duplicate (tid, word,
-    # bit) updates accumulate instead of racing, then counts>0 packs back to
-    # the OR of all new bits.
-    n_words = cache.bloom.shape[1]
-    planes = jnp.zeros((B_tidwords := T + 1, n_words, 32), dtype=jnp.int32)
-    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
-        word = (h // 32).astype(jnp.int32)
-        bit = (h % 32).astype(jnp.int32)
-        planes = planes.at[tid_s, word, bit].add(1, mode="drop")
-    new_bits = (
-        (planes[:T] > 0).astype(jnp.uint32)
-        << jnp.arange(32, dtype=jnp.uint32)[None, None, :]
-    ).sum(axis=-1, dtype=jnp.uint32)
-    bloom = cache.bloom | new_bits
     return CacheState(bloom=bloom, bkey=bkey, bval=bval, bvalid=bvalid)
 
 

@@ -51,6 +51,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import cacheset
 from .keys import limb_eq, limb_hash
 
 # hash salts (disjoint from hotcache's so the two caches decorrelate;
@@ -104,7 +105,7 @@ def make_cache(cfg: ScanCacheConfig) -> ScanCacheState:
 
 
 def _bloom_hashes(khi, klo, bits: int):
-    return [limb_hash(khi, klo, s) % jnp.uint32(bits) for s in SALT_SBLOOM]
+    return cacheset.bloom_hashes(khi, klo, bits, SALT_SBLOOM)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -154,48 +155,33 @@ def admit(
     epoch: jnp.ndarray | int = 0,
 ) -> ScanCacheState:
     """Admit (k_min -> anchor leaf) entries; same wave-salted random policy
-    and 4-way fill/evict as the point cache.  ``epoch`` tags each entry with
-    the flush-cycle counter at admit time (observability: how old is the
-    cache population relative to the last restitch)."""
-    wave_salt = jnp.asarray(wave, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
-    rnd = limb_hash(khi, klo, SALT_SADMIT) ^ wave_salt
-    rnd = rnd * jnp.uint32(0x7FEB352D)
-    rnd = rnd ^ (rnd >> 13)
-    take = eligible & ((rnd >> 7) % jnp.uint32(1 << cfg.admit_shift) == 0)
-    bucket = (limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(cfg.n_buckets)).astype(
-        jnp.int32
+    and 4-way fill/evict as the point cache — the shared scatter math lives
+    in ``cacheset.admit_set``, with (anchor leaf, admit epoch) as this
+    cache's payload.  ``epoch`` tags each entry with the flush-cycle counter
+    at admit time (observability: how old is the cache population relative
+    to the last restitch)."""
+    bloom, bkey, bvalid, (bleaf, bepoch) = cacheset.admit_set(
+        cache.bloom,
+        cache.bkey,
+        cache.bvalid,
+        (cache.bleaf, cache.bepoch),
+        (leaf.astype(jnp.int32), jnp.asarray(epoch, dtype=jnp.int32)),
+        tid,
+        khi,
+        klo,
+        eligible,
+        n_buckets=cfg.n_buckets,
+        ways=cfg.ways,
+        admit_shift=cfg.admit_shift,
+        bloom_bits=cfg.bloom_bits,
+        bloom_salts=SALT_SBLOOM,
+        bucket_salt=SALT_SBUCKET,
+        way_salt=SALT_SWAY,
+        admit_salt=SALT_SADMIT,
+        wave=wave,
     )
-    ways_valid = cache.bvalid[tid, bucket]  # (B, W)
-    has_free = ~jnp.all(ways_valid, axis=1)
-    first_free = jnp.argmin(ways_valid.astype(jnp.int32), axis=1)
-    victim = (limb_hash(khi, klo, SALT_SWAY) % jnp.uint32(cfg.ways)).astype(jnp.int32)
-    way = jnp.where(has_free, first_free.astype(jnp.int32), victim)
-    T = cache.bkey.shape[0]
-    tid_s = jnp.where(take, tid, T)  # OOB -> dropped
-    bkey = cache.bkey.at[tid_s, bucket, way].set(
-        jnp.stack([khi, klo], -1), mode="drop"
-    )
-    bleaf = cache.bleaf.at[tid_s, bucket, way].set(
-        leaf.astype(jnp.int32), mode="drop"
-    )
-    bepoch = cache.bepoch.at[tid_s, bucket, way].set(
-        jnp.asarray(epoch, dtype=jnp.int32), mode="drop"
-    )
-    bvalid = cache.bvalid.at[tid_s, bucket, way].set(True, mode="drop")
-    # bloom OR via scatter-ADD bit planes (duplicate updates accumulate,
-    # then counts>0 packs back) — same race-free trick as hotcache.admit
-    n_words = cache.bloom.shape[1]
-    planes = jnp.zeros((T + 1, n_words, 32), dtype=jnp.int32)
-    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
-        word = (h // 32).astype(jnp.int32)
-        bit = (h % 32).astype(jnp.int32)
-        planes = planes.at[tid_s, word, bit].add(1, mode="drop")
-    new_bits = (
-        (planes[:T] > 0).astype(jnp.uint32)
-        << jnp.arange(32, dtype=jnp.uint32)[None, None, :]
-    ).sum(axis=-1, dtype=jnp.uint32)
     return ScanCacheState(
-        bloom=cache.bloom | new_bits,
+        bloom=bloom,
         bkey=bkey,
         bleaf=bleaf,
         bepoch=bepoch,

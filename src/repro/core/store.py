@@ -30,7 +30,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from . import hotcache, insert_buffer, lookup, patch, scancache, stitch
+from . import api, hotcache, insert_buffer, lookup, patch, scancache, stitch
+from .api import RangeResult
 from .epoch import EpochManager
 from .hotcache import CacheConfig, CacheState
 from .keys import KEY_MAX, join_u64, limb_hash_np, split_u64
@@ -226,9 +227,18 @@ class DPAStore:
         self.stats.scan_invalidated += int(n)
 
     # ------------------------------------------------------------------ GET
-    def get(self, keys_u64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched point lookup: returns (values u64, found bool)."""
-        keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    def get(
+        self, keys=None, *, epoch: Optional[int] = None, **legacy
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched point lookup: returns (values u64, found bool).
+
+        Canonical ``KVStore`` signature: ``epoch`` exists for signature
+        parity with the sharded tiers — a single store has no routing
+        epochs, so only ``None`` is accepted."""
+        keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
+        api.reject_unknown("get", legacy)
+        assert epoch is None, "single-store GET has no routing epochs"
+        keys_u64 = np.asarray(keys, dtype=np.uint64)
         n = keys_u64.size
         B = _pad_pow2(n)
         khi, klo, active = self._limbs(keys_u64, B)
@@ -274,7 +284,11 @@ class DPAStore:
                 [np.asarray(out_vhi)[:n], np.asarray(out_vlo)[:n]], axis=-1
             )
         )
-        return vals, np.asarray(out_found)[:n]
+        found = np.asarray(out_found)[:n]
+        # protocol contract: not-found rows carry 0, never slot residue —
+        # so responses are bitwise identical no matter which tier serves them
+        vals[~found] = 0
+        return vals, found
 
     # ---------------------------------------------------------------- writes
     def _write(
@@ -338,28 +352,52 @@ class DPAStore:
         self._end_wave()
         return np.asarray(status)[:n]
 
-    def put(self, keys_u64, vals_u64, auto_retry: bool = True) -> np.ndarray:
+    def put(self, keys=None, vals=None, *args, auto_retry: bool = True, **legacy) -> np.ndarray:
         """INSERT or UPDATE (the buffer treats both as PUT; the patcher
-        classifies the patch)."""
-        st = self._write(keys_u64, vals_u64, IB_PUT, auto_retry)
-        self.stats.puts += np.asarray(keys_u64).size
+        classifies the patch).  Canonical signature keeps ``auto_retry``
+        keyword-only; the old positional third argument still works via a
+        deprecation shim."""
+        keys = api.take_legacy("put", legacy, keys, "keys", "keys_u64")
+        vals = api.take_legacy("put", legacy, vals, "vals", "vals_u64")
+        api.reject_unknown("put", legacy)
+        if args:  # legacy positional auto_retry
+            api.warn_legacy("put", "positional auto_retry", "auto_retry=...")
+            (auto_retry,) = args
+        st = self._write(keys, vals, IB_PUT, auto_retry)
+        self.stats.puts += np.asarray(keys).size
         return st
 
     insert = put
     update = put
 
-    def delete(self, keys_u64, auto_retry: bool = True) -> np.ndarray:
-        st = self._write(keys_u64, None, IB_DEL, auto_retry)
-        self.stats.deletes += np.asarray(keys_u64).size
+    def delete(self, keys=None, *args, auto_retry: bool = True, **legacy) -> np.ndarray:
+        keys = api.take_legacy("delete", legacy, keys, "keys", "keys_u64")
+        api.reject_unknown("delete", legacy)
+        if args:  # legacy positional auto_retry
+            api.warn_legacy("delete", "positional auto_retry", "auto_retry=...")
+            (auto_retry,) = args
+        st = self._write(keys, None, IB_DEL, auto_retry)
+        self.stats.deletes += np.asarray(keys).size
         return st
 
     # ---------------------------------------------------------------- range
     def range(
-        self, start_keys_u64, limit: int = 10, max_leaves: int = 4
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """RANGE(k_min, limit) per request: returns (keys (B, limit), vals
-        (B, limit), count (B,)) — ascending, live entries only (zeros past
-        ``count``).
+        self,
+        k_min=None,
+        limit: int = 10,
+        *args,
+        k_max=None,
+        epoch: Optional[int] = None,
+        max_leaves: int = 4,
+        **legacy,
+    ) -> RangeResult:
+        """RANGE(k_min, limit) per request: a :class:`~repro.core.api.
+        RangeResult` whose named fields are ``keys (B, limit)``, ``vals
+        (B, limit)``, ``counts (B,)`` — ascending, live entries only (zeros
+        past ``counts``) — and which still tuple-unpacks at the legacy
+        3-arity.  ``k_max`` (scalar or per-row u64, exclusive) clips the
+        scan window; ``epoch`` exists for signature parity with the sharded
+        tiers (only ``None`` here).
 
         The scan walks ``max_leaves`` leaves per device wave and *resumes*
         truncated rows from their continuation cursor until every row hit
@@ -373,10 +411,26 @@ class DPAStore:
         cache); a ``k_min`` above the largest key or inside an empty window
         comes back with ``count=0``.
         """
-        keys_out, vals_out, counts, _, _, _ = self.range_with_state(
-            start_keys_u64, limit=limit, max_leaves=max_leaves
+        k_min = api.take_legacy("range", legacy, k_min, "k_min", "start_keys_u64")
+        api.reject_unknown("range", legacy)
+        if args:  # legacy positional max_leaves
+            api.warn_legacy("range", "positional max_leaves", "max_leaves=...")
+            (max_leaves,) = args
+        assert epoch is None, "single-store RANGE has no routing epochs"
+        res = self.range_with_state(
+            k_min, limit=limit, max_leaves=max_leaves, k_max=k_max
         )
-        return keys_out, vals_out, counts
+        return RangeResult(
+            keys=res.keys,
+            vals=res.vals,
+            counts=res.counts,
+            truncated=res.truncated,
+            cursor_leaf=res.cursor_leaf,
+            cursor_key=res.cursor_key,
+            rounds=res.rounds,
+            stats=res.stats,
+            _arity=3,
+        )
 
     def _scan_start(self, khi, klo, resume_np: np.ndarray, n_active: int):
         """Resolve the start leaf of each lane: continuation cursor if
@@ -432,9 +486,11 @@ class DPAStore:
         max_rounds: Optional[int] = None,
         start_leaves: Optional[np.ndarray] = None,
         k_max=None,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """RANGE with explicit continuation state: returns (keys (n, limit),
-        vals, count (n,), truncated (n,), cursor_leaf (n,), cursor_key (n,)).
+    ) -> RangeResult:
+        """RANGE with explicit continuation state: a :class:`RangeResult`
+        carrying (keys (n, limit), vals, counts (n,), truncated (n,),
+        cursor_leaf (n,), cursor_key (n,)) — tuple-unpacks at the legacy
+        6-arity.
 
         ONE device dispatch: the scan-anchor cache resolves fresh rows'
         start leaves, then ``lookup.range_batch_loop`` runs the multi-round
@@ -469,7 +525,11 @@ class DPAStore:
         cur_key_out = start_keys_u64.copy()
         self.stats.ranges += n
         if n == 0 or limit <= 0:
-            return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
+            return RangeResult(
+                keys=keys_out, vals=vals_out, counts=counts,
+                truncated=trunc_out, cursor_leaf=cur_leaf_out,
+                cursor_key=cur_key_out, _arity=6,
+            )
         if start_leaves is not None:
             self.stats.range_reissue_rounds += 1
         B = _pad_pow2(n)
@@ -523,7 +583,20 @@ class DPAStore:
             # cursors would never be probed and would only evict real
             # pagination anchors (and cost a host descent each)
             self._admit_cursor_anchors(trunc_out, cur_key_out)
-        return keys_out, vals_out, counts, trunc_out, cur_leaf_out, cur_key_out
+        return RangeResult(
+            keys=keys_out,
+            vals=vals_out,
+            counts=counts,
+            truncated=trunc_out,
+            cursor_leaf=cur_leaf_out,
+            cursor_key=cur_key_out,
+            rounds=int(rounds),
+            stats={
+                "rounds_in_mesh": max(int(rounds) - 1, 0),
+                "reissue": int(start_leaves is not None),
+            },
+            _arity=6,
+        )
 
     def _admit_cursor_anchors(self, trunc: np.ndarray, last_keys: np.ndarray):
         """Scan-anchor cursor admission (pagination pre-warm).

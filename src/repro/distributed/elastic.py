@@ -11,12 +11,21 @@ restart exact:
     (step, shard, n_shards);
   * model-axis size must keep dividing the sharded dims — candidate meshes
     are filtered accordingly.
+
+KV replica recovery (:func:`plan_replica_remesh`) is the same planning
+discipline applied to the replicated KV tier: given which replicas of each
+shard group are alive, decide what to rebuild and from where — each dead
+slot re-replicates from its group's primary (or the lowest-indexed
+survivor) via ``snapshot_slice``/``ingest_slice``, and a group with no
+survivor is an unrecoverable loss the plan refuses to paper over.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.configs.base import ArchConfig
 
@@ -79,6 +88,62 @@ def plan_remesh(
             if p.shape[1] == prefer_model:
                 return p
     return max(cands, key=lambda p: p.shape[1])
+
+
+@dataclass(frozen=True)
+class ReplicaRebuild:
+    """One dead replica slot and the live replica that re-seeds it."""
+
+    group: int  # shard group index
+    replica: int  # dead slot to rebuild
+    source: int  # live slot whose snapshot_slice feeds ingest_slice
+
+
+@dataclass(frozen=True)
+class ReplicaRemeshPlan:
+    n_groups: int
+    n_replicas: int
+    rebuilds: Tuple[ReplicaRebuild, ...]
+
+    @property
+    def n_rebuilds(self) -> int:
+        return len(self.rebuilds)
+
+
+def plan_replica_remesh(
+    n_groups: int,
+    n_replicas: int,
+    alive: Sequence[Sequence[bool]],
+    primaries: Optional[Sequence[int]] = None,
+) -> ReplicaRemeshPlan:
+    """Plan re-replication after replica failures.
+
+    ``alive[g][r]`` says whether replica ``r`` of group ``g`` still holds a
+    usable copy.  Each dead slot is rebuilt from its group's primary when
+    the primary survived, else from the lowest-indexed survivor — one full
+    ``snapshot_slice`` read per rebuild, so the plan also bounds recovery
+    traffic.  A group with zero survivors has lost data no plan can
+    recover; that is an error, not a silent empty rebuild.
+    """
+    alive_m = np.asarray(alive, dtype=bool)
+    if alive_m.shape != (n_groups, n_replicas):
+        raise ValueError(
+            f"alive must be ({n_groups}, {n_replicas}), got {alive_m.shape}"
+        )
+    rebuilds: List[ReplicaRebuild] = []
+    for g in range(n_groups):
+        survivors = np.where(alive_m[g])[0]
+        if survivors.size == 0:
+            raise ValueError(f"group {g} has no surviving replica: data loss")
+        source = int(survivors[0])
+        if primaries is not None and alive_m[g, int(primaries[g])]:
+            source = int(primaries[g])
+        for r in range(n_replicas):
+            if not alive_m[g, r]:
+                rebuilds.append(ReplicaRebuild(group=g, replica=r, source=source))
+    return ReplicaRemeshPlan(
+        n_groups=n_groups, n_replicas=n_replicas, rebuilds=tuple(rebuilds)
+    )
 
 
 def restart_report(old_devices: int, new_devices: int, plan: MeshPlan) -> dict:

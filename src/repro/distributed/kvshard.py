@@ -23,6 +23,13 @@ The exchange uses fixed per-shard-pair capacity with overflow -> RETRY
 status, the batched analogue of the paper's receive-queue overflow handling
 (Sec 3.1.3).
 
+On the range tier each shard can be a *replica group* (``replication=R``):
+R bitwise-identical sub-stores per key slice, one of them primary.  Writes
+fan out synchronously to every in-sync replica (ack = durable everywhere),
+reads round-robin over the in-sync set, and killing the primary promotes a
+follower through the same two-epoch ownership flip the rebalance handoff
+uses — see ``ShardedDPAStore.kill_replica`` / ``recover_replicas``.
+
 Two execution paths share the same routing math:
 
   * ``serve_wave_sharded`` — shard_map over the production mesh (the
@@ -126,6 +133,22 @@ class ShardedDPAStore:
       route by the epoch they were admitted under); :meth:`commit_rebalance`
       retires the donors' stale copies once those waves have drained.
 
+    ``replication=R`` (range tier only) turns each shard into a *replica
+    group* of R bitwise-identical sub-stores over the same key slice.
+    Writes fan out synchronously to every in-sync replica and the returned
+    status is the pessimistic merge, so status OK means the write is
+    durable on the whole group — the zero-lost-acked-writes guarantee the
+    failover test holds the store to.  Reads (GET and RANGE sub-queries)
+    round-robin over the in-sync set; a RANGE sub-query pins its replica
+    for the whole continuation loop (resume cursors are store-local).
+    :meth:`kill_replica` crashes a replica; killing the primary installs a
+    failover epoch via ``OwnershipTable.install(new_primary=...)`` — the
+    boundary vector is unchanged, so both epochs route identically and
+    in-flight waves drain under the epoch they were admitted with.
+    :meth:`recover_replicas` re-replicates dead slots from each group's
+    primary (``elastic.plan_replica_remesh`` → ``snapshot_slice`` +
+    ``ingest_slice``/bulk load).
+
     This is host-side orchestration (each shard is an independent
     ``DPAStore``); the device-resident wave paths are
     ``serve_wave_emulated`` / ``serve_wave_sharded`` over ``stacked()`` for
@@ -143,6 +166,7 @@ class ShardedDPAStore:
         partition: str = "hash",
         scan_cache_cfg="default",
         rebalance_cfg="default",
+        replication: int = 1,
     ):
         from repro.core.store import DPAStore
         from repro.core import pla
@@ -155,13 +179,20 @@ class ShardedDPAStore:
 
         assert partition in ("hash", "range"), partition
         assert n_shards >= 1, f"n_shards must be positive, got {n_shards}"
+        assert replication >= 1, f"replication must be positive, got {replication}"
+        assert partition == "range" or replication == 1, (
+            "replication rides the range tier's epoch-versioned OwnershipTable"
+        )
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
         self.n_shards = n_shards
         self.cfg = tree_cfg
         self.partition = partition
+        self.replication = replication
         if partition == "range":
-            self.ownership = OwnershipTable(pla.fit_boundaries(keys, n_shards))
+            self.ownership = OwnershipTable(
+                pla.fit_boundaries(keys, n_shards), n_replicas=replication
+            )
             if rebalance_cfg == "default":
                 rebalance_cfg = RebalanceConfig()
             self.planner = (
@@ -185,19 +216,66 @@ class ShardedDPAStore:
         self.range_requests = 0
         self.range_subqueries = 0
         self.range_reissues = 0
+        # replication accounting (fig19: write amplification, failover)
+        self.client_writes = 0
+        self.replica_writes = 0
+        self.acked_writes = 0
+        self.failovers = 0
+        self.recoveries = 0
+        self._read_rr = 0  # round-robin cursor over in-sync replicas
         if scan_cache_cfg == "default":
             scan_cache_cfg = ScanCacheConfig()  # per-shard anchor caches
-        self.shards: List[DPAStore] = [
-            DPAStore(
-                keys[h == s],
-                vals[h == s],
-                tree_cfg,
-                cache_cfg=cache_cfg,
-                batched_patch=batched_patch,
-                scan_cache_cfg=scan_cache_cfg,
-            )
+        self._store_kwargs = dict(
+            cache_cfg=cache_cfg,
+            batched_patch=batched_patch,
+            scan_cache_cfg=scan_cache_cfg,
+        )
+        # groups[s][r]: replica r of shard group s (None = crashed slot).
+        # R identical bulk loads, so replicas start bitwise-equal and the
+        # synchronous write fan-out keeps their contents that way.
+        self.groups: List[List[Optional[DPAStore]]] = [
+            [
+                DPAStore(keys[h == s], vals[h == s], tree_cfg, **self._store_kwargs)
+                for _ in range(replication)
+            ]
             for s in range(n_shards)
         ]
+
+    @property
+    def shards(self) -> List:
+        """Current-epoch primary of each shard group (the pre-replication
+        single-store-per-shard view; R=1 callers see exactly the old list)."""
+        if self.ownership is None:
+            return [g[0] for g in self.groups]
+        pm = self.ownership.primary
+        return [self.groups[s][int(pm[s])] for s in range(self.n_shards)]
+
+    def _in_sync(self, s: int) -> List[int]:
+        if self.ownership is None:
+            return [0]
+        return [int(r) for r in self.ownership.replica_set(s)]
+
+    def _read_store(self, s: int):
+        """Pick the replica that serves this read: round-robin over the
+        in-sync set (every member is content-identical, so the choice is
+        invisible in results — it only spreads load)."""
+        replicas = self._in_sync(s)
+        pick = replicas[self._read_rr % len(replicas)]
+        self._read_rr += 1
+        return self.groups[s][pick]
+
+    def _write_group(
+        self, s: int, op: str, keys: np.ndarray, *arrays, auto_retry: bool = True
+    ) -> np.ndarray:
+        """Fan one write batch out to every in-sync replica of group ``s``.
+        Statuses merge pessimistically (max: OK=0 < RETRY) — a key is acked
+        only once every replica holds it."""
+        status = None
+        for r in self._in_sync(s):
+            st = getattr(self.groups[s][r], op)(keys, *arrays, auto_retry=auto_retry)
+            self.replica_writes += int(keys.size)
+            status = st if status is None else np.maximum(status, st)
+        return status
 
     @property
     def boundaries(self) -> Optional[np.ndarray]:
@@ -230,57 +308,88 @@ class ShardedDPAStore:
         assert epoch is None, "hash routing has no boundary epochs"
         return shard_of_np(keys_u64, self.n_shards)
 
-    def _route(self, keys_u64: np.ndarray):
+    def _route(self, keys_u64: np.ndarray, epoch: Optional[int] = None):
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-        dest = self.route_np(keys_u64)
+        dest = self.route_np(keys_u64, epoch=epoch)
         if self.planner is not None and keys_u64.size:
             self.planner.note_load(dest)
         return keys_u64, dest
 
-    def put(self, keys_u64, vals_u64) -> np.ndarray:
+    def put(self, keys=None, vals=None, *, auto_retry: bool = True, **legacy) -> np.ndarray:
+        from repro.core import api
+        from repro.core.store import STATUS_OK
+
+        keys = api.take_legacy("put", legacy, keys, "keys", "keys_u64")
+        vals = api.take_legacy("put", legacy, vals, "vals", "vals_u64")
+        api.reject_unknown("put", legacy)
         if self.planner is not None:
             # feed the streaming key sample the online refit fits against
-            self.planner.observe(np.asarray(keys_u64, dtype=np.uint64))
-        keys_u64, dest = self._route(keys_u64)
-        vals_u64 = np.asarray(vals_u64, dtype=np.uint64)
-        statuses = np.zeros(keys_u64.size, dtype=np.int32)
+            self.planner.observe(np.asarray(keys, dtype=np.uint64))
+        keys, dest = self._route(keys)
+        vals = np.asarray(vals, dtype=np.uint64)
+        statuses = np.zeros(keys.size, dtype=np.int32)
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
-                statuses[m] = self.shards[s].put(keys_u64[m], vals_u64[m])
+                statuses[m] = self._write_group(
+                    s, "put", keys[m], vals[m], auto_retry=auto_retry
+                )
+        self.client_writes += int(keys.size)
+        self.acked_writes += int((statuses == STATUS_OK).sum())
         return statuses
 
-    def delete(self, keys_u64) -> np.ndarray:
-        keys_u64, dest = self._route(keys_u64)
-        statuses = np.zeros(keys_u64.size, dtype=np.int32)
+    def delete(self, keys=None, *, auto_retry: bool = True, **legacy) -> np.ndarray:
+        from repro.core import api
+        from repro.core.store import STATUS_OK
+
+        keys = api.take_legacy("delete", legacy, keys, "keys", "keys_u64")
+        api.reject_unknown("delete", legacy)
+        keys, dest = self._route(keys)
+        statuses = np.zeros(keys.size, dtype=np.int32)
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
-                statuses[m] = self.shards[s].delete(keys_u64[m])
+                statuses[m] = self._write_group(
+                    s, "delete", keys[m], auto_retry=auto_retry
+                )
+        self.client_writes += int(keys.size)
+        self.acked_writes += int((statuses == STATUS_OK).sum())
         return statuses
 
-    def get(self, keys_u64) -> Tuple[np.ndarray, np.ndarray]:
-        keys_u64, dest = self._route(keys_u64)
-        vals = np.zeros(keys_u64.size, dtype=np.uint64)
-        found = np.zeros(keys_u64.size, dtype=bool)
+    def get(
+        self, keys=None, *, epoch: Optional[int] = None, **legacy
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        from repro.core import api
+
+        keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
+        api.reject_unknown("get", legacy)
+        keys, dest = self._route(keys, epoch=epoch)
+        vals = np.zeros(keys.size, dtype=np.uint64)
+        found = np.zeros(keys.size, dtype=bool)
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
-                v, f = self.shards[s].get(keys_u64[m])
+                v, f = self._read_store(s).get(keys[m])
                 vals[m] = v
                 found[m] = f
         return vals, found
 
     def range(
         self,
-        start_keys_u64,
+        k_min=None,
         limit: int = 10,
+        *args,
+        k_max=None,
+        epoch: Optional[int] = None,
         max_leaves: int = 4,
         fanout: Optional[int] = None,
-        epoch: Optional[int] = None,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batched RANGE(k_min, limit): (keys (n, limit), vals (n, limit),
-        count (n,)) — globally ascending live entries, zeros past ``count``.
+        **legacy,
+    ):
+        """Batched RANGE(k_min, limit) -> :class:`repro.core.api.RangeResult`
+        (tuple-unpackable as the legacy ``(keys (n, limit), vals (n, limit),
+        count (n,))``) — globally ascending live entries, zeros past
+        ``count``, clipped to ``[k_min, k_max)`` when ``k_max`` (scalar or
+        per-row, exclusive) is given.
 
         Range partition: scatter-gather with in-mesh continuation.  Each
         request is sent to its owner shard (boundary search) and then to
@@ -311,14 +420,32 @@ class ShardedDPAStore:
         RANGE throughput cannot exceed one shard's.  This is the baseline
         ``benchmarks/fig16_range.py`` plots against the range tier.
         """
-        start = np.asarray(start_keys_u64, dtype=np.uint64)
+        from repro.core import api
+        from repro.core.api import RangeResult
+
+        k_min = api.take_legacy("range", legacy, k_min, "k_min", "start_keys_u64")
+        api.reject_unknown("range", legacy)
+        if args:  # legacy positional (max_leaves, fanout, epoch)
+            api.warn_legacy(
+                "range", "positional tuning arguments", "max_leaves=/fanout=/epoch="
+            )
+            for name, val in zip(("max_leaves", "fanout", "epoch"), args):
+                if name == "max_leaves":
+                    max_leaves = val
+                elif name == "fanout":
+                    fanout = val
+                else:
+                    epoch = val
+        start = np.asarray(k_min, dtype=np.uint64)
         n = start.size
         keys_out = np.zeros((n, max(limit, 0)), dtype=np.uint64)
         vals_out = np.zeros((n, max(limit, 0)), dtype=np.uint64)
         counts = np.zeros(n, dtype=np.int64)
         if n == 0 or limit <= 0:
-            return keys_out, vals_out, counts
+            return RangeResult(keys_out, vals_out, counts)
         self.range_requests += n
+        if k_max is not None:  # per-row exclusive clip (scalar broadcasts)
+            k_max = np.broadcast_to(np.asarray(k_max, dtype=np.uint64), (n,))
         if self.partition == "range":
             from repro.core.store import append_range_results
 
@@ -335,16 +462,22 @@ class ShardedDPAStore:
                 # owned-window lower bound (successor sub-queries scan from
                 # their slice start; no-op for the owner by routing)
                 sub_start = np.maximum(start[idxs], lb[s])
+                # the owned-window upper clip, tightened per row by the
+                # request's own k_max when given
+                sub_ub = np.full(idxs.size, ub[s], dtype=np.uint64)
+                if k_max is not None:
+                    sub_ub = np.minimum(sub_ub, k_max[idxs])
                 resume = None
+                # pin one in-sync replica for the whole continuation loop:
+                # resume cursors (cur_leaf) are store-local leaf ids
+                serving = self._read_store(s)
                 while idxs.size:
-                    rk, rv, rc, trunc, cur_leaf, _ = self.shards[
-                        s
-                    ].range_with_state(
+                    rk, rv, rc, trunc, cur_leaf, _ = serving.range_with_state(
                         sub_start,
                         limit=limit,
                         max_leaves=max_leaves,
                         start_leaves=resume,
-                        k_max=ub[s],
+                        k_max=sub_ub,
                     )
                     append_range_results(
                         keys_out, vals_out, counts, idxs, rk, rv, rc, limit
@@ -354,14 +487,15 @@ class ShardedDPAStore:
                     again = trunc & (counts[idxs] < limit)
                     idxs = idxs[again]
                     sub_start = sub_start[again]
+                    sub_ub = sub_ub[again]
                     resume = cur_leaf[again]
                     self.range_reissues += int(again.sum())
-            return keys_out, vals_out, counts
+            return RangeResult(keys_out, vals_out, counts)
         # hash partition: broadcast + k-way merge (keys never hit the
         # KEY_MAX sentinel — reserved — so it can pad the sort)
         self.range_subqueries += n * self.n_shards
         per = [
-            sh.range(start, limit=limit, max_leaves=max_leaves)
+            sh.range(start, limit=limit, max_leaves=max_leaves, k_max=k_max)
             for sh in self.shards
         ]
         allk = np.concatenate([rk for rk, _, _ in per], axis=1)
@@ -378,11 +512,15 @@ class ShardedDPAStore:
         keys_out[:] = np.where(top_live, top_k, 0)
         vals_out[:] = np.where(top_live, top_v, 0)
         counts[:] = top_live.sum(axis=1)
-        return keys_out, vals_out, counts
+        return RangeResult(keys_out, vals_out, counts)
+
+    def _live_stores(self):
+        return [st for g in self.groups for st in g if st is not None]
 
     def flush(self) -> int:
-        """One flush cycle per shard (each a single stitch transaction)."""
-        return sum(sh.flush() for sh in self.shards)
+        """One flush cycle per live replica (each a single stitch
+        transaction)."""
+        return sum(st.flush() for st in self._live_stores())
 
     def items(self) -> Tuple[np.ndarray, np.ndarray]:
         ks, vs = [], []
@@ -401,8 +539,85 @@ class ShardedDPAStore:
         order = np.argsort(np.concatenate(ks), kind="stable")
         return np.concatenate(ks)[order], np.concatenate(vs)[order]
 
-    def stacked(self) -> Tuple[DeviceTree, InsertBuffers, int]:
-        return stack_shards(self.shards)
+    def stacked(self, epoch: Optional[int] = None) -> Tuple[DeviceTree, InsertBuffers, int]:
+        """Stack the serving replica of each group for the device wave
+        paths.  ``epoch`` selects the primary map of a live ownership epoch
+        (during a failover drain both are stackable; boundaries are
+        identical so either epoch's wave reads the same data)."""
+        if self.ownership is None:
+            return stack_shards(self.shards)
+        from repro.distributed.rangeshard import replica_serving_stores
+
+        return stack_shards(
+            replica_serving_stores(self.groups, self.ownership.primary_for(epoch))
+        )
+
+    # ------------------------------------------------- replication (range)
+    def kill_replica(self, group: int, replica: Optional[int] = None) -> Optional[int]:
+        """Fault injection: crash replica ``replica`` of shard ``group``
+        (default: its current primary).  Killing a follower just shrinks
+        the in-sync set; killing the primary installs a *failover epoch* —
+        ``OwnershipTable.install(new_primary=...)`` with the boundary
+        vector unchanged — promoting the lowest in-sync survivor.  Returns
+        the promoted replica index (None for a follower death).  In-flight
+        waves admitted under the old epoch keep routing by it; call
+        :meth:`retire_failover` once they drain.  Refuses to run mid
+        rebalance-handoff (the two-epoch window is single-occupancy —
+        drain and commit first)."""
+        assert self.ownership is not None, "replication is a range-tier feature"
+        assert self.replication > 1, "killing the only replica loses the slice"
+        if replica is None:
+            replica = int(self.ownership.primary[group])
+        promoted = self.ownership.fail_replica(group, replica)
+        self.groups[group][replica] = None
+        if promoted is not None:
+            self.failovers += 1
+        return promoted
+
+    def retire_failover(self) -> None:
+        """Drop the pre-failover epoch once its in-flight waves drained
+        (the failover analogue of :meth:`commit_rebalance`'s epoch
+        retirement — there are no stale slice copies to tombstone because
+        the boundaries never moved)."""
+        assert self.ownership is not None and self.ownership.in_handoff
+        self.ownership.retire_previous()
+
+    def recover_replicas(self):
+        """Re-replicate every crashed slot from its group's primary (or
+        lowest in-sync survivor): ``elastic.plan_replica_remesh`` picks the
+        sources, then each rebuild is one full ``snapshot_slice`` fed
+        through ``ingest_slice`` into a fresh empty store — the same
+        batched patch/stitch pipeline the rebalance copy phase uses — or a
+        direct bulk load when the snapshot exceeds a fresh store's ingest
+        headroom.  Rebuilt replicas re-enter the in-sync set (reads and
+        write fan-out include them again).  Returns the executed plan."""
+        from repro.core.keys import KEY_MAX
+        from repro.core.store import DPAStore
+        from repro.distributed.elastic import plan_replica_remesh
+
+        assert self.ownership is not None, "replication is a range-tier feature"
+        alive = [
+            [self.groups[s][r] is not None for r in range(self.replication)]
+            for s in range(self.n_shards)
+        ]
+        plan = plan_replica_remesh(
+            self.n_shards,
+            self.replication,
+            alive,
+            primaries=[int(p) for p in self.ownership.primary],
+        )
+        empty = np.empty(0, dtype=np.uint64)
+        for rb in plan.rebuilds:
+            k, v = self.groups[rb.group][rb.source].snapshot_slice(0, KEY_MAX)
+            fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
+            if k.size <= fresh.ingest_headroom():
+                fresh.ingest_slice(k, v)
+            else:  # too big for an empty store's free pools: bulk load
+                fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
+            self.groups[rb.group][rb.replica] = fresh
+            self.ownership.restore_replica(rb.group, rb.replica)
+            self.recoveries += 1
+        return plan
 
     # --------------------------------------------- online rebalance (range)
     def shard_occupancy(self, flush: bool = False) -> np.ndarray:
@@ -471,18 +686,26 @@ class ShardedDPAStore:
         # from both sides, and each slice fitting alone does not mean both
         # fit together.
         for s in {mv.donor for mv in moves}:
-            self.shards[s].flush()
+            for r in self._in_sync(s):  # replicas flush in lockstep so the
+                self.groups[s][r].flush()  # stitched counts stay the truth
         need: Dict[int, int] = {}
         for mv in moves:
             n = sum(sh.count_slice(mv.k_lo, mv.k_hi) for sh in self.shards)
             need[mv.receiver] = need.get(mv.receiver, 0) + n
         for receiver, n in need.items():
-            if n > self.shards[receiver].ingest_headroom():
+            # every in-sync receiver replica ingests the same slices, so
+            # the scarcest replica's headroom gates the whole group
+            headroom = min(
+                self.groups[receiver][r].ingest_headroom()
+                for r in self._in_sync(receiver)
+            )
+            if n > headroom:
                 self.rebalances_aborted += 1
                 return []
         for mv in moves:  # copy phase (donors keep serving their slices)
             k, v = self.shards[mv.donor].snapshot_slice(mv.k_lo, mv.k_hi)
-            self.shards[mv.receiver].ingest_slice(k, v)
+            for r in self._in_sync(mv.receiver):
+                self.groups[mv.receiver][r].ingest_slice(k, v)
         self.ownership.install(new_boundaries)
         self._pending_moves = moves
         return moves
@@ -497,14 +720,18 @@ class ShardedDPAStore:
         assert self.in_handoff, "begin_rebalance first"
         migrated = 0
         for mv in self._pending_moves:
-            k, _ = self.shards[mv.donor].extract_slice(mv.k_lo, mv.k_hi)
-            migrated += int(k.size)
+            primary = int(self.ownership.primary[mv.donor]) if self.ownership else 0
+            for r in self._in_sync(mv.donor):
+                k, _ = self.groups[mv.donor][r].extract_slice(mv.k_lo, mv.k_hi)
+                if r == primary:  # replicas are identical: count one copy
+                    migrated += int(k.size)
         # chain compaction: extract_slice leaves one empty routing stub per
         # emptied leaf; without this pass they accumulate cycle over cycle
         # (ingest re-creates leaves at split_cap fill, so an oscillating
         # storm ratchets the stub count until the pools exhaust)
         for s in {mv.donor for mv in self._pending_moves}:
-            self.shards[s].compact_chain()
+            for r in self._in_sync(s):
+                self.groups[s][r].compact_chain()
         self.ownership.retire_previous()
         self._pending_moves = []
         self.rebalances += 1
@@ -539,14 +766,21 @@ class ShardedDPAStore:
         (rounds after the first of each dispatch) — the round-trips the
         in-mesh loop keeps off the host, vs ``range_reissues`` which counts
         the host round-trips that survived."""
-        return sum(sh.stats.range_rounds_in_mesh for sh in self.shards)
+        return sum(st.stats.range_rounds_in_mesh for st in self._live_stores())
+
+    @property
+    def write_amplification(self) -> float:
+        """Replica writes per client write (R when every replica is
+        in-sync; drops toward 1 while replicas are down — fig19's
+        write-cost axis)."""
+        return self.replica_writes / max(self.client_writes, 1)
 
     def stats_totals(self) -> Dict[str, int]:
-        """Aggregate StoreStats across shards (flush cycle / stitch apply
-        accounting for the benchmarks)."""
+        """Aggregate StoreStats across live replicas (flush cycle / stitch
+        apply accounting for the benchmarks)."""
         out: Dict[str, int] = {}
-        for sh in self.shards:
-            for k, v in vars(sh.stats).items():
+        for st in self._live_stores():
+            for k, v in vars(st.stats).items():
                 if isinstance(v, (int, np.integer)):
                     out[k] = out.get(k, 0) + int(v)
         return out

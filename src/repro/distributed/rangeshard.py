@@ -113,6 +113,24 @@ def boundary_limbs(boundaries: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1])
 
 
+def replica_serving_stores(groups, primary) -> list:
+    """The store that serves each shard group under a given primary map
+    (``OwnershipTable.primary_for(epoch)``).  A crashed slot falls back to
+    the group's first live replica — the pre-failover map legitimately
+    points at the replica whose death opened the handoff, and any live
+    replica is content-identical (synchronous write fan-out), so the wave
+    results are bitwise the same under either live epoch — the property
+    the failover tests pin down."""
+    serving = []
+    for g, p in zip(groups, primary):
+        st = g[int(p)]
+        if st is None:
+            st = next((r for r in g if r is not None), None)
+        assert st is not None, "shard group has no live replica"
+        serving.append(st)
+    return serving
+
+
 def route_range(b_hi, b_lo, khi, klo):
     """Owner shard per request key: count of shard-start boundaries <= key
     (bit-identical to ``np.searchsorted(boundaries, key, side='right')``)."""

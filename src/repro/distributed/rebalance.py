@@ -73,14 +73,41 @@ from repro.core import pla
 class OwnershipTable:
     """Boundary vectors by epoch: ``current`` always routes fresh requests;
     ``previous`` is retained only during a handoff so in-flight waves
-    admitted under the old epoch can still be routed (and audited) by it."""
+    admitted under the old epoch can still be routed (and audited) by it.
+
+    Replica sets.  With ``n_replicas > 1`` each range slice maps to a
+    replica *group* — ``primary[g]`` names the replica serving as the
+    group's primary (snapshot source, device-wave server) and
+    ``in_sync[g, r]`` tracks which replicas hold every acknowledged write
+    (writes fan out synchronously to the whole in-sync set, so any of them
+    can serve reads).  The primary map is epoch-versioned exactly like the
+    boundary vector: a primary failover is an :meth:`install` with a new
+    primary map (boundaries unchanged), so in-flight waves admitted under
+    the old epoch drain under the old map while fresh requests follow the
+    promoted follower — the same two-epoch discipline a rebalance handoff
+    rides."""
 
     current: np.ndarray  # (n_shards - 1,) u64 partition start keys
     epoch: int = 0
     previous: Optional[np.ndarray] = None
+    # -- replica-set state (n_replicas == 1 degenerates to single-owner) --
+    n_replicas: int = 1
+    primary: Optional[np.ndarray] = None  # (n_shards,) i32 replica index
+    previous_primary: Optional[np.ndarray] = None  # old epoch's map (handoff)
+    in_sync: Optional[np.ndarray] = None  # (n_shards, n_replicas) bool
 
     def __post_init__(self) -> None:
         self.current = np.asarray(self.current, dtype=np.uint64)
+        assert self.n_replicas >= 1
+        n_shards = self.current.size + 1
+        if self.primary is None:
+            self.primary = np.zeros(n_shards, dtype=np.int32)
+        else:
+            self.primary = np.asarray(self.primary, dtype=np.int32)
+        if self.in_sync is None:
+            self.in_sync = np.ones((n_shards, self.n_replicas), dtype=bool)
+        else:
+            self.in_sync = np.asarray(self.in_sync, dtype=bool)
 
     @property
     def in_handoff(self) -> bool:
@@ -108,23 +135,96 @@ class OwnershipTable:
             b, np.asarray(keys_u64, dtype=np.uint64), side="right"
         ).astype(np.int32)
 
-    def install(self, new_boundaries: np.ndarray) -> int:
-        """Begin the handoff epoch: the new vector becomes current, the old
-        one stays live for exactly one epoch.  Returns the new epoch."""
+    def install(
+        self,
+        new_boundaries: Optional[np.ndarray] = None,
+        new_primary: Optional[np.ndarray] = None,
+    ) -> int:
+        """Begin a handoff epoch: the new boundary vector and/or primary
+        map become current, the old pair stays live for exactly one epoch
+        (``None`` keeps the corresponding vector unchanged — a primary
+        failover flips only the map, a rebalance only the boundaries).
+        Returns the new epoch."""
         assert not self.in_handoff, "commit the previous rebalance first"
-        new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
-        assert new_boundaries.shape == self.current.shape
-        assert np.all(
-            new_boundaries[1:] >= new_boundaries[:-1]
-        ), "boundaries must be sorted"
+        assert new_boundaries is not None or new_primary is not None
         self.previous = self.current
-        self.current = new_boundaries
+        self.previous_primary = self.primary.copy()
+        if new_boundaries is not None:
+            new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
+            assert new_boundaries.shape == self.current.shape
+            assert np.all(
+                new_boundaries[1:] >= new_boundaries[:-1]
+            ), "boundaries must be sorted"
+            self.current = new_boundaries
+        if new_primary is not None:
+            new_primary = np.asarray(new_primary, dtype=np.int32)
+            assert new_primary.shape == self.primary.shape
+            assert np.all((new_primary >= 0) & (new_primary < self.n_replicas))
+            assert self.in_sync[
+                np.arange(new_primary.size), new_primary
+            ].all(), "a primary must be in-sync"
+            self.primary = new_primary
         self.epoch += 1
         return self.epoch
 
     def retire_previous(self) -> None:
         """End the handoff: the old epoch's waves have drained."""
         self.previous = None
+        self.previous_primary = None
+
+    # -- replica sets ------------------------------------------------------
+    def primary_for(self, epoch: Optional[int] = None) -> np.ndarray:
+        """(n_shards,) primary replica per group under ``epoch`` (default:
+        current) — same liveness rule as :meth:`boundaries_for`."""
+        if epoch is None or epoch == self.epoch:
+            return self.primary
+        if epoch == self.epoch - 1 and self.previous_primary is not None:
+            return self.previous_primary
+        raise KeyError(
+            f"primary-map epoch {epoch} retired (current={self.epoch}, "
+            f"handoff={'yes' if self.in_handoff else 'no'})"
+        )
+
+    def replica_set(self, group: int) -> np.ndarray:
+        """In-sync replica indices of ``group`` — any of them may serve
+        reads (synchronous fan-out keeps them bitwise content-equal)."""
+        return np.where(self.in_sync[group])[0]
+
+    def fail_replica(self, group: int, replica: int) -> Optional[int]:
+        """Mark ``replica`` of ``group`` dead (out of sync).  Killing the
+        group's primary additionally installs a failover epoch promoting
+        the lowest-indexed in-sync follower (two-epoch discipline: callers
+        drain old-epoch waves, then :meth:`retire_previous`).  Returns the
+        promoted replica index, or ``None`` when a follower died (no epoch
+        flip needed — it simply drops out of the read set).  Raises
+        ``RuntimeError`` when the group's last in-sync replica dies (the
+        slice is unrecoverable without external state)."""
+        assert 0 <= replica < self.n_replicas
+        self.in_sync[group, replica] = False
+        survivors = self.replica_set(group)
+        if survivors.size == 0:
+            raise RuntimeError(
+                f"group {group} lost its last in-sync replica — slice data "
+                "is unrecoverable (raise n_replicas)"
+            )
+        if replica != int(self.primary_for()[group]):
+            return None
+        assert not self.in_handoff, (
+            "primary failover during an open rebalance handoff: drain and "
+            "retire the rebalance epoch first"
+        )
+        new_primary = self.primary.copy()
+        new_primary[group] = int(survivors[0])
+        self.install(new_primary=new_primary)
+        return int(survivors[0])
+
+    def restore_replica(self, group: int, replica: int) -> None:
+        """Re-admit a recovered replica to the in-sync set.  The caller
+        must have made it content-complete first (bootstrap via the
+        primary's ``snapshot_slice`` before any further write is admitted
+        — the host facade serializes waves, so there is no window)."""
+        assert 0 <= replica < self.n_replicas
+        self.in_sync[group, replica] = True
 
     # -- owned-window bounds (for RANGE contribution clipping) -------------
     def lower_bounds(self, epoch: Optional[int] = None) -> np.ndarray:

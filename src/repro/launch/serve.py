@@ -16,6 +16,11 @@ LM decode loop, batched.
     PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
         --shards 4 --rebalance --rebalance-every 4
 
+    # replicated shard groups: R replicas per slice, synchronous write
+    # fan-out, mid-run primary kill + failover + re-replication
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
+        --shards 4 --replication 2 --kill-primary-at 8
+
     # LM decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
 """
@@ -53,13 +58,17 @@ def serve_kv(args):
             TreeConfig(),
             partition=args.partition,
             scan_cache_cfg=scan_cfg,
+            replication=args.replication,
         )
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
     rebalancing = args.rebalance and args.partition == "range"
+    replicated = args.partition == "range" and args.replication > 1
     fresh_base = keys.max()
     t0 = time.time()
     served = 0
+    range_hits = 0
+    recovery_s = None
     for w in range(args.waves):
         q = keys[idx[w * args.wave_size : (w + 1) * args.wave_size]]
         kind = w % 4
@@ -79,7 +88,26 @@ def serve_kv(args):
                 store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
         else:  # RANGE (scatter-gather on the range tier; broadcast on hash;
             # Zipf-repeated start keys exercise the scan-anchor cache)
-            store.range(q[:64], limit=10, max_leaves=args.max_leaves)
+            result = store.range(q[:64], limit=10, max_leaves=args.max_leaves)
+            range_hits += int(result.counts.sum())  # RangeResult named field
+        if replicated and args.kill_primary_at and w + 1 == args.kill_primary_at:
+            promoted = store.kill_replica(0)  # crash shard 0's primary
+            print(
+                f"[serve-kv] wave {w}: killed shard 0 primary — replica "
+                f"{promoted} promoted under failover epoch "
+                f"{store.boundary_epoch}; serving continues"
+            )
+        elif replicated and args.kill_primary_at and w == args.kill_primary_at:
+            # one wave later: the old epoch's in-flight requests have
+            # drained — retire it and re-replicate the dead slot
+            store.retire_failover()
+            t_rec = time.time()
+            plan = store.recover_replicas()
+            recovery_s = time.time() - t_rec
+            print(
+                f"[serve-kv] wave {w}: re-replicated {plan.n_rebuilds} "
+                f"replica(s) in {recovery_s:.2f}s — group back in sync"
+            )
         if rebalancing and (w + 1) % args.rebalance_every == 0:
             report = store.maybe_rebalance()
             if report is not None:
@@ -129,6 +157,16 @@ def serve_kv(args):
                 f"{spread['ratio']:.2f} (min {spread['min']} / "
                 f"max {spread['max']})"
             )
+        if replicated:
+            rec = f", recovery {recovery_s:.2f}s" if recovery_s is not None else ""
+            print(
+                f"[serve-kv] replication: R={args.replication}, write "
+                f"amplification {store.write_amplification:.2f}x, "
+                f"{store.acked_writes}/{store.client_writes} writes acked "
+                f"durable group-wide, {store.failovers} failover(s), "
+                f"{store.recoveries} replica(s) rebuilt{rec}"
+            )
+        print(f"[serve-kv] RANGE returned {range_hits} entries total")
         print(
             f"[serve-kv] scan-anchor cache: {100*hit:.0f}% descent-skip hit "
             f"rate across shards"
@@ -196,6 +234,21 @@ def main(argv=None):
         type=positive_int,
         default=4,
         help="waves between rebalance-planner probes (with --rebalance)",
+    )
+    ap.add_argument(
+        "--replication",
+        type=positive_int,
+        default=1,
+        help="range tier only: replicas per shard group (writes fan out "
+        "synchronously to every in-sync replica; reads round-robin)",
+    )
+    ap.add_argument(
+        "--kill-primary-at",
+        type=int,
+        default=0,
+        help="with --replication > 1: crash shard 0's primary after this "
+        "wave (0 = never) — a follower is promoted via a failover epoch "
+        "and the dead slot is re-replicated one wave later",
     )
     ap.add_argument("--n-keys", type=int, default=100_000)
     ap.add_argument("--waves", type=int, default=16)

@@ -1,0 +1,218 @@
+"""KVStore protocol conformance: every store implementation — single,
+hash-sharded, range-sharded, replicated — answers the SAME canonical
+signatures (``repro.core.api``) with the same dtypes and padding
+semantics, from one table of cases.
+
+The suite also pins the compatibility contract: legacy spellings
+(``keys_u64=``, ``start_keys_u64=``, positional ``auto_retry``) keep
+working behind ``DeprecationWarning`` shims, mixing a legacy name with its
+canonical twin is a ``TypeError``, and :class:`RangeResult` unpacks at the
+legacy tuple arity while exposing named fields to new code.
+"""
+
+import inspect
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import DPAStore, KVStore, TreeConfig
+from repro.core.api import RangeResult
+from repro.distributed import kvshard
+
+N_KEYS = 400
+CFG = TreeConfig(growth=16.0)
+
+
+def _data():
+    rng = np.random.default_rng(0xA11CE)
+    keys = np.unique(rng.integers(1, 2**62, N_KEYS, dtype=np.uint64))
+    return keys, keys ^ np.uint64(0xBEEF)
+
+
+STORE_BUILDERS = {
+    "single": lambda k, v: DPAStore(k, v, CFG, cache_cfg=None),
+    "hash": lambda k, v: kvshard.ShardedDPAStore(
+        k, v, 2, CFG, partition="hash", cache_cfg=None
+    ),
+    "range": lambda k, v: kvshard.ShardedDPAStore(
+        k, v, 2, CFG, partition="range", cache_cfg=None
+    ),
+    "replicated": lambda k, v: kvshard.ShardedDPAStore(
+        k, v, 2, CFG, partition="range", cache_cfg=None, replication=2
+    ),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(STORE_BUILDERS))
+def impl(request):
+    keys, vals = _data()
+    return request.param, STORE_BUILDERS[request.param](keys, vals), keys, vals
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_signatures(impl):
+    """Every implementation exposes the protocol's parameter names, kinds
+    and defaults (extra keyword-only tuning knobs are allowed)."""
+    _, store, _, _ = impl
+    assert isinstance(store, KVStore)
+
+    sig = inspect.signature(store.get)
+    assert "keys" in sig.parameters
+    epoch = sig.parameters["epoch"]
+    assert epoch.kind is inspect.Parameter.KEYWORD_ONLY and epoch.default is None
+
+    for meth in ("put", "delete"):
+        sig = inspect.signature(getattr(store, meth))
+        assert "keys" in sig.parameters
+        ar = sig.parameters["auto_retry"]
+        assert ar.kind is inspect.Parameter.KEYWORD_ONLY and ar.default is True
+
+    sig = inspect.signature(store.range)
+    assert "k_min" in sig.parameters
+    assert sig.parameters["limit"].default == 10
+    for name, default in (("k_max", None), ("epoch", None), ("max_leaves", 4)):
+        p = sig.parameters[name]
+        assert p.kind is inspect.Parameter.KEYWORD_ONLY, name
+        assert p.default == default, name
+
+
+# ---------------------------------------------------------------------------
+# one table of cases, identical dtypes/padding across implementations
+# ---------------------------------------------------------------------------
+
+
+def test_op_table_dtypes_and_padding(impl):
+    name, store, keys, vals = impl
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    rng = np.random.default_rng(7)
+    present = rng.choice(keys, 32).astype(np.uint64)
+    absent = np.setdiff1d(
+        rng.integers(1, 2**62, 32, dtype=np.uint64), keys
+    )
+
+    # GET: u64 vals row-aligned, bool found, epoch=None accepted everywhere
+    q = np.concatenate([present, absent])
+    v, f = store.get(q, epoch=None)
+    assert v.dtype == np.uint64 and f.dtype == np.bool_
+    assert v.shape == q.shape and f.shape == q.shape
+    assert f[: present.size].all() and not f[present.size :].any()
+    assert (v[: present.size] == np.array([oracle[int(k)] for k in present])).all()
+
+    # PUT / DELETE: i32 status per key, auto_retry keyword-only
+    nk = np.setdiff1d(
+        rng.integers(1, 2**62, 24, dtype=np.uint64), keys
+    )
+    st = store.put(nk, nk ^ np.uint64(0x5), auto_retry=True)
+    assert st.dtype == np.int32 and st.shape == nk.shape and (st == 0).all()
+    st = store.delete(nk[:8], auto_retry=True)
+    assert st.dtype == np.int32 and (st == 0).all()
+    store.delete(nk[8:])  # restore the shared fixture's key population
+
+    # RANGE: RangeResult with u64 matrices, zero padding past counts
+    limit = 6
+    starts = present[:8]
+    res = store.range(starts, limit, k_max=None, epoch=None)
+    assert isinstance(res, RangeResult)
+    assert res.keys.dtype == np.uint64 and res.vals.dtype == np.uint64
+    assert res.keys.shape == (starts.size, limit)
+    sorted_keys = np.array(sorted(oracle), dtype=np.uint64)
+    for i, k in enumerate(starts):
+        j = np.searchsorted(sorted_keys, k)
+        exp = sorted_keys[j : j + limit]
+        assert res.counts[i] == exp.size
+        assert (res.keys[i, : exp.size] == exp).all()
+        assert (res.keys[i, exp.size :] == 0).all()
+        assert (res.vals[i, exp.size :] == 0).all()
+
+    # k_max clips exclusively, per-row
+    res = store.range(starts, limit, k_max=starts + np.uint64(1))
+    assert (res.counts <= 1).all()
+    for i, k in enumerate(starts):
+        if res.counts[i]:
+            assert res.keys[i, 0] == k
+
+
+def test_results_bitwise_identical_across_impls():
+    """Same data + same requests -> bitwise-identical responses from all
+    four implementations (the protocol is one wire format no matter how
+    many DPAs — or replicas — serve it)."""
+    keys, vals = _data()
+    rng = np.random.default_rng(99)
+    q = np.concatenate(
+        [rng.choice(keys, 16), rng.integers(1, 2**62, 16, dtype=np.uint64)]
+    ).astype(np.uint64)
+    outs = []
+    for name, build in sorted(STORE_BUILDERS.items()):
+        s = build(keys, vals)
+        v, f = s.get(q)
+        r = s.range(q[:6], 5)
+        outs.append((name, v, f, r.keys, r.vals, r.counts))
+    ref = outs[0]
+    for other in outs[1:]:
+        for a, b in zip(ref[1:], other[1:]):
+            assert (np.asarray(a) == np.asarray(b)).all(), (ref[0], other[0])
+
+
+# ---------------------------------------------------------------------------
+# legacy shims
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_kwargs_warn_and_work(impl):
+    name, store, keys, vals = impl
+    q = keys[:4]
+    with pytest.warns(DeprecationWarning):
+        v1, f1 = store.get(keys_u64=q)
+    v2, f2 = store.get(q)
+    assert (v1 == v2).all() and (f1 == f2).all()
+
+    with pytest.warns(DeprecationWarning):
+        r1 = store.range(start_keys_u64=q, limit=5)
+    r2 = store.range(q, 5)
+    for a, b in zip(r1, r2):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+    with pytest.warns(DeprecationWarning):
+        st = store.put(keys_u64=q, vals_u64=keys[:4] ^ np.uint64(0xBEEF))
+    assert (st == 0).all()
+
+
+def test_legacy_conflicts_and_unknown_kwargs_raise(impl):
+    _, store, keys, _ = impl
+    q = keys[:2]
+    with pytest.raises(TypeError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            store.get(q, keys_u64=q)  # canonical + legacy for one param
+    with pytest.raises(TypeError):
+        store.get(q, bogus_kwarg=1)
+
+
+# ---------------------------------------------------------------------------
+# RangeResult back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_range_result_tuple_compat(impl):
+    _, store, keys, vals = impl
+    res = store.range(keys[:3], 4)
+    rk, rv, rc = res  # 3-arity unpacking
+    assert len(res) == 3
+    assert (res[0] == rk).all() and (res[2] == rc).all()
+    assert (res.values == res.vals).all()  # ISSUE's field aliases
+    assert (res.found == res.counts).all()
+
+
+def test_range_with_state_six_arity():
+    keys, vals = _data()
+    store = DPAStore(keys, vals, CFG, cache_cfg=None)
+    res = store.range_with_state(keys[:3], limit=4, max_leaves=2)
+    assert isinstance(res, RangeResult) and len(res) == 6
+    rk, rv, rc, trunc, cur_leaf, cur_key = res
+    assert trunc.dtype == np.bool_
+    assert res.rounds >= 1 and "rounds_in_mesh" in res.stats

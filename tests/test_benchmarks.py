@@ -194,6 +194,69 @@ def test_fig18_smoke_rows_show_rebalance_retention():
         assert met[on]["spread_after"] < met[off]["spread_after"], (storm, met)
 
 
+@pytest.mark.slow
+def test_fig19_smoke_rows_show_replication_costs():
+    """The replication sweep must emit schema-valid rows across >= 2
+    replication factors plus the failover cell, and the derived metrics
+    must show what replication buys and bills: write amplification tracks
+    R while every replica is in sync, modeled read capacity grows with R,
+    and the primary-kill cell reports zero lost acked writes with a
+    parseable recovery time."""
+    from benchmarks import common, fig19_replication
+    from benchmarks.run import (
+        replication_metrics,
+        validate_fig19_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig19_replication.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig19_coverage(rows)
+    met = replication_metrics(rows)
+    for r in (1, 2, 3):
+        assert met[f"fig19/r{r}/write"]["write_amp"] == pytest.approx(r), met
+    assert (
+        met["fig19/r1/read"]["model_mops"]
+        < met["fig19/r2/read"]["model_mops"]
+        < met["fig19/r3/read"]["model_mops"]
+    ), met
+    fo = met["fig19/failover/r2"]
+    assert fo["lost_acked"] == 0 and fo["recovery_keys"] > 0, fo
+
+
+def test_fig19_gate_rejects_lost_acked_writes():
+    """The schema gate itself: a failover cell reporting a nonzero
+    lost-acked count, or an R sweep missing its fields, must be flagged."""
+    from benchmarks.run import validate_fig19_coverage
+
+    good = [
+        f"fig19/r{r}/write,1.0,model_mops=1.0;write_amp={float(r)};"
+        f"acked=8;client=8"
+        for r in (1, 2)
+    ] + [
+        f"fig19/r{r}/read,1.0,model_mops={10.0 * r};replicas={r}"
+        for r in (1, 2)
+    ] + [
+        "fig19/failover/r2,1.0,lost_acked=0;recovery_s=0.1;"
+        "recovery_keys=9;rebuilds=1;failovers=1"
+    ]
+    assert not validate_fig19_coverage(good)
+    lost = [r.replace("lost_acked=0", "lost_acked=3") for r in good]
+    assert any("lost_acked" in p for p in validate_fig19_coverage(lost))
+    nofail = good[:-1]
+    assert any("failover" in p for p in validate_fig19_coverage(nofail))
+    onefactor = [r for r in good if "/r2/" not in r]
+    assert any("factors" in p for p in validate_fig19_coverage(onefactor))
+
+
 def test_fig16_gate_rejects_missing_or_nonzero_continuation_fields():
     """The schema gate itself: a fig16 row without the continuation fields,
     or a range-tier row reporting host re-issues, must be flagged."""

@@ -11,10 +11,15 @@ migrated slice, a compacted stub swallowing a later insert — fails here
 with the generating seed, without anyone having to anticipate the exact
 interleaving.
 
-Two legs: a small always-on leg (fast lane), and a ``slow``-marked broad
-leg sweeping shard counts x both tiers x longer interleavings with
-split-phase (begin ... ops ... commit) rebalances.  The hermetic
-hypothesis shim (tests/_vendor) runs both as seeded deterministic sweeps.
+Legs: a small always-on leg (fast lane), a ``slow``-marked broad leg
+sweeping shard counts x both tiers x longer interleavings with
+split-phase (begin ... ops ... commit) rebalances, and an always-on
+*failover* leg (R=2 replicated range tier) that interleaves primary and
+follower kills, failover-epoch reads, and re-replication with the same
+ops — the zero-lost-acked-writes guarantee IS the full-oracle bitwise
+equality after every step, since every acked PUT is in the oracle.  The
+hermetic hypothesis shim (tests/_vendor) runs all of them as seeded
+deterministic sweeps.
 """
 
 import numpy as np
@@ -65,7 +70,9 @@ def _check_items(store, oracle):
     assert all(int(v) == oracle[int(k)] for k, v in zip(ks, vs))
 
 
-def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
+def _run_interleaving(
+    data, *, n_shards, partition, n_keys, n_ops, wave, replication=1
+):
     """One fuzzed episode: load, interleave ops, verify bitwise throughout."""
     rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
     keys = np.unique(
@@ -78,15 +85,23 @@ def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
     else:
         store = kvshard.ShardedDPAStore(
             keys, vals, n_shards, TreeConfig(growth=16.0),
-            partition=partition, cache_cfg=None,
+            partition=partition, cache_cfg=None, replication=replication,
         )
     sharded = n_shards > 0
+    replicated = sharded and replication > 1
     in_handoff = False
     handoff_epoch = None
     # an old-epoch reader is entitled to the PRE-handoff snapshot; once a
     # write lands during the handoff the live oracle no longer describes
     # the old epoch's view, so stop issuing old-epoch reads
     wrote_in_handoff = False
+    # a FAILOVER handoff has no such caveat: both epochs carry the same
+    # boundary vector, so the old epoch routes identically and stays
+    # bitwise-equal to the live oracle even after post-failover writes
+    failover_epoch = None
+
+    def group_fully_alive(g):
+        return all(slot is not None for slot in store.groups[g])
 
     def some_keys(k=wave):
         pool = np.array(sorted(oracle.keys()), dtype=np.uint64)
@@ -106,6 +121,12 @@ def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
                 + (
                     ["rebalance", "begin_rebalance", "commit_rebalance"]
                     if sharded and partition == "range"
+                    else []
+                )
+                + (
+                    ["kill_primary", "kill_follower", "retire_failover",
+                     "recover"]
+                    if replicated
                     else []
                 )
             )
@@ -140,21 +161,23 @@ def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
         elif op == "range":
             limit = data.draw(st.sampled_from([1, 7, 33]))
             max_leaves = data.draw(st.sampled_from([1, 4]))
-            epoch = (
-                handoff_epoch
-                if in_handoff and not wrote_in_handoff and data.draw(st.booleans())
-                else None
-            )
+            if in_handoff and not wrote_in_handoff and data.draw(st.booleans()):
+                epoch = handoff_epoch
+            elif failover_epoch is not None and data.draw(st.booleans()):
+                epoch = failover_epoch  # identical boundaries: valid even
+                # after post-failover writes (unlike a rebalance handoff)
+            else:
+                epoch = None
             _check_range(
                 store, oracle, some_keys(wave // 2), limit, max_leaves,
                 epoch=epoch,
             )
         elif op == "flush":
             store.flush()
-        elif op == "rebalance" and not in_handoff:
+        elif op == "rebalance" and not in_handoff and failover_epoch is None:
             if store.planner is not None:
                 store.rebalance(store.planner.propose(store.boundaries))
-        elif op == "begin_rebalance" and not in_handoff:
+        elif op == "begin_rebalance" and not in_handoff and failover_epoch is None:
             if store.planner is not None:
                 moves = store.begin_rebalance(
                     store.planner.propose(store.boundaries)
@@ -167,13 +190,44 @@ def _run_interleaving(data, *, n_shards, partition, n_keys, n_ops, wave):
             in_handoff = False
             handoff_epoch = None
             wrote_in_handoff = False
+        elif op == "kill_primary" and not in_handoff and failover_epoch is None:
+            g = data.draw(st.integers(0, n_shards - 1))
+            if group_fully_alive(g):
+                e0 = store.boundary_epoch
+                promoted = store.kill_replica(g)  # default victim: primary
+                assert promoted is not None, "a primary kill must promote"
+                failover_epoch = e0  # old epoch drains while we keep serving
+        elif op == "kill_follower" and not in_handoff and failover_epoch is None:
+            g = data.draw(st.integers(0, n_shards - 1))
+            if group_fully_alive(g):
+                follower = (int(store.ownership.primary[g]) + 1) % replication
+                assert store.kill_replica(g, follower) is None, (
+                    "a follower kill must not flip the epoch"
+                )
+        elif op == "retire_failover" and failover_epoch is not None:
+            store.retire_failover()
+            failover_epoch = None
+        elif op == "recover" and failover_epoch is None and any(
+            slot is None for grp in store.groups for slot in grp
+        ):
+            store.recover_replicas()
         if op == "begin_rebalance" and in_handoff:
             wrote_in_handoff = False
+    if failover_epoch is not None:
+        store.retire_failover()
+    if replicated and any(slot is None for grp in store.groups for slot in grp):
+        store.recover_replicas()
     if in_handoff:
         store.commit_rebalance()
     _check_items(store, oracle)
     _check_get(store, oracle, some_keys())
     _check_range(store, oracle, some_keys(wave // 2), 9, 2)
+    if replicated:
+        # survivors never needed a host re-issue: the in-mesh continuation
+        # contract is failover-invariant
+        assert store.range_reissues == 0
+        assert store.failovers + store.recoveries >= 0  # counters exist
+        assert store.write_amplification <= replication
 
 
 @given(st.data())
@@ -182,6 +236,19 @@ def test_differential_fuzz_fast(data):
     """Always-on leg: 2-shard range tier, short interleavings."""
     _run_interleaving(
         data, n_shards=2, partition="range", n_keys=260, n_ops=6, wave=24
+    )
+
+
+@given(st.data())
+@settings(max_examples=4, deadline=None)
+def test_differential_fuzz_failover(data):
+    """Always-on replicated leg: R=2 range tier under primary/follower
+    kills, failover-epoch reads, re-replication, rebalances and the full
+    op mix.  Every acked PUT is in the oracle, so the bitwise oracle
+    equality after a primary kill IS the zero-lost-acked-writes check."""
+    _run_interleaving(
+        data, n_shards=2, partition="range", n_keys=220, n_ops=8, wave=24,
+        replication=2,
     )
 
 
