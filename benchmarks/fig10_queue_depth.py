@@ -1,16 +1,74 @@
 """Figure 10: client-side queue depth vs GET throughput and latency.
 
-Closed-loop queueing model over the BlueField-3 service rate: with C=186
-client threads at queue depth q, offered in-flight load is min(C*q, 45056);
-throughput saturates at the DPA service bound while latency grows linearly
-once the service is saturated (the paper picks q=32 as the knee).
+Two sweeps share the figure:
+
+* ``fig10/qd<q>`` — the paper's closed-loop queueing model over the
+  BlueField-3 service rate: with C=186 client threads at queue depth q,
+  offered in-flight load is min(C*q, 45056); throughput saturates at the
+  DPA service bound while latency grows linearly once the service is
+  saturated (the paper picks q=32 as the knee).
+
+* ``fig10/pipe/<tier>/qd<q>`` — the host pipeline MEASURED: the same
+  queue-depth knob applied to our double-buffered dispatch layer
+  (``serving.pipeline.PipelinedStore``) on the single store and on the
+  range-sharded tier (emulated mesh).  Each cell reports the closed-loop
+  ``model_mops`` for that depth (the BlueField-3 claim), plus the measured
+  wall throughput, the per-wave issue/drain split from the WaveLedger, the
+  measured ``overlap_frac`` (0 at qd=1 by construction; > 0 once waves
+  double-buffer), and ``mops_vs_roofline`` — measured throughput over the
+  ``perfmodel.pipelined_wave_mops`` host ceiling computed from the same
+  ledger.  These cells are the benchmark gate for the wave pipeline:
+  ``validate_fig10_coverage`` fails the smoke artifact if they are missing
+  or stop reporting overlap.
 """
+import time
+
+import numpy as np
+
 from repro.core import perfmodel
+from . import common
 from .common import emit
 
 CLIENT_THREADS = 6 * 31
 T_NET_US = 150.0  # client->switch->NIC->client round trip + client work
 # (calibrated so the knee lands at qd~32, where Figure 10 puts it)
+
+PIPE_DEPTHS = (1, 2, 4)
+PIPE_WAVES = 6
+PIPE_SHARDS = 2
+
+
+def _measure_pipe(tier: str, store, qd: int, waves, svc: float) -> None:
+    from repro.serving.pipeline import PipelinedStore
+
+    # warm the jit cache with one same-shaped wave so the timed loop
+    # measures dispatch overlap, not trace time
+    store.get(waves[0])
+    pipe = PipelinedStore(store, queue_depth=qd)
+    w = waves[0].size
+    t0 = time.perf_counter()
+    tickets = [pipe.submit_get(q) for q in waves]
+    for t in tickets:
+        pipe.result(t)
+    dt = time.perf_counter() - t0
+    s = pipe.pipeline_summary()
+    measured_kops = len(waves) * w / dt / 1e3
+    roof_mops = perfmodel.pipelined_wave_mops(
+        w, s["issue_us_per_wave"], s["drain_us_per_wave"], qd
+    )
+    # the device-side claim stays the closed-loop model at this depth; the
+    # measured columns are the host pipeline's contribution
+    model = min(CLIENT_THREADS * qd / T_NET_US, svc)
+    emit(
+        f"fig10/pipe/{tier}/qd{qd}",
+        dt / (len(waves) * w) * 1e6,
+        f"model_mops={model:.1f};overlap_frac={s['overlap_frac']:.3f};"
+        f"measured_kops={measured_kops:.1f};"
+        f"issue_us={s['issue_us_per_wave']:.1f};"
+        f"drain_us={s['drain_us_per_wave']:.1f};"
+        f"mops_vs_roofline={measured_kops / 1e3 / max(roof_mops, 1e-9):.3f}",
+    )
+
 
 def run():
     svc = perfmodel.get_mops(3)  # service ceiling, MOPS
@@ -25,6 +83,26 @@ def run():
             lat,
             f"model_mops={tput:.1f};latency_us={lat:.1f};paper_knee=qd32",
         )
+    # measured host-pipeline sweep: single store + range-sharded tier
+    from repro.core.datasets import load
+    from repro.distributed.kvshard import ShardedDPAStore
+
+    rng = np.random.default_rng(10)
+    n = common.n_keys()
+    w = common.wave(512)
+    keys = load("sparse", n, seed=0)  # same seed as build_store: waves hit
+    vals = keys ^ np.uint64(0x5EED)
+    for tier in ("single", "range"):
+        for qd in PIPE_DEPTHS:
+            if tier == "single":
+                store = common.build_store("sparse", cache=False)
+            else:
+                store = ShardedDPAStore(
+                    keys, vals, PIPE_SHARDS, cache_cfg=None, partition="range"
+                )
+            waves = [rng.choice(keys, w) for _ in range(PIPE_WAVES)]
+            _measure_pipe(tier, store, qd, waves, svc)
+
 
 if __name__ == "__main__":
     run()

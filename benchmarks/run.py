@@ -76,6 +76,66 @@ def validate_fig16_coverage(rows) -> list:
     return problems
 
 
+def validate_fig10_coverage(rows) -> list:
+    """The wave-pipeline sweep must cover both tiers (single + range-sharded)
+    at queue depths 1 and 2 (rows are ``fig10/pipe/<tier>/qd<q>``); every
+    cell must carry parseable ``overlap_frac`` and ``mops_vs_roofline``;
+    overlap must be 0 at qd=1 (the serial facade) and > 0 at qd >= 2 —
+    waves that stop overlapping mean the double-buffer degenerated back to
+    serial dispatch; and the closed-loop model must show qd=2 at >= 1.2x
+    the qd=1 throughput (the pipelining claim itself)."""
+    problems = []
+    for tier in ("single", "range"):
+        depths = {}
+        for row in rows:
+            name, _, derived = row.split(",", 2)
+            parts = name.split("/")
+            if (
+                len(parts) != 4
+                or parts[0] != "fig10"
+                or parts[1] != "pipe"
+                or parts[2] != tier
+            ):
+                continue
+            depths[parts[3]] = fields = derived_fields(derived)
+            for key in ("overlap_frac", "mops_vs_roofline", "model_mops"):
+                try:
+                    float(fields.get(key, ""))
+                except ValueError:
+                    problems.append(f"{name}: missing/bad {key} field")
+            try:
+                frac = float(fields.get("overlap_frac", ""))
+                qd = int(parts[3][2:])
+                if qd == 1 and frac != 0.0:
+                    problems.append(
+                        f"{name}: overlap_frac must be 0 at qd=1, got {frac}"
+                    )
+                if qd >= 2 and frac <= 0.0:
+                    problems.append(
+                        f"{name}: overlap_frac must be > 0 at qd>=2, got "
+                        f"{frac} (pipeline degenerated to serial dispatch)"
+                    )
+            except ValueError:
+                pass  # already reported above
+        if not {"qd1", "qd2"} <= depths.keys():
+            problems.append(
+                f"fig10/pipe/{tier}: need qd1 + qd2 cells, "
+                f"got {sorted(depths)}"
+            )
+            continue
+        try:
+            m1 = float(depths["qd1"]["model_mops"])
+            m2 = float(depths["qd2"]["model_mops"])
+            if m2 < 1.2 * m1:
+                problems.append(
+                    f"fig10/pipe/{tier}: qd2 model throughput {m2} < "
+                    f"1.2x qd1 {m1} (pipelining gain regression)"
+                )
+        except (KeyError, ValueError):
+            pass  # field problems already reported
+    return problems
+
+
 def validate_fig17_coverage(rows) -> list:
     """The scan-anchor-cache sweep must cover both cache modes x >= 2 Zipf
     skews x >= 2 scan lengths (rows are ``fig17/<mode>/zipf<a>/limit<L>``)."""
@@ -254,6 +314,29 @@ def anchor_cache_hit_rates(rows) -> dict:
     return out
 
 
+def pipeline_metrics(rows) -> dict:
+    """Measured wave-pipeline cells per ``fig10/pipe`` tier x depth —
+    surfaced in the smoke artifact so the perf trajectory records how much
+    dispatch/drain overlap the double-buffer actually wins and how close
+    the measured throughput sits to the perfmodel roofline."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig10/pipe/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            out[name] = {
+                "overlap_frac": float(fields["overlap_frac"]),
+                "mops_vs_roofline": float(fields["mops_vs_roofline"]),
+                "measured_kops": float(fields["measured_kops"]),
+                "model_mops": float(fields["model_mops"]),
+            }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument(
@@ -330,6 +413,8 @@ def main(argv=None) -> None:
 
     if args.smoke:
         problems = validate_rows(common.ROWS)
+        if "fig10_queue_depth" not in failures:
+            problems += validate_fig10_coverage(common.ROWS)
         if "fig16_range" not in failures:
             problems += validate_fig16_coverage(common.ROWS)
         if "fig17_scan_cache" not in failures:
@@ -347,6 +432,7 @@ def main(argv=None) -> None:
             "module_seconds": timings,
             "failed_modules": failures,
             "anchor_cache_hit_rates": anchor_cache_hit_rates(common.ROWS),
+            "pipeline_metrics": pipeline_metrics(common.ROWS),
             "rebalance_metrics": rebalance_metrics(common.ROWS),
             "replication_metrics": replication_metrics(common.ROWS),
             "range_continuation": range_continuation_metrics(common.ROWS),

@@ -209,6 +209,31 @@ def mix_mops(
     return min(bounds)
 
 
+def pipelined_wave_mops(
+    wave_size: int,
+    issue_us: float,
+    drain_us: float,
+    queue_depth: int = 2,
+) -> float:
+    """Roofline of the double-buffered host dispatch loop (``serving.
+    pipeline``): with ``queue_depth`` waves in flight, the steady-state
+    period per wave is bounded below by the longest single phase (the
+    pipeline cannot go faster than its slowest stage) and by the total
+    per-wave work divided by the depth (with qd slots, issue and drain of
+    different waves overlap at best qd-fold).
+
+        qd=1: period = issue + drain (the serial facade)
+        qd>=2, balanced phases: period -> max(issue, drain) — the classic
+        double-buffer bound, 2x the serial rate.
+
+    ``issue_us``/``drain_us`` come from the measured WaveLedger; the
+    returned MOPS is the ceiling the measured throughput is compared
+    against in ``benchmarks/fig10_queue_depth.py``."""
+    qd = max(int(queue_depth), 1)
+    period = max(issue_us, drain_us, (issue_us + drain_us) / qd)
+    return wave_size / max(period, 1e-9)
+
+
 # -- paper's worked example, used as a self-check in tests -------------------
 
 

@@ -109,6 +109,55 @@ class StoreStats:
     # store through extract_slice / ingest_slice
     migrated_out_keys: int = 0
     migrated_in_keys: int = 0
+    # wave-pipeline timing ledger (serving.pipeline.PipelinedStore folds the
+    # measured per-wave issue/drain nanoseconds back in here so perfmodel
+    # roofline comparisons can read them next to the byte/patch counters)
+    wave_issue_ns: int = 0
+    wave_drain_ns: int = 0
+
+
+@dataclass
+class _GetWave:
+    """In-flight GET wave: device arrays only (split-phase donation rule —
+    a wave ctx never retains store state handles, see serving.pipeline)."""
+
+    n: int
+    vhi: object
+    vlo: object
+    found: object
+    hits: Optional[object]  # c_hit & active, or None when the cache is off
+
+
+@dataclass
+class _WriteWave:
+    """In-flight fast-path write wave (all lanes proven to land)."""
+
+    n: int
+    status: object  # device status array (B,), all-OK by construction
+
+
+@dataclass
+class _RangeWave:
+    """In-flight RANGE wave: device outputs of ``range_batch_loop`` plus the
+    pre-sized host accumulators the finalize phase stitches into."""
+
+    n: int
+    limit: int
+    arity: int
+    resumed: bool  # start_leaves was given (host-orchestrated re-issue)
+    keys_out: np.ndarray
+    vals_out: np.ndarray
+    counts: np.ndarray
+    trunc_out: np.ndarray
+    cur_leaf_out: np.ndarray
+    cur_key_out: np.ndarray
+    rk: object = None
+    rv: object = None
+    valid: object = None
+    trunc: object = None
+    cursor: object = None
+    rounds: object = None
+    empty: bool = False  # limit<=0 / n==0 short-circuit: no device wave
 
 
 class DPAStore:
@@ -171,6 +220,11 @@ class DPAStore:
         self._stale_anchor_leaves: List[int] = []
         self.epochs = EpochManager(grace=epoch_grace)
         self.epochs.on_defer = self._note_deferred_free
+        # Host shadow of ib.count for the async write fast path: lets
+        # write_issue prove "this wave cannot fill any buffer" without
+        # blocking on the device (None = stale, recomputed on demand; every
+        # non-fast-path ib mutation invalidates it)
+        self._ib_shadow: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------ util
     @property
@@ -237,6 +291,14 @@ class DPAStore:
         epochs, so only ``None`` is accepted."""
         keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
         api.reject_unknown("get", legacy)
+        return self.get_finalize(self.get_issue(keys, epoch=epoch))
+
+    def get_issue(self, keys, *, epoch: Optional[int] = None) -> _GetWave:
+        """Issue half of GET: host build + async device dispatch (cache
+        probe, traverse, cache admit) — returns without blocking on device
+        results.  ``get() == get_finalize(get_issue())`` by construction,
+        which is what makes pipelined execution bitwise-equal to serial
+        (see ``serving.pipeline``)."""
         assert epoch is None, "single-store GET has no routing epochs"
         keys_u64 = np.asarray(keys, dtype=np.uint64)
         n = keys_u64.size
@@ -257,6 +319,7 @@ class DPAStore:
             eps_inner=self.cfg.eps_inner,
             eps_leaf=self.cfg.eps_leaf,
         )
+        hits = None
         if use_cache:
             out_vhi = jnp.where(c_hit, c_vhi, vhi)
             out_vlo = jnp.where(c_hit, c_vlo, vlo)
@@ -273,18 +336,23 @@ class DPAStore:
                 cfg=self.cache_cfg,
                 wave=self.stats.waves & 0xFFFFFFFF,
             )
-            self.stats.cache_hits += int(jnp.sum(c_hit & active))
+            hits = c_hit & active
             self.stats.cache_probes += n
         else:
             out_vhi, out_vlo, out_found = vhi, vlo, found
         self.stats.gets += n
         self._end_wave()
+        return _GetWave(n=n, vhi=out_vhi, vlo=out_vlo, found=out_found, hits=hits)
+
+    def get_finalize(self, w: _GetWave) -> Tuple[np.ndarray, np.ndarray]:
+        """Drain half of GET: blocking gather + host epilogue."""
+        if w.hits is not None:
+            self.stats.cache_hits += int(jnp.sum(w.hits))
+        n = w.n
         vals = join_u64(
-            np.stack(
-                [np.asarray(out_vhi)[:n], np.asarray(out_vlo)[:n]], axis=-1
-            )
+            np.stack([np.asarray(w.vhi)[:n], np.asarray(w.vlo)[:n]], axis=-1)
         )
-        found = np.asarray(out_found)[:n]
+        found = np.asarray(w.found)[:n]
         # protocol contract: not-found rows carry 0, never slot residue —
         # so responses are bitwise identical no matter which tier serves them
         vals[~found] = 0
@@ -349,8 +417,94 @@ class DPAStore:
             self.cache = hotcache.invalidate(
                 self.cache, tid, khi, klo, active, cfg=self.cache_cfg
             )
+        self._ib_shadow = None  # serial append: shadow prediction is stale
         self._end_wave()
         return np.asarray(status)[:n]
+
+    # ------------------------------------------- async write fast path
+    def _write_plan(self, keys_u64: np.ndarray):
+        """Prove host-side that a write wave lands every lane WITHOUT
+        filling any insert buffer to ``ib_cap``.  Uses ``image.find_leaf``
+        — the host descent replica that is bit-identical to the device
+        traverse (the invariant ``_flush_leaves_of`` already rests on) —
+        plus a host shadow of ``ib.count``.  Returns the per-leaf append
+        counts on success, or ``None`` when any touched buffer could reach
+        the cap (or a lane could RETRY): the caller must then drain the
+        pipeline and take the serial path, so stitch cycles happen at
+        exactly the serial op-stream points (identical leaf layout ⇒
+        identical RANGE cursors)."""
+        if self._ib_shadow is None:
+            # blocks only if an in-flight wave donated ib — the pipelined
+            # facade never lets that happen on this path (reads don't touch
+            # ib; prior fast-path writes kept the shadow live)
+            self._ib_shadow = np.asarray(self.ib.count).copy()
+        leaves = np.fromiter(
+            (self.image.find_leaf(k)[0] for k in keys_u64),
+            dtype=np.int64,
+            count=keys_u64.size,
+        )
+        adds = np.zeros_like(self._ib_shadow)
+        np.add.at(adds, leaves, 1)
+        touched = np.unique(leaves)
+        # strict <: landing the wave must also leave every buffer BELOW the
+        # cap, else serial's post-wave _process_full_leaves would stitch
+        if np.any(self._ib_shadow[touched] + adds[touched] >= self.cfg.ib_cap):
+            return None
+        return adds
+
+    def write_issue(self, op: str, keys, vals=None) -> Optional[_WriteWave]:
+        """Issue half of PUT/DELETE — async dispatch on the proven-safe
+        fast path only.  Returns ``None`` when the wave needs the serial
+        path (possible buffer fill / RETRY): the pipelined facade drains
+        and falls back — the flush/stitch epoch barrier."""
+        assert op in ("put", "delete"), op
+        keys_u64 = np.asarray(keys, dtype=np.uint64)
+        assert np.all(keys_u64 < KEY_MAX), "2^64-1 is a reserved sentinel"
+        n = keys_u64.size
+        if n == 0:
+            return _WriteWave(n=0, status=np.zeros(0, dtype=np.int32))
+        adds = self._write_plan(keys_u64)
+        if adds is None:
+            return None
+        vals_u64 = (
+            np.zeros_like(keys_u64)
+            if vals is None
+            else np.asarray(vals, dtype=np.uint64)
+        )
+        op_code = IB_PUT if op == "put" else IB_DEL
+        B = _pad_pow2(n)
+        khi, klo, active = self._limbs(keys_u64, B)
+        vv = np.zeros(B, dtype=np.uint64)
+        vv[:n] = vals_u64
+        vlimbs = split_u64(vv)
+        vhi = jnp.asarray(vlimbs[:, 0])
+        vlo = jnp.asarray(vlimbs[:, 1])
+        leaf = lookup.traverse(
+            self.tree, khi, klo, depth=self.depth, eps_inner=self.cfg.eps_inner
+        )
+        opv = jnp.full(B, op_code, dtype=jnp.int32)
+        self.ib, status = insert_buffer.append_wave(
+            self.ib, leaf, khi, klo, vhi, vlo, opv, active
+        )
+        self._ib_shadow += adds  # exact: every lane proven to land
+        if self.cache is not None:
+            tid = self._steer(khi, klo)
+            self.cache = hotcache.invalidate(
+                self.cache, tid, khi, klo, active, cfg=self.cache_cfg
+            )
+        self._end_wave()
+        if op == "put":
+            self.stats.puts += n
+        else:
+            self.stats.deletes += n
+        return _WriteWave(n=n, status=status)
+
+    def write_finalize(self, w: _WriteWave) -> np.ndarray:
+        """Drain half of PUT/DELETE: gather the device statuses (all OK by
+        the issue-time proof, but the device array is authoritative)."""
+        if w.n == 0:
+            return np.asarray(w.status)
+        return np.asarray(w.status)[: w.n]
 
     def put(self, keys=None, vals=None, *args, auto_retry: bool = True, **legacy) -> np.ndarray:
         """INSERT or UPDATE (the buffer treats both as PUT; the patcher
@@ -510,26 +664,58 @@ class DPAStore:
         beyond the first; ``stats.range_reissue_rounds`` now only counts
         host-resumed calls (``start_leaves`` given) — the rare fallback.
         """
+        return self.range_finalize(
+            self.range_issue(
+                start_keys_u64,
+                limit=limit,
+                k_max=k_max,
+                max_leaves=max_leaves,
+                max_rounds=max_rounds,
+                start_leaves=start_leaves,
+                arity=6,
+            )
+        )
+
+    def range_issue(
+        self,
+        k_min,
+        limit: int = 10,
+        *,
+        k_max=None,
+        epoch: Optional[int] = None,
+        max_leaves: int = 4,
+        max_rounds: Optional[int] = None,
+        start_leaves: Optional[np.ndarray] = None,
+        arity: int = 3,
+    ) -> _RangeWave:
+        """Issue half of RANGE: anchor-cache start resolution + the single
+        ``range_batch_loop`` device dispatch (the in-mesh continuation loop
+        runs without the host).  Returns without blocking on results;
+        ``range_with_state() == range_finalize(range_issue())``."""
         assert max_rounds is None or max_rounds >= 1, (
             "max_rounds: None = loop until limit/exhaustion/window; a bound "
             "must be >= 1 (0 would silently alias the unbounded loop)"
         )
-        start_keys_u64 = np.asarray(start_keys_u64, dtype=np.uint64)
+        assert epoch is None, "single-store RANGE has no routing epochs"
+        start_keys_u64 = np.asarray(k_min, dtype=np.uint64)
         n = start_keys_u64.size
         lim = max(limit, 0)
-        keys_out = np.zeros((n, lim), dtype=np.uint64)
-        vals_out = np.zeros((n, lim), dtype=np.uint64)
-        counts = np.zeros(n, dtype=np.int64)
-        trunc_out = np.zeros(n, dtype=bool)
-        cur_leaf_out = np.full(n, -1, dtype=np.int32)
-        cur_key_out = start_keys_u64.copy()
+        w = _RangeWave(
+            n=n,
+            limit=limit,
+            arity=arity,
+            resumed=start_leaves is not None,
+            keys_out=np.zeros((n, lim), dtype=np.uint64),
+            vals_out=np.zeros((n, lim), dtype=np.uint64),
+            counts=np.zeros(n, dtype=np.int64),
+            trunc_out=np.zeros(n, dtype=bool),
+            cur_leaf_out=np.full(n, -1, dtype=np.int32),
+            cur_key_out=start_keys_u64.copy(),
+        )
         self.stats.ranges += n
         if n == 0 or limit <= 0:
-            return RangeResult(
-                keys=keys_out, vals=vals_out, counts=counts,
-                truncated=trunc_out, cursor_leaf=cur_leaf_out,
-                cursor_key=cur_key_out, _arity=6,
-            )
+            w.empty = True
+            return w
         if start_leaves is not None:
             self.stats.range_reissue_rounds += 1
         B = _pad_pow2(n)
@@ -543,32 +729,49 @@ class DPAStore:
         if k_max is not None:
             ubs[:n] = np.asarray(k_max, dtype=np.uint64)
         ub_limbs = split_u64(ubs)
-        rk, rv, valid, trunc, cursor, rounds = lookup.range_batch_loop(
-            self.tree,
-            self.ib,
-            start,
-            khi,
-            klo,
-            jnp.asarray(ub_limbs[:, 0]),
-            jnp.asarray(ub_limbs[:, 1]),
-            limit=limit,
-            max_leaves=max_leaves,
-            max_rounds=0 if max_rounds is None else max_rounds,
+        w.rk, w.rv, w.valid, w.trunc, w.cursor, w.rounds = (
+            lookup.range_batch_loop(
+                self.tree,
+                self.ib,
+                start,
+                khi,
+                klo,
+                jnp.asarray(ub_limbs[:, 0]),
+                jnp.asarray(ub_limbs[:, 1]),
+                limit=limit,
+                max_leaves=max_leaves,
+                max_rounds=0 if max_rounds is None else max_rounds,
+            )
         )
         self._end_wave()
-        self.stats.range_rounds_in_mesh += max(int(rounds) - 1, 0)
-        va = np.asarray(valid)[:n]
+        return w
+
+    def range_finalize(self, w: _RangeWave) -> RangeResult:
+        """Drain half of RANGE: gather, host stitch, truncation epilogue,
+        and pagination cursor admission."""
+        n, limit = w.n, w.limit
+        keys_out, vals_out = w.keys_out, w.vals_out
+        counts, trunc_out = w.counts, w.trunc_out
+        cur_leaf_out, cur_key_out = w.cur_leaf_out, w.cur_key_out
+        if w.empty:
+            return RangeResult(
+                keys=keys_out, vals=vals_out, counts=counts,
+                truncated=trunc_out, cursor_leaf=cur_leaf_out,
+                cursor_key=cur_key_out, _arity=w.arity,
+            )
+        self.stats.range_rounds_in_mesh += max(int(w.rounds) - 1, 0)
+        va = np.asarray(w.valid)[:n]
         rc = va.sum(axis=1)
-        keys_np = join_u64(np.asarray(rk)[:n])
-        vals_np = join_u64(np.asarray(rv)[:n])
+        keys_np = join_u64(np.asarray(w.rk)[:n])
+        vals_np = join_u64(np.asarray(w.rv)[:n])
         keys_out[:] = np.where(va, keys_np, 0)
         vals_out[:] = np.where(va, vals_np, 0)
         counts[:] = rc
-        trunc_out[:] = np.asarray(trunc)[:n]
-        cur_leaf_out[:] = np.asarray(cursor.leaf)[:n]
+        trunc_out[:] = np.asarray(w.trunc)[:n]
+        cur_leaf_out[:] = np.asarray(w.cursor.leaf)[:n]
         last_key = join_u64(
             np.stack(
-                [np.asarray(cursor.khi)[:n], np.asarray(cursor.klo)[:n]],
+                [np.asarray(w.cursor.khi)[:n], np.asarray(w.cursor.klo)[:n]],
                 axis=-1,
             )
         )
@@ -576,7 +779,7 @@ class DPAStore:
         cur_key_out[emitted] = last_key[emitted]
         trunc_out &= counts < limit
         self.stats.range_truncated += int(trunc_out.sum())
-        if start_leaves is None:
+        if not w.resumed:
             # only fresh client-entry scans admit their cursors: a resumed
             # call (start_leaves given) is an orchestration round — the
             # sharded facade re-issues those itself, so its interior
@@ -590,12 +793,12 @@ class DPAStore:
             truncated=trunc_out,
             cursor_leaf=cur_leaf_out,
             cursor_key=cur_key_out,
-            rounds=int(rounds),
+            rounds=int(w.rounds),
             stats={
-                "rounds_in_mesh": max(int(rounds) - 1, 0),
-                "reissue": int(start_leaves is not None),
+                "rounds_in_mesh": max(int(w.rounds) - 1, 0),
+                "reissue": int(w.resumed),
             },
-            _arity=6,
+            _arity=w.arity,
         )
 
     def _admit_cursor_anchors(self, trunc: np.ndarray, last_keys: np.ndarray):
@@ -745,6 +948,7 @@ class DPAStore:
             self.tree, self.ib = stitch.apply_connects(
                 self.tree, self.ib, result.batch
             )
+            self._ib_shadow = None  # connects drained buffers: shadow stale
             self.stats.stitch_applies += 1
             # Cycle-granularity epoch bookkeeping: quarantine everything the
             # transaction obsoleted, advance once.  (Within the transaction
@@ -777,6 +981,7 @@ class DPAStore:
         # COPY then CONNECT — the stitch atomicity contract
         self.tree = stitch.apply_copies(self.tree, result.batch)
         self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, result.batch)
+        self._ib_shadow = None  # connects drained buffers: shadow stale
         self.stats.stitch_applies += 1
         self.stats.patched_leaves += 1
         for pool, idx in result.batch.frees:
@@ -919,6 +1124,7 @@ class DPAStore:
         # to a flush cycle's tail (see _run_patch_cycle)
         self.tree = stitch.apply_copies(self.tree, batch)
         self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, batch)
+        self._ib_shadow = None  # connects drained buffers: shadow stale
         self.stats.stitch_applies += 1
         self.epochs.defer_free_batch(batch.frees)
         self._apply_scan_invalidation()

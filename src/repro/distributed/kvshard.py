@@ -107,6 +107,39 @@ def stack_shards(stores) -> Tuple[DeviceTree, InsertBuffers, int]:
     return stacked_tree, stacked_ib, depth
 
 
+class _ShardGetWave(NamedTuple):
+    """In-flight sharded GET: one sub-wave per touched shard."""
+
+    n: int
+    parts: List  # (row mask, serving store, _GetWave)
+
+
+class _ShardWriteWave(NamedTuple):
+    """In-flight sharded fast-path write: one sub-wave per (shard, replica)
+    of the synchronous fan-out — only built once EVERY member's plan probe
+    proved the wave lands (a mid-batch fallback would double-apply the
+    already-issued members)."""
+
+    n: int
+    parts: List  # (row mask, replica store, _WriteWave)
+
+
+class _ShardRangeWave(NamedTuple):
+    """In-flight sharded RANGE: the speculative scatter (issue) plus the
+    host accumulators the ordered gather stitches into (finalize)."""
+
+    n: int
+    limit: int
+    max_leaves: int
+    mode: str  # "range" | "hash"
+    empty: bool
+    keys_out: np.ndarray
+    vals_out: np.ndarray
+    counts: np.ndarray
+    parts: List  # range: (cand idxs, sub_start, sub_ub, store, _RangeWave)
+    #              hash:  (None, None, None, store, _RangeWave)
+
+
 class ShardedDPAStore:
     """Multi-shard DPA-Store facade: routes client batches to per-shard
     sub-stores and drains each shard's staged writes through the *batched*
@@ -363,16 +396,80 @@ class ShardedDPAStore:
 
         keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
         api.reject_unknown("get", legacy)
-        keys, dest = self._route(keys, epoch=epoch)
-        vals = np.zeros(keys.size, dtype=np.uint64)
-        found = np.zeros(keys.size, dtype=bool)
+        return self.get_finalize(self.get_issue(keys, epoch=epoch))
+
+    def get_issue(self, keys, *, epoch: Optional[int] = None) -> _ShardGetWave:
+        """Issue half of the sharded GET: route, then dispatch one async
+        sub-wave on each touched shard's serving replica.  The routing
+        epoch is captured here — barrier ops (rebalance install, failover
+        flip) drain the pipeline first, so ownership cannot move under an
+        in-flight wave.  ``get() == get_finalize(get_issue())``."""
+        keys, dest = self._route(np.asarray(keys, dtype=np.uint64), epoch=epoch)
+        parts = []
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
-                v, f = self._read_store(s).get(keys[m])
-                vals[m] = v
-                found[m] = f
+                st = self._read_store(s)
+                parts.append((m, st, st.get_issue(keys[m])))
+        return _ShardGetWave(n=keys.size, parts=parts)
+
+    def get_finalize(self, w: _ShardGetWave) -> Tuple[np.ndarray, np.ndarray]:
+        vals = np.zeros(w.n, dtype=np.uint64)
+        found = np.zeros(w.n, dtype=bool)
+        for m, st, sub in w.parts:
+            v, f = st.get_finalize(sub)
+            vals[m] = v
+            found[m] = f
         return vals, found
+
+    # ---------------------------------------------- async write fast path
+    def write_issue(self, op: str, keys, vals=None) -> Optional[_ShardWriteWave]:
+        """Issue half of sharded PUT/DELETE.  Probes ``_write_plan`` on
+        EVERY in-sync replica of every touched group before a single lane
+        is issued: either the whole fan-out is proven to land (then every
+        member dispatches asynchronously) or the method returns ``None``
+        with zero side effects and the caller drains + falls back to the
+        serial path.  Mid-batch fallback is thereby impossible — the
+        already-issued members of a partial wave could not be un-applied."""
+        assert op in ("put", "delete"), op
+        keys = np.asarray(keys, dtype=np.uint64)
+        vals_np = None if vals is None else np.asarray(vals, dtype=np.uint64)
+        dest = self.route_np(keys)
+        plans = []
+        for s in range(self.n_shards):
+            m = dest == s
+            if not m.any():
+                continue
+            for r in self._in_sync(s):
+                if self.groups[s][r]._write_plan(keys[m]) is None:
+                    return None
+            plans.append((s, m))
+        # committed: feed the planner exactly as the serial path would
+        # (skipped on fallback so the serial retry is the one that feeds it)
+        if self.planner is not None and op == "put":
+            self.planner.observe(keys)
+        if self.planner is not None and keys.size:
+            self.planner.note_load(dest)
+        parts = []
+        for s, m in plans:
+            sub_vals = None if vals_np is None else vals_np[m]
+            for r in self._in_sync(s):
+                sub = self.groups[s][r].write_issue(op, keys[m], sub_vals)
+                assert sub is not None, "issue diverged from its plan probe"
+                self.replica_writes += int(m.sum())
+                parts.append((m, self.groups[s][r], sub))
+        self.client_writes += int(keys.size)
+        return _ShardWriteWave(n=keys.size, parts=parts)
+
+    def write_finalize(self, w: _ShardWriteWave) -> np.ndarray:
+        from repro.core.store import STATUS_OK
+
+        statuses = np.zeros(w.n, dtype=np.int32)
+        for m, st, sub in w.parts:
+            # pessimistic merge (max: OK=0 < RETRY), same as _write_group
+            statuses[m] = np.maximum(statuses[m], st.write_finalize(sub))
+        self.acked_writes += int((statuses == STATUS_OK).sum())
+        return statuses
 
     def range(
         self,
@@ -502,6 +599,150 @@ class ShardedDPAStore:
         allv = np.concatenate([rv for _, rv, _ in per], axis=1)
         live = np.concatenate(
             [np.arange(limit)[None, :] < rc[:, None] for _, _, rc in per],
+            axis=1,
+        )
+        allk = np.where(live, allk, np.uint64(0xFFFFFFFFFFFFFFFF))
+        order = np.argsort(allk, axis=1, kind="stable")[:, :limit]
+        top_k = np.take_along_axis(allk, order, axis=1)
+        top_v = np.take_along_axis(allv, order, axis=1)
+        top_live = np.take_along_axis(live, order, axis=1)
+        keys_out[:] = np.where(top_live, top_k, 0)
+        vals_out[:] = np.where(top_live, top_v, 0)
+        counts[:] = top_live.sum(axis=1)
+        return RangeResult(keys_out, vals_out, counts)
+
+    def range_issue(
+        self,
+        k_min,
+        limit: int = 10,
+        *,
+        k_max=None,
+        epoch: Optional[int] = None,
+        max_leaves: int = 4,
+        fanout: Optional[int] = None,
+    ) -> _ShardRangeWave:
+        """Issue half of the sharded RANGE: the scatter phase, dispatched
+        *speculatively* — the serial path prunes successor sub-queries by
+        ``counts < limit``, which needs the predecessors' results; here
+        every shard in the fan-out window is issued eagerly so the whole
+        scatter overlaps.  Results stay bitwise-equal because the gather
+        epilogue clips takes to ``limit - counts`` anyway (a row already
+        full appends nothing), and per-row device results are independent
+        of which other rows share the sub-batch.  The routing epoch and
+        window bounds are captured at issue time — barrier ops drain the
+        pipeline before any ownership change.  The accounting
+        (``range_subqueries``/``range_reissues``) is updated at gather
+        time for rows that actually needed serving, so the counters mean
+        the same thing they do on the serial path."""
+        start = np.asarray(k_min, dtype=np.uint64)
+        n = start.size
+        lim = max(limit, 0)
+        w = _ShardRangeWave(
+            n=n,
+            limit=limit,
+            max_leaves=max_leaves,
+            mode=self.partition,
+            empty=(n == 0 or limit <= 0),
+            keys_out=np.zeros((n, lim), dtype=np.uint64),
+            vals_out=np.zeros((n, lim), dtype=np.uint64),
+            counts=np.zeros(n, dtype=np.int64),
+            parts=[],
+        )
+        if w.empty:
+            return w
+        self.range_requests += n
+        if k_max is not None:
+            k_max = np.broadcast_to(np.asarray(k_max, dtype=np.uint64), (n,))
+        if self.partition == "range":
+            owner = self.route_np(start, epoch=epoch)
+            lb = self.ownership.lower_bounds(epoch)
+            ub = self.ownership.upper_bounds(epoch)
+            fanout = self.n_shards if fanout is None else fanout
+            for s in range(self.n_shards):
+                m = (owner <= s) & (s - owner < fanout)
+                if not m.any():
+                    continue
+                idxs = np.where(m)[0]
+                sub_start = np.maximum(start[idxs], lb[s])
+                sub_ub = np.full(idxs.size, ub[s], dtype=np.uint64)
+                if k_max is not None:
+                    sub_ub = np.minimum(sub_ub, k_max[idxs])
+                serving = self._read_store(s)
+                sub = serving.range_issue(
+                    sub_start, limit=limit, k_max=sub_ub,
+                    max_leaves=max_leaves, arity=6,
+                )
+                w.parts.append((idxs, sub_start, sub_ub, serving, sub))
+            return w
+        self.range_subqueries += n * self.n_shards
+        for sh in self.shards:
+            sub = sh.range_issue(
+                start, limit=limit, k_max=k_max, max_leaves=max_leaves, arity=3
+            )
+            w.parts.append((None, None, None, sh, sub))
+        return w
+
+    def range_finalize(self, w: _ShardRangeWave):
+        """Gather half of the sharded RANGE: drain sub-waves in shard
+        order, stitching each into the accumulators exactly as the serial
+        loop does (including the rare host-resume of device-round-capped
+        rows, which runs synchronously on the sub-query's pinned
+        replica)."""
+        from repro.core.api import RangeResult
+        from repro.core.store import append_range_results
+
+        keys_out, vals_out, counts = w.keys_out, w.vals_out, w.counts
+        limit = w.limit
+        if w.empty:
+            return RangeResult(keys_out, vals_out, counts)
+        if w.mode == "range":
+            for idxs_all, sub_start, sub_ub, serving, sub in w.parts:
+                res = serving.range_finalize(sub)
+                # rows already filled by predecessor shards appended
+                # nothing on the serial path either — the speculative
+                # sub-wave for them is simply discarded
+                need = counts[idxs_all] < limit
+                idxs = idxs_all[need]
+                if idxs.size == 0:
+                    continue
+                self.range_subqueries += int(idxs.size)
+                sub_start = sub_start[need]
+                sub_ub = sub_ub[need]
+                first = (
+                    res.keys[need], res.vals[need], res.counts[need],
+                    res.truncated[need], res.cursor_leaf[need],
+                )
+                resume = None
+                while idxs.size:
+                    if first is not None:
+                        rk, rv, rc, trunc, cur_leaf = first
+                        first = None
+                    else:
+                        rk, rv, rc, trunc, cur_leaf, _ = (
+                            serving.range_with_state(
+                                sub_start,
+                                limit=limit,
+                                max_leaves=w.max_leaves,
+                                start_leaves=resume,
+                                k_max=sub_ub,
+                            )
+                        )
+                    append_range_results(
+                        keys_out, vals_out, counts, idxs, rk, rv, rc, limit
+                    )
+                    again = trunc & (counts[idxs] < limit)
+                    idxs = idxs[again]
+                    sub_start = sub_start[again]
+                    sub_ub = sub_ub[again]
+                    resume = cur_leaf[again]
+                    self.range_reissues += int(again.sum())
+            return RangeResult(keys_out, vals_out, counts)
+        # hash tier: drain the broadcast, then the k-way merge epilogue
+        per = [st.range_finalize(sub) for _, _, _, st, sub in w.parts]
+        allk = np.concatenate([r.keys for r in per], axis=1)
+        allv = np.concatenate([r.vals for r in per], axis=1)
+        live = np.concatenate(
+            [np.arange(limit)[None, :] < r.counts[:, None] for r in per],
             axis=1,
         )
         allk = np.where(live, allk, np.uint64(0xFFFFFFFFFFFFFFFF))

@@ -41,7 +41,10 @@ from repro.serving.engine import Engine, ServeConfig
 
 
 def serve_kv(args):
+    import contextlib
+
     from repro.core.scancache import ScanCacheConfig
+    from repro.serving.pipeline import PipelinedStore
 
     keys = sparse(args.n_keys, seed=1)
     vals = keys ^ np.uint64(0xC0FFEE)
@@ -60,6 +63,30 @@ def serve_kv(args):
             scan_cache_cfg=scan_cfg,
             replication=args.replication,
         )
+    # queue_depth > 1: double-buffered dispatch — wave N+1 builds and
+    # dispatches while wave N's gather drains; barrier ops (rebalance,
+    # failover, flush) drain the pipeline first.  Every op below goes
+    # through ``kv`` so in-flight waves stay consistent.
+    pipe = (
+        PipelinedStore(store, queue_depth=args.queue_depth)
+        if args.queue_depth > 1
+        else None
+    )
+    kv = pipe if pipe is not None else store
+    pending = []  # (op kind, ticket) of in-flight waves, submission order
+    range_hits = 0
+
+    def collect(force=False):
+        nonlocal range_hits
+        keep = 0 if force else max(args.queue_depth - 1, 0)
+        while len(pending) > keep:
+            kind, t = pending.pop(0)
+            res = pipe.result(t)
+            if kind == "get":
+                assert res[1].all()
+            elif kind == "range":
+                range_hits += int(res.counts.sum())
+
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
     rebalancing = args.rebalance and args.partition == "range"
@@ -67,58 +94,104 @@ def serve_kv(args):
     fresh_base = keys.max()
     t0 = time.time()
     served = 0
-    range_hits = 0
     recovery_s = None
-    for w in range(args.waves):
-        q = keys[idx[w * args.wave_size : (w + 1) * args.wave_size]]
-        kind = w % 4
-        if kind < 2:  # GET-heavy mix
-            _, found = store.get(q)
-            assert found.all()
-        elif kind == 2:
-            if rebalancing:  # sequential fresh-insert storm: the adversarial
-                # edge workload a load-time boundary fit cannot absorb
-                n_new = args.wave_size // 4
-                newk = fresh_base + np.uint64(1) + np.arange(
-                    n_new, dtype=np.uint64
-                ) * np.uint64(3)
-                fresh_base = newk.max()
-                store.put(newk, newk)
-            else:  # UPDATE
-                store.put(q[: args.wave_size // 4], q[: args.wave_size // 4])
-        else:  # RANGE (scatter-gather on the range tier; broadcast on hash;
-            # Zipf-repeated start keys exercise the scan-anchor cache)
-            result = store.range(q[:64], limit=10, max_leaves=args.max_leaves)
-            range_hits += int(result.counts.sum())  # RangeResult named field
-        if replicated and args.kill_primary_at and w + 1 == args.kill_primary_at:
-            promoted = store.kill_replica(0)  # crash shard 0's primary
-            print(
-                f"[serve-kv] wave {w}: killed shard 0 primary — replica "
-                f"{promoted} promoted under failover epoch "
-                f"{store.boundary_epoch}; serving continues"
-            )
-        elif replicated and args.kill_primary_at and w == args.kill_primary_at:
-            # one wave later: the old epoch's in-flight requests have
-            # drained — retire it and re-replicate the dead slot
-            store.retire_failover()
-            t_rec = time.time()
-            plan = store.recover_replicas()
-            recovery_s = time.time() - t_rec
-            print(
-                f"[serve-kv] wave {w}: re-replicated {plan.n_rebuilds} "
-                f"replica(s) in {recovery_s:.2f}s — group back in sync"
-            )
-        if rebalancing and (w + 1) % args.rebalance_every == 0:
-            report = store.maybe_rebalance()
-            if report is not None:
+    tracing = (
+        pipe.pipeline.trace(args.profile_dir)
+        if pipe is not None and args.profile_dir
+        else contextlib.nullcontext()
+    )
+    with tracing:
+        for w in range(args.waves):
+            q = keys[idx[w * args.wave_size : (w + 1) * args.wave_size]]
+            kind = w % 4
+            if kind < 2:  # GET-heavy mix
+                if pipe is not None:
+                    pending.append(("get", pipe.submit_get(q)))
+                else:
+                    _, found = kv.get(q)
+                    assert found.all()
+            elif kind == 2:
+                if rebalancing:  # sequential fresh-insert storm: the
+                    # adversarial edge workload a load-time boundary fit
+                    # cannot absorb
+                    n_new = args.wave_size // 4
+                    newk = fresh_base + np.uint64(1) + np.arange(
+                        n_new, dtype=np.uint64
+                    ) * np.uint64(3)
+                    fresh_base = newk.max()
+                    if pipe is not None:
+                        pending.append(("put", pipe.submit_put(newk, newk)))
+                    else:
+                        kv.put(newk, newk)
+                else:  # UPDATE
+                    upd = q[: args.wave_size // 4]
+                    if pipe is not None:
+                        pending.append(("put", pipe.submit_put(upd, upd)))
+                    else:
+                        kv.put(upd, upd)
+            else:  # RANGE (scatter-gather on the range tier; broadcast on
+                # hash; Zipf-repeated start keys exercise the anchor cache)
+                if pipe is not None:
+                    pending.append(
+                        ("range", pipe.submit_range(
+                            q[:64], 10, max_leaves=args.max_leaves
+                        ))
+                    )
+                else:
+                    result = kv.range(q[:64], limit=10, max_leaves=args.max_leaves)
+                    range_hits += int(result.counts.sum())
+            if pipe is not None:
+                collect()  # deliver all but the in-flight window, in order
+            if replicated and args.kill_primary_at and w + 1 == args.kill_primary_at:
+                promoted = kv.kill_replica(0)  # crash shard 0's primary
+                # (a barrier op: the pipeline drains before the epoch flip)
                 print(
-                    f"[serve-kv] wave {w}: rebalanced "
-                    f"{report['migrated_keys']} keys across "
-                    f"{report['moves']} slice moves "
-                    f"(occupancy spread -> {report['ratio']:.2f})"
+                    f"[serve-kv] wave {w}: killed shard 0 primary — replica "
+                    f"{promoted} promoted under failover epoch "
+                    f"{store.boundary_epoch}; serving continues"
                 )
-        served += args.wave_size
+            elif replicated and args.kill_primary_at and w == args.kill_primary_at:
+                # one wave later: the old epoch's in-flight requests have
+                # drained — retire it and re-replicate the dead slot
+                kv.retire_failover()
+                t_rec = time.time()
+                plan = kv.recover_replicas()
+                recovery_s = time.time() - t_rec
+                print(
+                    f"[serve-kv] wave {w}: re-replicated {plan.n_rebuilds} "
+                    f"replica(s) in {recovery_s:.2f}s — group back in sync"
+                )
+            if rebalancing and (w + 1) % args.rebalance_every == 0:
+                report = kv.maybe_rebalance()
+                if report is not None:
+                    print(
+                        f"[serve-kv] wave {w}: rebalanced "
+                        f"{report['migrated_keys']} keys across "
+                        f"{report['moves']} slice moves "
+                        f"(occupancy spread -> {report['ratio']:.2f})"
+                    )
+            served += args.wave_size
+        if pipe is not None:
+            collect(force=True)
     dt = time.time() - t0
+    if pipe is not None:
+        from repro.core import perfmodel
+
+        s = pipe.pipeline_summary()
+        roof = perfmodel.pipelined_wave_mops(
+            args.wave_size,
+            s["issue_us_per_wave"],
+            s["drain_us_per_wave"],
+            args.queue_depth,
+        )
+        print(
+            f"[serve-kv] pipeline: queue_depth={args.queue_depth} "
+            f"waves={s['waves']} overlap_frac={s['overlap_frac']:.2f} "
+            f"issue {s['issue_us_per_wave']:.0f}us + drain "
+            f"{s['drain_us_per_wave']:.0f}us per wave -> host roofline "
+            f"{roof:.3g} MOPS"
+            + (f" (trace -> {args.profile_dir})" if args.profile_dir else "")
+        )
     print(
         f"[serve-kv] {served} requests in {dt:.2f}s "
         f"({served/dt/1e3:.1f} kOPS on CPU; see benchmarks/ for the "
@@ -249,6 +322,22 @@ def main(argv=None):
         help="with --replication > 1: crash shard 0's primary after this "
         "wave (0 = never) — a follower is promoted via a failover epoch "
         "and the dead slot is re-replicated one wave later",
+    )
+    ap.add_argument(
+        "--queue-depth",
+        type=positive_int,
+        default=2,
+        help="in-flight request waves: 1 = serial (build, dispatch, block "
+        "per wave), 2 = double-buffered (wave N+1 builds + dispatches "
+        "while wave N drains — the default), higher = deeper pipelining; "
+        "results are bitwise-identical at every depth",
+    )
+    ap.add_argument(
+        "--profile-dir",
+        default="",
+        help="with --queue-depth > 1: capture a jax.profiler trace of the "
+        "serve loop (wave issue/drain annotations included) into this "
+        "directory",
     )
     ap.add_argument("--n-keys", type=int, default=100_000)
     ap.add_argument("--waves", type=int, default=16)

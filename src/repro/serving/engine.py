@@ -75,6 +75,87 @@ class Engine:
         return np.stack(out, axis=1)
 
 
+class KVWaveDriver:
+    """Batch-forming front end for the KV service: the host-side analogue
+    of the paper's DPA ingestion loop, where steering threads accumulate
+    arriving requests into the next wave while prior waves drain through
+    the thread grid.
+
+    Client requests (``get``/``put``/``delete``/``range``) append to an
+    op-homogeneous forming wave; the wave seals — and dispatches
+    asynchronously through :class:`repro.serving.pipeline.PipelinedStore`
+    — when it reaches ``wave_size`` or the op kind changes.  Up to the
+    store's ``queue_depth`` sealed waves stay in flight, so wave N+1 is
+    building and dispatching while wave N's gather drains.  ``drain()``
+    seals the tail and returns every wave's results in submission order
+    (the pipeline's ordered-delivery guarantee)."""
+
+    def __init__(self, store, queue_depth: int = 2, wave_size: int = 512):
+        from .pipeline import PipelinedStore
+
+        self.store = (
+            store
+            if isinstance(store, PipelinedStore)
+            else PipelinedStore(store, queue_depth=queue_depth, name="kv-engine")
+        )
+        self.wave_size = wave_size
+        self._kind: Optional[str] = None
+        self._limit = 10
+        self._keys: List[np.ndarray] = []
+        self._vals: List[np.ndarray] = []
+        self._tickets: List[Tuple[str, object]] = []
+
+    def _seal(self) -> None:
+        if not self._keys:
+            return
+        k = np.concatenate(self._keys)
+        kind = self._kind
+        if kind == "get":
+            t = self.store.submit_get(k)
+        elif kind == "put":
+            t = self.store.submit_put(k, np.concatenate(self._vals))
+        elif kind == "delete":
+            t = self.store.submit_delete(k)
+        else:
+            t = self.store.submit_range(k, self._limit)
+        self._tickets.append((kind, t))
+        self._kind = None
+        self._keys.clear()
+        self._vals.clear()
+
+    def _formed(self) -> int:
+        return sum(a.size for a in self._keys)
+
+    def request(self, op: str, keys, vals=None, limit: int = 10):
+        """Append one client request to the forming wave (sealing first if
+        the op kind, RANGE limit, or wave budget forces a new wave)."""
+        assert op in ("get", "put", "delete", "range"), op
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+        if (
+            op != self._kind
+            or (op == "range" and limit != self._limit)
+            or self._formed() + keys.size > self.wave_size
+        ):
+            self._seal()
+        self._kind = op
+        self._limit = limit
+        self._keys.append(keys)
+        if vals is not None:
+            self._vals.append(np.atleast_1d(np.asarray(vals, dtype=np.uint64)))
+        return len(self._tickets) + 1  # wave seq the request will ride
+
+    def drain(self) -> List[Tuple[str, object]]:
+        """Seal the forming wave and deliver every in-flight wave's result,
+        in submission order, as ``(op_kind, result)`` pairs."""
+        self._seal()
+        out = [(kind, self.store.result(t)) for kind, t in self._tickets]
+        self._tickets.clear()
+        return out
+
+    def pipeline_summary(self) -> Dict:
+        return self.store.pipeline_summary()
+
+
 class PagedAttentionLayer:
     """One attention layer served through the learned-index paged cache —
     the end-to-end demonstration of the paper's technique inside serving.

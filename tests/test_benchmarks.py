@@ -100,12 +100,16 @@ def test_fig16_smoke_rows_cover_shards_and_scan_lengths():
         assert name in cont, f"{name}: missing continuation fields"
         if name.startswith("fig16/range/"):
             assert cont[name]["range_reissues"] == 0, (name, cont[name])
+    # the real-mesh subprocess leg rides the same run() (its rows carry
+    # measured_mops/devices instead of depth/fanout)
+    assert any(r.startswith("fig16/mesh/") for r in rows), "mesh leg emitted no rows"
     model, depth = {}, {}
     for row in rows:
         name, _, derived = row.split(",", 2)
         fields = dict(kv.split("=") for kv in derived.split(";"))
         model[name] = float(fields["model_mops"])
-        depth[name] = int(fields["depth"])
+        if "depth" in fields:
+            depth[name] = int(fields["depth"])
     assert model["fig16/range/shards4/limit10"] > 1.5 * model["fig16/range/shards2/limit10"]
     # broadcast tier: the model is one shard's RANGE MOPS regardless of the
     # shard count (only the per-shard depth, which shrinks with more shards,
@@ -274,6 +278,118 @@ def test_fig16_gate_rejects_missing_or_nonzero_continuation_fields():
     assert any("rounds_in_mesh" in p for p in validate_fig16_coverage(missing))
     leaked = [r.replace("reissues=0", "reissues=3") for r in good]
     assert any("re-issues" in p for p in validate_fig16_coverage(leaked))
+
+
+def test_fig10_gate_rejects_missing_or_overlap_free_pipeline_cells():
+    """The wave-pipeline schema gate itself: missing pipelined cells, an
+    unreported overlap_frac, zero overlap at qd>=2, nonzero overlap at
+    qd=1, or a sub-1.2x qd2/qd1 model ratio must all be flagged."""
+    from benchmarks.run import validate_fig10_coverage
+
+    def cell(tier, qd, frac, m):
+        return (
+            f"fig10/pipe/{tier}/qd{qd},2.0,model_mops={m};"
+            f"overlap_frac={frac};measured_kops=400.0;issue_us=500.0;"
+            f"drain_us=60.0;mops_vs_roofline=0.9"
+        )
+
+    good = [
+        cell(t, qd, 0.0 if qd == 1 else 0.4, 1.2 * qd)
+        for t in ("single", "range")
+        for qd in (1, 2, 4)
+    ]
+    assert not validate_fig10_coverage(good)
+    # pipelined cells missing entirely
+    assert any(
+        "qd1 + qd2" in p
+        for p in validate_fig10_coverage([r for r in good if "/range/" not in r])
+    )
+    # overlap_frac unreported
+    dropped = [r.replace("overlap_frac=0.4;", "") for r in good]
+    assert any("overlap_frac" in p for p in validate_fig10_coverage(dropped))
+    # pipeline degenerated to serial dispatch at qd=2
+    flat = [r.replace("overlap_frac=0.4", "overlap_frac=0.0") for r in good]
+    assert any("degenerated" in p for p in validate_fig10_coverage(flat))
+    # overlap claimed at qd=1 (serial facade must score exactly 0)
+    fake = [
+        r.replace("overlap_frac=0.0", "overlap_frac=0.2") if "/qd1," in r else r
+        for r in good
+    ]
+    assert any("qd=1" in p for p in validate_fig10_coverage(fake))
+    # pipelining gain regression: qd2 model below 1.2x qd1
+    slow_rows = [
+        r.replace("model_mops=2.4", "model_mops=1.3") if "/qd2," in r else r
+        for r in good
+    ]
+    assert any("1.2x" in p for p in validate_fig10_coverage(slow_rows))
+
+
+@pytest.mark.slow
+def test_fig10_smoke_rows_report_pipeline_overlap():
+    """The measured sweep: fig10 must emit pipelined cells for both tiers
+    at qd in {1,2,4} with overlap_frac > 0 once waves double-buffer, the
+    closed-loop model showing qd2 >= 1.2x qd1 (the acceptance ratio), and
+    a roofline comparison in every cell."""
+    from benchmarks import common, fig10_queue_depth
+    from benchmarks.run import (
+        pipeline_metrics,
+        validate_fig10_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig10_queue_depth.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig10_coverage(rows)
+    met = pipeline_metrics(rows)
+    for tier in ("single", "range"):
+        for qd in (1, 2, 4):
+            name = f"fig10/pipe/{tier}/qd{qd}"
+            assert name in met, (name, sorted(met))
+            assert met[name]["mops_vs_roofline"] > 0
+            if qd == 1:
+                assert met[name]["overlap_frac"] == 0.0, met[name]
+            else:
+                assert met[name]["overlap_frac"] > 0.0, met[name]
+        assert (
+            met[f"fig10/pipe/{tier}/qd2"]["model_mops"]
+            >= 1.2 * met[f"fig10/pipe/{tier}/qd1"]["model_mops"]
+        ), met
+
+
+@pytest.mark.slow
+def test_fig16_mesh_leg_runs_on_forced_devices():
+    """The real-mesh fig16 leg: a subprocess with 4 forced host devices
+    runs the shard_map RANGE wave end to end and reports measured MOPS
+    against the roofline; the emitted row must carry all of it."""
+    from benchmarks import common, fig16_range
+    from benchmarks.run import derived_fields
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig16_range._run_mesh_leg()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert rows, "mesh leg emitted no rows"
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        assert name.startswith("fig16/mesh/shards4/"), name
+        fields = derived_fields(derived)
+        assert int(fields["devices"]) >= 4
+        assert float(fields["measured_mops"]) > 0
+        assert float(fields["mops_vs_roofline"]) > 0
+        assert int(fields["rounds_in_mesh"]) >= 1
 
 
 def test_roofline_reader_runs_if_results_exist():

@@ -71,7 +71,8 @@ def _check_items(store, oracle):
 
 
 def _run_interleaving(
-    data, *, n_shards, partition, n_keys, n_ops, wave, replication=1
+    data, *, n_shards, partition, n_keys, n_ops, wave, replication=1,
+    pipelined=False,
 ):
     """One fuzzed episode: load, interleave ops, verify bitwise throughout."""
     rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
@@ -87,6 +88,15 @@ def _run_interleaving(
             keys, vals, n_shards, TreeConfig(growth=16.0),
             partition=partition, cache_cfg=None, replication=replication,
         )
+    if pipelined:
+        # the pipelined leg drives the SAME op mix through the async wave
+        # facade at queue_depth=2; a shadow GET wave is kept in flight
+        # before every op so flush/rebalance/failover barriers genuinely
+        # land between overlapping waves (reads are results-invariant, so
+        # the oracle is untouched)
+        from repro.serving.pipeline import PipelinedStore
+
+        store = PipelinedStore(store, queue_depth=2)
     sharded = n_shards > 0
     replicated = sharded and replication > 1
     in_handoff = False
@@ -115,6 +125,8 @@ def _run_interleaving(
         )
 
     for _ in range(n_ops):
+        if pipelined:
+            store.submit_get(some_keys(8))  # keep a wave in flight
         op = data.draw(
             st.sampled_from(
                 ["put_new", "put_mixed", "delete", "get", "range", "flush"]
@@ -219,6 +231,9 @@ def _run_interleaving(
         store.recover_replicas()
     if in_handoff:
         store.commit_rebalance()
+    if pipelined:
+        store.drain()
+        assert store.pipeline_summary()["waves"] > 0
     _check_items(store, oracle)
     _check_get(store, oracle, some_keys())
     _check_range(store, oracle, some_keys(wave // 2), 9, 2)
@@ -252,12 +267,26 @@ def test_differential_fuzz_failover(data):
     )
 
 
+@given(st.data())
+@settings(max_examples=4, deadline=None)
+def test_differential_fuzz_pipelined(data):
+    """Always-on pipelined leg: the seeded op mix vs the dict oracle driven
+    through the async wave facade at queue_depth=2, with a shadow GET wave
+    kept in flight so every flush/rebalance barrier lands between
+    genuinely overlapping waves."""
+    _run_interleaving(
+        data, n_shards=2, partition="range", n_keys=240, n_ops=6, wave=24,
+        pipelined=True,
+    )
+
+
 @pytest.mark.slow
 @given(st.data())
 @settings(max_examples=14, deadline=None)
 def test_differential_fuzz_broad(data):
     """Broad leg: single store + both tiers x shard counts, longer
-    interleavings with split-phase rebalances held open across ops."""
+    interleavings with split-phase rebalances held open across ops — the
+    pipelined facade rides the same sweep (drawn per example)."""
     n_shards = data.draw(st.sampled_from([0, 1, 2, 4]))
     partition = data.draw(st.sampled_from(["hash", "range"]))
     _run_interleaving(
@@ -267,4 +296,5 @@ def test_differential_fuzz_broad(data):
         n_keys=data.draw(st.sampled_from([120, 420])),
         n_ops=10,
         wave=32,
+        pipelined=data.draw(st.booleans()),
     )
