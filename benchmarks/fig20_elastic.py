@@ -1,0 +1,128 @@
+"""Figure 20 (repo extension): elastic scale-out/in — range-MOPS retention
+across a live reshard, plus snapshot/restore wall-clock.
+
+The elastic claim has two halves.  (1) A live ``reshard()`` (grow 2->4,
+shrink 4->2) under acked write traffic loses ZERO acknowledged writes and
+keeps the scatter-gather RANGE advantage: the post-flip aggregate MOPS
+through the BlueField-3 model tracks the new fleet width (retention > 1
+on grow, ~ n_to/n_from on shrink — the per-shard model only moves with
+depth).  (2) An epoch-consistent snapshot is shard-count-independent: a
+4-shard fleet's ordered run restores onto 2 shards bitwise-equal, and both
+directions cost one bulk write/read of the census (wall-clock emitted).
+
+Each grow/shrink cell RUNS the handoff on the CPU store with traffic
+interleaved mid-handoff — acked PUTs land while two boundary epochs (of
+DIFFERENT widths) are live, old-epoch GETs drain over the retired
+generation — then audits every acked key against the store.  ``lost_acked``
+is a smoke-gate field: nonzero FAILS the gate (the same contract fig19
+holds failover to).  The snapshot cell round-trips through
+``distributed.snapshot`` and gates on ``restore_equal=1``.
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core import perfmodel
+from repro.core.datasets import load
+from repro.core.store import STATUS_OK
+from repro.core.tree import TreeConfig
+from repro.distributed.kvshard import ShardedDPAStore
+from repro.distributed.snapshot import load_snapshot, restore_store, save_snapshot
+
+from . import common
+from .common import emit, time_op, wave
+
+MOVES = (("grow", 2, 4), ("shrink", 4, 2))
+LIMIT = 10
+MAX_LEAVES = 4
+WAVE = 512
+
+
+def _aggregate_mops(store: ShardedDPAStore, q: np.ndarray, fanout: float) -> float:
+    """Aggregate RANGE MOPS for this query wave through the BlueField-3
+    model (fig18's estimator): the most-loaded owner shard bottlenecks, so
+    aggregate = its model MOPS x n_shards x owner-load balance / fan-out."""
+    h = np.bincount(store.route_np(q), minlength=store.n_shards)
+    hot = int(np.argmax(h))
+    balance = float(h.mean() / max(h.max(), 1))
+    per_shard = perfmodel.range_mops(store.shards[hot].depth, limit=LIMIT)
+    return per_shard * store.n_shards * balance / max(fanout, 1.0)
+
+
+def _measured_fanout(store, q):
+    r0, s0 = store.range_requests, store.range_subqueries
+    store.range(q, limit=LIMIT, max_leaves=MAX_LEAVES)
+    return (store.range_subqueries - s0) / max(store.range_requests - r0, 1)
+
+
+def run():
+    rng = np.random.default_rng(20)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=20)
+    vals = keys ^ np.uint64(0xE1A5)
+    for mode, n_from, n_to in MOVES:
+        store = ShardedDPAStore(
+            keys, vals, n_from, TreeConfig(growth=8.0), cache_cfg=None,
+            partition="range",
+        )
+        q = rng.choice(keys, w)
+        mops0 = _aggregate_mops(store, q, _measured_fanout(store, q))
+        # acked writes interleaved with the handoff: half land before the
+        # flip, half while BOTH epochs (different widths!) are live
+        fresh = keys.max() + np.uint64(1) + np.arange(
+            2 * w, dtype=np.uint64
+        ) * np.uint64(3)
+        acked = []
+        st = store.put(fresh[:w], fresh[:w])
+        acked.append(fresh[:w][st == STATUS_OK])
+        old_epoch = store.boundary_epoch
+        t0 = time_op(store.begin_reshard, n_to, repeats=1)
+        st = store.put(fresh[w:], fresh[w:])  # mid-handoff acked writes
+        acked.append(fresh[w:][st == STATUS_OK])
+        # an old-epoch wave drains over the retired generation
+        store.get(q[: min(64, w)], epoch=old_epoch)
+        t1 = time_op(store.commit_reshard, repeats=1)
+        reshard_s = t0 + t1
+        acked_keys = np.concatenate(acked)
+        got, found = store.get(acked_keys)
+        lost = int((~found).sum() + (got[found] != acked_keys[found]).sum())
+        spread = store.occupancy_spread(flush=True)["ratio"]
+        t = time_op(store.range, q, LIMIT, max_leaves=MAX_LEAVES, repeats=1) / w
+        mops1 = _aggregate_mops(store, q, _measured_fanout(store, q))
+        retention = mops1 / max(mops0, 1e-9)
+        emit(
+            f"fig20/{mode}/{n_from}to{n_to}",
+            t * 1e6,
+            f"model_mops={mops1:.1f};retention={retention:.2f};"
+            f"reshard_s={reshard_s:.3f};lost_acked={lost};"
+            f"spread_after={spread:.2f};resharded={store.resharded_keys}",
+        )
+    # snapshot/restore: 4-shard fleet -> ordered-run checkpoint -> 2 shards
+    store = ShardedDPAStore(
+        keys, vals, 4, TreeConfig(growth=8.0), cache_cfg=None, partition="range"
+    )
+    oracle_k, oracle_v = store.items()
+    with tempfile.TemporaryDirectory() as d:
+        save_s = time_op(save_snapshot, store, d, repeats=1)
+        restore_s = time_op(
+            lambda: restore_store(load_snapshot(d), n_shards=2), repeats=1
+        )
+        restored = restore_store(load_snapshot(d), n_shards=2)
+    rk, rv = restored.items()
+    equal = (
+        rk.size == oracle_k.size
+        and bool((rk == oracle_k).all())
+        and bool((rv == oracle_v).all())
+    )
+    emit(
+        "fig20/snapshot/4to2",
+        (save_s + restore_s) * 1e6,
+        f"save_s={save_s:.3f};restore_s={restore_s:.3f};"
+        f"n_keys={oracle_k.size};restore_equal={int(equal)}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -229,6 +229,82 @@ def validate_fig19_coverage(rows) -> list:
     return problems
 
 
+def validate_fig20_coverage(rows) -> list:
+    """The elastic sweep must produce a grow AND a shrink reshard cell plus
+    a snapshot round-trip cell (rows are ``fig20/<mode>/<NtoM>``).  Reshard
+    cells need parseable ``retention``/``reshard_s`` and ``lost_acked=0`` —
+    acked writes surviving a live shard-count change is THE elastic claim,
+    so a nonzero count fails the smoke gate.  The snapshot cell needs
+    parseable ``save_s``/``restore_s`` and ``restore_equal=1`` (the
+    shard-count-independent layout must restore bitwise-equal)."""
+    problems = []
+    modes = set()
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "fig20":
+            continue
+        fields = derived_fields(derived)
+        modes.add(parts[1])
+        if parts[1] in ("grow", "shrink"):
+            for key in ("retention", "reshard_s"):
+                try:
+                    float(fields.get(key, ""))
+                except ValueError:
+                    problems.append(f"{name}: missing/bad {key} field")
+            if fields.get("lost_acked", "") != "0":
+                problems.append(
+                    f"{name}: lost_acked must be 0, got "
+                    f"{fields.get('lost_acked', '<missing>')} "
+                    f"(acked-write durability regression across reshard)"
+                )
+        elif parts[1] == "snapshot":
+            for key in ("save_s", "restore_s"):
+                try:
+                    float(fields.get(key, ""))
+                except ValueError:
+                    problems.append(f"{name}: missing/bad {key} field")
+            if fields.get("restore_equal", "") != "1":
+                problems.append(
+                    f"{name}: restore_equal must be 1, got "
+                    f"{fields.get('restore_equal', '<missing>')} "
+                    f"(shard-count-independent restore regression)"
+                )
+    for mode in ("grow", "shrink", "snapshot"):
+        if mode not in modes:
+            problems.append(f"fig20: missing {mode} cell")
+    return problems
+
+
+def elastic_metrics(rows) -> dict:
+    """Reshard retention / wall-clock / lost-acked + snapshot round-trip
+    timings per fig20 cell — surfaced in the smoke artifact so the perf
+    trajectory records what a live shard-count change costs."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig20/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            if "/snapshot/" in name:
+                out[name] = {
+                    "save_s": float(fields["save_s"]),
+                    "restore_s": float(fields["restore_s"]),
+                    "restore_equal": int(fields["restore_equal"]),
+                }
+            else:
+                out[name] = {
+                    "retention": float(fields["retention"]),
+                    "reshard_s": float(fields["reshard_s"]),
+                    "lost_acked": int(fields["lost_acked"]),
+                    "spread_after": float(fields["spread_after"]),
+                }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
 def replication_metrics(rows) -> dict:
     """Write amplification per replication factor + failover recovery
     numbers — surfaced in the smoke artifact so the perf trajectory
@@ -375,6 +451,7 @@ def main(argv=None) -> None:
         fig17_scan_cache,
         fig18_rebalance,
         fig19_replication,
+        fig20_elastic,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -395,6 +472,7 @@ def main(argv=None) -> None:
         ("fig17_scan_cache", fig17_scan_cache),
         ("fig18_rebalance", fig18_rebalance),
         ("fig19_replication", fig19_replication),
+        ("fig20_elastic", fig20_elastic),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -423,6 +501,8 @@ def main(argv=None) -> None:
             problems += validate_fig18_coverage(common.ROWS)
         if "fig19_replication" not in failures:
             problems += validate_fig19_coverage(common.ROWS)
+        if "fig20_elastic" not in failures:
+            problems += validate_fig20_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -435,6 +515,7 @@ def main(argv=None) -> None:
             "pipeline_metrics": pipeline_metrics(common.ROWS),
             "rebalance_metrics": rebalance_metrics(common.ROWS),
             "replication_metrics": replication_metrics(common.ROWS),
+            "elastic_metrics": elastic_metrics(common.ROWS),
             "range_continuation": range_continuation_metrics(common.ROWS),
         }
         with open(args.out, "w") as f:

@@ -135,6 +135,24 @@ class CheckpointManager:
                 out.append(jax.device_put(a.astype(lk.dtype)))
         return jax.tree.unflatten(treedef, out)
 
+    def restore_arrays(self, step: int) -> Tuple[Dict[str, Any], list]:
+        """Shape-free restore: return ``(meta, leaves)`` — the raw host
+        arrays in flatten order, with exotic-dtype integer views undone —
+        without requiring a ``like`` pytree.  This is what a
+        shard-count-independent snapshot needs: the reader learns the
+        shapes from the checkpoint, not the other way around (the writer
+        may have run at a different shard count)."""
+        d = self.dir / f"step_{step:09d}"
+        meta = json.loads((d / "META.json").read_text())
+        leaves = []
+        for i in range(meta["n_leaves"]):
+            a = np.load(d / f"arr_{i:06d}.npy")
+            true_dt = np.dtype(meta["dtypes"][i])
+            if a.dtype != true_dt:
+                a = a.view(true_dt)
+            leaves.append(a)
+        return meta, leaves
+
     def clean_tmp(self) -> int:
         n = 0
         for p in self.dir.iterdir():

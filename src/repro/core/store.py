@@ -1143,27 +1143,106 @@ class DPAStore:
         free = min(len(self.image.free_leaves), len(self.image.free_slots))
         return max(0, (free // 2) * self.cfg.split_cap)
 
-    def ingest_slice(self, keys_u64, vals_u64, wave: int = 512) -> int:
-        """Bulk-ingest pairs (the receiving half of a slice migration):
-        chunked PUT waves through the insert buffers + batched patch
-        pipeline, then one flush so the slice is fully stitched — and
-        visible to leaf-run walks — when the call returns."""
+    def ingest_slice(
+        self, keys_u64, vals_u64, wave: int = 512, splice: bool = True
+    ) -> int:
+        """Bulk-ingest pairs (the receiving half of a slice migration).
+
+        The default is a direct leaf-run splice: the incoming pairs are
+        sorted, grouped by target leaf with one chain walk, and planned
+        straight through the batched patch pipeline as synthesized PUT
+        entries — each touched leaf is patched ONCE per call instead of
+        once per ``ib_cap`` buffered keys, so the stitch traffic is the
+        slice payload plus O(new leaves), ~``ib_cap``-fold less than the
+        PUT path's repeated re-stitching of the same region.  Staged
+        writes are flushed first, so the end state is identical to the
+        PUT path (later entries win in the merge either way).
+
+        ``splice=False`` keeps the legacy path — chunked PUT waves
+        through the insert buffers — as the semantic oracle.  Both paths
+        leave the slice fully stitched (visible to leaf-run walks) on
+        return and raise ``MemoryError`` on pool pressure rather than
+        silently dropping keys: a dropped key here would be destroyed
+        for good when the migration retires the donor's copy."""
         keys = np.asarray(keys_u64, dtype=np.uint64)
         vals = np.asarray(vals_u64, dtype=np.uint64)
-        for i in range(0, keys.size, wave):
-            st = self.put(keys[i : i + wave], vals[i : i + wave])
-            if not np.all(st == STATUS_OK):
-                # surface pool exhaustion LOUDLY: a silently dropped key
-                # here would be destroyed for good when the migration
-                # retires the donor's copy
-                raise MemoryError(
-                    f"ingest_slice: {int((st != STATUS_OK).sum())} keys "
-                    "failed to land (pool pressure) — raise "
-                    "TreeConfig.growth or shrink the migration"
-                )
-        self.flush()
-        self.stats.migrated_in_keys += int(keys.size)
-        return int(keys.size)
+        if not splice:
+            for i in range(0, keys.size, wave):
+                st = self.put(keys[i : i + wave], vals[i : i + wave])
+                if not np.all(st == STATUS_OK):
+                    raise MemoryError(
+                        f"ingest_slice: {int((st != STATUS_OK).sum())} keys "
+                        "failed to land (pool pressure) — raise "
+                        "TreeConfig.growth or shrink the migration"
+                    )
+            self.flush()
+            self.stats.migrated_in_keys += int(keys.size)
+            return int(keys.size)
+        n_in = int(keys.size)
+        self.flush()  # staged ops stitch first; ingest entries then win
+        if keys.size:
+            order = np.argsort(keys, kind="stable")
+            sk, sv = keys[order], vals[order]
+            last = np.ones(sk.size, dtype=bool)
+            last[:-1] = sk[1:] != sk[:-1]  # duplicate key: last PUT wins
+            sk, sv = sk[last], sv[last]
+            pos = 0
+            cfg = self.cfg
+            while pos < sk.size:
+                # one splice cycle: consecutive leaf groups until the pool
+                # budget (same reserve as ingest_headroom: half the free
+                # leaf/slot rows, new leaves filling at split_cap) is spent
+                budget = min(
+                    len(self.image.free_leaves), len(self.image.free_slots)
+                ) // 2
+                if budget < 2 or not self._headroom_ok(0):
+                    raise MemoryError(
+                        "ingest_slice: leaf pools exhausted mid-splice — "
+                        "raise TreeConfig.growth or shrink the migration"
+                    )
+                pending = []
+                while pos < sk.size and budget >= 2:
+                    leaf, _ = self.image.find_leaf(sk[pos])
+                    # group end by TREE routing, not the chain: after a
+                    # chain compaction a parent legitimately routes keys
+                    # below the successor's chain anchor to it, and a group
+                    # crossing that routing boundary would corrupt the
+                    # parent splice.  find_leaf is monotone in the key, so
+                    # bisect for the last key still routed to ``leaf``.
+                    lo, hi = pos + 1, sk.size
+                    while lo < hi:
+                        mid = (lo + hi) // 2
+                        if int(self.image.find_leaf(sk[mid])[0]) == int(leaf):
+                            lo = mid + 1
+                        else:
+                            hi = mid
+                    take = lo - pos
+                    have = int(self.image.leaf_count[leaf])
+                    # leaves this group may consume once re-segmented
+                    need = -(-(have + take) // cfg.split_cap) + 1
+                    if need > budget:
+                        # partial group: take only what this cycle's budget
+                        # absorbs, then stitch before walking further (two
+                        # pending items for one leaf cannot share a cycle)
+                        take = min(take, (budget - 1) * cfg.split_cap - have)
+                        if take <= 0:
+                            break
+                        need = budget
+                    chunk = [
+                        (int(k), int(v), IB_PUT)
+                        for k, v in zip(sk[pos : pos + take], sv[pos : pos + take])
+                    ]
+                    pending.append((int(leaf), chunk))
+                    pos += take
+                    budget -= need
+                if not pending:
+                    raise MemoryError(
+                        "ingest_slice: leaf pools exhausted mid-splice — "
+                        "raise TreeConfig.growth or shrink the migration"
+                    )
+                self._run_patch_cycle(pending)
+        self.stats.migrated_in_keys += n_in
+        return n_in
 
     # ------------------------------------------------------------- analysis
     def memory_report(self) -> Dict[str, float]:

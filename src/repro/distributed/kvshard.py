@@ -43,6 +43,7 @@ range tiers run through the same bucketize/exchange/scatter-back code.
 
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
@@ -111,7 +112,7 @@ class _ShardGetWave(NamedTuple):
     """In-flight sharded GET: one sub-wave per touched shard."""
 
     n: int
-    parts: List  # (row mask, serving store, _GetWave)
+    parts: List  # (shard, row mask, serving store, _GetWave)
 
 
 class _ShardWriteWave(NamedTuple):
@@ -121,7 +122,7 @@ class _ShardWriteWave(NamedTuple):
     already-issued members)."""
 
     n: int
-    parts: List  # (row mask, replica store, _WriteWave)
+    parts: List  # (shard, row mask, replica store, _WriteWave)
 
 
 class _ShardRangeWave(NamedTuple):
@@ -136,8 +137,8 @@ class _ShardRangeWave(NamedTuple):
     keys_out: np.ndarray
     vals_out: np.ndarray
     counts: np.ndarray
-    parts: List  # range: (cand idxs, sub_start, sub_ub, store, _RangeWave)
-    #              hash:  (None, None, None, store, _RangeWave)
+    parts: List  # range: (shard, cand idxs, sub_start, sub_ub, store, _RangeWave)
+    #              hash:  (shard, None, None, None, store, _RangeWave)
 
 
 class ShardedDPAStore:
@@ -200,6 +201,7 @@ class ShardedDPAStore:
         scan_cache_cfg="default",
         rebalance_cfg="default",
         replication: int = 1,
+        watchdog=None,
     ):
         from repro.core.store import DPAStore
         from repro.core import pla
@@ -239,10 +241,27 @@ class ShardedDPAStore:
             self.ownership = None
             self.planner = None
         self._pending_moves = []
+        # reshard handoff: the pre-flip generation of shard groups (a
+        # DIFFERENT group count than ``self.groups``), kept alive so waves
+        # admitted under the old boundary epoch stay routable until
+        # ``commit_reshard`` retires them wholesale
+        self._retired_groups: Optional[List[List[Optional["DPAStore"]]]] = None
+        self._reshard_keys_pending = 0
         # rebalance accounting
         self.rebalances = 0
         self.rebalances_aborted = 0
         self.migrated_keys = 0
+        # elastic accounting
+        self.reshards = 0
+        self.resharded_keys = 0
+        self.evacuations = 0
+        # straggler watchdog: per-shard drain seconds (the per-shard
+        # decomposition of the pipeline WaveLedger's drain phase) feed
+        # ``watchdog.observe``; ``wave_time_hook(shard, seconds) -> seconds``
+        # lets tests and chaos drills inject a slow host deterministically
+        self.watchdog = watchdog
+        self.wave_time_hook = None
+        self.shard_drain_ns = np.zeros(n_shards, dtype=np.int64)
         h = self.route_np(keys)
         # scatter-gather accounting (benchmarks report the measured fan-out
         # and the continuation re-issue traffic)
@@ -288,14 +307,54 @@ class ShardedDPAStore:
             return [0]
         return [int(r) for r in self.ownership.replica_set(s)]
 
-    def _read_store(self, s: int):
+    def _groups_for_epoch(self, epoch: Optional[int]):
+        """The shard-group generation serving ``epoch``.  Only a reshard
+        handoff keeps two generations alive (their group COUNTS differ);
+        every other handoff routes both epochs over ``self.groups``."""
+        if (
+            epoch is not None
+            and self._retired_groups is not None
+            and self.ownership is not None
+            and epoch == self.ownership.epoch - 1
+        ):
+            return self._retired_groups
+        return self.groups
+
+    def _read_store(self, s: int, epoch: Optional[int] = None):
         """Pick the replica that serves this read: round-robin over the
         in-sync set (every member is content-identical, so the choice is
-        invisible in results — it only spreads load)."""
-        replicas = self._in_sync(s)
+        invisible in results — it only spreads load).  During a reshard
+        handoff an old-epoch read lands on the retired generation, whose
+        in-sync set is the old epoch's (``previous_in_sync``)."""
+        groups = self._groups_for_epoch(epoch)
+        if groups is not self.groups:
+            ins = self.ownership.previous_in_sync
+            replicas = [int(r) for r in np.where(ins[s])[0]]
+        else:
+            replicas = self._in_sync(s)
         pick = replicas[self._read_rr % len(replicas)]
         self._read_rr += 1
-        return self.groups[s][pick]
+        return groups[s][pick]
+
+    def _note_shard_time(self, s: int, seconds: float) -> None:
+        """Feed one shard's drain time into the straggler ledger (and the
+        watchdog, when armed).  ``s < 0`` marks a retired-generation
+        sub-wave — the old host set is being decommissioned, not
+        monitored."""
+        if s < 0:
+            return
+        if self.wave_time_hook is not None:
+            seconds = float(self.wave_time_hook(s, seconds))
+        self.shard_drain_ns[s] += int(seconds * 1e9)
+        if self.watchdog is not None:
+            self.watchdog.observe(s, seconds)
+
+    def _wave_end(self) -> None:
+        """Close one watchdog step: strike counters advance exactly once
+        per client wave (GET/PUT/DELETE/RANGE), matching the per-step
+        semantics the straggler EWMA is calibrated for."""
+        if self.watchdog is not None:
+            self.watchdog.end_step()
 
     def _write_group(
         self, s: int, op: str, keys: np.ndarray, *arrays, auto_retry: bool = True
@@ -323,6 +382,12 @@ class ShardedDPAStore:
     def in_handoff(self) -> bool:
         return self.ownership is not None and self.ownership.in_handoff
 
+    @property
+    def in_reshard(self) -> bool:
+        """True between :meth:`begin_reshard` and :meth:`commit_reshard`
+        (the handoff whose two epochs have different shard counts)."""
+        return self._retired_groups is not None
+
     def boundaries_for_epoch(self, epoch: Optional[int] = None) -> np.ndarray:
         assert self.ownership is not None, "range tier only"
         return self.ownership.boundaries_for(epoch)
@@ -344,7 +409,15 @@ class ShardedDPAStore:
     def _route(self, keys_u64: np.ndarray, epoch: Optional[int] = None):
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
         dest = self.route_np(keys_u64, epoch=epoch)
-        if self.planner is not None and keys_u64.size:
+        # the load counter is indexed by CURRENT shards — a reshard handoff
+        # makes old-epoch destinations a different width, and the retiring
+        # hosts' load is not the new planner's business anyway
+        current = (
+            epoch is None
+            or self.ownership is None
+            or epoch == self.ownership.epoch
+        )
+        if self.planner is not None and keys_u64.size and current:
             self.planner.note_load(dest)
         return keys_u64, dest
 
@@ -364,9 +437,12 @@ class ShardedDPAStore:
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
+                t0 = time.perf_counter()
                 statuses[m] = self._write_group(
                     s, "put", keys[m], vals[m], auto_retry=auto_retry
                 )
+                self._note_shard_time(s, time.perf_counter() - t0)
+        self._wave_end()
         self.client_writes += int(keys.size)
         self.acked_writes += int((statuses == STATUS_OK).sum())
         return statuses
@@ -382,9 +458,12 @@ class ShardedDPAStore:
         for s in range(self.n_shards):
             m = dest == s
             if m.any():
+                t0 = time.perf_counter()
                 statuses[m] = self._write_group(
                     s, "delete", keys[m], auto_retry=auto_retry
                 )
+                self._note_shard_time(s, time.perf_counter() - t0)
+        self._wave_end()
         self.client_writes += int(keys.size)
         self.acked_writes += int((statuses == STATUS_OK).sum())
         return statuses
@@ -405,21 +484,26 @@ class ShardedDPAStore:
         flip) drain the pipeline first, so ownership cannot move under an
         in-flight wave.  ``get() == get_finalize(get_issue())``."""
         keys, dest = self._route(np.asarray(keys, dtype=np.uint64), epoch=epoch)
+        groups = self._groups_for_epoch(epoch)
+        track = groups is self.groups  # retired generation: not monitored
         parts = []
-        for s in range(self.n_shards):
+        for s in range(len(groups)):
             m = dest == s
             if m.any():
-                st = self._read_store(s)
-                parts.append((m, st, st.get_issue(keys[m])))
+                st = self._read_store(s, epoch=epoch)
+                parts.append((s if track else -1, m, st, st.get_issue(keys[m])))
         return _ShardGetWave(n=keys.size, parts=parts)
 
     def get_finalize(self, w: _ShardGetWave) -> Tuple[np.ndarray, np.ndarray]:
         vals = np.zeros(w.n, dtype=np.uint64)
         found = np.zeros(w.n, dtype=bool)
-        for m, st, sub in w.parts:
+        for s, m, st, sub in w.parts:
+            t0 = time.perf_counter()
             v, f = st.get_finalize(sub)
+            self._note_shard_time(s, time.perf_counter() - t0)
             vals[m] = v
             found[m] = f
+        self._wave_end()
         return vals, found
 
     # ---------------------------------------------- async write fast path
@@ -457,7 +541,7 @@ class ShardedDPAStore:
                 sub = self.groups[s][r].write_issue(op, keys[m], sub_vals)
                 assert sub is not None, "issue diverged from its plan probe"
                 self.replica_writes += int(m.sum())
-                parts.append((m, self.groups[s][r], sub))
+                parts.append((s, m, self.groups[s][r], sub))
         self.client_writes += int(keys.size)
         return _ShardWriteWave(n=keys.size, parts=parts)
 
@@ -465,9 +549,13 @@ class ShardedDPAStore:
         from repro.core.store import STATUS_OK
 
         statuses = np.zeros(w.n, dtype=np.int32)
-        for m, st, sub in w.parts:
+        for s, m, st, sub in w.parts:
+            t0 = time.perf_counter()
+            sub_status = st.write_finalize(sub)
+            self._note_shard_time(s, time.perf_counter() - t0)
             # pessimistic merge (max: OK=0 < RETRY), same as _write_group
-            statuses[m] = np.maximum(statuses[m], st.write_finalize(sub))
+            statuses[m] = np.maximum(statuses[m], sub_status)
+        self._wave_end()
         self.acked_writes += int((statuses == STATUS_OK).sum())
         return statuses
 
@@ -549,8 +637,11 @@ class ShardedDPAStore:
             owner = self.route_np(start, epoch=epoch)
             lb = self.ownership.lower_bounds(epoch)
             ub = self.ownership.upper_bounds(epoch)  # KEY_MAX sentinel last
-            fanout = self.n_shards if fanout is None else fanout
-            for s in range(self.n_shards):
+            groups = self._groups_for_epoch(epoch)
+            track = groups is self.groups
+            n_eff = len(groups)  # old-epoch waves see the OLD fleet width
+            fanout = n_eff if fanout is None else fanout
+            for s in range(n_eff):
                 m = (owner <= s) & (s - owner < fanout) & (counts < limit)
                 if not m.any():
                     continue
@@ -567,7 +658,8 @@ class ShardedDPAStore:
                 resume = None
                 # pin one in-sync replica for the whole continuation loop:
                 # resume cursors (cur_leaf) are store-local leaf ids
-                serving = self._read_store(s)
+                serving = self._read_store(s, epoch=epoch)
+                t0 = time.perf_counter()
                 while idxs.size:
                     rk, rv, rc, trunc, cur_leaf, _ = serving.range_with_state(
                         sub_start,
@@ -587,14 +679,22 @@ class ShardedDPAStore:
                     sub_ub = sub_ub[again]
                     resume = cur_leaf[again]
                     self.range_reissues += int(again.sum())
+                self._note_shard_time(
+                    s if track else -1, time.perf_counter() - t0
+                )
+            self._wave_end()
             return RangeResult(keys_out, vals_out, counts)
         # hash partition: broadcast + k-way merge (keys never hit the
         # KEY_MAX sentinel — reserved — so it can pad the sort)
         self.range_subqueries += n * self.n_shards
-        per = [
-            sh.range(start, limit=limit, max_leaves=max_leaves, k_max=k_max)
-            for sh in self.shards
-        ]
+        per = []
+        for s, sh in enumerate(self.shards):
+            t0 = time.perf_counter()
+            per.append(
+                sh.range(start, limit=limit, max_leaves=max_leaves, k_max=k_max)
+            )
+            self._note_shard_time(s, time.perf_counter() - t0)
+        self._wave_end()
         allk = np.concatenate([rk for rk, _, _ in per], axis=1)
         allv = np.concatenate([rv for _, rv, _ in per], axis=1)
         live = np.concatenate(
@@ -657,8 +757,11 @@ class ShardedDPAStore:
             owner = self.route_np(start, epoch=epoch)
             lb = self.ownership.lower_bounds(epoch)
             ub = self.ownership.upper_bounds(epoch)
-            fanout = self.n_shards if fanout is None else fanout
-            for s in range(self.n_shards):
+            groups = self._groups_for_epoch(epoch)
+            track = groups is self.groups
+            n_eff = len(groups)
+            fanout = n_eff if fanout is None else fanout
+            for s in range(n_eff):
                 m = (owner <= s) & (s - owner < fanout)
                 if not m.any():
                     continue
@@ -667,19 +770,21 @@ class ShardedDPAStore:
                 sub_ub = np.full(idxs.size, ub[s], dtype=np.uint64)
                 if k_max is not None:
                     sub_ub = np.minimum(sub_ub, k_max[idxs])
-                serving = self._read_store(s)
+                serving = self._read_store(s, epoch=epoch)
                 sub = serving.range_issue(
                     sub_start, limit=limit, k_max=sub_ub,
                     max_leaves=max_leaves, arity=6,
                 )
-                w.parts.append((idxs, sub_start, sub_ub, serving, sub))
+                w.parts.append(
+                    (s if track else -1, idxs, sub_start, sub_ub, serving, sub)
+                )
             return w
         self.range_subqueries += n * self.n_shards
-        for sh in self.shards:
+        for s, sh in enumerate(self.shards):
             sub = sh.range_issue(
                 start, limit=limit, k_max=k_max, max_leaves=max_leaves, arity=3
             )
-            w.parts.append((None, None, None, sh, sub))
+            w.parts.append((s, None, None, None, sh, sub))
         return w
 
     def range_finalize(self, w: _ShardRangeWave):
@@ -696,7 +801,8 @@ class ShardedDPAStore:
         if w.empty:
             return RangeResult(keys_out, vals_out, counts)
         if w.mode == "range":
-            for idxs_all, sub_start, sub_ub, serving, sub in w.parts:
+            for s, idxs_all, sub_start, sub_ub, serving, sub in w.parts:
+                t0 = time.perf_counter()
                 res = serving.range_finalize(sub)
                 # rows already filled by predecessor shards appended
                 # nothing on the serial path either — the speculative
@@ -704,6 +810,7 @@ class ShardedDPAStore:
                 need = counts[idxs_all] < limit
                 idxs = idxs_all[need]
                 if idxs.size == 0:
+                    self._note_shard_time(s, time.perf_counter() - t0)
                     continue
                 self.range_subqueries += int(idxs.size)
                 sub_start = sub_start[need]
@@ -736,9 +843,16 @@ class ShardedDPAStore:
                     sub_ub = sub_ub[again]
                     resume = cur_leaf[again]
                     self.range_reissues += int(again.sum())
+                self._note_shard_time(s, time.perf_counter() - t0)
+            self._wave_end()
             return RangeResult(keys_out, vals_out, counts)
         # hash tier: drain the broadcast, then the k-way merge epilogue
-        per = [st.range_finalize(sub) for _, _, _, st, sub in w.parts]
+        per = []
+        for s, _, _, _, st, sub in w.parts:
+            t0 = time.perf_counter()
+            per.append(st.range_finalize(sub))
+            self._note_shard_time(s, time.perf_counter() - t0)
+        self._wave_end()
         allk = np.concatenate([r.keys for r in per], axis=1)
         allv = np.concatenate([r.vals for r in per], axis=1)
         live = np.concatenate(
@@ -789,6 +903,11 @@ class ShardedDPAStore:
             return stack_shards(self.shards)
         from repro.distributed.rangeshard import replica_serving_stores
 
+        assert self._groups_for_epoch(epoch) is self.groups, (
+            "cannot stack the retired reshard generation: its shard count "
+            "differs from the current mesh — drain old-epoch waves through "
+            "the host facade and commit_reshard first"
+        )
         return stack_shards(
             replica_serving_stores(self.groups, self.ownership.primary_for(epoch))
         )
@@ -821,6 +940,9 @@ class ShardedDPAStore:
         retirement — there are no stale slice copies to tombstone because
         the boundaries never moved)."""
         assert self.ownership is not None and self.ownership.in_handoff
+        assert self._retired_groups is None, (
+            "the open handoff is a reshard: commit_reshard retires it"
+        )
         self.ownership.retire_previous()
 
     def recover_replicas(self):
@@ -959,6 +1081,9 @@ class ShardedDPAStore:
         Call after the handoff epoch's in-flight waves have drained.
         Returns the number of keys migrated."""
         assert self.in_handoff, "begin_rebalance first"
+        assert self._retired_groups is None, (
+            "the open handoff is a reshard: commit_reshard retires it"
+        )
         migrated = 0
         for mv in self._pending_moves:
             primary = int(self.ownership.primary[mv.donor]) if self.ownership else 0
@@ -997,9 +1122,188 @@ class ShardedDPAStore:
         once per wave batch; it is cheap when the tier is balanced."""
         if self.planner is None or self.partition != "range":
             return None
+        if self.in_handoff:  # two-epoch window is single-occupancy
+            return None
         if not self.planner.should_rebalance(self.shard_occupancy(flush=True)):
             return None
         return self.rebalance()
+
+    # ------------------------------------------------ elastic reshard (range)
+    def begin_reshard(
+        self, new_shards: int, new_boundaries=None
+    ) -> Optional[np.ndarray]:
+        """Phase 1 of a live reshard: grow or shrink the shard count in
+        place while GET/PUT/RANGE keep serving.
+
+        The donor fleet is snapshotted as ONE epoch-consistent ordered run
+        (``flush`` + owned-window :meth:`items` — exactly the cut
+        ``distributed.snapshot`` persists), quantile boundaries are fitted
+        for the NEW width (planner reservoir sample when armed, census
+        keys otherwise), and every new shard group is built complete —
+        ``ingest_slice`` of its slice into ``replication`` fresh stores
+        (bulk load when a slice exceeds a fresh store's ingest headroom,
+        the ``recover_replicas`` discipline) — BEFORE the ownership flip.
+        The flip itself is the same two-phase ``OwnershipTable.install``
+        a rebalance rides, except the boundary vector changes LENGTH: the
+        old generation of groups is retained wholesale (``_retired_groups``)
+        so waves admitted under the old epoch keep routing over the old
+        fleet width, and fresh requests route over the new one.  Writes
+        admitted during the handoff go to the new generation only — the
+        retired generation is a read-only snapshot of the pre-flip state,
+        which is exactly what old-epoch readers are entitled to see (the
+        same staleness contract a rebalance donor's retained copy has).
+
+        Call :meth:`commit_reshard` once old-epoch waves have drained.
+        Returns the installed boundary vector, or ``None`` for a no-op
+        (``new_shards`` equals the current count and no explicit
+        boundaries were given).  A reshard also heals crashed replica
+        slots as a side effect: every new group starts fully in-sync."""
+        from repro.core import pla
+        from repro.core.store import DPAStore
+        from repro.distributed.rebalance import RebalancePlanner
+
+        assert self.partition == "range", "resharding is a range-tier op"
+        assert not self.in_handoff, "commit the open handoff first"
+        assert new_shards >= 1, f"new_shards must be positive, got {new_shards}"
+        if new_shards == self.n_shards and new_boundaries is None:
+            return None
+        self.flush()  # exact census: staged writes become stitched truth
+        keys, vals = self.items()  # the epoch-consistent global ordered run
+        if new_boundaries is None:
+            sample = (
+                self.planner.sample.snapshot()
+                if self.planner is not None
+                else np.empty(0, dtype=np.uint64)
+            )
+            new_boundaries = pla.fit_boundaries(
+                sample if sample.size else keys, new_shards
+            )
+        new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
+        assert new_boundaries.size == new_shards - 1, (
+            f"{new_shards} shards need {new_shards - 1} boundaries, "
+            f"got {new_boundaries.size}"
+        )
+        cuts = np.concatenate(
+            [
+                np.zeros(1, dtype=np.int64),
+                np.searchsorted(keys, new_boundaries, side="left"),
+                np.full(1, keys.size, dtype=np.int64),
+            ]
+        )
+        empty = np.empty(0, dtype=np.uint64)
+        new_groups: List[List[Optional[DPAStore]]] = []
+        for s in range(new_shards):
+            k = keys[cuts[s] : cuts[s + 1]]
+            v = vals[cuts[s] : cuts[s + 1]]
+            grp: List[Optional[DPAStore]] = []
+            for _ in range(self.replication):
+                fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
+                if k.size and k.size <= fresh.ingest_headroom():
+                    fresh.ingest_slice(k, v)
+                elif k.size:  # slice exceeds an empty store's free pools
+                    fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
+                grp.append(fresh)
+            new_groups.append(grp)
+        self._retired_groups = self.groups
+        self.groups = new_groups
+        self.n_shards = new_shards
+        self.ownership.install(new_boundaries)  # size-changing epoch flip
+        self._reshard_keys_pending = int(keys.size)
+        # the fleet planner is per-width state: rebuild it for the new
+        # mesh, reseeded with the full census (a strictly better sample
+        # than the reservoir it replaces)
+        if self.planner is not None:
+            self.planner = RebalancePlanner(self.planner.cfg, new_shards)
+            self.planner.observe(keys)
+        # straggler state is keyed by shard id — a reshard reassigns hosts
+        self.shard_drain_ns = np.zeros(new_shards, dtype=np.int64)
+        if self.watchdog is not None:
+            self.watchdog.times.clear()
+            self.watchdog.strikes.clear()
+            self.watchdog.flagged.clear()
+        return new_boundaries
+
+    def commit_reshard(self) -> int:
+        """Phase 2: retire the pre-flip generation wholesale (whole donor
+        stores are dropped — no tombstone runs, unlike a rebalance donor
+        that keeps its store) and drop the old boundary vector.  Call
+        after the old epoch's in-flight waves have drained.  Returns the
+        number of keys resharded."""
+        assert self._retired_groups is not None, "begin_reshard first"
+        self._retired_groups = None
+        self.ownership.retire_previous()
+        moved = int(self._reshard_keys_pending)
+        self._reshard_keys_pending = 0
+        self.reshards += 1
+        self.resharded_keys += moved
+        return moved
+
+    def reshard(self, new_shards: int, new_boundaries=None) -> Dict[str, float]:
+        """One synchronous reshard cycle (begin + commit back-to-back —
+        sound here because the host facade serializes waves; the split API
+        exists for callers, and tests, that interleave old-epoch traffic
+        with the handoff).  Returns a summary including the post-reshard
+        occupancy spread."""
+        installed = self.begin_reshard(new_shards, new_boundaries)
+        moved = self.commit_reshard() if installed is not None else 0
+        report = self.occupancy_spread()
+        report["n_shards"] = self.n_shards
+        report["resharded_keys"] = moved
+        return report
+
+    # --------------------------------------------- straggler evacuation
+    def evacuate_shard(self, s: int) -> int:
+        """Evacuate shard group ``s`` to fresh hosts: every in-sync
+        replica is rebuilt from its own epoch-consistent snapshot
+        (``flush`` + ``snapshot_slice`` + ``ingest_slice`` into a fresh
+        store — bulk load past headroom), emulating a migration off a
+        persistently slow host.  No epoch flip: the boundary vector is
+        untouched and the rebuilt replica is bitwise content-equal, so
+        routing never observes the move.  Returns keys moved."""
+        from repro.core.keys import KEY_MAX
+        from repro.core.store import DPAStore
+
+        assert not self.in_handoff, (
+            "evacuation during a handoff would snapshot stale out-of-window"
+            " copies — commit first"
+        )
+        empty = np.empty(0, dtype=np.uint64)
+        moved = 0
+        for r in self._in_sync(s):
+            st = self.groups[s][r]
+            if st is None:
+                continue
+            st.flush()
+            k, v = st.snapshot_slice(0, KEY_MAX)
+            fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
+            if k.size and k.size <= fresh.ingest_headroom():
+                fresh.ingest_slice(k, v)
+            elif k.size:
+                fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
+            self.groups[s][r] = fresh
+            moved = int(k.size)  # replicas are identical: count one copy
+        self.evacuations += 1
+        if self.watchdog is not None:
+            # the replacement host starts with a clean bill of health
+            self.watchdog.times.pop(s, None)
+            self.watchdog.strikes.pop(s, None)
+            self.watchdog.flagged.pop(s, None)
+        return moved
+
+    def maybe_evacuate(self) -> Optional[Dict]:
+        """Watchdog-gated evacuation: when the straggler plan names shards
+        persistently slower than the fleet median (EWMA of real per-shard
+        wave drain times, ``patience`` consecutive strikes), evacuate each
+        to fresh hosts.  The serve loop calls this once per wave batch;
+        it is free when the watchdog is unarmed or the fleet healthy."""
+        if self.watchdog is None or self.in_handoff:
+            return None
+        plan = self.watchdog.plan(self.n_shards)
+        if plan.get("action") != "remesh":
+            return None
+        evacuated = [s for s in plan["drop_hosts"] if 0 <= s < self.n_shards]
+        moved = sum(self.evacuate_shard(s) for s in evacuated)
+        return {"evacuated": evacuated, "moved_keys": moved, "plan": plan}
 
     @property
     def range_rounds_in_mesh(self) -> int:

@@ -95,6 +95,7 @@ class OwnershipTable:
     primary: Optional[np.ndarray] = None  # (n_shards,) i32 replica index
     previous_primary: Optional[np.ndarray] = None  # old epoch's map (handoff)
     in_sync: Optional[np.ndarray] = None  # (n_shards, n_replicas) bool
+    previous_in_sync: Optional[np.ndarray] = None  # old epoch's set (reshard)
 
     def __post_init__(self) -> None:
         self.current = np.asarray(self.current, dtype=np.uint64)
@@ -144,17 +145,30 @@ class OwnershipTable:
         map become current, the old pair stays live for exactly one epoch
         (``None`` keeps the corresponding vector unchanged — a primary
         failover flips only the map, a rebalance only the boundaries).
-        Returns the new epoch."""
+
+        A ``new_boundaries`` vector of a *different length* is a reshard:
+        the shard count itself flips with the epoch.  The primary map and
+        in-sync matrix are rebuilt for the new shard count (every fresh
+        group starts fully in-sync — the reshard path builds each new
+        group complete before installing) while the old epoch's maps stay
+        readable via ``primary_for`` / ``previous_in_sync`` until
+        :meth:`retire_previous`.  Returns the new epoch."""
         assert not self.in_handoff, "commit the previous rebalance first"
         assert new_boundaries is not None or new_primary is not None
         self.previous = self.current
         self.previous_primary = self.primary.copy()
+        self.previous_in_sync = self.in_sync.copy()
         if new_boundaries is not None:
             new_boundaries = np.asarray(new_boundaries, dtype=np.uint64)
-            assert new_boundaries.shape == self.current.shape
             assert np.all(
                 new_boundaries[1:] >= new_boundaries[:-1]
             ), "boundaries must be sorted"
+            if new_boundaries.shape != self.current.shape:  # reshard
+                n_new = new_boundaries.size + 1
+                if new_primary is None:
+                    new_primary = np.zeros(n_new, dtype=np.int32)
+                self.in_sync = np.ones((n_new, self.n_replicas), dtype=bool)
+                self.primary = np.zeros(n_new, dtype=np.int32)
             self.current = new_boundaries
         if new_primary is not None:
             new_primary = np.asarray(new_primary, dtype=np.int32)
@@ -171,6 +185,7 @@ class OwnershipTable:
         """End the handoff: the old epoch's waves have drained."""
         self.previous = None
         self.previous_primary = None
+        self.previous_in_sync = None
 
     # -- replica sets ------------------------------------------------------
     def primary_for(self, epoch: Optional[int] = None) -> np.ndarray:

@@ -21,6 +21,11 @@ LM decode loop, batched.
     PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
         --shards 4 --replication 2 --kill-primary-at 8
 
+    # elastic scale-out: live reshard 2 -> 4 mid-run, then persist an
+    # epoch-consistent, shard-count-independent snapshot at exit
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
+        --shards 2 --reshard-to 4 --snapshot-dir /tmp/kv_snap
+
     # LM decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced --steps 16
 """
@@ -161,6 +166,23 @@ def serve_kv(args):
                     f"[serve-kv] wave {w}: re-replicated {plan.n_rebuilds} "
                     f"replica(s) in {recovery_s:.2f}s — group back in sync"
                 )
+            if (
+                args.reshard_to
+                and args.partition == "range"
+                and w + 1 == args.waves // 2
+                and args.reshard_to != kv.n_shards
+            ):
+                # live reshard at the halfway mark (a barrier op: in-flight
+                # waves drain under the epoch they were admitted with)
+                t_rs = time.time()
+                report = kv.reshard(args.reshard_to)
+                print(
+                    f"[serve-kv] wave {w}: resharded "
+                    f"{report['resharded_keys']} keys -> "
+                    f"{report['n_shards']} shards in "
+                    f"{time.time() - t_rs:.2f}s (occupancy spread "
+                    f"{report['ratio']:.2f}); serving continues"
+                )
             if rebalancing and (w + 1) % args.rebalance_every == 0:
                 report = kv.maybe_rebalance()
                 if report is not None:
@@ -213,13 +235,20 @@ def serve_kv(args):
         tot = store.stats_totals()
         hit = tot.get("scan_hits", 0) / max(tot.get("scan_probes", 0), 1)
         print(
-            f"[serve-kv] partition={args.partition} shards={args.shards} "
+            f"[serve-kv] partition={args.partition} shards={store.n_shards} "
             f"range fan-out={fan:.2f} sub-queries/request, "
             f"{store.range_rounds_in_mesh} continuation rounds in-mesh, "
             f"{store.range_reissues} host re-issues (steady state: 0 — the "
             f"device loop resumes truncated lanes itself; hash tier "
-            f"broadcasts to all {args.shards})"
+            f"broadcasts to all {store.n_shards})"
         )
+        if store.reshards:
+            print(
+                f"[serve-kv] elastic: {store.reshards} reshard(s), "
+                f"{store.resharded_keys} keys redistributed, now serving "
+                f"{store.n_shards} shards at boundary epoch "
+                f"{store.boundary_epoch}"
+            )
         if args.partition == "range":
             spread = store.occupancy_spread(flush=True)
             print(
@@ -245,6 +274,17 @@ def serve_kv(args):
             f"rate across shards"
         )
         print(f"[serve-kv] shard stats totals: {tot}")
+    if args.snapshot_dir:
+        from repro.distributed.snapshot import save_snapshot
+
+        t_sn = time.time()
+        step = save_snapshot(kv, args.snapshot_dir)
+        print(
+            f"[serve-kv] snapshot: epoch-consistent ordered run saved as "
+            f"step {step} under {args.snapshot_dir} in "
+            f"{time.time() - t_sn:.2f}s — restorable at ANY shard count "
+            f"(repro.distributed.snapshot.restore_store)"
+        )
 
 
 def serve_lm(args):
@@ -322,6 +362,23 @@ def main(argv=None):
         help="with --replication > 1: crash shard 0's primary after this "
         "wave (0 = never) — a follower is promoted via a failover epoch "
         "and the dead slot is re-replicated one wave later",
+    )
+    ap.add_argument(
+        "--reshard-to",
+        type=int,
+        default=0,
+        help="range tier only: live-reshard the fleet to this shard count "
+        "at the halfway wave (grow or shrink; 0 = never) — old-epoch waves "
+        "drain over the retired generation while fresh requests route over "
+        "the new one, zero acked writes lost",
+    )
+    ap.add_argument(
+        "--snapshot-dir",
+        default="",
+        help="save an epoch-consistent, shard-count-independent snapshot "
+        "of the store here at the end of the run (atomic checkpoint "
+        "layout; restore onto any shard count via "
+        "repro.distributed.snapshot.restore_store)",
     )
     ap.add_argument(
         "--queue-depth",

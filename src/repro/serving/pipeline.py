@@ -341,6 +341,11 @@ _BARRIER_METHODS = frozenset(
         "kill_replica",
         "retire_failover",
         "recover_replicas",
+        "begin_reshard",
+        "commit_reshard",
+        "reshard",
+        "evacuate_shard",
+        "maybe_evacuate",
         "compact_chain",
         "snapshot_slice",
         "extract_slice",

@@ -403,3 +403,59 @@ def test_roofline_reader_runs_if_results_exist():
     for r in ok:
         assert r["t_compute_s"] >= 0 and r["t_memory_s"] >= 0
         assert r["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_fig20_smoke_rows_show_elastic_costs():
+    """The elastic sweep must emit schema-valid grow/shrink/snapshot cells,
+    lose zero acked writes across both live reshards, restore the snapshot
+    bitwise-equal at a different shard count, and show the retention the
+    fleet-width change implies (grow raises aggregate model MOPS, shrink
+    lowers it)."""
+    from benchmarks import common, fig20_elastic
+    from benchmarks.run import (
+        elastic_metrics,
+        validate_fig20_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig20_elastic.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig20_coverage(rows)
+    met = elastic_metrics(rows)
+    grow, shrink = met["fig20/grow/2to4"], met["fig20/shrink/4to2"]
+    assert grow["lost_acked"] == 0 and shrink["lost_acked"] == 0, met
+    assert grow["retention"] > 1.0 > shrink["retention"], met
+    snap = met["fig20/snapshot/4to2"]
+    assert snap["restore_equal"] == 1 and snap["save_s"] >= 0, met
+
+
+def test_fig20_gate_rejects_lost_acked_and_unequal_restore():
+    """The elastic schema gate itself: a reshard cell losing acked writes,
+    a snapshot cell that did not restore bitwise-equal, or a missing mode
+    must all be flagged."""
+    from benchmarks.run import validate_fig20_coverage
+
+    good = [
+        f"fig20/{m}/{c},1.0,model_mops=9.0;retention=1.5;reshard_s=0.4;"
+        f"lost_acked=0;spread_after=1.1;resharded=100"
+        for m, c in (("grow", "2to4"), ("shrink", "4to2"))
+    ] + [
+        "fig20/snapshot/4to2,1.0,save_s=0.01;restore_s=0.02;"
+        "n_keys=100;restore_equal=1"
+    ]
+    assert not validate_fig20_coverage(good)
+    lost = [r.replace("lost_acked=0", "lost_acked=2") for r in good]
+    assert any("lost_acked" in p for p in validate_fig20_coverage(lost))
+    unequal = [r.replace("restore_equal=1", "restore_equal=0") for r in good]
+    assert any("restore_equal" in p for p in validate_fig20_coverage(unequal))
+    noshrink = [r for r in good if "/shrink/" not in r]
+    assert any("shrink" in p for p in validate_fig20_coverage(noshrink))

@@ -13,13 +13,15 @@ interleaving.
 
 Legs: a small always-on leg (fast lane), a ``slow``-marked broad leg
 sweeping shard counts x both tiers x longer interleavings with
-split-phase (begin ... ops ... commit) rebalances, and an always-on
+split-phase (begin ... ops ... commit) rebalances, an always-on
 *failover* leg (R=2 replicated range tier) that interleaves primary and
 follower kills, failover-epoch reads, and re-replication with the same
-ops — the zero-lost-acked-writes guarantee IS the full-oracle bitwise
-equality after every step, since every acked PUT is in the oracle.  The
-hermetic hypothesis shim (tests/_vendor) runs all of them as seeded
-deterministic sweeps.
+ops, and an always-on *reshard* leg where live grow/shrink shard-count
+changes (atomic and split-phase) are drawn as ops — the
+zero-lost-acked-writes guarantee IS the full-oracle bitwise equality
+after every step, since every acked PUT is in the oracle.  The hermetic
+hypothesis shim (tests/_vendor) runs all of them as seeded deterministic
+sweeps.
 """
 
 import numpy as np
@@ -100,6 +102,10 @@ def _run_interleaving(
     sharded = n_shards > 0
     replicated = sharded and replication > 1
     in_handoff = False
+    # the open handoff's kind decides which commit retires it: a reshard
+    # swaps whole group generations (commit_reshard), a rebalance migrates
+    # slices between a fixed fleet (commit_rebalance)
+    reshard_open = False
     handoff_epoch = None
     # an old-epoch reader is entitled to the PRE-handoff snapshot; once a
     # write lands during the handoff the live oracle no longer describes
@@ -131,7 +137,8 @@ def _run_interleaving(
             st.sampled_from(
                 ["put_new", "put_mixed", "delete", "get", "range", "flush"]
                 + (
-                    ["rebalance", "begin_rebalance", "commit_rebalance"]
+                    ["rebalance", "begin_rebalance", "commit_rebalance",
+                     "reshard", "begin_reshard"]
                     if sharded and partition == "range"
                     else []
                 )
@@ -198,19 +205,34 @@ def _run_interleaving(
                     in_handoff = True
                     handoff_epoch = store.boundary_epoch - 1
         elif op == "commit_rebalance" and in_handoff:
-            store.commit_rebalance()
+            (store.commit_reshard if reshard_open else store.commit_rebalance)()
             in_handoff = False
+            reshard_open = False
             handoff_epoch = None
             wrote_in_handoff = False
+        elif op == "reshard" and not in_handoff and failover_epoch is None:
+            # atomic grow/shrink: the whole fleet re-cuts to a drawn width
+            # mid-stream; every acked write so far must survive the swap
+            store.reshard(data.draw(st.sampled_from([1, 2, 4])))
+        elif op == "begin_reshard" and not in_handoff and failover_epoch is None:
+            # split-phase grow/shrink held open across ops: old-epoch reads
+            # route over the retired generation (the pre-flip snapshot, so
+            # the same wrote_in_handoff staleness contract applies) while
+            # writes land on the new fleet width only
+            if store.begin_reshard(data.draw(st.sampled_from([1, 2, 4]))) is not None:
+                in_handoff = True
+                reshard_open = True
+                handoff_epoch = store.boundary_epoch - 1
         elif op == "kill_primary" and not in_handoff and failover_epoch is None:
-            g = data.draw(st.integers(0, n_shards - 1))
+            # a reshard may have changed the fleet width: draw dynamically
+            g = data.draw(st.integers(0, store.n_shards - 1))
             if group_fully_alive(g):
                 e0 = store.boundary_epoch
                 promoted = store.kill_replica(g)  # default victim: primary
                 assert promoted is not None, "a primary kill must promote"
                 failover_epoch = e0  # old epoch drains while we keep serving
         elif op == "kill_follower" and not in_handoff and failover_epoch is None:
-            g = data.draw(st.integers(0, n_shards - 1))
+            g = data.draw(st.integers(0, store.n_shards - 1))
             if group_fully_alive(g):
                 follower = (int(store.ownership.primary[g]) + 1) % replication
                 assert store.kill_replica(g, follower) is None, (
@@ -223,14 +245,14 @@ def _run_interleaving(
             slot is None for grp in store.groups for slot in grp
         ):
             store.recover_replicas()
-        if op == "begin_rebalance" and in_handoff:
+        if op in ("begin_rebalance", "begin_reshard") and in_handoff:
             wrote_in_handoff = False
     if failover_epoch is not None:
         store.retire_failover()
     if replicated and any(slot is None for grp in store.groups for slot in grp):
         store.recover_replicas()
     if in_handoff:
-        store.commit_rebalance()
+        (store.commit_reshard if reshard_open else store.commit_rebalance)()
     if pipelined:
         store.drain()
         assert store.pipeline_summary()["waves"] > 0
@@ -277,6 +299,20 @@ def test_differential_fuzz_pipelined(data):
     _run_interleaving(
         data, n_shards=2, partition="range", n_keys=240, n_ops=6, wave=24,
         pipelined=True,
+    )
+
+
+@given(st.data())
+@settings(max_examples=4, deadline=None)
+def test_differential_fuzz_reshard(data):
+    """Always-on elastic leg: grow/shrink reshards drawn into the op mix —
+    both atomic and split-phase (held open across ops with old-epoch reads
+    draining over the retired generation) — with the pipelined qd=2
+    dimension drawn per example.  The bitwise oracle equality after every
+    step IS the zero-lost-acked-writes-across-reshard check."""
+    _run_interleaving(
+        data, n_shards=2, partition="range", n_keys=240, n_ops=8, wave=24,
+        pipelined=data.draw(st.booleans()),
     )
 
 

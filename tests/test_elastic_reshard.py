@@ -1,0 +1,426 @@
+"""Elastic lifecycle suite: shard-count-independent snapshots, live
+grow/shrink resharding under traffic, and watchdog-driven straggler
+evacuation — every leg asserted BITWISE against a plain dict oracle.
+
+The elastic contract under test:
+
+* a snapshot taken at N shards is just the epoch-consistent global
+  ordered run + advisory metadata, so it restores at ANY shard count M
+  (including M=1 and a plain single ``DPAStore``) bitwise-equal;
+* ``begin_reshard``/``commit_reshard`` change the fleet width while
+  GET/PUT/RANGE/DELETE keep serving: acked writes never vanish, reads
+  admitted under the old boundary epoch drain over the retired
+  generation (the read-only pre-flip snapshot), and the final census is
+  bitwise-equal to the oracle before, during and after the flip;
+* the straggler watchdog, fed REAL per-shard wave drain times (via the
+  deterministic ``wave_time_hook`` test seam), evacuates a persistently
+  slow shard exactly once per slow host — and never fires on a healthy
+  fleet.
+
+The hermetic hypothesis shim (tests/_vendor) drives the seeded sweep
+legs; the exhaustive (N, M) product at larger sizes is ``slow``-marked.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPAStore, TreeConfig
+from repro.distributed.kvshard import ShardedDPAStore
+from repro.distributed.snapshot import (
+    load_snapshot,
+    restore_store,
+    save_snapshot,
+    snapshot_state,
+)
+from repro.distributed.straggler import StragglerConfig, Watchdog
+
+KEY_BOUND = 2**63
+GROWTH = TreeConfig(growth=16.0)
+COUNTS = (1, 2, 4)
+
+
+def _mkstore(n_shards, keys, vals, **kw):
+    return ShardedDPAStore(
+        keys, vals, n_shards, GROWTH, partition="range", cache_cfg=None, **kw
+    )
+
+
+def _dataset(n, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(1, KEY_BOUND, n, dtype=np.uint64))
+    vals = keys ^ np.uint64(0xBEEF)
+    return keys, vals, dict(zip(keys.tolist(), vals.tolist()))
+
+
+def _assert_bitwise(store, oracle):
+    ks, vs = store.items()
+    ek = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    assert ks.size == ek.size, (ks.size, ek.size)
+    assert (ks == ek).all()
+    ev = np.array([oracle[int(k)] for k in ek], dtype=np.uint64)
+    assert (vs == ev).all()
+
+
+def _assert_get(store, oracle, q, **kw):
+    vals, found = store.get(q, **kw)
+    for i, k in enumerate(q):
+        assert bool(found[i]) == (int(k) in oracle), hex(int(k))
+        if found[i]:
+            assert int(vals[i]) == oracle[int(k)], hex(int(k))
+
+
+def _assert_range(store, oracle, q, limit=8, **kw):
+    rk, rv, rc = store.range(q, limit=limit, max_leaves=4, **kw)
+    sk = np.array(sorted(oracle.keys()), dtype=np.uint64)
+    for i, k in enumerate(q):
+        j = np.searchsorted(sk, k)
+        ek = sk[j : j + limit]
+        assert rc[i] == ek.size, (hex(int(k)), rc[i], ek.size)
+        assert (rk[i, : ek.size] == ek).all(), hex(int(k))
+        ev = np.array([oracle[int(x)] for x in ek], dtype=np.uint64)
+        assert (rv[i, : ek.size] == ev).all(), hex(int(k))
+
+
+# --------------------------------------------------------------- snapshots
+@pytest.mark.parametrize("n_from", COUNTS)
+@pytest.mark.parametrize("n_to", COUNTS)
+def test_snapshot_restores_at_any_shard_count(tmp_path, n_from, n_to):
+    """Save at N, restore at M, for every (N, M) in {1,2,4}^2: the restored
+    store is bitwise-equal to the dict oracle — including staged state the
+    writer had not flushed (items() folds insert buffers into the cut)."""
+    keys, vals, oracle = _dataset(900, seed=n_from * 7 + n_to)
+    store = _mkstore(n_from, keys, vals)
+    # dirty the store so the cut must be epoch-consistent, not just the
+    # bulk-loaded census: overwrites, fresh staged keys, deletes
+    upd = keys[::5]
+    store.put(upd, upd + np.uint64(9))
+    for k in upd.tolist():
+        oracle[k] = (k + 9) % 2**64
+    fresh = np.arange(1, 40, dtype=np.uint64) * np.uint64(2**40)
+    store.put(fresh, fresh ^ np.uint64(0xC))
+    for k in fresh.tolist():
+        oracle[k] = k ^ 0xC
+    dead = keys[::11]
+    store.delete(dead)
+    for k in dead.tolist():
+        oracle.pop(k, None)
+
+    step = save_snapshot(store, tmp_path)
+    snap = load_snapshot(tmp_path, step)
+    assert snap.n_shards == n_from and snap.partition == "range"
+    assert snap.n_keys == len(oracle)
+
+    restored = restore_store(snap, n_shards=n_to, tree_cfg=GROWTH,
+                             cache_cfg=None)
+    assert restored.n_shards == n_to
+    _assert_bitwise(restored, oracle)
+    probe = np.array(sorted(oracle.keys()), dtype=np.uint64)[::17]
+    _assert_get(restored, oracle, probe)
+    _assert_range(restored, oracle, probe[:24])
+
+
+def test_snapshot_round_trips_through_single_store(tmp_path):
+    """The shard-count axis includes 'no shards at all': a sharded fleet's
+    snapshot restores into a plain DPAStore (n_shards=0), and a single
+    store's snapshot restores onto a sharded fleet."""
+    keys, vals, oracle = _dataset(700, seed=3)
+    fleet = _mkstore(4, keys, vals)
+    save_snapshot(fleet, tmp_path / "fleet")
+    single = restore_store(load_snapshot(tmp_path / "fleet"), n_shards=0,
+                           tree_cfg=GROWTH, cache_cfg=None)
+    assert isinstance(single, DPAStore)
+    _assert_bitwise(single, oracle)
+
+    solo = DPAStore(keys, vals, GROWTH, cache_cfg=None)
+    save_snapshot(solo, tmp_path / "solo")
+    snap = load_snapshot(tmp_path / "solo")
+    assert snap.partition == "single" and snap.n_shards == 1
+    refleeted = restore_store(snap, n_shards=2, partition="range",
+                              tree_cfg=GROWTH, cache_cfg=None)
+    assert refleeted.n_shards == 2
+    _assert_bitwise(refleeted, oracle)
+
+
+def test_snapshot_state_is_epoch_consistent_mid_handoff(tmp_path):
+    """A snapshot cut while a rebalance handoff is open must equal the
+    oracle — donor stale copies are invisible to the census."""
+    keys, vals, oracle = _dataset(800, seed=5)
+    store = _mkstore(4, keys, vals)
+    moves = store.begin_rebalance()
+    state = snapshot_state(store)
+    assert state["keys"].size == len(oracle)
+    assert (state["keys"] == np.array(sorted(oracle), dtype=np.uint64)).all()
+    if moves:
+        store.commit_rebalance()
+    save_snapshot(store, tmp_path)
+    _assert_bitwise(restore_store(load_snapshot(tmp_path), n_shards=2,
+                                  tree_cfg=GROWTH, cache_cfg=None), oracle)
+
+
+def test_snapshot_latest_step_and_keep_discipline(tmp_path):
+    """Snapshots ride CheckpointManager steps: the newest committed step
+    wins by default and old steps are pruned past ``keep``."""
+    keys, vals, oracle = _dataset(400, seed=9)
+    store = _mkstore(2, keys, vals)
+    save_snapshot(store, tmp_path, step=1, keep=2)
+    fresh = np.array([7, 11, 13], dtype=np.uint64)
+    store.put(fresh, fresh * np.uint64(2))
+    for k in fresh.tolist():
+        oracle[k] = k * 2
+    save_snapshot(store, tmp_path, step=2, keep=2)
+    snap = load_snapshot(tmp_path)  # latest step = 2
+    assert snap.n_keys == len(oracle)
+    _assert_bitwise(restore_store(snap, n_shards=4, tree_cfg=GROWTH,
+                                  cache_cfg=None), oracle)
+    assert load_snapshot(tmp_path, 1).n_keys == len(oracle) - 3
+
+
+# ------------------------------------------------------------ live reshard
+@pytest.mark.parametrize("n_from,n_to", [(2, 4), (4, 2), (4, 1), (1, 4)])
+def test_live_reshard_serves_through_the_flip(n_from, n_to):
+    """Split-phase reshard with traffic interleaved at every stage: reads
+    under the old epoch drain over the retired generation (pre-flip
+    snapshot), current-epoch ops see every acked write, and the census is
+    bitwise-equal before, during and after the flip."""
+    keys, vals, oracle = _dataset(1100, seed=n_from * 13 + n_to)
+    store = _mkstore(n_from, keys, vals)
+    probe = keys[::23]
+    _assert_bitwise(store, oracle)
+
+    old_epoch = store.boundary_epoch
+    installed = store.begin_reshard(n_to)
+    assert installed is not None and installed.size == n_to - 1
+    assert store.in_handoff and store.n_shards == n_to
+    # old-epoch waves still route over the retired n_from-wide generation
+    _assert_get(store, oracle, probe, epoch=old_epoch)
+    _assert_range(store, oracle, probe[:16], epoch=old_epoch)
+    # current-epoch ops serve the new width mid-handoff, writes included
+    _assert_get(store, oracle, probe)
+    fresh = np.arange(1, 60, dtype=np.uint64) * np.uint64(2**41)
+    assert (store.put(fresh, fresh ^ np.uint64(5)) == 0).all()
+    for k in fresh.tolist():
+        oracle[k] = k ^ 5
+    dead = keys[::31]
+    assert (store.delete(dead) == 0).all()
+    for k in dead.tolist():
+        oracle.pop(k, None)
+    _assert_bitwise(store, oracle)  # mid-handoff census == oracle
+    # the retired generation is a pre-flip snapshot: old-epoch reads of
+    # keys untouched since the flip still serve
+    untouched = np.setdiff1d(probe, np.concatenate([fresh, dead]))
+    _assert_get(store, oracle, untouched, epoch=old_epoch)
+
+    moved = store.commit_reshard()
+    assert moved == 1100 or moved == len(
+        {int(k) for k in keys}
+    )  # pre-flip census size
+    assert not store.in_handoff and store.reshards == 1
+    assert store.resharded_keys == moved
+    _assert_bitwise(store, oracle)
+    _assert_get(store, oracle, np.concatenate([probe, fresh, dead]))
+    _assert_range(store, oracle, probe[:16])
+
+
+def test_reshard_noop_and_same_count_with_boundaries():
+    """reshard(N) at width N is a no-op; explicit boundaries at the same
+    width still flip the epoch (a planned boundary move)."""
+    keys, vals, oracle = _dataset(500, seed=21)
+    store = _mkstore(2, keys, vals)
+    e0 = store.boundary_epoch
+    report = store.reshard(2)
+    assert report["resharded_keys"] == 0 and store.boundary_epoch == e0
+    mid = np.array([keys[len(keys) // 3]], dtype=np.uint64)
+    report = store.reshard(2, new_boundaries=mid)
+    assert report["resharded_keys"] == len(oracle)
+    assert store.boundary_epoch == e0 + 1
+    assert (store.boundaries == mid).all()
+    _assert_bitwise(store, oracle)
+
+
+def test_reshard_through_pipelined_facade_is_a_barrier():
+    """The async wave facade treats reshard like flush: queued waves drain
+    first, so a qd=2 client can reshard mid-stream and stay bitwise."""
+    from repro.serving.pipeline import PipelinedStore
+
+    keys, vals, oracle = _dataset(600, seed=33)
+    store = PipelinedStore(_mkstore(2, keys, vals), queue_depth=2)
+    store.submit_get(keys[:32])
+    report = store.reshard(4)
+    assert report["n_shards"] == 4 and store.n_shards == 4
+    store.submit_get(keys[32:64])
+    store.drain()
+    _assert_bitwise(store, oracle)
+
+
+def test_reshard_rejects_open_handoff_and_hash_tier():
+    keys, vals, _ = _dataset(400, seed=41)
+    store = _mkstore(4, keys, vals)
+    assert store.begin_reshard(2) is not None
+    with pytest.raises(AssertionError):
+        store.begin_reshard(4)
+    with pytest.raises(AssertionError):
+        store.begin_rebalance()
+    store.commit_reshard()
+    hash_store = ShardedDPAStore(
+        keys, vals, 2, GROWTH, partition="hash", cache_cfg=None
+    )
+    with pytest.raises(AssertionError):
+        hash_store.begin_reshard(4)
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_reshard_sweep_bitwise(data):
+    """Seeded sweep: snapshot-restore and live-reshard across drawn (N, M)
+    pairs with a drawn op burst in between — the shim's deterministic
+    fast lane over the whole {1,2,4}^2 grid."""
+    n_from = data.draw(st.sampled_from(COUNTS))
+    n_to = data.draw(st.sampled_from(COUNTS))
+    seed = data.draw(st.integers(0, 2**16))
+    keys, vals, oracle = _dataset(350, seed=seed)
+    store = _mkstore(n_from, keys, vals)
+    rng = np.random.default_rng(seed)
+    split = data.draw(st.booleans())
+    if split:
+        store.begin_reshard(n_to)
+    else:
+        store.reshard(n_to)
+    for _ in range(3):
+        op = data.draw(st.sampled_from(["put", "delete", "get", "range"]))
+        q = rng.choice(keys, 16)
+        if op == "put":
+            qq = np.unique(q)
+            assert (store.put(qq, qq + np.uint64(1)) == 0).all()
+            for k in qq.tolist():
+                oracle[k] = (k + 1) % 2**64
+        elif op == "delete":
+            qq = np.unique(q[:8])
+            assert (store.delete(qq) == 0).all()
+            for k in qq.tolist():
+                oracle.pop(k, None)
+        elif op == "get":
+            _assert_get(store, oracle, q)
+        else:
+            _assert_range(store, oracle, q[:8], limit=5)
+    if store.in_handoff:
+        store.commit_reshard()
+    _assert_bitwise(store, oracle)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_from", COUNTS)
+@pytest.mark.parametrize("n_to", COUNTS)
+def test_reshard_full_grid_heavy(n_from, n_to):
+    """Heavy leg: the exhaustive (N, M) grid at larger stores, reshard
+    chained straight into a second reshard back to N."""
+    keys, vals, oracle = _dataset(4000, seed=n_from + 10 * n_to)
+    store = _mkstore(n_from, keys, vals)
+    store.reshard(n_to)
+    _assert_bitwise(store, oracle)
+    fresh = np.arange(1, 200, dtype=np.uint64) * np.uint64(2**40 + 17)
+    assert (store.put(fresh, fresh) == 0).all()
+    for k in fresh.tolist():
+        oracle[k] = int(k)
+    store.reshard(n_from)
+    _assert_bitwise(store, oracle)
+    assert store.reshards == (2 if n_from != n_to else 0)
+
+
+# ---------------------------------------------------- straggler evacuation
+def _drive_waves(store, keys, oracle, n_waves, evac_reports):
+    """n_waves of spread GET traffic + a serve-loop maybe_evacuate call."""
+    q = keys[:: max(1, keys.size // 48)]
+    for _ in range(n_waves):
+        _assert_get(store, oracle, q)
+        rep = store.maybe_evacuate()
+        if rep is not None:
+            evac_reports.append(rep)
+
+
+def test_watchdog_evacuates_persistent_straggler_once():
+    """A shard persistently slower than the fleet median (injected via the
+    deterministic wave_time_hook seam) is evacuated by the serve-loop
+    planner after ``patience`` strikes — exactly once, because the hook
+    models a host REPLACEMENT (healthy after the move) — and the op
+    stream stays bitwise-equal throughout."""
+    keys, vals, oracle = _dataset(1000, seed=55)
+    wd = Watchdog(StragglerConfig(patience=2))
+    store = _mkstore(4, keys, vals, watchdog=wd)
+    store.wave_time_hook = (
+        lambda s, t: 0.050 if (s == 2 and store.evacuations == 0) else 0.001
+    )
+    reports = []
+    _drive_waves(store, keys, oracle, 8, reports)
+    assert store.evacuations == 1, wd
+    assert len(reports) == 1 and reports[0]["evacuated"] == [2]
+    assert reports[0]["moved_keys"] > 0
+    assert not wd.flagged  # the replacement host starts clean
+    _assert_bitwise(store, oracle)
+    _assert_range(store, oracle, keys[::29][:16])
+
+
+def test_watchdog_reevacuates_if_replacement_is_also_slow():
+    """If the replacement host turns out slow too, the watchdog fires
+    again after another patience window — the monitor is continuous, not
+    one-shot."""
+    keys, vals, oracle = _dataset(800, seed=56)
+    wd = Watchdog(StragglerConfig(patience=2))
+    store = _mkstore(4, keys, vals, watchdog=wd)
+    store.wave_time_hook = (
+        lambda s, t: 0.050 if (s == 1 and store.evacuations < 2) else 0.001
+    )
+    reports = []
+    _drive_waves(store, keys, oracle, 14, reports)
+    assert store.evacuations == 2
+    assert all(r["evacuated"] == [1] for r in reports)
+    _assert_bitwise(store, oracle)
+
+
+def test_watchdog_healthy_fleet_never_evacuates():
+    """Uniform wave times never trip the median-relative threshold: the
+    serve-loop call stays free and the fleet untouched."""
+    keys, vals, oracle = _dataset(900, seed=57)
+    wd = Watchdog(StragglerConfig(patience=2))
+    store = _mkstore(4, keys, vals, watchdog=wd)
+    store.wave_time_hook = lambda s, t: 0.002
+    reports = []
+    _drive_waves(store, keys, oracle, 12, reports)
+    assert store.evacuations == 0 and not reports
+    assert not wd.flagged and store.maybe_evacuate() is None
+    _assert_bitwise(store, oracle)
+
+
+def test_watchdog_sees_real_drain_times_without_hook():
+    """Unhooked, the per-shard timers feed genuine wall-clock drain
+    seconds into the watchdog — every serving shard accumulates
+    observations and nobody is flagged on a healthy in-process fleet."""
+    keys, vals, oracle = _dataset(900, seed=58)
+    wd = Watchdog(StragglerConfig(patience=3))
+    store = _mkstore(4, keys, vals, watchdog=wd)
+    q = keys[:: max(1, keys.size // 64)]
+    _assert_get(store, oracle, q)
+    _assert_range(store, oracle, q[:16])
+    assert (store.put(q, q + np.uint64(2)) == 0).all()
+    for k in q.tolist():
+        oracle[k] = (k + 2) % 2**64
+    assert set(wd.times) == set(range(4))
+    assert all(t > 0 for t in wd.times.values())
+    assert int(store.shard_drain_ns.sum()) > 0
+    _assert_bitwise(store, oracle)
+
+
+def test_reshard_resets_watchdog_and_planner_state():
+    """A reshard reassigns shard ids to hosts: straggler EWMAs, strike
+    counters and the per-width planner must all restart clean."""
+    keys, vals, oracle = _dataset(700, seed=59)
+    wd = Watchdog(StragglerConfig(patience=2))
+    store = _mkstore(4, keys, vals, watchdog=wd)
+    store.wave_time_hook = lambda s, t: 0.030 if s == 3 else 0.001
+    _assert_get(store, oracle, keys[::17])
+    assert wd.times
+    store.reshard(2)
+    assert not wd.times and not wd.strikes and not wd.flagged
+    assert store.shard_drain_ns.shape == (2,)
+    assert store.planner is not None and store.planner.load.shape == (2,)
+    _assert_bitwise(store, oracle)

@@ -177,6 +177,90 @@ def test_extract_ingest_roundtrip_partitions_exactly():
     assert ek.size == 0 and ev.size == 0
 
 
+def test_ingest_splice_matches_put_path_bitwise():
+    """The direct leaf-run splice (ingest_slice default) must be
+    semantically indistinguishable from the legacy chunked-PUT path: same
+    final census, same GET/RANGE answers — including overwrites of keys
+    the receiver already holds and interaction with its staged writes."""
+    keys = sparse(2400, seed=31)
+    vals = keys ^ np.uint64(0x77)
+    half = keys.size // 2
+    incoming = np.sort(
+        np.concatenate([keys[half :: 2], keys[1 :: 37]])  # overlap on purpose
+    )
+    inc_vals = incoming ^ np.uint64(0x99)  # overwrites must win
+    stores = {}
+    for mode in (True, False):
+        recv = DPAStore(keys[:half], vals[:half], GROWTH, cache_cfg=None)
+        # staged (unflushed) writes must survive the splice identically
+        staged = np.setdiff1d(
+            keys[:half] + np.uint64(1), np.concatenate([keys, incoming])
+        )[:40]
+        recv.put(staged, staged ^ np.uint64(0x55))
+        recv.ingest_slice(incoming, inc_vals, splice=mode)
+        stores[mode] = (recv, staged)
+    oracle = dict(zip(keys[:half].tolist(), vals[:half].tolist()))
+    for st, (recv, staged) in stores.items():
+        o = dict(oracle)
+        for k in staged.tolist():
+            o[k] = k ^ 0x55
+        for k, v in zip(incoming.tolist(), inc_vals.tolist()):
+            o[k] = v
+        rk, rv = recv.items()
+        ek = np.array(sorted(o.keys()), dtype=np.uint64)
+        assert rk.size == ek.size and (rk == ek).all(), f"splice={st}"
+        ev = np.array([o[int(k)] for k in ek], dtype=np.uint64)
+        assert (rv == ev).all(), f"splice={st}"
+    sk, sv = stores[True][0].items()
+    lk, lv = stores[False][0].items()
+    assert (sk == lk).all() and (sv == lv).all(), (
+        "splice path and PUT path must produce the identical census"
+    )
+
+
+def test_ingest_splice_duplicate_incoming_keys_last_wins():
+    """A donor batch may carry the same key twice (e.g. two merged runs);
+    the splice must keep the LAST occurrence, matching what sequential
+    PUT waves would do."""
+    recv = DPAStore(
+        np.array([10, 1000], dtype=np.uint64),
+        np.array([1, 2], dtype=np.uint64),
+        GROWTH,
+        cache_cfg=None,
+    )
+    k = np.array([50, 50, 60, 60, 60], dtype=np.uint64)
+    v = np.array([7, 8, 1, 2, 3], dtype=np.uint64)
+    recv.ingest_slice(k, v)
+    rk, rv = recv.items()
+    got = dict(zip(rk.tolist(), rv.tolist()))
+    assert got[50] == 8 and got[60] == 3
+
+
+def test_ingest_splice_cuts_stitch_traffic_vs_put_path():
+    """The point of the direct splice: a bulk migration lands as a few
+    leaf-run splices instead of thousands of per-key stitch entries —
+    assert the stitched-byte bill AND the apply count both collapse."""
+    keys = sparse(3000, seed=35)
+    vals = keys ^ np.uint64(0x13)
+    cut = keys.size // 3
+    costs = {}
+    for mode in (True, False):
+        recv = DPAStore(keys[:cut], vals[:cut], GROWTH, cache_cfg=None)
+        recv.flush()
+        b0 = recv.stats.stitched_bytes
+        a0 = recv.stats.stitch_applies
+        recv.ingest_slice(keys[cut:], vals[cut:], splice=mode)
+        recv.flush()
+        costs[mode] = (
+            recv.stats.stitched_bytes - b0,
+            recv.stats.stitch_applies - a0,
+        )
+    assert costs[True][0] < costs[False][0] / 2, (
+        f"splice must cut stitch bytes >=2x: {costs}"
+    )
+    assert costs[True][1] < costs[False][1], f"fewer applies too: {costs}"
+
+
 def test_extract_slice_drops_scan_anchors_via_on_defer():
     from repro.core.scancache import ScanCacheConfig
 
