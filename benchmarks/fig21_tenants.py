@@ -1,0 +1,199 @@
+"""Figure 21: multi-tenant serving — noisy-neighbour storm + YCSB A-F
+through the deadline wave scheduler.
+
+Two legs, both driven end-to-end through
+:class:`repro.serving.engine.KVWaveDriver` (per-tenant namespaces in one
+ordered store, token-bucket admission, weighted wave packing):
+
+* **storm** — a zipf-0.99 noisy tenant floods the scheduler with PUT
+  batches (~16x the victim's row rate) while a victim tenant issues
+  steady RANGE waves.  Emitted ``retention`` is the victim's completed
+  RANGE throughput under the storm relative to running alone; the smoke
+  gate (``run.validate_fig21_coverage``) requires >= 0.7 with admission
+  control ON and strictly worse with it OFF — the noisy-neighbour claim
+  itself.  ``leaked`` is the driver's bitwise cross-tenant row counter
+  and must be 0 (isolation is additionally pinned in tests/test_tenants).
+* **ycsb** — the full YCSB A-F mixes (fig15's definitions) submitted as
+  two interleaved tenants through the scheduler: proves every mix
+  survives the multi-tenant front end, and records the scheduler's
+  throughput per mix.
+"""
+import time
+
+import numpy as np
+
+from repro.core import DPAStore, TreeConfig
+from repro.core import keys as keymod
+from repro.core.datasets import load, zipf_indices
+from repro.serving.admission import (
+    ADMIT_OK,
+    ADMIT_RETRY,
+    AdmissionController,
+    TenantPolicy,
+)
+from repro.serving.engine import KVWaveDriver
+
+from . import common
+from .common import emit, n_keys
+from .fig15_ycsb import MIXES
+
+NOISY, VICTIM = 0, 1
+BITS = keymod.TENANT_BITS
+VICTIM_RANGE_STARTS = 64  # RANGE rows per victim round
+NOISE_FACTOR = 16  # noisy PUT rows per victim row
+ROUNDS = 8
+
+
+def _build():
+    base = np.unique(load("sparse", n_keys(), seed=3) >> np.uint64(BITS))
+    noisy_loc = base[0::2]
+    victim_loc = base[1::2]
+    enc = np.sort(
+        np.concatenate(
+            [
+                keymod.encode_tenant(NOISY, noisy_loc, BITS),
+                keymod.encode_tenant(VICTIM, victim_loc, BITS),
+            ]
+        )
+    )
+    store = DPAStore(enc, enc ^ np.uint64(0x5EED), TreeConfig(), cache_cfg=None)
+    return store, noisy_loc, victim_loc
+
+
+def _victim_round(drv, victim_loc, starts):
+    drv.request("range", starts, limit=10, tenant=VICTIM)
+
+
+def _noisy_round(drv, noisy_loc, idx, w, rng):
+    rows = VICTIM_RANGE_STARTS * NOISE_FACTOR
+    per = max(rows // 2, 1)
+    for _ in range(2):
+        sel = noisy_loc[idx[rng.integers(0, len(idx), per)]]
+        drv.request("put", sel, sel ^ np.uint64(w + 1), tenant=NOISY)
+
+
+def _drive(store, noisy_loc, victim_loc, admission, storm, rounds):
+    """Run ``rounds`` victim RANGE rounds (plus the noisy storm when
+    ``storm``); returns (victim ranges completed per second, driver)."""
+    adm = None
+    if admission:
+        # noisy tenant: rate-limited to its fair trickle + quarter QoS
+        # weight; the victim stays unlimited
+        adm = AdmissionController(
+            {
+                NOISY: TenantPolicy(
+                    rate=float(VICTIM_RANGE_STARTS), weight=0.25
+                )
+            }
+        )
+    drv = KVWaveDriver(
+        store,
+        wave_size=VICTIM_RANGE_STARTS * NOISE_FACTOR // 2,
+        max_delay=2,
+        admission=adm,
+        tenant_bits=BITS,
+    )
+    rng = np.random.default_rng(7)
+    # zipf-0.99 skew over the noisy tenant's keys (the paper-style hot set)
+    idx = zipf_indices(len(noisy_loc), 4096, alpha=0.99, seed=9)
+    starts = victim_loc[:: max(len(victim_loc) // VICTIM_RANGE_STARTS, 1)][
+        :VICTIM_RANGE_STARTS
+    ]
+    # one untimed warm round per wave shape (jit caches per shape)
+    if storm:
+        _noisy_round(drv, noisy_loc, idx, 0, rng)
+    _victim_round(drv, victim_loc, starts)
+    drv.tick(drv.max_delay)
+    drv.drain()
+    t0 = time.perf_counter()
+    victim_done = 0
+    for w in range(rounds):
+        if storm:
+            _noisy_round(drv, noisy_loc, idx, w, rng)
+        _victim_round(drv, victim_loc, starts)
+        drv.tick()
+        for rep in drv.drain():
+            if rep.tenant == VICTIM and rep.status == ADMIT_OK:
+                victim_done += 1
+    dt = time.perf_counter() - t0
+    assert victim_done == rounds, (victim_done, rounds)
+    return victim_done * VICTIM_RANGE_STARTS / dt, drv
+
+
+def _storm_leg():
+    rounds = max(ROUNDS // 4, 2) if common.SMOKE else ROUNDS
+    store, noisy_loc, victim_loc = _build()
+    alone, _ = _drive(store, noisy_loc, victim_loc, False, False, rounds)
+    for mode, admission in (("admission", True), ("noadmission", False)):
+        stormed, drv = _drive(
+            store, noisy_loc, victim_loc, admission, True, rounds
+        )
+        retention = stormed / alone
+        s = drv.scheduler_summary()
+        refused = 0
+        if admission:
+            refused = s["admission"][NOISY]["retried_keys"]
+        emit(
+            f"fig21/storm/{mode}",
+            1e6 / stormed,
+            f"retention={retention:.3f};leaked={s['leaked_rows']};"
+            f"victim_alone_kops={alone / 1e3:.2f};"
+            f"victim_storm_kops={stormed / 1e3:.2f};"
+            f"noisy_refused_keys={refused};waves={s['waves']}",
+        )
+
+
+def _ycsb_leg():
+    store, noisy_loc, victim_loc = _build()
+    pools = {NOISY: noisy_loc, VICTIM: victim_loc}
+    fresh_base = int(max(noisy_loc.max(), victim_loc.max()))
+    rng = np.random.default_rng(11)
+    w = common.wave(4096)
+    for wl, mix in MIXES.items():
+        if wl not in "ABCDEF" or len(wl) != 1:
+            continue  # INSERT/RANGE singles are fig15's; A-F is the grid
+        drv = KVWaveDriver(store, wave_size=w, max_delay=4, tenant_bits=BITS)
+        n_ops = 0
+        retries = 0
+        t0 = time.perf_counter()
+        for tenant in (NOISY, VICTIM):
+            pool = pools[tenant]
+            for op, frac in mix.items():
+                k = max(int(w * frac) // 2, 1)
+                ks = pool[rng.integers(0, len(pool), k)]
+                if op == "get":
+                    drv.request("get", ks, tenant=tenant)
+                elif op in ("update", "rmw"):
+                    drv.request("put", ks, ks ^ np.uint64(1), tenant=tenant)
+                elif op == "insert":
+                    nk = fresh_base + np.uint64(1) + np.arange(
+                        k, dtype=np.uint64
+                    )
+                    fresh_base += k
+                    drv.request("put", nk, nk, tenant=tenant)
+                elif op == "range":
+                    ks = ks[:64]
+                    k = ks.size
+                    drv.request("range", ks, limit=10, tenant=tenant)
+                n_ops += k
+            drv.tick()
+        for rep in drv.drain():
+            if rep.status == ADMIT_RETRY:
+                retries += 1
+        dt = time.perf_counter() - t0
+        s = drv.scheduler_summary()
+        emit(
+            f"fig21/ycsb/{wl}",
+            dt * 1e6 / max(n_ops, 1),
+            f"kops={n_ops / dt / 1e3:.2f};waves={s['waves']};"
+            f"retries={retries};leaked={s['leaked_rows']}",
+        )
+
+
+def run():
+    _storm_leg()
+    _ycsb_leg()
+
+
+if __name__ == "__main__":
+    run()

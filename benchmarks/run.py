@@ -276,6 +276,98 @@ def validate_fig20_coverage(rows) -> list:
     return problems
 
 
+def validate_fig21_coverage(rows) -> list:
+    """The multi-tenant sweep must produce BOTH storm cells (admission on
+    and off) plus every YCSB A-F cell driven through the wave scheduler
+    (rows are ``fig21/storm/<mode>`` and ``fig21/ycsb/<WL>``).  Storm
+    cells need parseable ``retention`` and ``leaked=0`` (bitwise
+    cross-tenant rows — any leak is an isolation hole); with admission ON
+    the victim's RANGE retention must stay >= 0.7 AND beat the
+    admission-OFF cell — one noisy tenant not collapsing another's RANGE
+    throughput is THE multi-tenant claim, so either failure fails the
+    smoke gate."""
+    problems = []
+    retention = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "fig21":
+            continue
+        fields = derived_fields(derived)
+        if parts[1] == "storm":
+            try:
+                retention[parts[2]] = float(fields.get("retention", ""))
+            except ValueError:
+                problems.append(f"{name}: missing/bad retention field")
+            if fields.get("leaked", "") != "0":
+                problems.append(
+                    f"{name}: leaked must be 0, got "
+                    f"{fields.get('leaked', '<missing>')} "
+                    f"(cross-tenant isolation hole)"
+                )
+        elif parts[1] == "ycsb":
+            for key in ("kops", "retries"):
+                if key not in fields:
+                    problems.append(f"{name}: missing {key} field")
+            if fields.get("leaked", "") != "0":
+                problems.append(
+                    f"{name}: leaked must be 0, got "
+                    f"{fields.get('leaked', '<missing>')}"
+                )
+    for mode in ("admission", "noadmission"):
+        if mode not in retention:
+            problems.append(f"fig21: missing storm/{mode} cell")
+    if {"admission", "noadmission"} <= retention.keys():
+        if retention["admission"] < 0.7:
+            problems.append(
+                f"fig21/storm/admission: victim RANGE retention "
+                f"{retention['admission']:.3f} < 0.7 (noisy neighbour "
+                f"collapsed the victim despite admission control)"
+            )
+        if retention["noadmission"] >= retention["admission"]:
+            problems.append(
+                f"fig21/storm: admission OFF retention "
+                f"{retention['noadmission']:.3f} not worse than ON "
+                f"{retention['admission']:.3f} — admission control shows "
+                f"no measurable protection"
+            )
+    missing = {f"fig21/ycsb/{wl}" for wl in "ABCDEF"} - {
+        r.split(",", 1)[0] for r in rows
+    }
+    for name in sorted(missing):
+        problems.append(f"fig21: missing {name} cell")
+    return problems
+
+
+def tenant_metrics(rows) -> dict:
+    """Victim RANGE retention / leak counters per storm cell + scheduler
+    throughput per YCSB mix — surfaced in the smoke artifact so the perf
+    trajectory records what multi-tenant isolation costs."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig21/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            if "/storm/" in name:
+                out[name] = {
+                    "retention": float(fields["retention"]),
+                    "leaked": int(fields["leaked"]),
+                    "victim_storm_kops": float(fields["victim_storm_kops"]),
+                    "noisy_refused_keys": int(fields["noisy_refused_keys"]),
+                }
+            else:
+                out[name] = {
+                    "kops": float(fields["kops"]),
+                    "retries": int(fields["retries"]),
+                    "leaked": int(fields["leaked"]),
+                }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
 def elastic_metrics(rows) -> dict:
     """Reshard retention / wall-clock / lost-acked + snapshot round-trip
     timings per fig20 cell — surfaced in the smoke artifact so the perf
@@ -452,6 +544,7 @@ def main(argv=None) -> None:
         fig18_rebalance,
         fig19_replication,
         fig20_elastic,
+        fig21_tenants,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -473,6 +566,7 @@ def main(argv=None) -> None:
         ("fig18_rebalance", fig18_rebalance),
         ("fig19_replication", fig19_replication),
         ("fig20_elastic", fig20_elastic),
+        ("fig21_tenants", fig21_tenants),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -503,6 +597,8 @@ def main(argv=None) -> None:
             problems += validate_fig19_coverage(common.ROWS)
         if "fig20_elastic" not in failures:
             problems += validate_fig20_coverage(common.ROWS)
+        if "fig21_tenants" not in failures:
+            problems += validate_fig21_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -516,6 +612,7 @@ def main(argv=None) -> None:
             "rebalance_metrics": rebalance_metrics(common.ROWS),
             "replication_metrics": replication_metrics(common.ROWS),
             "elastic_metrics": elastic_metrics(common.ROWS),
+            "tenant_metrics": tenant_metrics(common.ROWS),
             "range_continuation": range_continuation_metrics(common.ROWS),
         }
         with open(args.out, "w") as f:

@@ -125,3 +125,115 @@ def delta_f32_np(keys: np.ndarray, anchor: np.uint64) -> np.ndarray:
     """Host mirror of the device delta computation (f64, exact for spans<2^53)."""
     keys = np.asarray(keys, dtype=np.uint64)
     return (keys - np.uint64(anchor)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# tenant namespaces: composite key encoding
+# ---------------------------------------------------------------------------
+#
+# A tenant id occupies the top TENANT_BITS of the u64 key space:
+#
+#     63                    63-bits                                     0
+#     ┌──────────┬────────────────────────────────────────────────────┐
+#     │ tenant   │                 tenant-local key                    │
+#     └──────────┴────────────────────────────────────────────────────┘
+#
+# Because the prefix rides the MOST significant bits, every tenant owns one
+# contiguous slab [tenant_floor, tenant_ceil) of the global ordered key
+# space — GET/PUT/DELETE route unchanged, RANGE stays a single ordered
+# scan clipped at the tenant's ceiling, and quantile boundary fitting /
+# resharding keep working on the encoded keys with no tenant awareness at
+# all (a slab simply spans one or more shard slices).
+#
+# The arithmetic is exact limb arithmetic on the (hi, lo) u32 pair the
+# device uses: for bits <= 32 the whole prefix lives in the hi limb, so
+# encode is ``hi' = (tid << (32-bits)) | hi`` with lo untouched — the same
+# shift the device-side ``limb_tenant`` performs in reverse.
+
+TENANT_BITS = 8  # default namespace width: up to 256 tenants
+
+
+def _check_bits(bits: int) -> int:
+    if not (1 <= int(bits) <= 32):
+        raise ValueError(f"tenant prefix must use 1..32 bits, got {bits}")
+    return int(bits)
+
+
+def tenant_capacity(bits: int = TENANT_BITS) -> int:
+    """Number of tenant namespaces a ``bits``-wide prefix can hold."""
+    return 1 << _check_bits(bits)
+
+
+def tenant_span_bits(bits: int = TENANT_BITS) -> int:
+    """Width of each tenant's local key space (64 - prefix bits)."""
+    return 64 - _check_bits(bits)
+
+
+def encode_tenant(tid: int, keys, bits: int = TENANT_BITS) -> np.ndarray:
+    """Pack tenant ``tid`` into the top ``bits`` of local u64 ``keys``.
+
+    Exact limb arithmetic: the prefix is OR-ed into the hi limb after an
+    exact right shift — no float round-trip can perturb the key.  Raises
+    ``ValueError`` when ``tid`` does not fit the prefix or any local key
+    does not fit the remaining ``64 - bits`` (a silent wrap would leak the
+    overflowing keys into a neighbour's namespace)."""
+    bits = _check_bits(bits)
+    if not (0 <= int(tid) < (1 << bits)):
+        raise ValueError(
+            f"tenant id {tid} out of range for {bits}-bit prefix "
+            f"(capacity {1 << bits})"
+        )
+    keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+    limbs = split_u64(keys)
+    hi = limbs[..., 0]
+    if np.any(hi >> np.uint32(32 - bits)):
+        raise ValueError(
+            f"local key(s) exceed the {64 - bits}-bit tenant namespace"
+        )
+    limbs[..., 0] = hi | np.uint32(int(tid) << (32 - bits))
+    return join_u64(limbs)
+
+
+def decode_tenant(keys, bits: int = TENANT_BITS):
+    """Inverse of :func:`encode_tenant`: ``(tenant ids, local keys)``."""
+    bits = _check_bits(bits)
+    keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+    limbs = split_u64(keys)
+    hi = limbs[..., 0]
+    tids = (hi >> np.uint32(32 - bits)).astype(np.int64)
+    limbs[..., 0] = hi & np.uint32((1 << (32 - bits)) - 1)
+    return tids, join_u64(limbs)
+
+
+def tenant_floor(tid: int, bits: int = TENANT_BITS) -> np.uint64:
+    """Inclusive floor of tenant ``tid``'s slab of the global key space."""
+    return encode_tenant(tid, np.uint64(0), bits)[0]
+
+
+def tenant_ceil(tid: int, bits: int = TENANT_BITS) -> np.uint64:
+    """EXCLUSIVE ceiling of tenant ``tid``'s slab — the ``k_max`` a RANGE
+    must clip at so a scan never walks into the next tenant's namespace.
+
+    For the last tenant the true ceiling is 2^64 (unrepresentable), so
+    ``KEY_MAX`` is returned instead: the only key that clip excludes is
+    the reserved 2^64-1 sentinel, which the write path rejects anyway."""
+    bits = _check_bits(bits)
+    if not (0 <= int(tid) < (1 << bits)):
+        raise ValueError(
+            f"tenant id {tid} out of range for {bits}-bit prefix"
+        )
+    if int(tid) == (1 << bits) - 1:
+        return KEY_MAX
+    return tenant_floor(int(tid) + 1, bits)
+
+
+def tenant_of_np(keys, bits: int = TENANT_BITS) -> np.ndarray:
+    """Tenant id of each encoded u64 key (host mirror of ``limb_tenant``)."""
+    return decode_tenant(keys, bits)[0]
+
+
+def limb_tenant(hi, bits: int = TENANT_BITS):
+    """Device-side tenant id of limb keys: the prefix lives entirely in the
+    hi limb, so one exact u32 shift recovers it (must stay bit-identical to
+    :func:`tenant_of_np` — pinned in tests/test_keys.py)."""
+    return (hi >> jnp.uint32(32 - _check_bits(bits))).astype(jnp.int32)

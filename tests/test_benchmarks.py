@@ -438,6 +438,82 @@ def test_fig20_smoke_rows_show_elastic_costs():
     assert snap["restore_equal"] == 1 and snap["save_s"] >= 0, met
 
 
+@pytest.mark.slow
+def test_fig21_smoke_rows_show_tenant_isolation():
+    """The multi-tenant storm: with admission control ON the victim
+    tenant's RANGE throughput must retain >= 0.7 of its solo rate while a
+    zipf-0.99 noisy tenant floods the scheduler — and measurably LESS with
+    admission OFF; zero cross-tenant rows either way.  The YCSB A-F grid
+    must run end to end through the wave scheduler."""
+    from benchmarks import common, fig21_tenants
+    from benchmarks.run import (
+        tenant_metrics,
+        validate_fig21_coverage,
+        validate_rows,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig21_tenants.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig21_coverage(rows)
+    met = tenant_metrics(rows)
+    on = met["fig21/storm/admission"]
+    off = met["fig21/storm/noadmission"]
+    assert on["retention"] >= 0.7, met
+    assert off["retention"] < on["retention"], met
+    assert on["leaked"] == 0 and off["leaked"] == 0, met
+    assert on["noisy_refused_keys"] > 0, met  # admission actually engaged
+    for wl in "ABCDEF":
+        cell = met[f"fig21/ycsb/{wl}"]
+        assert cell["kops"] > 0 and cell["leaked"] == 0, (wl, cell)
+
+
+def test_fig21_gate_rejects_leaks_and_collapsed_retention():
+    """The multi-tenant schema gate itself: a storm cell leaking rows,
+    victim retention below 0.7, admission OFF not measurably worse than
+    ON, or a missing YCSB cell must all be flagged."""
+    from benchmarks.run import validate_fig21_coverage
+
+    good = [
+        "fig21/storm/admission,10.0,retention=0.95;leaked=0;"
+        "victim_alone_kops=5.0;victim_storm_kops=4.7;"
+        "noisy_refused_keys=900;waves=6",
+        "fig21/storm/noadmission,90.0,retention=0.12;leaked=0;"
+        "victim_alone_kops=5.0;victim_storm_kops=0.6;"
+        "noisy_refused_keys=0;waves=20",
+    ] + [
+        f"fig21/ycsb/{wl},5.0,kops=2.0;waves=3;retries=0;leaked=0"
+        for wl in "ABCDEF"
+    ]
+    assert not validate_fig21_coverage(good)
+    leaked = [r.replace("leaked=0", "leaked=4") for r in good]
+    assert any("isolation" in p for p in validate_fig21_coverage(leaked))
+    collapsed = [
+        r.replace("retention=0.95", "retention=0.41") for r in good
+    ]
+    assert any("0.7" in p for p in validate_fig21_coverage(collapsed))
+    useless = [
+        r.replace("retention=0.12", "retention=0.96") for r in good
+    ]
+    assert any(
+        "no measurable protection" in p
+        for p in validate_fig21_coverage(useless)
+    )
+    noycsb = [r for r in good if "/ycsb/E" not in r]
+    assert any("ycsb/E" in p for p in validate_fig21_coverage(noycsb))
+    nostorm = [r for r in good if "/storm/" not in r]
+    assert any(
+        "storm/admission" in p for p in validate_fig21_coverage(nostorm)
+    )
+
+
 def test_fig20_gate_rejects_lost_acked_and_unequal_restore():
     """The elastic schema gate itself: a reshard cell losing acked writes,
     a snapshot cell that did not restore bitwise-equal, or a missing mode

@@ -4,18 +4,32 @@ import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
+import pytest
+
 from repro.core.keys import (
-    split_u64,
-    join_u64,
-    limb_lt,
-    limb_le,
+    KEY_MAX,
+    TENANT_BITS,
+    decode_tenant,
+    encode_tenant,
     limb_eq,
-    limb_sub_to_f32,
     limb_hash,
     limb_hash_np,
+    limb_le,
+    limb_lt,
+    limb_sub_to_f32,
+    limb_tenant,
+    join_u64,
+    split_u64,
+    tenant_capacity,
+    tenant_ceil,
+    tenant_floor,
+    tenant_of_np,
+    tenant_span_bits,
 )
 
 u64s = st.integers(min_value=0, max_value=2**64 - 1)
+local_keys = st.integers(min_value=0, max_value=2 ** tenant_span_bits() - 1)
+tenant_ids = st.integers(min_value=0, max_value=tenant_capacity() - 1)
 
 
 @given(st.lists(u64s, min_size=1, max_size=64))
@@ -67,3 +81,80 @@ def test_hash_np_jnp_bitwise_equal(xs, salt):
     )
     host = limb_hash_np(arr, salt)
     assert np.array_equal(dev, host)
+
+
+# ---------------------------------------------------------------------------
+# tenant namespace encoding
+# ---------------------------------------------------------------------------
+
+
+@given(tenant_ids, st.lists(local_keys, min_size=1, max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_tenant_encode_decode_roundtrip(tid, lks):
+    lk = np.array(lks, dtype=np.uint64)
+    enc = encode_tenant(tid, lk)
+    tids, dec = decode_tenant(enc)
+    assert (tids == tid).all()
+    assert np.array_equal(dec, lk)
+    assert np.array_equal(tenant_of_np(enc), tids)
+
+
+@given(tenant_ids, st.lists(local_keys, min_size=2, max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_tenant_encoding_preserves_local_order(tid, lks):
+    """The prefix rides the TOP bits, so encoding is order-preserving
+    within a tenant — RANGE over encoded keys scans local order."""
+    lk = np.sort(np.array(lks, dtype=np.uint64))
+    enc = encode_tenant(tid, lk)
+    assert (np.diff(enc.view(np.uint64)) >= 0).all() if len(enc) > 1 else True
+    assert np.array_equal(np.sort(enc), enc)
+
+
+@given(tenant_ids, local_keys)
+@settings(max_examples=200, deadline=None)
+def test_tenant_slabs_are_disjoint_and_ordered(tid, lk):
+    """Every encoded key lands inside [floor, ceil) of ITS tenant — slabs
+    tile the global key space without overlap (last tenant's ceiling is
+    KEY_MAX, the reserved write-rejected sentinel)."""
+    enc = encode_tenant(tid, np.uint64(lk))[0]
+    assert enc >= tenant_floor(tid)
+    if tid == tenant_capacity() - 1:
+        assert enc <= tenant_ceil(tid) == KEY_MAX
+    else:
+        assert enc < tenant_ceil(tid)
+        assert tenant_ceil(tid) == tenant_floor(tid + 1)
+
+
+@given(st.lists(u64s, min_size=1, max_size=32))
+@settings(max_examples=50, deadline=None)
+def test_tenant_device_host_bitwise_equal(xs):
+    """limb_tenant (device, hi limb only) must agree with tenant_of_np
+    (host, u64) on arbitrary encoded keys."""
+    arr = np.array(xs, dtype=np.uint64)
+    limbs = split_u64(arr)
+    dev = np.asarray(limb_tenant(jnp.asarray(limbs[:, 0])))
+    assert np.array_equal(dev.astype(np.int64), tenant_of_np(arr))
+
+
+def test_tenant_encode_rejects_out_of_range():
+    with pytest.raises(ValueError, match="out of range"):
+        encode_tenant(tenant_capacity(), np.uint64(1))
+    with pytest.raises(ValueError, match="out of range"):
+        encode_tenant(-1, np.uint64(1))
+    # a local key that would wrap into the neighbour's slab must raise,
+    # not silently leak
+    with pytest.raises(ValueError, match="namespace"):
+        encode_tenant(0, np.uint64(1) << np.uint64(tenant_span_bits()))
+    with pytest.raises(ValueError, match="bits"):
+        encode_tenant(0, np.uint64(1), bits=0)
+    with pytest.raises(ValueError, match="bits"):
+        tenant_ceil(0, bits=33)
+
+
+def test_tenant_prefix_width_is_configurable():
+    """Non-default widths: 4 bits -> 16 slabs of 2^60 keys each."""
+    enc = encode_tenant(9, np.uint64(12345), bits=4)
+    tids, dec = decode_tenant(enc, bits=4)
+    assert tids[0] == 9 and dec[0] == 12345
+    assert tenant_capacity(4) == 16 and tenant_span_bits(4) == 60
+    assert tenant_ceil(15, bits=4) == KEY_MAX
