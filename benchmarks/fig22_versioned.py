@@ -1,0 +1,145 @@
+"""Figure 22 (repo extension): point-in-time versioned reads + TTL expiry.
+
+The versioned-read claim: ``snapshot_epoch()`` pins the stitched state and
+``get/range(as_of=E)`` keep serving EXACTLY the dict oracle frozen at E —
+bitwise — while the live store overwrites every key, and (on the range
+tier) rebalances the boundary vector out from under the snapshot.  The
+versioned read path pays one extra gather per leaf visit (the per-epoch
+resolve table); the cells report its measured per-request cost next to the
+live path so the trajectory records the multi-version tax.
+
+The TTL claim: keys written with ``ttl=K`` read as absent once the logical
+clock passes their deadline — first by read-time filtering, then, after
+``ttl_sweep()``, by physical reclamation — with NO observable difference
+between the two (``filter_reclaim_equal``), while a pre-expiry ``as_of``
+epoch still serves them (``versioned_expiry``: expiry is a versioned
+event, like deletion).
+
+Smoke-gate fields (``validate_fig22_coverage``): every cell's
+``as_of_match`` must be 1 (a frozen read diverging from its oracle is a
+correctness regression, not a perf datum), the TTL cell's ``reclaimed``
+must be nonzero under the expiring workload and ``filter_reclaim_equal``/
+``versioned_expiry`` must hold.
+"""
+
+import numpy as np
+
+from repro.core.datasets import load
+from repro.core.store import DPAStore
+from repro.core.tree import TreeConfig
+from repro.distributed.kvshard import ShardedDPAStore
+
+from . import common
+from .common import emit, time_op, wave
+
+RETAIN = 24
+LIMIT = 10
+WAVE = 512
+
+
+def _build(tier: str, keys, vals):
+    cfg = TreeConfig(growth=16.0)
+    if tier == "single":
+        return DPAStore(keys, vals, cfg, cache_cfg=None, retain_epochs=RETAIN)
+    return ShardedDPAStore(
+        keys, vals, 2, cfg, partition="range", cache_cfg=None,
+        retain_epochs=RETAIN,
+    )
+
+
+def _frozen_match(store, frozen, q, as_of) -> bool:
+    vals, found = store.get(q, as_of=as_of)
+    want_found = np.array([int(k) in frozen for k in q.tolist()])
+    if not np.array_equal(np.asarray(found, dtype=bool), want_found):
+        return False
+    got = np.asarray(vals, dtype=np.uint64)[want_found]
+    want = np.array(
+        [frozen[int(k)] for k in q[want_found].tolist()], dtype=np.uint64
+    )
+    return bool(np.array_equal(got, want))
+
+
+def _paginate_match(store, frozen, as_of, page=64) -> int:
+    """Full as_of pagination vs the frozen oracle; returns pages walked
+    (0 = mismatch)."""
+    want = sorted((int(k), int(v)) for k, v in frozen.items())
+    got, k, pages = [], np.uint64(1), 0
+    while pages < 10_000:
+        r = store.range(np.asarray([k], dtype=np.uint64), limit=page, as_of=as_of)
+        c = int(np.asarray(r.counts)[0])
+        rk = np.asarray(r.keys, dtype=np.uint64)[0, :c]
+        got.extend(zip(rk.tolist(), np.asarray(r.vals, np.uint64)[0, :c].tolist()))
+        pages += 1
+        if c < page:
+            break
+        k = rk[-1] + np.uint64(1)
+    return pages if got == want else 0
+
+
+def run():
+    rng = np.random.default_rng(22)
+    n = common.n_keys()
+    w = wave(WAVE)
+    keys = load("sparse", n, seed=22)
+    vals = keys ^ np.uint64(0x22A5)
+
+    for tier in ("single", "range"):
+        store = _build(tier, keys, vals)
+        frozen = dict(zip(keys.tolist(), vals.tolist()))
+        snap = store.snapshot_epoch()
+        # live divergence: clobber a key wave, add fresh keys; on the range
+        # tier also move the boundaries out from under the pinned snapshot
+        over = rng.choice(keys, w)
+        store.put(over, over ^ np.uint64(0x5EED))
+        fresh = keys.max() + np.uint64(1) + np.arange(w, dtype=np.uint64) * np.uint64(3)
+        store.put(fresh, fresh)
+        store.flush()
+        if tier == "range":
+            store.rebalance()
+        q = np.concatenate([rng.choice(keys, w - 16), fresh[:16]])
+        live_us = time_op(store.get, q) / q.size
+        as_of_us = time_op(store.get, q, as_of=snap) / q.size
+        match = _frozen_match(store, frozen, q, snap)
+        pages = _paginate_match(store, frozen, snap)
+        emit(
+            f"fig22/as_of/{tier}",
+            as_of_us * 1e6,
+            f"as_of_match={int(match and pages > 0)};pages={pages};"
+            f"live_get_us={live_us * 1e6:.3f};"
+            f"tax={as_of_us / max(live_us, 1e-12):.2f};retained={RETAIN}",
+        )
+
+    # TTL: expiring write wave -> filter -> physical sweep -> equivalence
+    store = _build("range", keys, vals)
+    ttl_keys = keys.max() + np.uint64(1) + np.arange(w, dtype=np.uint64) * np.uint64(7)
+    store.put(ttl_keys, ttl_keys ^ np.uint64(0x77), ttl=2)
+    snap_pre = store.snapshot_epoch()  # pre-expiry epoch still sees them
+    store.ttl.tick(2)
+    probe = np.concatenate([rng.choice(keys, w // 2), ttl_keys[: w // 2]])
+    filt_v, filt_f = store.get(probe)
+    sweep_s = time_op(store.ttl_sweep, repeats=1)
+    reclaimed = w - int(np.isin(ttl_keys, store.items()[0]).sum())
+    swept_v, swept_f = store.get(probe)
+    filter_reclaim_equal = bool(
+        np.array_equal(np.asarray(filt_f), np.asarray(swept_f))
+        and np.array_equal(
+            np.asarray(filt_v)[np.asarray(filt_f)],
+            np.asarray(swept_v)[np.asarray(swept_f)],
+        )
+    )
+    pre_frozen = dict(zip(keys.tolist(), vals.tolist()))
+    pre_frozen.update(
+        {int(k): int(k ^ np.uint64(0x77)) for k in ttl_keys}
+    )
+    versioned_expiry = _frozen_match(store, pre_frozen, probe, snap_pre)
+    emit(
+        "fig22/ttl/sweep",
+        sweep_s / max(reclaimed, 1) * 1e6,
+        f"as_of_match={int(versioned_expiry)};reclaimed={reclaimed};"
+        f"filter_reclaim_equal={int(filter_reclaim_equal)};"
+        f"versioned_expiry={int(versioned_expiry)};sweep_s={sweep_s:.3f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -276,6 +276,52 @@ def validate_fig20_coverage(rows) -> list:
     return problems
 
 
+def validate_fig22_coverage(rows) -> list:
+    """The versioned sweep must produce an ``as_of`` cell per tier (single
+    + range) and the TTL sweep cell (rows are ``fig22/as_of/<tier>`` and
+    ``fig22/ttl/sweep``).  Every cell's ``as_of_match`` must be 1 — a
+    point-in-time read diverging from its frozen oracle is a correctness
+    regression, so it fails the smoke gate rather than shipping as a perf
+    datum.  The TTL cell additionally needs ``reclaimed`` nonzero under the
+    expiring workload (a sweep that reclaims nothing means expiry never
+    fired) and ``filter_reclaim_equal=1`` (reads must be bitwise-identical
+    before and after physical reclamation)."""
+    problems = []
+    cells = set()
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        parts = name.split("/")
+        if len(parts) != 3 or parts[0] != "fig22":
+            continue
+        fields = derived_fields(derived)
+        cells.add(f"{parts[1]}/{parts[2]}")
+        if fields.get("as_of_match", "") != "1":
+            problems.append(
+                f"{name}: as_of_match must be 1, got "
+                f"{fields.get('as_of_match', '<missing>')} "
+                f"(point-in-time read diverged from its frozen oracle)"
+            )
+        if parts[1] == "ttl":
+            try:
+                reclaimed = int(fields.get("reclaimed", ""))
+            except ValueError:
+                reclaimed = -1
+            if reclaimed <= 0:
+                problems.append(
+                    f"{name}: reclaimed must be > 0 under the expiring "
+                    f"workload, got {fields.get('reclaimed', '<missing>')}"
+                )
+            if fields.get("filter_reclaim_equal", "") != "1":
+                problems.append(
+                    f"{name}: filter_reclaim_equal must be 1 (filtered and "
+                    f"physically-reclaimed reads diverged)"
+                )
+    for cell in ("as_of/single", "as_of/range", "ttl/sweep"):
+        if cell not in cells:
+            problems.append(f"fig22: missing {cell} cell")
+    return problems
+
+
 def validate_fig21_coverage(rows) -> list:
     """The multi-tenant sweep must produce BOTH storm cells (admission on
     and off) plus every YCSB A-F cell driven through the wave scheduler
@@ -391,6 +437,36 @@ def elastic_metrics(rows) -> dict:
                     "reshard_s": float(fields["reshard_s"]),
                     "lost_acked": int(fields["lost_acked"]),
                     "spread_after": float(fields["spread_after"]),
+                }
+        except (KeyError, ValueError):
+            pass
+    return out
+
+
+def versioned_metrics(rows) -> dict:
+    """Point-in-time read tax + TTL sweep yield per fig22 cell — surfaced
+    in the smoke artifact so the trajectory records what the multi-version
+    window costs and that expiry keeps physically reclaiming."""
+    out = {}
+    for row in rows:
+        name, _, derived = row.split(",", 2)
+        if not name.startswith("fig22/"):
+            continue
+        fields = derived_fields(derived)
+        try:
+            if "/ttl/" in name:
+                out[name] = {
+                    "reclaimed": int(fields["reclaimed"]),
+                    "filter_reclaim_equal": int(fields["filter_reclaim_equal"]),
+                    "versioned_expiry": int(fields["versioned_expiry"]),
+                    "sweep_s": float(fields["sweep_s"]),
+                }
+            else:
+                out[name] = {
+                    "as_of_match": int(fields["as_of_match"]),
+                    "pages": int(fields["pages"]),
+                    "tax": float(fields["tax"]),
+                    "retained": int(fields["retained"]),
                 }
         except (KeyError, ValueError):
             pass
@@ -545,6 +621,7 @@ def main(argv=None) -> None:
         fig19_replication,
         fig20_elastic,
         fig21_tenants,
+        fig22_versioned,
         perfmodel_check,
         roofline,
         table1_memory,
@@ -567,6 +644,7 @@ def main(argv=None) -> None:
         ("fig19_replication", fig19_replication),
         ("fig20_elastic", fig20_elastic),
         ("fig21_tenants", fig21_tenants),
+        ("fig22_versioned", fig22_versioned),
         ("bulkload", bulkload),
         ("roofline", roofline),
     ]
@@ -599,6 +677,8 @@ def main(argv=None) -> None:
             problems += validate_fig20_coverage(common.ROWS)
         if "fig21_tenants" not in failures:
             problems += validate_fig21_coverage(common.ROWS)
+        if "fig22_versioned" not in failures:
+            problems += validate_fig22_coverage(common.ROWS)
         artifact = {
             "mode": "smoke",
             "rows": common.ROWS,
@@ -612,6 +692,7 @@ def main(argv=None) -> None:
             "rebalance_metrics": rebalance_metrics(common.ROWS),
             "replication_metrics": replication_metrics(common.ROWS),
             "elastic_metrics": elastic_metrics(common.ROWS),
+            "versioned_metrics": versioned_metrics(common.ROWS),
             "tenant_metrics": tenant_metrics(common.ROWS),
             "range_continuation": range_continuation_metrics(common.ROWS),
         }

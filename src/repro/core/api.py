@@ -7,18 +7,26 @@ it, but this repo's surfaces had drifted: ``DPAStore`` and
 ``epoch``/``k_max`` were sharded-only), and on whether tuning knobs were
 positional.  This module pins the contract both implement identically:
 
-    get(keys, *, epoch=None)                  -> (vals u64, found bool)
-    put(keys, vals, *, auto_retry=True)       -> status i32 per key
+    get(keys, *, epoch=None, as_of=None)      -> (vals u64, found bool)
+    put(keys, vals, *, auto_retry=True, ttl=None) -> status i32 per key
     delete(keys, *, auto_retry=True)          -> status i32 per key
-    range(k_min, limit, *, k_max=None, epoch=None) -> RangeResult
+    range(k_min, limit, *, k_max=None, epoch=None, as_of=None) -> RangeResult
 
 plus the shared tuning kwargs (``max_leaves``; the sharded tier also takes
 ``fanout``) which stay keyword arguments with identical defaults.  ``epoch``
 selects the ownership epoch a request wave was admitted under (rebalance
 handoffs and primary failovers keep two epochs live — see
 ``distributed.rebalance.OwnershipTable``); implementations without routing
-epochs accept only ``None``.  Divergent legacy spellings keep working
-through :func:`warn_legacy` shims that emit ``DeprecationWarning``.
+epochs accept only ``None``.  ``as_of`` selects a *version* epoch — a
+point-in-time read against the snapshot named by ``snapshot_epoch()``,
+served from the bounded multi-version window kept when the store was built
+with ``retain_epochs > 0``; reads past the retained horizon raise
+:class:`~repro.core.epoch.EpochRetiredError` (re-exported here).  ``ttl``
+stamps written keys with a logical-clock deadline (see
+``repro.core.ttl.TTLTracker``): expired keys read as absent and are
+physically reclaimed by the ``ttl_sweep()`` compaction pass.  Divergent
+legacy spellings keep working through :func:`warn_legacy` shims that emit
+``DeprecationWarning``.
 
 :class:`RangeResult` replaces the ad-hoc tuple returns of ``range`` /
 ``range_with_state``: named fields for new code, tuple-unpacking at the
@@ -32,6 +40,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
+
+from .epoch import EpochRetiredError  # noqa: F401  (canonical re-export)
 
 
 def warn_legacy(method: str, old: str, new: str) -> None:
@@ -122,17 +132,32 @@ class KVStore(Protocol):
     defaults); ``tests/test_api_protocol.py`` asserts conformance from one
     table of cases across single-store, hash, range and replicated tiers."""
 
-    def get(self, keys, *, epoch: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+    def get(
+        self,
+        keys,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched point lookup: (vals u64, found bool), row-aligned with
         ``keys``.  ``epoch`` routes by the ownership epoch the wave was
         admitted under (implementations without routing epochs accept only
-        ``None``)."""
+        ``None``).  ``as_of`` pins the read to a retained version epoch
+        (:class:`EpochRetiredError` outside the window)."""
         ...
 
-    def put(self, keys, vals, *, auto_retry: bool = True) -> np.ndarray:
+    def put(
+        self,
+        keys,
+        vals,
+        *,
+        auto_retry: bool = True,
+        ttl: Optional[int] = None,
+    ) -> np.ndarray:
         """INSERT/UPDATE: i32 status per key (0 = OK = acknowledged durable
         on every in-sync replica; 1 = RETRY when ``auto_retry=False`` and
-        the insert buffer was full)."""
+        the insert buffer was full).  ``ttl=K`` expires the keys after K
+        logical clock ticks."""
         ...
 
     def delete(self, keys, *, auto_retry: bool = True) -> np.ndarray:
@@ -146,10 +171,12 @@ class KVStore(Protocol):
         *,
         k_max=None,
         epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
     ) -> RangeResult:
         """RANGE(k_min, limit) per request row: ascending live entries,
         clipped to ``[k_min, k_max)`` when ``k_max`` is given (scalar or
-        per-row, exclusive)."""
+        per-row, exclusive).  ``as_of`` walks the retained snapshot at that
+        version epoch instead of the live tree."""
         ...
 
     def flush(self) -> int:

@@ -4,11 +4,14 @@
 anchor leaf) are the same Figure-5 structure with different payloads:
 a per-thread Bloom filter over admitted keys plus a small set-associative
 bucket table, filled by a wave-salted random admission coin and a
-hash-pseudo-random victim way.  Their admit paths had drifted into two
-copies of the identical scatter math; this module is the single payload-
-generic implementation both wrap (each keeps its own salts, config and
-jit/donation boundary, so the compiled kernels — and their bit-exact
-outputs — are unchanged).
+hash-pseudo-random victim way.  Their admit, probe and key-invalidate paths
+had drifted into two copies of the identical gather/scatter math; this
+module is the single payload-generic implementation both wrap (each keeps
+its own salts, config and jit/donation boundary, so the compiled kernels —
+and their bit-exact outputs — are unchanged).  The scan cache's
+*leaf-id*-based ``invalidate_leaves`` is the one path that stays local: it
+indexes by payload value, not by key, so it shares nothing with the point
+cache's key-matched clear.
 """
 
 from __future__ import annotations
@@ -17,12 +20,95 @@ from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .keys import limb_hash
+from .keys import limb_eq, limb_hash
 
 
 def bloom_hashes(khi, klo, bits: int, salts: Sequence[int]):
     """One bit index per salt for each key — the k hash functions."""
     return [limb_hash(khi, klo, s) % jnp.uint32(bits) for s in salts]
+
+
+def _gather_way(rows: jnp.ndarray, way: jnp.ndarray) -> jnp.ndarray:
+    """Select one way per request from gathered bucket rows.
+
+    ``rows`` is (B, W, ...) — the per-request bucket contents for one
+    payload array — and ``way`` is the (B,) selected way.  The index is
+    broadcast across any trailing payload dims, which reproduces the
+    ``hit_way[:, None, None].repeat(2, -1)`` form the point cache used for
+    its (hi, lo) value pairs bit-for-bit.
+    """
+    idx = way.reshape((-1, 1) + (1,) * (rows.ndim - 2))
+    if rows.ndim > 2:
+        idx = jnp.broadcast_to(idx, (rows.shape[0], 1) + rows.shape[2:])
+    return jnp.take_along_axis(rows, idx, axis=1)[:, 0]
+
+
+def probe_set(
+    bloom: jnp.ndarray,  # (T, bits/32) u32
+    bkey: jnp.ndarray,  # (T, NB, W, 2) u32
+    bvalid: jnp.ndarray,  # (T, NB, W) bool
+    payloads: Tuple[jnp.ndarray, ...],  # each (T, NB, W, ...) per-entry state
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    n_buckets: int,
+    bloom_bits: int,
+    bloom_salts: Sequence[int],
+    bucket_salt: int,
+):
+    """One probe wave over a Bloom + N-way bucket cache.
+
+    Bloom-negative requests never pay a bucket access in the counted cost
+    model (the gather is computed but masked — semantically identical to the
+    kernel's predicated load).  The key compare is exact, so a Bloom false
+    positive or bucket collision can only miss, never mis-serve.
+
+    Returns ``(hit, gathered_payloads)``; each gathered payload is the hit
+    way's entry, row-aligned with the request (arbitrary where ``~hit``).
+    """
+    may = jnp.ones_like(khi, dtype=bool)
+    for h in bloom_hashes(khi, klo, bloom_bits, bloom_salts):
+        word = bloom[tid, (h // 32).astype(jnp.int32)]
+        may &= (word >> (h % 32)) & 1 == 1
+    bucket = (limb_hash(khi, klo, bucket_salt) % jnp.uint32(n_buckets)).astype(
+        jnp.int32
+    )
+    bk = bkey[tid, bucket]  # (B, W, 2)
+    valid = bvalid[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
+    hit_way = jnp.argmax(eq, axis=1)
+    hit = may & jnp.any(eq, axis=1)
+    gathered = tuple(_gather_way(p[tid, bucket], hit_way) for p in payloads)
+    return hit, gathered
+
+
+def invalidate_set(
+    bkey: jnp.ndarray,  # (T, NB, W, 2) u32
+    bvalid: jnp.ndarray,  # (T, NB, W) bool
+    tid: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    active: jnp.ndarray,  # (B,) bool — rows that actually mutated
+    *,
+    n_buckets: int,
+    bucket_salt: int,
+) -> jnp.ndarray:
+    """Key-based UPDATE/DELETE consistency: clear the matching entry's valid
+    bit (Bloom bits stay — they only cause false positives, which the exact
+    key compare absorbs).  Returns the new ``bvalid``.
+    """
+    bucket = (limb_hash(khi, klo, bucket_salt) % jnp.uint32(n_buckets)).astype(
+        jnp.int32
+    )
+    bk = bkey[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None])
+    eq &= bvalid[tid, bucket] & active[:, None]
+    way = jnp.argmax(eq, axis=1)
+    hit = jnp.any(eq, axis=1)
+    T = bkey.shape[0]
+    tid_s = jnp.where(hit, tid, T)  # OOB -> dropped
+    return bvalid.at[tid_s, bucket, way].set(False, mode="drop")
 
 
 def admit_set(

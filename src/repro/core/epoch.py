@@ -28,12 +28,28 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 
+class EpochRetiredError(LookupError):
+    """An ``as_of`` read named a version epoch outside the retained window
+    (``horizon < epoch <= cycle``): the superseded leaves that served it may
+    already have been released back to the allocator and reused."""
+
+
 @dataclass
 class EpochManager:
     grace: int = 2  # epochs an obsolete id stays quarantined
+    # Versioned-read retention: keep a superseded id quarantined until at
+    # least ``retain`` further stitch cycles have completed, so every leaf
+    # version addressable through ``as_of=E`` (E in the retained window) is
+    # still intact in the pools.  0 = no point-in-time reads (grace only).
+    retain: int = 0
     epoch: int = 0
-    # (retire_at_epoch, pool, id)
-    _quarantine: List[Tuple[int, str, int]] = field(default_factory=list)
+    # Completed stitch transactions — the version epoch ``as_of`` readers
+    # name.  Distinct from ``epoch`` (the per-wave reclamation clock):
+    # cycles advance only when a CONNECT lands, which is exactly when leaf
+    # versions change.
+    cycle: int = 0
+    # (retire_at_epoch, pool, id, freed_cycle)
+    _quarantine: List[Tuple[int, str, int, int]] = field(default_factory=list)
     # ids currently quarantined, for the safety assertion
     _held: Dict[Tuple[str, int], int] = field(default_factory=dict)
     # Quarantine listener, fired once per deferred (pool, id) — the store
@@ -52,7 +68,9 @@ class EpochManager:
         key = (pool, int(idx))
         assert key not in self._held, f"double free of {key}"
         retire_at = self.epoch + self.grace
-        self._quarantine.append((retire_at, pool, int(idx)))
+        # stamped with the cycle the in-flight transaction will complete as
+        # (end_cycle increments ``cycle`` after the CONNECT lands)
+        self._quarantine.append((retire_at, pool, int(idx), self.cycle + 1))
         self._held[key] = retire_at
         if self.on_defer is not None:
             self.on_defer(pool, int(idx))
@@ -70,18 +88,56 @@ class EpochManager:
         """Cycle-granularity bookkeeping: one epoch advance + reclaim per
         flush cycle (the per-leaf loop used to do this once per patch).
         Returns the number of ids handed back to the allocator."""
+        self.cycle += 1
         self.advance()
         return self.reclaim(image)
 
     def reclaim(self, image) -> int:
-        """Release quarantined ids whose grace period has elapsed back to the
-        host image's allocator.  Returns the number reclaimed."""
-        ready = [q for q in self._quarantine if q[0] <= self.epoch]
-        self._quarantine = [q for q in self._quarantine if q[0] > self.epoch]
-        for _, pool, idx in ready:
+        """Release quarantined ids whose grace period has elapsed — and, with
+        retention on, whose version epoch has aged past the retained window —
+        back to the host image's allocator.  Returns the number reclaimed.
+
+        Safety for versioned walks: an id freed at cycle F serves versions
+        ``as_of <= F - 1``.  It is released only once ``cycle - F >= retain``,
+        i.e. when the oldest retainable epoch (``cycle - retain + 1``) already
+        exceeds F - 1 — so a :meth:`check_retained`-validated walk can never
+        reach a released (possibly reused) id."""
+
+        def ready(q):
+            if q[0] > self.epoch:
+                return False
+            # retention gate only when a point-in-time window is kept
+            return self.retain <= 0 or self.cycle - q[3] >= self.retain
+
+        out = [q for q in self._quarantine if ready(q)]
+        self._quarantine = [q for q in self._quarantine if not ready(q)]
+        for _, pool, idx, _ in out:
             del self._held[(pool, idx)]
             image.release(pool, idx)
-        return len(ready)
+        return len(out)
+
+    # ------------------------------------------------- versioned-read window
+    @property
+    def horizon(self) -> int:
+        """Oldest *expired* version epoch: valid ``as_of`` reads satisfy
+        ``horizon < epoch <= cycle`` (empty window when ``retain == 0``)."""
+        return self.cycle - self.retain
+
+    def check_retained(self, e: int) -> int:
+        """Validate an ``as_of`` epoch against the retained window, raising
+        :class:`EpochRetiredError` outside it.  Returns ``e`` unchanged."""
+        e = int(e)
+        if self.retain <= 0:
+            raise EpochRetiredError(
+                f"as_of={e}: store was built with retain_epochs=0 "
+                "(no point-in-time window is kept)"
+            )
+        if not (self.horizon < e <= self.cycle):
+            raise EpochRetiredError(
+                f"as_of={e}: outside the retained window "
+                f"({self.horizon} < epoch <= {self.cycle})"
+            )
+        return e
 
     def is_quarantined(self, pool: str, idx: int) -> bool:
         return (pool, int(idx)) in self._held

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cacheset
-from .keys import limb_eq, limb_hash
+from .keys import limb_hash
 
 # hash salts (shared with clients — "the client adds data required for cache
 # lookups to the request")
@@ -95,20 +95,22 @@ def probe(
     Bloom-negative requests never touch the bucket array — in the kernel this
     is a predicated load; here the gather is computed but masked, which is
     semantically identical (the *counted* cost model charges only bloom-pass
-    probes with a bucket access, matching the paper).
+    probes with a bucket access, matching the paper).  The gather math lives
+    in ``cacheset.probe_set``; the value pair is this cache's payload.
     """
-    may = jnp.ones_like(khi, dtype=bool)
-    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
-        word = cache.bloom[tid, (h // 32).astype(jnp.int32)]
-        may &= (word >> (h % 32)) & 1 == 1
-    bucket = (limb_hash(khi, klo, SALT_BUCKET) % jnp.uint32(cfg.n_buckets)).astype(jnp.int32)
-    bk = cache.bkey[tid, bucket]  # (B, W, 2)
-    bv = cache.bval[tid, bucket]
-    valid = cache.bvalid[tid, bucket]
-    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
-    hit_way = jnp.argmax(eq, axis=1)
-    hit = may & jnp.any(eq, axis=1)
-    v = jnp.take_along_axis(bv, hit_way[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    hit, (v,) = cacheset.probe_set(
+        cache.bloom,
+        cache.bkey,
+        cache.bvalid,
+        (cache.bval,),
+        tid,
+        khi,
+        klo,
+        n_buckets=cfg.n_buckets,
+        bloom_bits=cfg.bloom_bits,
+        bloom_salts=SALT_BLOOM,
+        bucket_salt=SALT_BUCKET,
+    )
     return hit, v[:, 0], v[:, 1]
 
 
@@ -163,15 +165,16 @@ def invalidate(
 ) -> CacheState:
     """UPDATE/DELETE consistency: clear a matching entry (bloom bits stay —
     they only cause false positives, which the key compare absorbs)."""
-    bucket = (limb_hash(khi, klo, SALT_BUCKET) % jnp.uint32(cfg.n_buckets)).astype(jnp.int32)
-    bk = cache.bkey[tid, bucket]
-    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None])
-    eq &= cache.bvalid[tid, bucket] & active[:, None]
-    way = jnp.argmax(eq, axis=1)
-    hit = jnp.any(eq, axis=1)
-    T = cache.bkey.shape[0]
-    tid_s = jnp.where(hit, tid, T)
-    bvalid = cache.bvalid.at[tid_s, bucket, way].set(False, mode="drop")
+    bvalid = cacheset.invalidate_set(
+        cache.bkey,
+        cache.bvalid,
+        tid,
+        khi,
+        klo,
+        active,
+        n_buckets=cfg.n_buckets,
+        bucket_salt=SALT_BUCKET,
+    )
     return cache._replace(bvalid=bvalid)
 
 

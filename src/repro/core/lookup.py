@@ -214,11 +214,18 @@ class ScanCursor(NamedTuple):
     entry of the unwalked suffix is strictly greater than everything
     already emitted (leaf chain is in key order and buffered writes are
     leaf-local), so resuming neither duplicates nor skips.  This is the
-    same (key, leaf) pair ``core.scancache`` admits as an anchor."""
+    same (key, leaf) pair ``core.scancache`` admits as an anchor.
+
+    ``epoch`` pins the version epoch of an ``as_of`` scan (-1 = a live
+    scan): resuming a truncated versioned scan MUST re-read the same
+    frozen snapshot, no matter how many flushes/rebalances/reshards landed
+    in between — the store validates the pinned epoch is still retained
+    and re-resolves leaf versions against it on every resume."""
 
     khi: jnp.ndarray  # (B,) u32
     klo: jnp.ndarray  # (B,) u32
     leaf: jnp.ndarray  # (B,) i32, -1 = complete
+    epoch: int = -1  # pinned as_of epoch; -1 = live (unversioned) scan
 
 
 def make_cursor(khi, klo, out_keys, n_found, cont_leaf, truncated) -> ScanCursor:
@@ -391,11 +398,22 @@ def continuation_loop(
     limit: int,
     max_rounds: int = 0,
     hard_cap: int,
+    advance_kmin: bool = False,
 ):
     """Drive ``round_fn`` (one bounded walk: ``(start, khi, klo) -> (keys,
     vals, valid, truncated, cursor)``) inside a ``jax.lax.while_loop`` until
     every lane hit ``limit``, exhausted its chain, or ran into its owned
     window — the device-resident analogue of the host re-issue loop.
+
+    ``advance_kmin`` (versioned scans): after each round, a lane's ``k_min``
+    moves to its last emitted key + 1.  A versioned round reads each walked
+    leaf through its resolved ancestor, whose key range can reach *below*
+    the walked window and so re-cover keys an earlier round already emitted
+    — the k_min advance is what keeps rounds disjoint.  Correct because an
+    active (truncated, under-limit) lane emitted EVERY snapshot key >= its
+    k_min inside the walked window, so the next window's survivors are all
+    strictly greater.  Live scans keep ``k_min`` fixed (resume-at-cursor is
+    already exact for leaf-local buffers).
 
     Per round, per lane: the walk resumes at the lane's cursor leaf with the
     original ``k_min`` (exact — see :class:`ScanCursor`), its results are
@@ -426,7 +444,7 @@ def continuation_loop(
 
     def body(st):
         start = jnp.where(st["active"], st["cur"], jnp.int32(-1))
-        rk, rv, rvalid, rtrunc, cursor = round_fn(start, khi, klo)
+        rk, rv, rvalid, rtrunc, cursor = round_fn(start, st["khi"], st["klo"])
         # owned-window clip, per round: entries at/above the lane's ub are
         # dropped and prove the window exhausted (clear ``truncated`` — the
         # continuation belongs to whoever owns the successor window)
@@ -445,6 +463,15 @@ def continuation_loop(
         acc_vl = st["acc_vl"].at[rows, tgt].set(jnp.where(put, rv[..., 1], 0))
         acc_n = jnp.minimum(st["acc_n"] + rc, limit)
         active = st["active"] & rtrunc & (acc_n < limit)
+        nkhi, nklo = st["khi"], st["klo"]
+        if advance_kmin:
+            # last emitted key + 1 (u32 limbs with carry); lanes that
+            # emitted nothing this round keep their k_min unchanged
+            lo1 = cursor.klo + jnp.uint32(1)
+            hi1 = cursor.khi + (lo1 == 0).astype(jnp.uint32)
+            emitted = rc > 0
+            nklo = jnp.where(emitted, lo1, nklo)
+            nkhi = jnp.where(emitted, hi1, nkhi)
         return dict(
             acc_kh=acc_kh,
             acc_kl=acc_kl,
@@ -452,6 +479,8 @@ def continuation_loop(
             acc_vl=acc_vl,
             acc_n=acc_n,
             cur=cursor.leaf,
+            khi=nkhi,
+            klo=nklo,
             active=active,
             rounds=st["rounds"] + 1,
         )
@@ -466,6 +495,8 @@ def continuation_loop(
             acc_vl=jnp.zeros((B, limit + 1), dtype=jnp.uint32),
             acc_n=jnp.zeros((B,), dtype=jnp.int32),
             cur=start_leaf.astype(jnp.int32),
+            khi=khi,
+            klo=klo,
             active=jnp.ones((B,), dtype=bool),
             rounds=jnp.int32(0),
         ),
@@ -549,4 +580,172 @@ def range_batch(
     start_leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
     return range_batch_from(
         tree, ib, start_leaf, khi, klo, limit=limit, max_leaves=max_leaves
+    )
+
+
+# ---------------------------------------------------------------------------
+# point-in-time reads (as_of=epoch): serve a frozen snapshot through the
+# CURRENT tree.  The store builds a host-side *resolve table* for epoch E —
+# res_table[l] walks TreeImage.ver_prev while ver_birth > E — so the device
+# side is one extra gather per leaf visit: traverse/walk the live structure,
+# read each visited leaf's content through its resolved ancestor.  Freed
+# leaf/slot rows are never overwritten by stitch COPYs (new ids only) and
+# EpochManager.retain keeps every reachable ancestor un-recycled, so the
+# ancestor's device rows still hold the epoch-E bytes.  Insert buffers are
+# skipped: a version epoch is a *stitched* state (snapshot_epoch flushes).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("depth", "eps_inner", "eps_leaf"))
+def get_batch_versioned(
+    tree: DeviceTree,
+    res_table: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    depth: int,
+    eps_inner: int,
+    eps_leaf: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """GET against the epoch pinned by ``res_table``: traverse the CURRENT
+    index (a replacement leaf's key range is always covered by the leaf it
+    replaced, so the live descent lands inside the right ancestor chain),
+    resolve the leaf to its epoch-E version, probe that leaf's HBM row."""
+    leaf = traverse(tree, khi, klo, depth=depth, eps_inner=eps_inner)
+    leaf = res_table[leaf]
+    _, found, vhi, vlo = leaf_search(tree, leaf, khi, klo, eps_leaf)
+    return vhi, vlo, found
+
+
+@partial(jax.jit, static_argnames=("limit", "max_leaves"))
+def range_batch_from_versioned(
+    tree: DeviceTree,
+    res_table: jnp.ndarray,
+    start_leaf: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    *,
+    limit: int,
+    max_leaves: int = 4,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, ScanCursor]:
+    """One bounded versioned walk: follow the CURRENT ``leaf_next`` chain
+    (so the walk always terminates and covers the live key space) but gather
+    each visited leaf's *content* from its epoch-E resolved ancestor.
+
+    Resolved ancestors of adjacent live leaves can overlap (several current
+    leaves resolving into one wide ancestor): in-round duplicates are killed
+    by the sort + first-occurrence dedup below; cross-round duplicates by
+    the driver's ``advance_kmin`` (see :func:`continuation_loop`).  No
+    insert-buffer overlay and no tombstones — the snapshot is a stitched
+    state."""
+    assert limit >= 1, "limit=0 is guarded by the callers"
+    B = khi.shape[0]
+
+    def gather_leaf(leaf, alive):
+        r = res_table[leaf]
+        slot = tree.leaf_slot[r]
+        lk = tree.hbm_keys[slot]  # (B,128,2) — epoch-E bytes (rows survive)
+        lv = tree.hbm_vals[slot]
+        lcnt = tree.leaf_count[r]
+        lvalid = (
+            jnp.arange(lk.shape[1])[None, :] < lcnt[:, None]
+        ) & alive[:, None]
+        return lk[:, :, 0], lk[:, :, 1], lv[:, :, 0], lv[:, :, 1], lvalid
+
+    parts = []
+    leaf = start_leaf
+    alive = start_leaf >= 0
+    for _ in range(max_leaves):
+        safe = jnp.maximum(leaf, 0)
+        parts.append(gather_leaf(safe, alive))
+        nxt = tree.leaf_next[safe]
+        alive = alive & (nxt >= 0)
+        leaf = nxt
+
+    keys_h = jnp.concatenate([p[0] for p in parts], axis=1)
+    keys_l = jnp.concatenate([p[1] for p in parts], axis=1)
+    vals_h = jnp.concatenate([p[2] for p in parts], axis=1)
+    vals_l = jnp.concatenate([p[3] for p in parts], axis=1)
+    valid = jnp.concatenate([p[4] for p in parts], axis=1)
+
+    ge_min = limb_le(khi[:, None], klo[:, None], keys_h, keys_l)
+    live = valid & ge_min
+    pad = jnp.uint32(0xFFFFFFFF)
+    keys_h = jnp.where(live, keys_h, pad)
+    keys_l = jnp.where(live, keys_l, pad)
+
+    order = jnp.lexsort((keys_l, keys_h), axis=-1)
+    keys_h = jnp.take_along_axis(keys_h, order, axis=1)
+    keys_l = jnp.take_along_axis(keys_l, order, axis=1)
+    vals_h = jnp.take_along_axis(vals_h, order, axis=1)
+    vals_l = jnp.take_along_axis(vals_l, order, axis=1)
+    live = jnp.take_along_axis(live, order, axis=1)
+
+    first = jnp.concatenate(
+        [
+            jnp.ones((B, 1), dtype=bool),
+            (keys_h[:, 1:] != keys_h[:, :-1]) | (keys_l[:, 1:] != keys_l[:, :-1]),
+        ],
+        axis=1,
+    )
+    keep = live & first
+
+    target = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    in_out = keep & (target < limit)
+    tgt = jnp.where(in_out, target, limit)
+    out_kh = jnp.full((B, limit + 1), pad, dtype=jnp.uint32)
+    out_kl = jnp.full((B, limit + 1), pad, dtype=jnp.uint32)
+    out_vh = jnp.zeros((B, limit + 1), dtype=jnp.uint32)
+    out_vl = jnp.zeros((B, limit + 1), dtype=jnp.uint32)
+    rows = jnp.arange(B)[:, None]
+    out_kh = out_kh.at[rows, tgt].set(jnp.where(in_out, keys_h, pad))
+    out_kl = out_kl.at[rows, tgt].set(jnp.where(in_out, keys_l, pad))
+    out_vh = out_vh.at[rows, tgt].set(jnp.where(in_out, vals_h, 0))
+    out_vl = out_vl.at[rows, tgt].set(jnp.where(in_out, vals_l, 0))
+    n_found = jnp.minimum(jnp.sum(keep, axis=1), limit)
+    out_valid = jnp.arange(limit)[None, :] < n_found[:, None]
+    out_keys = jnp.stack([out_kh[:, :limit], out_kl[:, :limit]], axis=-1)
+    out_vals = jnp.stack([out_vh[:, :limit], out_vl[:, :limit]], axis=-1)
+    truncated = alive & (n_found < limit)
+    cursor = make_cursor(khi, klo, out_keys, n_found, leaf, truncated)
+    return out_keys, out_vals, out_valid, truncated, cursor
+
+
+@partial(jax.jit, static_argnames=("limit", "max_leaves", "max_rounds"))
+def range_batch_loop_versioned(
+    tree: DeviceTree,
+    res_table: jnp.ndarray,
+    start_leaf: jnp.ndarray,
+    khi: jnp.ndarray,
+    klo: jnp.ndarray,
+    ub_hi: jnp.ndarray,
+    ub_lo: jnp.ndarray,
+    *,
+    limit: int,
+    max_leaves: int = 4,
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, ScanCursor, jnp.ndarray]:
+    """Multi-round versioned RANGE in ONE device dispatch — the ``as_of``
+    analogue of :func:`range_batch_loop`: :func:`range_batch_from_versioned`
+    rounds driven by :func:`continuation_loop` with the k_min advance on
+    (rounds stay disjoint even though resolved ancestors overlap)."""
+    n_leaves = tree.leaf_next.shape[0]
+    hard_cap = n_leaves // max(max_leaves, 1) + 2
+
+    def round_fn(start, h, l):
+        return range_batch_from_versioned(
+            tree, res_table, start, h, l, limit=limit, max_leaves=max_leaves
+        )
+
+    return continuation_loop(
+        round_fn,
+        start_leaf,
+        khi,
+        klo,
+        ub_hi,
+        ub_lo,
+        limit=limit,
+        max_rounds=max_rounds,
+        hard_cap=hard_cap,
+        advance_kmin=True,
     )

@@ -206,14 +206,31 @@ def _plan_leaf_replacement(
     leaf: int,
     merged_keys: np.ndarray,
     merged_vals: np.ndarray,
-) -> Tuple[List[int], List[Tuple[int, int, int]]]:
+) -> Tuple[List[int], List[Tuple[int, int, int]], np.ndarray]:
     """Leaf-local half of a structural patch: emit replacement leaves, splice
     the leaf_next chain, free the old leaf.  Parent maintenance is left to
-    the caller.  Returns (new leaf ids, the root->leaf path taken)."""
+    the caller.  Returns (new leaf ids, the root->leaf path taken, and the
+    *routing firsts* the parent must use for the replacements).
+
+    Routing firsts vs leaf anchors: the first replacement inherits the OLD
+    leaf's routed lower bound (its parent pivot key), not its own PLA anchor.
+    When the old window's lowest keys were deleted, the new anchor is higher
+    — re-keying the parent pivot to it would silently hand the gap
+    ``[old bound, new anchor)`` to the *predecessor* leaf.  Live reads can't
+    tell (the gap is empty), but a versioned read can: epoch-E keys in the
+    gap live in THIS leaf's version chain, so the gap must keep routing
+    here.  (The single-swap fast path already preserves the pivot key; this
+    makes the rebuild path consistent with it.)"""
     old_anchor = np.uint64(img.leaf_anchor[leaf])
     old_next = int(img.leaf_next[leaf])
     old_prev = int(img.leaf_prev[leaf])
     _, path = img.find_leaf(old_anchor)
+    route_lb = old_anchor
+    if path:
+        node, seg, pos = path[-1]
+        route_lb = np.uint64(
+            img.pivot_keys[int(img.node_seg_slot[node, seg]), pos]
+        )
 
     # ---- build replacement leaves ----------------------------------------
     if merged_keys.size == 0:
@@ -226,6 +243,11 @@ def _plan_leaf_replacement(
     new_leaves = [
         _emit_leaf(img, batch, merged_keys, merged_vals, s) for s in segs
     ]
+    # version-chain stamp (point-in-time reads): each replacement leaf is
+    # born at the cycle this transaction completes as and supersedes ``leaf``
+    for nl in new_leaves:
+        img.ver_birth[nl] = img.version_cycle
+        img.ver_prev[nl] = leaf
 
     # chain: prev -> new[0] -> ... -> new[-1] -> old_next
     for a, b in zip(new_leaves, new_leaves[1:]):
@@ -242,7 +264,11 @@ def _plan_leaf_replacement(
         batch.connects.append(("leaf_next", old_prev, new_leaves[0]))
     batch.frees.append(("leaves", leaf))
     batch.frees.append(("slots", int(img.leaf_slot[leaf])))
-    return new_leaves, path
+    route_firsts = np.array(
+        [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
+    )
+    route_firsts[0] = min(np.uint64(route_lb), route_firsts[0])
+    return new_leaves, path, route_firsts
 
 
 def plan_patch(
@@ -250,6 +276,7 @@ def plan_patch(
     leaf: int,
     entries: List[Tuple[int, int, int]],
     batch: Optional[StitchBatch] = None,
+    force_structural: bool = False,
 ) -> PatchResult:
     """Plan the patch for one full insert buffer. Mutates the host image
     (allocations + mirror rows + pointer mirrors) and returns the stitch
@@ -258,8 +285,15 @@ def plan_patch(
     When ``batch`` is given, commands append to it instead of a fresh batch.
     This is the per-leaf stream (one parent rebuild per patched leaf) — the
     semantic oracle; the batched pipeline is ``plan_patch_batch``.
+
+    ``force_structural`` disables the update-only fast path: it overwrites
+    ``hbm_vals`` in place, which destroys the superseded value version —
+    stores keeping a point-in-time window (``retain_epochs > 0``) need every
+    patch to go copy-on-write through a leaf replacement.
     """
     merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
+    if force_structural:
+        update_only = False
     if batch is None:
         batch = StitchBatch()
     batch.clear_ib.append(leaf)
@@ -270,15 +304,12 @@ def plan_patch(
         batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
         return PatchResult(batch=batch, kind="update")
 
-    new_leaves, path = _plan_leaf_replacement(
+    new_leaves, path, child_firsts = _plan_leaf_replacement(
         img, batch, leaf, merged_keys, merged_vals
     )
 
     # ---- splice into the parent chain ------------------------------------
     child_ids = np.array(new_leaves, dtype=np.int32)
-    child_firsts = np.array(
-        [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
-    )
     depth_changed = _splice_up(
         img, batch, path, child_ids, child_firsts, single_swap_ok=len(new_leaves) == 1
     )
@@ -414,6 +445,7 @@ def plan_patch_batch(
     leaves: List[int],
     entries_per_leaf: List[List[Tuple[int, int, int]]],
     headroom_ok=None,
+    force_structural: bool = False,
 ) -> BatchPatchResult:
     """Plan every full leaf of a flush cycle into ONE merged stitch batch
     (Sec 3.2: staged writes migrate to the host in batches and stitch back
@@ -450,8 +482,8 @@ def plan_patch_batch(
     )
     results: List[PatchResult] = []
     unplanned: List[Tuple[int, List[Tuple[int, int, int]]]] = []
-    # (path, new_leaf_ids) per structural patch, in anchor order
-    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]] = []
+    # (path, new_leaf_ids, routing firsts) per structural patch, anchor order
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int], np.ndarray]] = []
     parents_touched = set()  # distinct parents with structural work queued
 
     # ---- phase 1: leaf-local patches -------------------------------------
@@ -466,6 +498,8 @@ def plan_patch_batch(
         leaf = leaves[i]
         entries = entries_per_leaf[i]
         merged_keys, merged_vals, update_only = _merge(img, leaf, entries)
+        if force_structural:  # copy-on-write for point-in-time retention
+            update_only = False
         batch.clear_ib.append(leaf)
         if update_only:
             slot = int(img.leaf_slot[leaf])
@@ -473,10 +507,10 @@ def plan_patch_batch(
             batch.value_updates.append((slot, img.hbm_vals[slot].copy()))
             results.append(PatchResult(batch=batch, kind="update"))
             continue
-        new_leaves, path = _plan_leaf_replacement(
+        new_leaves, path, route_firsts = _plan_leaf_replacement(
             img, batch, leaf, merged_keys, merged_vals
         )
-        repl.append((path, new_leaves))
+        repl.append((path, new_leaves, route_firsts))
         if path:
             parents_touched.add(path[-1][0])
         results.append(
@@ -516,7 +550,7 @@ def plan_chain_compaction(
     defensively.
     """
     batch = StitchBatch()
-    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]] = []
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int], np.ndarray]] = []
     for leaf in stubs:
         leaf = int(leaf)
         assert int(img.leaf_count[leaf]) == 0, "only empty stubs are removable"
@@ -535,7 +569,8 @@ def plan_chain_compaction(
         batch.frees.append(("leaves", leaf))
         batch.frees.append(("slots", int(img.leaf_slot[leaf])))
         repl.append(
-            (path, [])  # zero replacements: drop the entry from the parent
+            # zero replacements: drop the entry from the parent
+            (path, [], np.array([], dtype=np.uint64))
         )
     _maintain_tree(img, batch, repl)
     return batch, len(repl)
@@ -544,13 +579,14 @@ def plan_chain_compaction(
 def _maintain_tree(
     img: TreeImage,
     batch: StitchBatch,
-    repl: List[Tuple[List[Tuple[int, int, int]], List[int]]],
+    repl: List[Tuple[List[Tuple[int, int, int]], List[int], np.ndarray]],
 ) -> bool:
     """Phase 2 of the batched planner: propagate child replacements upward,
     rebuilding every affected inner node at most once per cycle.
 
-    ``repl`` holds (root->leaf path, replacement ids) per structural patch,
-    in ascending anchor order.  Returns True if the tree depth changed.
+    ``repl`` holds (root->leaf path, replacement ids, routing firsts) per
+    structural patch, in ascending anchor order.  Returns True if the tree
+    depth changed.
     """
     if not repl:
         return False
@@ -558,11 +594,8 @@ def _maintain_tree(
     if img.depth == 1:
         # the root IS the (single) leaf: re-anchor the top of the tree
         assert len(repl) == 1, "depth-1 tree has exactly one leaf"
-        _, new_leaves = repl[0]
+        _, new_leaves, firsts = repl[0]
         ids = np.array(new_leaves, dtype=np.int32)
-        firsts = np.array(
-            [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
-        )
         return _grow_root(img, batch, ids, firsts)
 
     # per level (bottom inner level first): node -> list of replacement
@@ -574,12 +607,9 @@ def _maintain_tree(
     # parent path prefix (identical for all children of that node)
     parent_entry: Dict[int, Tuple[List[Tuple[int, int, int]], int, int]] = {}
 
-    for path, new_leaves in repl:
+    for path, new_leaves, firsts in repl:
         node, seg, pos = path[level]
         ids = np.array(new_leaves, dtype=np.int32)
-        firsts = np.array(
-            [img.leaf_anchor[l] for l in new_leaves], dtype=np.uint64
-        )
         pending.setdefault(node, []).append((seg, pos, ids, firsts))
         parent_entry[node] = (path, None, None)  # path prefix carrier
 

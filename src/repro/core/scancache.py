@@ -52,7 +52,6 @@ import jax
 import jax.numpy as jnp
 
 from . import cacheset
-from .keys import limb_eq, limb_hash
 
 # hash salts (disjoint from hotcache's so the two caches decorrelate;
 # steering reuses hotcache.SALT_STEER so a key lands on the same thread
@@ -122,22 +121,23 @@ def probe(
 
     Like the point cache, Bloom-negative probes never pay a bucket access
     in the counted cost model; the key compare is exact, so a Bloom false
-    positive or bucket collision can only miss, never mis-anchor.
+    positive or bucket collision can only miss, never mis-anchor.  The
+    gather math lives in ``cacheset.probe_set``; the anchor leaf id is this
+    cache's payload.
     """
-    may = jnp.ones_like(khi, dtype=bool)
-    for h in _bloom_hashes(khi, klo, cfg.bloom_bits):
-        word = cache.bloom[tid, (h // 32).astype(jnp.int32)]
-        may &= (word >> (h % 32)) & 1 == 1
-    bucket = (limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(cfg.n_buckets)).astype(
-        jnp.int32
+    hit, (leaf,) = cacheset.probe_set(
+        cache.bloom,
+        cache.bkey,
+        cache.bvalid,
+        (cache.bleaf,),
+        tid,
+        khi,
+        klo,
+        n_buckets=cfg.n_buckets,
+        bloom_bits=cfg.bloom_bits,
+        bloom_salts=SALT_SBLOOM,
+        bucket_salt=SALT_SBUCKET,
     )
-    bk = cache.bkey[tid, bucket]  # (B, W, 2)
-    bl = cache.bleaf[tid, bucket]  # (B, W)
-    valid = cache.bvalid[tid, bucket]
-    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
-    hit_way = jnp.argmax(eq, axis=1)
-    hit = may & jnp.any(eq, axis=1)
-    leaf = jnp.take_along_axis(bl, hit_way[:, None], axis=1)[:, 0]
     return hit, jnp.where(hit, leaf, 0)
 
 

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from . import api, hotcache, insert_buffer, lookup, patch, scancache, stitch
 from .api import RangeResult
-from .epoch import EpochManager
+from .epoch import EpochManager, EpochRetiredError
+from .ttl import TTLTracker
 from .hotcache import CacheConfig, CacheState
 from .keys import KEY_MAX, join_u64, limb_hash_np, split_u64
 from .lookup import IB_DEL, IB_PUT, InsertBuffers
@@ -126,6 +127,10 @@ class _GetWave:
     vlo: object
     found: object
     hits: Optional[object]  # c_hit & active, or None when the cache is off
+    # host-side TTL expiry mask (None when no deadline can apply): computed
+    # at issue time against the live tracker — or the frozen per-epoch
+    # snapshot for as_of reads — so finalize stays a pure drain
+    expired: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -158,6 +163,12 @@ class _RangeWave:
     cursor: object = None
     rounds: object = None
     empty: bool = False  # limit<=0 / n==0 short-circuit: no device wave
+    # prebaked waves (TTL-filtered / versioned refill loops run at issue
+    # time): results already sit in the host accumulators, finalize only
+    # wraps them — ``empty`` is also True so no device gather happens
+    rounds_done: int = 0
+    stats_out: Optional[dict] = None
+    as_of: Optional[int] = None
 
 
 class DPAStore:
@@ -174,6 +185,7 @@ class DPAStore:
         epoch_grace: int = 2,
         batched_patch: bool = True,
         scan_cache_cfg: Optional[ScanCacheConfig] = ScanCacheConfig(),
+        retain_epochs: int = 0,
     ):
         # batched_patch=True (default): a flush cycle plans every full leaf
         # into ONE merged stitch batch and applies it as a single COPY+CONNECT
@@ -182,7 +194,8 @@ class DPAStore:
         self.batched_patch = batched_patch
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
-        assert np.all(keys < KEY_MAX), "2^64-1 is a reserved sentinel"
+        if not np.all(keys < KEY_MAX):
+            raise ValueError("2^64-1 is a reserved sentinel")
         self.cfg = tree_cfg
         self.image: TreeImage = build_image(keys, vals, tree_cfg)
         bulk = stitch.bulk_load_batch(self.image)
@@ -218,8 +231,19 @@ class DPAStore:
             scancache.make_cache(scan_cache_cfg) if scan_cache_cfg else None
         )
         self._stale_anchor_leaves: List[int] = []
-        self.epochs = EpochManager(grace=epoch_grace)
+        # retain_epochs > 0 keeps every superseded leaf version addressable
+        # for that many stitch cycles: reads accept ``as_of=<epoch>`` and are
+        # served through a host-built resolve table over the version chain
+        # (see _resolve_table).  Costs pool headroom — quarantined rows are
+        # withheld from the allocator for the whole window — and forces
+        # every patch copy-on-write (no in-place value updates).
+        self.retain_epochs = retain_epochs
+        self.epochs = EpochManager(grace=epoch_grace, retain=retain_epochs)
         self.epochs.on_defer = self._note_deferred_free
+        # TTL sidecar (logical clock) + frozen per-cycle deadline snapshots
+        # for as_of reads; both empty until the first ``put(ttl=...)``
+        self.ttl = TTLTracker()
+        self._ttl_snaps: Dict[int, Tuple[Dict[int, int], int]] = {}
         # Host shadow of ib.count for the async write fast path: lets
         # write_issue prove "this wave cannot fill any buffer" without
         # blocking on the device (None = stale, recomputed on demand; every
@@ -280,30 +304,130 @@ class DPAStore:
         )
         self.stats.scan_invalidated += int(n)
 
+    # ------------------------------------------- point-in-time read window
+    def snapshot_epoch(self) -> int:
+        """Flush staged writes and return the version epoch naming the
+        current stitched state — the handle for ``as_of`` reads.  Raises
+        :class:`EpochRetiredError` when the store keeps no window
+        (``retain_epochs=0``)."""
+        self.flush()
+        if self.epochs.retain <= 0:
+            raise EpochRetiredError(
+                "snapshot_epoch: store was built with retain_epochs=0"
+            )
+        return self.epochs.cycle
+
+    def _resolve_table(self, e: int):
+        """Per-epoch leaf-id overlay: a gather table ``res[l] -> l'`` mapping
+        every leaf id to the version of its window live at epoch ``e`` —
+        walk ``ver_prev`` while the version was born after ``e``.  Host-side
+        numpy fixpoint (vectorized passes; chains shorten by one cycle per
+        step, so ``retain`` passes bound any retained epoch's chain), shipped
+        to the device as one i32 array: the versioned kernels pay one extra
+        gather per leaf visit and stay a single dispatch.
+
+        Safety: every id a *validated* epoch's chain visits is still
+        quarantined (reclaim's retention gate releases an id freed at cycle
+        F only once the oldest retained epoch exceeds F-1), so no entry a
+        versioned walk can reach has been released or restamped.  Entries
+        for free-pool ids may be garbage — no current leaf gathers them."""
+        vb, vp = self.image.ver_birth, self.image.ver_prev
+        res = np.arange(vb.shape[0], dtype=np.int32)
+        for _ in range(max(self.epochs.retain, 1) + 1):
+            need = (vb[res] > e) & (vp[res] >= 0)
+            if not need.any():
+                break
+            res[need] = vp[res[need]]
+        return jnp.asarray(res)
+
+    def _note_cycle_end(self) -> None:
+        """Per-cycle retention bookkeeping (runs after ``end_cycle``): freeze
+        the TTL deadline sidecar for the cycle that just completed (so
+        ``as_of`` reads judge expiry by that epoch's clock, not the present)
+        and age frozen snapshots out with the retention horizon."""
+        # once any snapshot exists, keep freezing even when the tracker
+        # empties — later epochs must supersede stale deadlines with the
+        # (empty) truth, not inherit them via _ttl_snap_for's floor lookup
+        if self.retain_epochs > 0 and (self.ttl or self._ttl_snaps):
+            self._ttl_snaps[self.epochs.cycle] = self.ttl.freeze()
+        if self._ttl_snaps:
+            h = self.epochs.horizon
+            for c in [c for c in self._ttl_snaps if c <= h]:
+                del self._ttl_snaps[c]
+
+    def _ttl_snap_for(self, e: int):
+        """Frozen TTL snapshot governing epoch ``e``: the newest freeze at
+        or before ``e`` (deadline edits only land with a cycle).  None when
+        no deadline existed then — the read path's zero-cost fast lane."""
+        cands = [c for c in self._ttl_snaps if c <= e]
+        return self._ttl_snaps[max(cands)] if cands else None
+
     # ------------------------------------------------------------------ GET
     def get(
-        self, keys=None, *, epoch: Optional[int] = None, **legacy
+        self,
+        keys=None,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+        **legacy,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched point lookup: returns (values u64, found bool).
 
         Canonical ``KVStore`` signature: ``epoch`` exists for signature
         parity with the sharded tiers — a single store has no routing
-        epochs, so only ``None`` is accepted."""
+        epochs, so only ``None`` is accepted.  ``as_of=<version epoch>``
+        (from :meth:`snapshot_epoch`) serves the lookup from the retained
+        point-in-time window instead of the live tree; reads outside the
+        window raise :class:`EpochRetiredError`."""
         keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
         api.reject_unknown("get", legacy)
-        return self.get_finalize(self.get_issue(keys, epoch=epoch))
+        return self.get_finalize(self.get_issue(keys, epoch=epoch, as_of=as_of))
 
-    def get_issue(self, keys, *, epoch: Optional[int] = None) -> _GetWave:
+    def get_issue(
+        self,
+        keys,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+    ) -> _GetWave:
         """Issue half of GET: host build + async device dispatch (cache
         probe, traverse, cache admit) — returns without blocking on device
         results.  ``get() == get_finalize(get_issue())`` by construction,
         which is what makes pipelined execution bitwise-equal to serial
         (see ``serving.pipeline``)."""
-        assert epoch is None, "single-store GET has no routing epochs"
+        if epoch is not None:
+            # NOT an assert: under ``python -O`` an assert vanishes and the
+            # caller's routing epoch would be silently accepted and ignored
+            raise ValueError(
+                "single-store GET has no routing epochs (epoch must be None)"
+            )
         keys_u64 = np.asarray(keys, dtype=np.uint64)
         n = keys_u64.size
         B = _pad_pow2(n)
         khi, klo, active = self._limbs(keys_u64, B)
+        if as_of is not None:
+            e = self.epochs.check_retained(as_of)
+            res_table = self._resolve_table(e)
+            vhi, vlo, found = lookup.get_batch_versioned(
+                self.tree,
+                res_table,
+                khi,
+                klo,
+                depth=self.depth,
+                eps_inner=self.cfg.eps_inner,
+                eps_leaf=self.cfg.eps_leaf,
+            )
+            snap = self._ttl_snap_for(e)
+            expired = (
+                TTLTracker.expired_at(snap, keys_u64)
+                if snap is not None
+                else None
+            )
+            self.stats.gets += n
+            self._end_wave()
+            return _GetWave(
+                n=n, vhi=vhi, vlo=vlo, found=found, hits=None, expired=expired
+            )
         use_cache = self.cache is not None
         if use_cache:
             tid = self._steer(khi, klo)
@@ -341,8 +465,12 @@ class DPAStore:
         else:
             out_vhi, out_vlo, out_found = vhi, vlo, found
         self.stats.gets += n
+        expired = self.ttl.is_expired_np(keys_u64) if self.ttl else None
         self._end_wave()
-        return _GetWave(n=n, vhi=out_vhi, vlo=out_vlo, found=out_found, hits=hits)
+        return _GetWave(
+            n=n, vhi=out_vhi, vlo=out_vlo, found=out_found, hits=hits,
+            expired=expired,
+        )
 
     def get_finalize(self, w: _GetWave) -> Tuple[np.ndarray, np.ndarray]:
         """Drain half of GET: blocking gather + host epilogue."""
@@ -353,6 +481,10 @@ class DPAStore:
             np.stack([np.asarray(w.vhi)[:n], np.asarray(w.vlo)[:n]], axis=-1)
         )
         found = np.asarray(w.found)[:n]
+        if w.expired is not None:
+            # TTL: a key past its deadline reads as absent (the sweep will
+            # physically delete it later; filter-vs-reclaim equivalence)
+            found = found & ~w.expired
         # protocol contract: not-found rows carry 0, never slot residue —
         # so responses are bitwise identical no matter which tier serves them
         vals[~found] = 0
@@ -363,7 +495,8 @@ class DPAStore:
         self, keys_u64, vals_u64, op_code: int, auto_retry: bool = True
     ) -> np.ndarray:
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
-        assert np.all(keys_u64 < KEY_MAX), "2^64-1 is a reserved sentinel"
+        if not np.all(keys_u64 < KEY_MAX):
+            raise ValueError("2^64-1 is a reserved sentinel")
         vals_u64 = (
             np.zeros_like(keys_u64)
             if vals_u64 is None
@@ -459,7 +592,8 @@ class DPAStore:
         and falls back — the flush/stitch epoch barrier."""
         assert op in ("put", "delete"), op
         keys_u64 = np.asarray(keys, dtype=np.uint64)
-        assert np.all(keys_u64 < KEY_MAX), "2^64-1 is a reserved sentinel"
+        if not np.all(keys_u64 < KEY_MAX):
+            raise ValueError("2^64-1 is a reserved sentinel")
         n = keys_u64.size
         if n == 0:
             return _WriteWave(n=0, status=np.zeros(0, dtype=np.int32))
@@ -495,8 +629,12 @@ class DPAStore:
         self._end_wave()
         if op == "put":
             self.stats.puts += n
+            # fast-path PUT carries no ttl; clears stale deadlines so the
+            # overwrite's no-expiry policy wins (no-op while tracker empty)
+            self.ttl.note_put(keys_u64, None)
         else:
             self.stats.deletes += n
+            self.ttl.note_delete(keys_u64)
         return _WriteWave(n=n, status=status)
 
     def write_finalize(self, w: _WriteWave) -> np.ndarray:
@@ -506,11 +644,25 @@ class DPAStore:
             return np.asarray(w.status)
         return np.asarray(w.status)[: w.n]
 
-    def put(self, keys=None, vals=None, *args, auto_retry: bool = True, **legacy) -> np.ndarray:
+    def put(
+        self,
+        keys=None,
+        vals=None,
+        *args,
+        auto_retry: bool = True,
+        ttl: Optional[int] = None,
+        **legacy,
+    ) -> np.ndarray:
         """INSERT or UPDATE (the buffer treats both as PUT; the patcher
         classifies the patch).  Canonical signature keeps ``auto_retry``
         keyword-only; the old positional third argument still works via a
-        deprecation shim."""
+        deprecation shim.
+
+        ``ttl=K`` stamps each written key with a logical-clock deadline
+        ``now + K`` (see :class:`~repro.core.ttl.TTLTracker`): once the
+        store's clock reaches it the key reads as absent, and the next
+        :meth:`ttl_sweep` physically deletes it.  ``ttl=None`` (default)
+        never expires — and clears any deadline a previous write left."""
         keys = api.take_legacy("put", legacy, keys, "keys", "keys_u64")
         vals = api.take_legacy("put", legacy, vals, "vals", "vals_u64")
         api.reject_unknown("put", legacy)
@@ -518,7 +670,9 @@ class DPAStore:
             api.warn_legacy("put", "positional auto_retry", "auto_retry=...")
             (auto_retry,) = args
         st = self._write(keys, vals, IB_PUT, auto_retry)
-        self.stats.puts += np.asarray(keys).size
+        keys_u64 = np.asarray(keys, dtype=np.uint64)
+        self.ttl.note_put(keys_u64[st == STATUS_OK], ttl)
+        self.stats.puts += keys_u64.size
         return st
 
     insert = put
@@ -531,7 +685,9 @@ class DPAStore:
             api.warn_legacy("delete", "positional auto_retry", "auto_retry=...")
             (auto_retry,) = args
         st = self._write(keys, None, IB_DEL, auto_retry)
-        self.stats.deletes += np.asarray(keys).size
+        keys_u64 = np.asarray(keys, dtype=np.uint64)
+        self.ttl.note_delete(keys_u64[st == STATUS_OK])
+        self.stats.deletes += keys_u64.size
         return st
 
     # ---------------------------------------------------------------- range
@@ -542,6 +698,7 @@ class DPAStore:
         *args,
         k_max=None,
         epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
         max_leaves: int = 4,
         **legacy,
     ) -> RangeResult:
@@ -570,9 +727,13 @@ class DPAStore:
         if args:  # legacy positional max_leaves
             api.warn_legacy("range", "positional max_leaves", "max_leaves=...")
             (max_leaves,) = args
-        assert epoch is None, "single-store RANGE has no routing epochs"
+        if epoch is not None:
+            # NOT an assert: must survive ``python -O`` (see get_issue)
+            raise ValueError(
+                "single-store RANGE has no routing epochs (epoch must be None)"
+            )
         res = self.range_with_state(
-            k_min, limit=limit, max_leaves=max_leaves, k_max=k_max
+            k_min, limit=limit, max_leaves=max_leaves, k_max=k_max, as_of=as_of
         )
         return RangeResult(
             keys=res.keys,
@@ -640,6 +801,7 @@ class DPAStore:
         max_rounds: Optional[int] = None,
         start_leaves: Optional[np.ndarray] = None,
         k_max=None,
+        as_of: Optional[int] = None,
     ) -> RangeResult:
         """RANGE with explicit continuation state: a :class:`RangeResult`
         carrying (keys (n, limit), vals, counts (n,), truncated (n,),
@@ -673,6 +835,7 @@ class DPAStore:
                 max_rounds=max_rounds,
                 start_leaves=start_leaves,
                 arity=6,
+                as_of=as_of,
             )
         )
 
@@ -687,19 +850,56 @@ class DPAStore:
         max_rounds: Optional[int] = None,
         start_leaves: Optional[np.ndarray] = None,
         arity: int = 3,
+        as_of: Optional[int] = None,
+        _raw: bool = False,
     ) -> _RangeWave:
         """Issue half of RANGE: anchor-cache start resolution + the single
         ``range_batch_loop`` device dispatch (the in-mesh continuation loop
         runs without the host).  Returns without blocking on results;
-        ``range_with_state() == range_finalize(range_issue())``."""
-        assert max_rounds is None or max_rounds >= 1, (
-            "max_rounds: None = loop until limit/exhaustion/window; a bound "
-            "must be >= 1 (0 would silently alias the unbounded loop)"
-        )
-        assert epoch is None, "single-store RANGE has no routing epochs"
+        ``range_with_state() == range_finalize(range_issue())``.
+
+        ``as_of=<version epoch>`` walks the retained snapshot instead of the
+        live tree (one dispatch through the resolve-table kernels).  When a
+        TTL filter applies (live tracker non-empty, or the epoch's frozen
+        snapshot for as_of), expiry can hollow out a full row — the wave
+        then runs its refill loop synchronously at issue time and comes
+        back prebaked (``_raw=True`` is that loop's unfiltered inner call)."""
+        if max_rounds is not None and max_rounds < 1:
+            # NOT an assert: must survive ``python -O`` (see get_issue)
+            raise ValueError(
+                "max_rounds: None = loop until limit/exhaustion/window; a "
+                "bound must be >= 1 (0 would silently alias the unbounded "
+                "loop)"
+            )
+        if epoch is not None:
+            raise ValueError(
+                "single-store RANGE has no routing epochs (epoch must be None)"
+            )
+        if as_of is not None:
+            as_of = self.epochs.check_retained(as_of)
         start_keys_u64 = np.asarray(k_min, dtype=np.uint64)
         n = start_keys_u64.size
         lim = max(limit, 0)
+        if not _raw and n and lim:
+            if as_of is not None:
+                snap = self._ttl_snap_for(as_of)
+                expired_fn = (
+                    (lambda k: TTLTracker.expired_at(snap, k))
+                    if snap is not None
+                    else None
+                )
+            else:
+                expired_fn = self.ttl.is_expired_np if self.ttl else None
+            if expired_fn is not None:
+                return self._range_filtered(
+                    start_keys_u64,
+                    limit=limit,
+                    k_max=k_max,
+                    max_leaves=max_leaves,
+                    arity=arity,
+                    as_of=as_of,
+                    expired_fn=expired_fn,
+                )
         w = _RangeWave(
             n=n,
             limit=limit,
@@ -723,12 +923,44 @@ class DPAStore:
         res_pad = np.full(B, -1, dtype=np.int32)
         if start_leaves is not None:
             res_pad[:n] = np.asarray(start_leaves, dtype=np.int32)
-        start = self._scan_start(khi, klo, res_pad, n)
-        start = jnp.where(active, start, -1)  # pad rows ride along dead
         ubs = np.full(B, KEY_MAX, dtype=np.uint64)  # sentinel: no clip
         if k_max is not None:
             ubs[:n] = np.asarray(k_max, dtype=np.uint64)
         ub_limbs = split_u64(ubs)
+        if as_of is not None:
+            # versioned walk: plain descent for fresh rows (the scan-anchor
+            # cache serves LIVE pagination; versioned reads must not churn
+            # its admissions), resolve table gathered per walked leaf
+            w.as_of = as_of
+            start = jnp.asarray(res_pad)
+            if (res_pad[:n] < 0).any():
+                tstart = lookup.traverse(
+                    self.tree,
+                    khi,
+                    klo,
+                    depth=self.depth,
+                    eps_inner=self.cfg.eps_inner,
+                )
+                start = jnp.where(start < 0, tstart, start)
+            start = jnp.where(active, start, -1)
+            w.rk, w.rv, w.valid, w.trunc, w.cursor, w.rounds = (
+                lookup.range_batch_loop_versioned(
+                    self.tree,
+                    self._resolve_table(as_of),
+                    start,
+                    khi,
+                    klo,
+                    jnp.asarray(ub_limbs[:, 0]),
+                    jnp.asarray(ub_limbs[:, 1]),
+                    limit=limit,
+                    max_leaves=max_leaves,
+                    max_rounds=0 if max_rounds is None else max_rounds,
+                )
+            )
+            self._end_wave()
+            return w
+        start = self._scan_start(khi, klo, res_pad, n)
+        start = jnp.where(active, start, -1)  # pad rows ride along dead
         w.rk, w.rv, w.valid, w.trunc, w.cursor, w.rounds = (
             lookup.range_batch_loop(
                 self.tree,
@@ -754,10 +986,13 @@ class DPAStore:
         counts, trunc_out = w.counts, w.trunc_out
         cur_leaf_out, cur_key_out = w.cur_leaf_out, w.cur_key_out
         if w.empty:
+            # degenerate short-circuit OR a prebaked (filtered/refilled)
+            # wave: the host accumulators already hold the final answer
             return RangeResult(
                 keys=keys_out, vals=vals_out, counts=counts,
                 truncated=trunc_out, cursor_leaf=cur_leaf_out,
-                cursor_key=cur_key_out, _arity=w.arity,
+                cursor_key=cur_key_out, rounds=w.rounds_done,
+                stats=w.stats_out or {}, _arity=w.arity,
             )
         self.stats.range_rounds_in_mesh += max(int(w.rounds) - 1, 0)
         va = np.asarray(w.valid)[:n]
@@ -779,7 +1014,7 @@ class DPAStore:
         cur_key_out[emitted] = last_key[emitted]
         trunc_out &= counts < limit
         self.stats.range_truncated += int(trunc_out.sum())
-        if not w.resumed:
+        if not w.resumed and w.as_of is None:
             # only fresh client-entry scans admit their cursors: a resumed
             # call (start_leaves given) is an orchestration round — the
             # sharded facade re-issues those itself, so its interior
@@ -794,10 +1029,18 @@ class DPAStore:
             cursor_leaf=cur_leaf_out,
             cursor_key=cur_key_out,
             rounds=int(w.rounds),
-            stats={
-                "rounds_in_mesh": max(int(w.rounds) - 1, 0),
-                "reissue": int(w.resumed),
-            },
+            stats=(
+                {
+                    "rounds_in_mesh": max(int(w.rounds) - 1, 0),
+                    "reissue": int(w.resumed),
+                }
+                if w.as_of is None
+                else {
+                    "rounds_in_mesh": max(int(w.rounds) - 1, 0),
+                    "reissue": int(w.resumed),
+                    "as_of": int(w.as_of),
+                }
+            ),
             _arity=w.arity,
         )
 
@@ -847,6 +1090,92 @@ class DPAStore:
             epoch=self.stats.flush_cycles,
         )
         self.stats.scan_cursor_admits += int(np.asarray(eligible).sum())
+
+    def _range_filtered(
+        self,
+        start_keys_u64: np.ndarray,
+        *,
+        limit: int,
+        k_max,
+        max_leaves: int,
+        arity: int,
+        as_of: Optional[int],
+        expired_fn,
+    ) -> _RangeWave:
+        """TTL-filtered RANGE: refill loop over the unfiltered machinery.
+
+        Expired keys are dropped post-scan, so a row whose unfiltered walk
+        filled ``limit`` may come back short — those rows re-issue from the
+        last *pre-filter* key + 1 until the limit fills or the window/chain
+        exhausts.  Runs synchronously at issue time (each inner call is one
+        device dispatch) and returns a prebaked wave, which keeps pipelined
+        execution bitwise-equal to serial: the whole loop lands at this
+        wave's position in the issue order.  Rows are never reported
+        truncated — the loop absorbs any interior bound itself."""
+        n = start_keys_u64.size
+        lim = max(limit, 0)
+        w = _RangeWave(
+            n=n,
+            limit=limit,
+            arity=arity,
+            resumed=False,
+            keys_out=np.zeros((n, lim), dtype=np.uint64),
+            vals_out=np.zeros((n, lim), dtype=np.uint64),
+            counts=np.zeros(n, dtype=np.int64),
+            trunc_out=np.zeros(n, dtype=bool),
+            cur_leaf_out=np.full(n, -1, dtype=np.int32),
+            cur_key_out=start_keys_u64.copy(),
+            empty=True,  # prebaked: no pending device gather
+            as_of=as_of,
+        )
+        kmax_arr = np.full(n, KEY_MAX, dtype=np.uint64)
+        if k_max is not None:
+            kmax_arr[:] = np.asarray(k_max, dtype=np.uint64)
+        cur_k = start_keys_u64.copy()
+        need = np.ones(n, dtype=bool)
+        rounds = 0
+        while need.any():
+            idxs = np.where(need)[0]
+            r = self.range_finalize(
+                self.range_issue(
+                    cur_k[idxs],
+                    limit=limit,
+                    k_max=kmax_arr[idxs],
+                    max_leaves=max_leaves,
+                    arity=6,
+                    as_of=as_of,
+                    _raw=True,
+                )
+            )
+            rounds += max(int(r.rounds), 1)
+            for j, i in enumerate(idxs):
+                rc = int(r.counts[j])
+                rk = r.keys[j, :rc]
+                rv = r.vals[j, :rc]
+                keep = ~expired_fn(rk)
+                rk, rv = rk[keep], rv[keep]
+                space = limit - int(w.counts[i])
+                take = min(rk.size, space)
+                if take:
+                    at = int(w.counts[i])
+                    w.keys_out[i, at : at + take] = rk[:take]
+                    w.vals_out[i, at : at + take] = rv[:take]
+                    w.counts[i] += take
+                    w.cur_key_out[i] = rk[take - 1]
+                if w.counts[i] >= limit or rc < limit:
+                    # filled, or the unfiltered walk exhausted the window
+                    need[i] = False
+                    continue
+                nxt = int(r.cursor_key[j]) + 1  # last pre-filter key + 1
+                if nxt >= int(kmax_arr[i]) or nxt >= int(KEY_MAX):
+                    need[i] = False
+                else:
+                    cur_k[i] = np.uint64(nxt)
+        w.rounds_done = rounds
+        w.stats_out = {"rounds_in_mesh": 0, "reissue": 0, "ttl_filtered": 1}
+        if as_of is not None:
+            w.stats_out["as_of"] = int(as_of)
+        return w
 
     # ------------------------------------------------------------ patch path
     def _process_full_leaves(self) -> int:
@@ -937,9 +1266,13 @@ class DPAStore:
         while pending:
             chunk_leaves = [l for l, _ in pending]
             chunk_entries = [e for _, e in pending]
+            # version-chain stamp: leaves this transaction emits are born at
+            # the cycle it completes as (end_cycle increments afterwards)
+            self.image.version_cycle = self.epochs.cycle + 1
             result = patch.plan_patch_batch(
                 self.image, chunk_leaves, chunk_entries,
                 headroom_ok=self._headroom_ok,
+                force_structural=self.retain_epochs > 0,
             )
             pending = result.unplanned
             # COPY then CONNECT — the stitch atomicity contract, once per
@@ -960,6 +1293,7 @@ class DPAStore:
             self.epochs.defer_free_batch(result.batch.frees)
             self._apply_scan_invalidation()
             self.stats.reclaimed += self.epochs.end_cycle(self.image)
+            self._note_cycle_end()
             self.stats.stitched_bytes += result.batch.payload_bytes()
             self.stats.stitched_dpa_bytes += result.batch.dpa_bytes()
             self.stats.patches_update += result.n_update
@@ -977,7 +1311,11 @@ class DPAStore:
         self._patch_leaf_entries(leaf, self._buffer_entries([leaf])[0])
 
     def _patch_leaf_entries(self, leaf: int, entries) -> None:
-        result = patch.plan_patch(self.image, leaf, entries)
+        self.image.version_cycle = self.epochs.cycle + 1
+        result = patch.plan_patch(
+            self.image, leaf, entries,
+            force_structural=self.retain_epochs > 0,
+        )
         # COPY then CONNECT — the stitch atomicity contract
         self.tree = stitch.apply_copies(self.tree, result.batch)
         self.tree, self.ib = stitch.apply_connects(self.tree, self.ib, result.batch)
@@ -990,8 +1328,10 @@ class DPAStore:
         # Patches run with no wave in flight (host-serialized), so every
         # traverser has trivially "moved on": advancing the epoch here is the
         # degenerate-but-sound case of the paper's packet-counter epoch.
-        self.epochs.advance()
-        self.stats.reclaimed += self.epochs.reclaim(self.image)
+        # end_cycle = advance + reclaim, plus the version-cycle increment the
+        # per-leaf stream owes (one transaction per patched leaf).
+        self.stats.reclaimed += self.epochs.end_cycle(self.image)
+        self._note_cycle_end()
         self.stats.stitched_bytes += result.batch.payload_bytes()
         self.stats.stitched_dpa_bytes += result.batch.dpa_bytes()
         if result.kind == "update":
@@ -1110,6 +1450,7 @@ class DPAStore:
                 int(self.image.leaf_count[leaf]) == 0
                 and int(ib_counts[leaf]) == 0
                 and prev != -1
+                and self._stub_version_safe(leaf)
             ):
                 stubs.append(leaf)
             else:
@@ -1129,10 +1470,53 @@ class DPAStore:
         self.epochs.defer_free_batch(batch.frees)
         self._apply_scan_invalidation()
         self.stats.reclaimed += self.epochs.end_cycle(self.image)
+        self._note_cycle_end()
         self.stats.stitched_bytes += batch.payload_bytes()
         self.stats.stitched_dpa_bytes += batch.dpa_bytes()
         self.stats.stub_leaves_compacted += n
         return n
+
+    def _stub_version_safe(self, leaf: int) -> bool:
+        """Retention gate for chain compaction: removing a stub widens its
+        predecessor's routed window, so any epoch-E key the stub's version
+        chain still serves would become unreachable through the current
+        descent.  Walk the chain back to the oldest retained epoch and
+        require EVERY visited version to be empty; otherwise the stub must
+        survive this sweep (it becomes removable once the window ages out).
+        Version rows of retained ids are intact — reclaim's retention gate
+        releases nothing the walk can visit."""
+        if self.epochs.retain <= 0:
+            return True
+        oldest = self.epochs.horizon + 1  # oldest retained version epoch
+        vb, vp = self.image.ver_birth, self.image.ver_prev
+        lc = self.image.leaf_count
+        node = int(leaf)
+        while True:
+            if int(lc[node]) != 0:
+                return False
+            if int(vb[node]) <= oldest:
+                return True
+            prev = int(vp[node])
+            if prev < 0:
+                return True
+            node = prev
+
+    # ------------------------------------------------------------ TTL sweep
+    def ttl_sweep(self) -> int:
+        """Physically reclaim expired keys: tombstone every key past its
+        deadline, flush the tombstones through a stitch cycle, then run the
+        chain compaction pass over any leaves the deletions emptied.  After
+        the sweep the reclaimed keys are gone from the live tree (reads were
+        already filtering them; ``as_of`` windows still see them until the
+        epochs age out).  Returns the number of keys reclaimed."""
+        expired = self.ttl.expired_keys()
+        if not expired:
+            return 0
+        keys = np.array(sorted(expired), dtype=np.uint64)
+        self.delete(keys)  # note_delete drops the deadlines
+        self.flush()
+        self.compact_chain()
+        return int(keys.size)
 
     def ingest_headroom(self) -> int:
         """Keys this store can absorb via :meth:`ingest_slice` without
@@ -1274,6 +1658,14 @@ class DPAStore:
                     base[k] = int(join_u64(ibv[leaf, j]))
                 elif ops[leaf, j] == IB_DEL:
                     base.pop(k, None)
+        if self.ttl:
+            now = self.ttl.now
+            dl = self.ttl.deadlines
+            base = {
+                k: v
+                for k, v in base.items()
+                if k not in dl or now < dl[k]
+            }
         ks = np.array(sorted(base.keys()), dtype=np.uint64)
         vs = np.array([base[int(k)] for k in ks], dtype=np.uint64)
         return ks, vs

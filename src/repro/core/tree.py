@@ -104,6 +104,23 @@ class TreeImage:
     free_pivots: List[int] = field(default_factory=list)
     free_leaves: List[int] = field(default_factory=list)
     free_slots: List[int] = field(default_factory=list)
+    # -- leaf version chain (HOST-ONLY; point-in-time reads) ---------------
+    # ver_birth[l] = stitch cycle that emitted leaf l (0 = bulk load);
+    # ver_prev[l] = the leaf l replaced (-1 = none).  A versioned read at
+    # as_of=E walks ver_prev while ver_birth > E — epoch retention
+    # (EpochManager.retain) keeps every reachable ancestor un-recycled.
+    ver_birth: Optional[np.ndarray] = None  # (Nl,) i64
+    ver_prev: Optional[np.ndarray] = None  # (Nl,) i32
+    # the cycle number the in-flight stitch transaction will complete as;
+    # store.py refreshes it right before planning each transaction
+    version_cycle: int = 0
+
+    def __post_init__(self):
+        n = self.leaf_anchor.shape[0]
+        if self.ver_birth is None:
+            self.ver_birth = np.zeros(n, dtype=np.int64)
+        if self.ver_prev is None:
+            self.ver_prev = np.full(n, -1, dtype=np.int32)
 
     # -- allocation -------------------------------------------------------
     def alloc(self, pool: str) -> int:

@@ -202,10 +202,12 @@ class ShardedDPAStore:
         rebalance_cfg="default",
         replication: int = 1,
         watchdog=None,
+        retain_epochs: int = 0,
     ):
         from repro.core.store import DPAStore
         from repro.core import pla
         from repro.core.scancache import ScanCacheConfig
+        from repro.core.ttl import TTLTracker
         from repro.distributed.rebalance import (
             OwnershipTable,
             RebalanceConfig,
@@ -281,17 +283,45 @@ class ShardedDPAStore:
             cache_cfg=cache_cfg,
             batched_patch=batched_patch,
             scan_cache_cfg=scan_cache_cfg,
+            retain_epochs=retain_epochs,
         )
+        # Shared TTL sidecar: deadlines are keyed by KEY, not by store, so
+        # one tracker serves every replica and generation — a key's deadline
+        # survives slice migration, replica recovery and reshard without any
+        # copy step.  Every store this facade creates gets this tracker
+        # (see _make_store); per-shard sweeps are therefore facade-level
+        # only (ttl_sweep routes the tombstones).
+        self.retain_epochs = retain_epochs
+        self.ttl = TTLTracker()
+        # facade point-in-time snapshots: seq -> pinned stores/epochs/routing
+        self._snap_seq = 0
+        self._snaps: Dict[int, Dict] = {}
         # groups[s][r]: replica r of shard group s (None = crashed slot).
         # R identical bulk loads, so replicas start bitwise-equal and the
         # synchronous write fan-out keeps their contents that way.
         self.groups: List[List[Optional[DPAStore]]] = [
-            [
-                DPAStore(keys[h == s], vals[h == s], tree_cfg, **self._store_kwargs)
-                for _ in range(replication)
-            ]
+            [self._make_store(keys[h == s], vals[h == s]) for _ in range(replication)]
             for s in range(n_shards)
         ]
+
+    def _make_store(self, keys: np.ndarray, vals: np.ndarray):
+        from repro.core.store import DPAStore
+
+        st = DPAStore(keys, vals, self.cfg, **self._store_kwargs)
+        st.ttl = self.ttl  # shared deadline sidecar (see __init__)
+        return st
+
+    def _fresh_store_with(self, k: np.ndarray, v: np.ndarray):
+        """Fresh store holding exactly ``(k, v)``: ingest into an empty
+        store when headroom allows (the patch/stitch path), bulk load
+        otherwise — the recovery/reshard/evacuation build discipline."""
+        empty = np.empty(0, dtype=np.uint64)
+        fresh = self._make_store(empty, empty)
+        if k.size and k.size <= fresh.ingest_headroom():
+            fresh.ingest_slice(k, v)
+        elif k.size:  # slice exceeds an empty store's free pools
+            fresh = self._make_store(k, v)
+        return fresh
 
     @property
     def shards(self) -> List:
@@ -357,14 +387,19 @@ class ShardedDPAStore:
             self.watchdog.end_step()
 
     def _write_group(
-        self, s: int, op: str, keys: np.ndarray, *arrays, auto_retry: bool = True
+        self, s: int, op: str, keys: np.ndarray, *arrays,
+        auto_retry: bool = True, **kw,
     ) -> np.ndarray:
         """Fan one write batch out to every in-sync replica of group ``s``.
         Statuses merge pessimistically (max: OK=0 < RETRY) — a key is acked
-        only once every replica holds it."""
+        only once every replica holds it.  Extra kwargs (``ttl=``) pass
+        through; each replica's ``note_put`` hits the SAME shared tracker
+        with the same deadline, so the fan-out is idempotent there."""
         status = None
         for r in self._in_sync(s):
-            st = getattr(self.groups[s][r], op)(keys, *arrays, auto_retry=auto_retry)
+            st = getattr(self.groups[s][r], op)(
+                keys, *arrays, auto_retry=auto_retry, **kw
+            )
             self.replica_writes += int(keys.size)
             status = st if status is None else np.maximum(status, st)
         return status
@@ -403,7 +438,11 @@ class ShardedDPAStore:
         keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
         if self.partition == "range":
             return self.ownership.route(keys_u64, epoch=epoch)
-        assert epoch is None, "hash routing has no boundary epochs"
+        if epoch is not None:
+            # NOT an assert: request validation must survive ``python -O``
+            raise ValueError(
+                "hash routing has no boundary epochs (epoch must be None)"
+            )
         return shard_of_np(keys_u64, self.n_shards)
 
     def _route(self, keys_u64: np.ndarray, epoch: Optional[int] = None):
@@ -421,7 +460,10 @@ class ShardedDPAStore:
             self.planner.note_load(dest)
         return keys_u64, dest
 
-    def put(self, keys=None, vals=None, *, auto_retry: bool = True, **legacy) -> np.ndarray:
+    def put(
+        self, keys=None, vals=None, *,
+        auto_retry: bool = True, ttl: Optional[int] = None, **legacy,
+    ) -> np.ndarray:
         from repro.core import api
         from repro.core.store import STATUS_OK
 
@@ -439,7 +481,7 @@ class ShardedDPAStore:
             if m.any():
                 t0 = time.perf_counter()
                 statuses[m] = self._write_group(
-                    s, "put", keys[m], vals[m], auto_retry=auto_retry
+                    s, "put", keys[m], vals[m], auto_retry=auto_retry, ttl=ttl
                 )
                 self._note_shard_time(s, time.perf_counter() - t0)
         self._wave_end()
@@ -469,12 +511,25 @@ class ShardedDPAStore:
         return statuses
 
     def get(
-        self, keys=None, *, epoch: Optional[int] = None, **legacy
+        self,
+        keys=None,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+        **legacy,
     ) -> Tuple[np.ndarray, np.ndarray]:
         from repro.core import api
 
         keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
         api.reject_unknown("get", legacy)
+        if as_of is not None:
+            if epoch is not None:
+                # NOT an assert: must survive ``python -O``
+                raise ValueError(
+                    "get: as_of (version epoch) and epoch (routing epoch) "
+                    "are mutually exclusive"
+                )
+            return self._get_as_of(np.asarray(keys, dtype=np.uint64), as_of)
         return self.get_finalize(self.get_issue(keys, epoch=epoch))
 
     def get_issue(self, keys, *, epoch: Optional[int] = None) -> _ShardGetWave:
@@ -566,6 +621,7 @@ class ShardedDPAStore:
         *args,
         k_max=None,
         epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
         max_leaves: int = 4,
         fanout: Optional[int] = None,
         **legacy,
@@ -621,6 +677,17 @@ class ShardedDPAStore:
                     fanout = val
                 else:
                     epoch = val
+        if as_of is not None:
+            if epoch is not None:
+                # NOT an assert: must survive ``python -O``
+                raise ValueError(
+                    "range: as_of (version epoch) and epoch (routing epoch) "
+                    "are mutually exclusive"
+                )
+            return self._range_as_of(
+                k_min, limit, k_max=k_max, max_leaves=max_leaves,
+                fanout=fanout, as_of=as_of,
+            )
         start = np.asarray(k_min, dtype=np.uint64)
         n = start.size
         keys_out = np.zeros((n, max(limit, 0)), dtype=np.uint64)
@@ -894,6 +961,230 @@ class ShardedDPAStore:
         order = np.argsort(np.concatenate(ks), kind="stable")
         return np.concatenate(ks)[order], np.concatenate(vs)[order]
 
+    # ------------------------------------------------ point-in-time reads
+    def snapshot_epoch(self) -> int:
+        """Pin the current stitched state tier-wide and return the facade
+        snapshot id ``as_of`` reads name.
+
+        One snapshot = (serving primary store of every group, that store's
+        version epoch from ``DPAStore.snapshot_epoch``, the boundary
+        vector, the shard count) — all pinned by Python reference, so a
+        later rebalance/reshard/failover cannot move data out from under a
+        retained read (retired stores stay alive exactly as long as a
+        snapshot holds them).  At most ``retain_epochs`` snapshots stay
+        live; taking one past the cap evicts the oldest.  A per-STORE
+        window can still age out underneath an old facade snapshot (shard
+        stores keep flushing), in which case the read raises
+        :class:`~repro.core.epoch.EpochRetiredError` — same contract,
+        finer clock.
+
+        Refuses mid-handoff: a snapshot must pin exactly one ownership
+        generation."""
+        from repro.core.epoch import EpochRetiredError
+
+        if self.retain_epochs <= 0:
+            raise EpochRetiredError(
+                "snapshot_epoch: facade was built with retain_epochs=0"
+            )
+        if self.in_handoff or self._retired_groups is not None:
+            # NOT an assert: must survive ``python -O``
+            raise ValueError(
+                "snapshot_epoch during an open handoff: commit (or retire) "
+                "the rebalance/reshard/failover epoch first"
+            )
+        self.flush()
+        stores = list(self.shards)  # serving primaries, pinned by reference
+        epochs = [st.snapshot_epoch() for st in stores]
+        self._snap_seq += 1
+        self._snaps[self._snap_seq] = dict(
+            stores=stores,
+            epochs=epochs,
+            boundaries=(
+                None if self.ownership is None else self.ownership.current.copy()
+            ),
+            n_shards=self.n_shards,
+        )
+        while len(self._snaps) > self.retain_epochs:
+            self._snaps.pop(min(self._snaps))
+        return self._snap_seq
+
+    def _snap_for(self, as_of: int) -> Dict:
+        from repro.core.epoch import EpochRetiredError
+
+        if self.retain_epochs <= 0:
+            raise EpochRetiredError(
+                f"as_of={as_of}: facade was built with retain_epochs=0 "
+                "(no point-in-time window is kept)"
+            )
+        snap = self._snaps.get(int(as_of))
+        if snap is None:
+            raise EpochRetiredError(
+                f"as_of={as_of}: facade snapshot unknown or evicted "
+                f"(live snapshots: {sorted(self._snaps)})"
+            )
+        return snap
+
+    def _get_as_of(self, keys: np.ndarray, as_of: int):
+        """Versioned GET: route by the PINNED boundary vector (or the
+        pinned shard count, hash tier) to the PINNED stores, each serving
+        its rows at its pinned version epoch."""
+        snap = self._snap_for(as_of)
+        if snap["boundaries"] is not None:
+            dest = np.searchsorted(
+                snap["boundaries"], keys, side="right"
+            ).astype(np.int32)
+        else:
+            dest = shard_of_np(keys, snap["n_shards"])
+        vals = np.zeros(keys.size, dtype=np.uint64)
+        found = np.zeros(keys.size, dtype=bool)
+        for s, (st, e) in enumerate(zip(snap["stores"], snap["epochs"])):
+            m = dest == s
+            if m.any():
+                v, f = st.get(keys[m], as_of=e)
+                vals[m] = v
+                found[m] = f
+        return vals, found
+
+    def _range_as_of(
+        self, k_min, limit: int, *, k_max, max_leaves, fanout, as_of: int
+    ):
+        """Versioned scatter-gather RANGE over a pinned snapshot: owner +
+        successor sub-queries clipped to the pinned owned windows, each a
+        per-store ``as_of`` walk (which runs its in-mesh loop unbounded, so
+        sub-queries come back complete except at the chain hard cap — the
+        rare host resume re-descends from the last emitted key + 1)."""
+        from repro.core.api import RangeResult
+        from repro.core.keys import KEY_MAX
+        from repro.core.store import append_range_results
+
+        snap = self._snap_for(as_of)
+        start = np.asarray(k_min, dtype=np.uint64)
+        n = start.size
+        lim = max(limit, 0)
+        keys_out = np.zeros((n, lim), dtype=np.uint64)
+        vals_out = np.zeros((n, lim), dtype=np.uint64)
+        counts = np.zeros(n, dtype=np.int64)
+        stats = {"as_of": int(as_of)}
+        if n == 0 or limit <= 0:
+            return RangeResult(keys_out, vals_out, counts, stats=stats)
+        self.range_requests += n
+        if k_max is not None:
+            k_max = np.broadcast_to(np.asarray(k_max, dtype=np.uint64), (n,))
+        stores, epochs_v = snap["stores"], snap["epochs"]
+        n_snap = snap["n_shards"]
+        if snap["boundaries"] is None:
+            # hash snapshot: broadcast + the same k-way merge the live
+            # hash tier runs, each sub-query versioned
+            self.range_subqueries += n * n_snap
+            per = [
+                st.range(
+                    start, limit=limit, k_max=k_max,
+                    max_leaves=max_leaves, as_of=e,
+                )
+                for st, e in zip(stores, epochs_v)
+            ]
+            allk = np.concatenate([r.keys for r in per], axis=1)
+            allv = np.concatenate([r.vals for r in per], axis=1)
+            live = np.concatenate(
+                [np.arange(limit)[None, :] < r.counts[:, None] for r in per],
+                axis=1,
+            )
+            allk = np.where(live, allk, np.uint64(KEY_MAX))
+            order = np.argsort(allk, axis=1, kind="stable")[:, :limit]
+            top_k = np.take_along_axis(allk, order, axis=1)
+            top_v = np.take_along_axis(allv, order, axis=1)
+            top_live = np.take_along_axis(live, order, axis=1)
+            keys_out[:] = np.where(top_live, top_k, 0)
+            vals_out[:] = np.where(top_live, top_v, 0)
+            counts[:] = top_live.sum(axis=1)
+            return RangeResult(keys_out, vals_out, counts, stats=stats)
+        b = snap["boundaries"]
+        owner = np.searchsorted(b, start, side="right").astype(np.int32)
+        lb = np.concatenate([np.zeros(1, dtype=np.uint64), b])
+        ub = np.concatenate([b, np.full(1, KEY_MAX, dtype=np.uint64)])
+        fanout = n_snap if fanout is None else fanout
+        for s in range(n_snap):
+            m = (owner <= s) & (s - owner < fanout) & (counts < limit)
+            if not m.any():
+                continue
+            idxs = np.where(m)[0]
+            self.range_subqueries += int(idxs.size)
+            sub_start = np.maximum(start[idxs], lb[s])
+            sub_ub = np.full(idxs.size, ub[s], dtype=np.uint64)
+            if k_max is not None:
+                sub_ub = np.minimum(sub_ub, k_max[idxs])
+            while idxs.size:
+                res = stores[s].range(
+                    sub_start, limit=limit, k_max=sub_ub,
+                    max_leaves=max_leaves, as_of=epochs_v[s],
+                )
+                append_range_results(
+                    keys_out, vals_out, counts, idxs,
+                    res.keys, res.vals, res.counts, limit,
+                )
+                trunc = (
+                    np.asarray(res.truncated, dtype=bool)
+                    if res.truncated is not None
+                    else np.zeros(idxs.size, dtype=bool)
+                )
+                again = trunc & (counts[idxs] < limit)
+                if not again.any():
+                    break
+                # resume past the last emitted key (fresh versioned descent;
+                # keys never reach the KEY_MAX sentinel, so +1 cannot wrap)
+                nxt = res.cursor_key[again].astype(np.uint64) + np.uint64(1)
+                still = nxt < sub_ub[again]
+                idxs = idxs[again][still]
+                sub_start = nxt[still]
+                sub_ub = sub_ub[again][still]
+                self.range_reissues += int(idxs.size)
+        return RangeResult(keys_out, vals_out, counts, stats=stats)
+
+    # ------------------------------------------------- TTL & compaction
+    def stub_count(self) -> int:
+        """Empty routing-stub leaves across every live replica."""
+        return sum(st.stub_count() for st in self._live_stores())
+
+    def compact_chain(self) -> int:
+        """One chain-compaction stitch per live replica; returns the
+        number of stubs removed tier-wide."""
+        return sum(st.compact_chain() for st in self._live_stores())
+
+    def ttl_sweep(self) -> int:
+        """Physically reclaim expired keys tier-wide: ROUTED tombstones
+        (delete -> flush -> chain compaction).  Facade-level on purpose —
+        a per-shard ``ttl_sweep`` against the SHARED tracker would stage
+        tombstones for every shard's expired keys on every shard.  Returns
+        the number of keys reclaimed."""
+        expired = self.ttl.expired_keys()
+        if not expired:
+            return 0
+        keys = np.array(sorted(expired), dtype=np.uint64)
+        self.delete(keys)  # routed fan-out; note_delete prunes the tracker
+        self.flush()
+        self.compact_chain()
+        return int(keys.size)
+
+    def maybe_compact(self) -> Optional[Dict[str, int]]:
+        """Planner-gated reclamation sweep: TTL tombstones + chain
+        compaction once the reclaimable backlog (expired keys + empty leaf
+        stubs) crosses ``RebalanceConfig.compact_stub_trigger``.  The serve
+        loop calls this once per wave batch next to ``maybe_rebalance``;
+        it is cheap when there is nothing to reclaim."""
+        if self.planner is None or self.in_handoff:
+            return None
+        n_expired = len(self.ttl.expired_keys())
+        stubs = self.stub_count()
+        if not self.planner.should_compact(stubs + n_expired):
+            return None
+        reclaimed = self.ttl_sweep()  # compacts once itself when it fires
+        compacted = self.compact_chain()  # stub-only trigger path
+        return {
+            "ttl_reclaimed": reclaimed,
+            "stubs_compacted": compacted,
+            "backlog": stubs + n_expired,
+        }
+
     def stacked(self, epoch: Optional[int] = None) -> Tuple[DeviceTree, InsertBuffers, int]:
         """Stack the serving replica of each group for the device wave
         paths.  ``epoch`` selects the primary map of a live ownership epoch
@@ -955,7 +1246,6 @@ class ShardedDPAStore:
         headroom.  Rebuilt replicas re-enter the in-sync set (reads and
         write fan-out include them again).  Returns the executed plan."""
         from repro.core.keys import KEY_MAX
-        from repro.core.store import DPAStore
         from repro.distributed.elastic import plan_replica_remesh
 
         assert self.ownership is not None, "replication is a range-tier feature"
@@ -969,15 +1259,9 @@ class ShardedDPAStore:
             alive,
             primaries=[int(p) for p in self.ownership.primary],
         )
-        empty = np.empty(0, dtype=np.uint64)
         for rb in plan.rebuilds:
             k, v = self.groups[rb.group][rb.source].snapshot_slice(0, KEY_MAX)
-            fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
-            if k.size <= fresh.ingest_headroom():
-                fresh.ingest_slice(k, v)
-            else:  # too big for an empty store's free pools: bulk load
-                fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
-            self.groups[rb.group][rb.replica] = fresh
+            self.groups[rb.group][rb.replica] = self._fresh_store_with(k, v)
             self.ownership.restore_replica(rb.group, rb.replica)
             self.recoveries += 1
         return plan
@@ -1190,20 +1474,13 @@ class ShardedDPAStore:
                 np.full(1, keys.size, dtype=np.int64),
             ]
         )
-        empty = np.empty(0, dtype=np.uint64)
         new_groups: List[List[Optional[DPAStore]]] = []
         for s in range(new_shards):
             k = keys[cuts[s] : cuts[s + 1]]
             v = vals[cuts[s] : cuts[s + 1]]
-            grp: List[Optional[DPAStore]] = []
-            for _ in range(self.replication):
-                fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
-                if k.size and k.size <= fresh.ingest_headroom():
-                    fresh.ingest_slice(k, v)
-                elif k.size:  # slice exceeds an empty store's free pools
-                    fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
-                grp.append(fresh)
-            new_groups.append(grp)
+            new_groups.append(
+                [self._fresh_store_with(k, v) for _ in range(self.replication)]
+            )
         self._retired_groups = self.groups
         self.groups = new_groups
         self.n_shards = new_shards
@@ -1261,13 +1538,11 @@ class ShardedDPAStore:
         untouched and the rebuilt replica is bitwise content-equal, so
         routing never observes the move.  Returns keys moved."""
         from repro.core.keys import KEY_MAX
-        from repro.core.store import DPAStore
 
         assert not self.in_handoff, (
             "evacuation during a handoff would snapshot stale out-of-window"
             " copies — commit first"
         )
-        empty = np.empty(0, dtype=np.uint64)
         moved = 0
         for r in self._in_sync(s):
             st = self.groups[s][r]
@@ -1275,12 +1550,7 @@ class ShardedDPAStore:
                 continue
             st.flush()
             k, v = st.snapshot_slice(0, KEY_MAX)
-            fresh = DPAStore(empty, empty, self.cfg, **self._store_kwargs)
-            if k.size and k.size <= fresh.ingest_headroom():
-                fresh.ingest_slice(k, v)
-            elif k.size:
-                fresh = DPAStore(k, v, self.cfg, **self._store_kwargs)
-            self.groups[s][r] = fresh
+            self.groups[s][r] = self._fresh_store_with(k, v)
             moved = int(k.size)  # replicas are identical: count one copy
         self.evacuations += 1
         if self.watchdog is not None:
@@ -1389,6 +1659,7 @@ def make_serve_wave(
     eps_inner: int,
     eps_leaf: int,
     route_fn=None,
+    route_fn_prev=None,
 ):
     """Builds the per-shard wave body (used by both execution paths).
 
@@ -1396,14 +1667,37 @@ def make_serve_wave(
     The all_to_all exchange is abstracted as a callable so the emulated path
     can transpose in-memory.  ``route_fn(khi, klo) -> dest`` defaults to the
     hash partition; the range tier passes a boundary search instead.
+
+    ``route_fn_prev`` supports a mixed in-flight wave during a two-phase
+    ownership handoff: the body then takes a per-request ``tag`` ((W,) i32;
+    0 = previous epoch, 1 = current) and routes each request by exactly the
+    vector of the epoch it was admitted under — the GET analogue of the
+    RANGE wave's ``route_range_epoch``.  The tag rides the bucketize /
+    all_to_all exchange next to the key limbs (same wire layout as the
+    RANGE wave); GET *serving* is epoch-invariant — during a handoff the
+    donor still physically holds its migrated slice — so unlike RANGE no
+    per-epoch window clip is needed on the serving side.
     """
     if route_fn is None:
         route_fn = partial(shard_of, n_shards=n_shards)
 
-    def body(tree, ib, khi, klo, all_to_all):
-        bk_hi, bk_lo, origin, valid = _bucketize(
-            route_fn(khi, klo), khi, klo, n_shards, cap
-        )
+    def body(tree, ib, khi, klo, all_to_all, tag=None):
+        dest = route_fn(khi, klo)
+        if route_fn_prev is not None:
+            t = (
+                jnp.asarray(tag, dtype=jnp.int32)
+                if tag is not None
+                else jnp.ones(khi.shape, dtype=jnp.int32)
+            )
+            dest = jnp.where(t > 0, dest, route_fn_prev(khi, klo))
+            bk_hi, bk_lo, origin, valid, bk_tag = _bucketize(
+                dest, khi, klo, n_shards, cap, extra=(t,)
+            )
+            _ = all_to_all(bk_tag)  # admitted-epoch tag on the wire (audit)
+        else:
+            bk_hi, bk_lo, origin, valid = _bucketize(
+                dest, khi, klo, n_shards, cap
+            )
         # exchange: row d of my buckets goes to shard d
         rq_hi = all_to_all(bk_hi)  # (n_shards, cap) requests I now own
         rq_lo = all_to_all(bk_lo)
@@ -1447,18 +1741,37 @@ def serve_wave_emulated(
     eps_inner: int,
     eps_leaf: int,
     route_fn=None,
+    route_fn_prev=None,
+    epoch_tag=None,
 ):
     """Single-device emulation: vmap over the shard dim; the exchange is a
-    transpose of the (shard, dest, cap) bucket tensor."""
+    transpose of the (shard, dest, cap) bucket tensor.
+
+    ``route_fn_prev`` + ``epoch_tag`` ((n_shards, W) i32; 0 = previous
+    epoch, 1 = current) route a mixed in-flight handoff wave per request —
+    see :func:`make_serve_wave`."""
     n_shards = khi.shape[0]
     if route_fn is None:
         route_fn = partial(shard_of, n_shards=n_shards)
 
     # The exchange needs cross-shard data, which vmap can't see — so run the
     # phases manually: bucketize all shards, transpose, serve, transpose.
-    bk = jax.vmap(
-        lambda h, l: _bucketize(route_fn(h, l), h, l, n_shards, cap)
-    )(khi, klo)
+    if route_fn_prev is not None:
+        tag = (
+            jnp.asarray(epoch_tag, dtype=jnp.int32)
+            if epoch_tag is not None
+            else jnp.ones(khi.shape, dtype=jnp.int32)
+        )
+
+        def _bucketize_epoch(h, l, t):
+            dest = jnp.where(t > 0, route_fn(h, l), route_fn_prev(h, l))
+            return _bucketize(dest, h, l, n_shards, cap, extra=(t,))[:4]
+
+        bk = jax.vmap(_bucketize_epoch)(khi, klo, tag)
+    else:
+        bk = jax.vmap(
+            lambda h, l: _bucketize(route_fn(h, l), h, l, n_shards, cap)
+        )(khi, klo)
     bk_hi, bk_lo, origin, valid = bk
     rq_hi = jnp.swapaxes(bk_hi, 0, 1)  # (dest, src, cap)
     rq_lo = jnp.swapaxes(bk_lo, 0, 1)
@@ -1497,18 +1810,21 @@ def serve_wave_emulated(
 
 def serve_wave_sharded(
     mesh: Mesh, stacked_tree, stacked_ib, *, cap, depth, eps_inner, eps_leaf,
-    route_fn=None,
+    route_fn=None, route_fn_prev=None,
 ):
     """shard_map version over the mesh 'data' axis (dry-run / production).
 
     Returns a jit-able fn(stacked_tree, stacked_ib, khi, klo) with state and
-    requests sharded on their leading shard dim."""
+    requests sharded on their leading shard dim — or, when
+    ``route_fn_prev`` is given (a live ownership handoff),
+    fn(stacked_tree, stacked_ib, khi, klo, epoch_tag) with per-request
+    admitted-epoch tags (see :func:`make_serve_wave`)."""
     from jax.experimental.shard_map import shard_map
 
     n_shards = mesh.shape["data"]
     body = make_serve_wave(
         n_shards, cap, depth=depth, eps_inner=eps_inner, eps_leaf=eps_leaf,
-        route_fn=route_fn,
+        route_fn=route_fn, route_fn_prev=route_fn_prev,
     )
 
     def a2a(x):
@@ -1517,18 +1833,26 @@ def serve_wave_sharded(
             x[None], "data", split_axis=1, concat_axis=0, tiled=False
         ).reshape(x.shape)
 
-    def per_shard(tree, ib, khi, klo):
+    def per_shard(tree, ib, khi, klo, tag):
         tree = jax.tree.map(lambda a: a[0], tree)
         ib = jax.tree.map(lambda a: a[0], ib)
-        out = body(tree, ib, khi[0], klo[0], a2a)
+        out = body(tree, ib, khi[0], klo[0], a2a, tag=tag[0])
         return tuple(o[None] for o in out)
 
     state_specs = jax.tree.map(lambda _: P("data"), (stacked_tree, stacked_ib))
     fn = shard_map(
         per_shard,
         mesh=mesh,
-        in_specs=(state_specs[0], state_specs[1], P("data"), P("data")),
+        in_specs=(
+            state_specs[0], state_specs[1], P("data"), P("data"), P("data"),
+        ),
         out_specs=(P("data"), P("data"), P("data"), P("data")),
         check_rep=False,
     )
-    return fn
+    if route_fn_prev is not None:
+        return fn  # caller supplies per-request epoch tags
+
+    def single_epoch(tree, ib, khi, klo):
+        return fn(tree, ib, khi, klo, jnp.ones(khi.shape, dtype=jnp.int32))
+
+    return single_epoch

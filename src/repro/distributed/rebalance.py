@@ -361,6 +361,10 @@ class RebalanceConfig:
     min_total_keys: int = 512  # below this a refit cannot pay for itself
     damping: float = 1.0  # fraction of each boundary's quantile move to take
     seed: int = 0
+    # Chain-compaction trigger: a sweep (``compact_chain``, which also
+    # physically reclaims TTL-expired keys via ``ttl_sweep``) is proposed
+    # once this many empty leaf stubs have accumulated across the tier.
+    compact_stub_trigger: int = 8
 
 
 class RebalancePlanner:
@@ -400,6 +404,12 @@ class RebalancePlanner:
         if int(occ.sum()) < self.cfg.min_total_keys:
             return False
         return self.spread(occ) >= self.cfg.spread_trigger
+
+    def should_compact(self, stub_count: int) -> bool:
+        """Arm a chain-compaction sweep once enough empty leaf stubs (the
+        residue of deletion storms and TTL expiry) have piled up to pay for
+        the patch-cycle it costs."""
+        return int(stub_count) >= self.cfg.compact_stub_trigger
 
     def propose(self, current: np.ndarray) -> np.ndarray:
         """New boundary vector from the streaming sample (damped toward the

@@ -26,6 +26,12 @@ LM decode loop, batched.
     PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
         --shards 2 --reshard-to 4 --snapshot-dir /tmp/kv_snap
 
+    # point-in-time versioned reads + TTL expiry: pin a pre-run snapshot,
+    # write the UPDATE waves with a deadline, sweep the expired keys at
+    # exit, then re-verify the pinned snapshot bitwise through as_of
+    PYTHONPATH=src python -m repro.launch.serve --kv --partition range \
+        --shards 4 --retain-epochs 64 --ttl 4
+
     # multi-tenant front end: 4 tenant namespaces through the deadline
     # wave scheduler, tenant 0 rate-limited to 2048 keys/tick at half QoS
     # weight (zipf request skew makes tenant 0 the noisy neighbour)
@@ -199,7 +205,13 @@ def serve_kv(args):
     vals = keys ^ np.uint64(0xC0FFEE)
     scan_cfg = ScanCacheConfig() if args.scan_cache else None
     if args.partition == "single":
-        store = DPAStore(keys, vals, TreeConfig(), scan_cache_cfg=scan_cfg)
+        store = DPAStore(
+            keys,
+            vals,
+            TreeConfig(),
+            scan_cache_cfg=scan_cfg,
+            retain_epochs=args.retain_epochs,
+        )
     else:
         from repro.distributed.kvshard import ShardedDPAStore
 
@@ -211,6 +223,7 @@ def serve_kv(args):
             partition=args.partition,
             scan_cache_cfg=scan_cfg,
             replication=args.replication,
+            retain_epochs=args.retain_epochs,
         )
     # queue_depth > 1: double-buffered dispatch — wave N+1 builds and
     # dispatches while wave N's gather drains; barrier ops (rebalance,
@@ -236,6 +249,13 @@ def serve_kv(args):
             elif kind == "range":
                 range_hits += int(res.counts.sum())
 
+    snap = None
+    if args.retain_epochs > 0:
+        # pin the pre-run state; re-read it through as_of at exit after
+        # the full churn (updates, rebalances, reshards, TTL sweeps)
+        snap = kv.snapshot_epoch()
+        frozen_probe = keys[:: max(len(keys) // 256, 1)][:256]
+        frozen_vals = frozen_probe ^ np.uint64(0xC0FFEE)
     rng = np.random.default_rng(0)
     idx = zipf_indices(len(keys), args.waves * args.wave_size, alpha=0.99, seed=2)
     rebalancing = args.rebalance and args.partition == "range"
@@ -268,13 +288,17 @@ def serve_kv(args):
                         n_new, dtype=np.uint64
                     ) * np.uint64(3)
                     fresh_base = newk.max()
-                    if pipe is not None:
+                    if args.ttl:  # expiring write: deadline bookkeeping
+                        kv.put(newk, newk, ttl=args.ttl)  # rides serial path
+                    elif pipe is not None:
                         pending.append(("put", pipe.submit_put(newk, newk)))
                     else:
                         kv.put(newk, newk)
                 else:  # UPDATE
                     upd = q[: args.wave_size // 4]
-                    if pipe is not None:
+                    if args.ttl:
+                        kv.put(upd, upd, ttl=args.ttl)
+                    elif pipe is not None:
                         pending.append(("put", pipe.submit_put(upd, upd)))
                     else:
                         kv.put(upd, upd)
@@ -418,6 +442,38 @@ def serve_kv(args):
             f"rate across shards"
         )
         print(f"[serve-kv] shard stats totals: {tot}")
+    if args.ttl:
+        kv.ttl.tick(args.ttl)  # advance the logical expiry clock past
+        # every deadline the loop wrote (reads filter lazily until now)
+        t_sw = time.time()
+        reclaimed = kv.ttl_sweep()
+        print(
+            f"[serve-kv] ttl: {reclaimed} expired keys physically "
+            f"reclaimed in {time.time() - t_sw:.2f}s (ttl={args.ttl} "
+            f"ticks; expiry is a versioned event — pre-expiry as_of "
+            f"epochs still serve the keys)"
+        )
+    if snap is not None:
+        from repro.core.epoch import EpochRetiredError
+
+        try:
+            v, f = kv.get(frozen_probe, as_of=snap)
+            ok = bool(
+                np.asarray(f).all()
+                and np.array_equal(np.asarray(v, dtype=np.uint64), frozen_vals)
+            )
+            print(
+                f"[serve-kv] versioned: as_of={snap} over "
+                f"{frozen_probe.size} pre-run keys after the full churn "
+                f"-> {'bitwise match' if ok else 'MISMATCH'} "
+                f"(retain_epochs={args.retain_epochs})"
+            )
+        except EpochRetiredError:
+            print(
+                f"[serve-kv] versioned: snapshot epoch {snap} aged out of "
+                f"the {args.retain_epochs}-cycle retention window — raise "
+                f"--retain-epochs to keep longer-lived snapshots readable"
+            )
     if args.snapshot_dir:
         from repro.distributed.snapshot import save_snapshot
 
@@ -532,6 +588,27 @@ def main(argv=None):
         "per wave), 2 = double-buffered (wave N+1 builds + dispatches "
         "while wave N drains — the default), higher = deeper pipelining; "
         "results are bitwise-identical at every depth",
+    )
+    ap.add_argument(
+        "--retain-epochs",
+        type=int,
+        default=0,
+        help="multi-version retention window in flush cycles: > 0 keeps "
+        "superseded leaf versions addressable, enabling snapshot_epoch() "
+        "+ get/range(as_of=E) point-in-time reads — the serve loop pins "
+        "a pre-run snapshot and re-verifies it bitwise at exit; reads "
+        "past the window raise EpochRetiredError (0 = freed rows are "
+        "reclaimed immediately, no versioned reads)",
+    )
+    ap.add_argument(
+        "--ttl",
+        type=int,
+        default=0,
+        help="write the loop's UPDATE/insert waves with this TTL (logical "
+        "clock ticks): expired keys read as absent (read-time filter), "
+        "then at exit the clock advances and ttl_sweep() physically "
+        "reclaims them; pre-expiry as_of epochs still serve them "
+        "(0 = writes never expire)",
     )
     ap.add_argument(
         "--profile-dir",

@@ -347,6 +347,9 @@ _BARRIER_METHODS = frozenset(
         "evacuate_shard",
         "maybe_evacuate",
         "compact_chain",
+        "maybe_compact",
+        "snapshot_epoch",
+        "ttl_sweep",
         "snapshot_slice",
         "extract_slice",
         "ingest_slice",
@@ -390,8 +393,26 @@ class PipelinedStore:
         self.queue_depth = queue_depth
 
     # -------------------------------------------------------------- async
-    def submit_get(self, keys, *, epoch: Optional[int] = None) -> WaveTicket:
+    def submit_get(
+        self,
+        keys,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+    ) -> WaveTicket:
         keys = np.asarray(keys, dtype=np.uint64)
+        if as_of is not None:
+            # Versioned reads are barriers: the per-epoch resolve table is
+            # built from host chain state (ver_prev/ver_birth) an in-flight
+            # write wave's stitch epilogue could still move.  Drain, then
+            # run the serial versioned read inside the ticket's issue phase
+            # (it completes synchronously; the ticket is already done).
+            self.pipeline.drain()
+            return self.pipeline.submit(
+                lambda: self.store.get(keys, as_of=as_of),
+                lambda r: r,
+                kind="get_as_of",
+            )
         return self.pipeline.submit(
             lambda: self.store.get_issue(keys, epoch=epoch),
             self.store.get_finalize,
@@ -437,9 +458,22 @@ class PipelinedStore:
         *,
         k_max=None,
         epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
         max_leaves: int = 4,
     ) -> WaveTicket:
         k_min = np.asarray(k_min, dtype=np.uint64)
+        if as_of is not None:
+            # same barrier as submit_get: versioned walks resolve host
+            # chain state, so they run serially behind a drain
+            self.pipeline.drain()
+            return self.pipeline.submit(
+                lambda: self.store.range(
+                    k_min, limit, k_max=k_max, max_leaves=max_leaves,
+                    as_of=as_of,
+                ),
+                lambda r: r,
+                kind="range_as_of",
+            )
         return self.pipeline.submit(
             lambda: self.store.range_issue(
                 k_min, limit=limit, k_max=k_max, epoch=epoch,
@@ -469,19 +503,40 @@ class PipelinedStore:
             st.wave_drain_ns = self.ledger.wave_drain_ns
 
     # --------------------------------------------------------------- sync
-    def get(self, keys=None, *, epoch: Optional[int] = None, **legacy):
+    def get(
+        self,
+        keys=None,
+        *,
+        epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
+        **legacy,
+    ):
         from repro.core import api
 
         keys = api.take_legacy("get", legacy, keys, "keys", "keys_u64")
         api.reject_unknown("get", legacy)
-        return self.result(self.submit_get(keys, epoch=epoch))
+        return self.result(self.submit_get(keys, epoch=epoch, as_of=as_of))
 
-    def put(self, keys=None, vals=None, *, auto_retry: bool = True, **legacy):
+    def put(
+        self,
+        keys=None,
+        vals=None,
+        *,
+        auto_retry: bool = True,
+        ttl: Optional[int] = None,
+        **legacy,
+    ):
         from repro.core import api
 
         keys = api.take_legacy("put", legacy, keys, "keys", "keys_u64")
         vals = api.take_legacy("put", legacy, vals, "vals", "vals_u64")
         api.reject_unknown("put", legacy)
+        if ttl is not None:
+            # deadline bookkeeping rides the serial write path (the async
+            # fast path's write_issue clears deadlines per its ttl=None
+            # overwrite semantics — wrong for an expiring write)
+            self.drain()
+            return self.store.put(keys, vals, auto_retry=auto_retry, ttl=ttl)
         if not auto_retry:  # single-wave semantics need the serial path
             self.drain()
             return self.store.put(keys, vals, auto_retry=False)
@@ -507,6 +562,7 @@ class PipelinedStore:
         *,
         k_max=None,
         epoch: Optional[int] = None,
+        as_of: Optional[int] = None,
         max_leaves: int = 4,
         **legacy,
     ):
@@ -516,7 +572,8 @@ class PipelinedStore:
         api.reject_unknown("range", legacy)
         return self.result(
             self.submit_range(
-                k_min, limit, k_max=k_max, epoch=epoch, max_leaves=max_leaves
+                k_min, limit, k_max=k_max, epoch=epoch, as_of=as_of,
+                max_leaves=max_leaves,
             )
         )
 

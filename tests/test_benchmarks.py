@@ -535,3 +535,67 @@ def test_fig20_gate_rejects_lost_acked_and_unequal_restore():
     assert any("restore_equal" in p for p in validate_fig20_coverage(unequal))
     noshrink = [r for r in good if "/shrink/" not in r]
     assert any("shrink" in p for p in validate_fig20_coverage(noshrink))
+
+
+@pytest.mark.slow
+def test_fig22_smoke_rows_show_versioned_reads_and_ttl():
+    """The versioned sweep must emit schema-valid as_of cells for both
+    tiers with every point-in-time read matching its frozen oracle, and a
+    TTL cell that physically reclaimed the expiring wave with filtered and
+    swept reads bitwise-identical."""
+    from benchmarks import common, fig22_versioned
+    from benchmarks.run import (
+        validate_fig22_coverage,
+        validate_rows,
+        versioned_metrics,
+    )
+
+    saved_rows, saved_smoke = common.ROWS[:], common.SMOKE
+    common.ROWS.clear()
+    common.set_smoke(True)
+    try:
+        fig22_versioned.run()
+        rows = common.ROWS[:]
+    finally:
+        common.ROWS[:] = saved_rows
+        common.set_smoke(saved_smoke)
+    assert not validate_rows(rows)
+    assert not validate_fig22_coverage(rows)
+    met = versioned_metrics(rows)
+    for tier in ("single", "range"):
+        cell = met[f"fig22/as_of/{tier}"]
+        assert cell["as_of_match"] == 1 and cell["pages"] > 0, met
+    ttl = met["fig22/ttl/sweep"]
+    assert ttl["reclaimed"] > 0, met
+    assert ttl["filter_reclaim_equal"] == 1 and ttl["versioned_expiry"] == 1
+
+
+def test_fig22_gate_rejects_mismatch_and_empty_sweep():
+    """The versioned schema gate itself: an as_of cell diverging from its
+    frozen oracle, a TTL sweep that reclaimed nothing under the expiring
+    workload, filtered-vs-swept divergence, or a missing cell must all be
+    flagged."""
+    from benchmarks.run import validate_fig22_coverage
+
+    good = [
+        f"fig22/as_of/{t},2.0,as_of_match=1;pages=5;live_get_us=1.0;"
+        f"tax=1.4;retained=24"
+        for t in ("single", "range")
+    ] + [
+        "fig22/ttl/sweep,3.0,as_of_match=1;reclaimed=256;"
+        "filter_reclaim_equal=1;versioned_expiry=1;sweep_s=0.1"
+    ]
+    assert not validate_fig22_coverage(good)
+    mismatch = [r.replace("as_of_match=1", "as_of_match=0") for r in good]
+    assert any("as_of_match" in p for p in validate_fig22_coverage(mismatch))
+    empty = [r.replace("reclaimed=256", "reclaimed=0") for r in good]
+    assert any("reclaimed" in p for p in validate_fig22_coverage(empty))
+    diverged = [
+        r.replace("filter_reclaim_equal=1", "filter_reclaim_equal=0")
+        for r in good
+    ]
+    assert any(
+        "filter_reclaim_equal" in p for p in validate_fig22_coverage(diverged)
+    )
+    nosingle = [r for r in good if "/as_of/single" not in r]
+    assert any("as_of/single" in p for p in validate_fig22_coverage(nosingle))

@@ -1,0 +1,150 @@
+"""Shared cache gather/scatter (``core.cacheset``): bit-identical to the
+inline probe / key-invalidate math it replaced.
+
+``hotcache`` and ``scancache`` used to carry private copies of the Bloom
+check + bucket gather + exact key compare (probe) and of the key-matched
+valid-bit clear (invalidate); both now wrap ``cacheset.probe_set`` /
+``cacheset.invalidate_set``.  The references below are verbatim transcriptions
+of the pre-refactor bodies — every output must match bitwise, including the
+arbitrary-but-deterministic payload rows gathered for missing requests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hotcache, scancache
+from repro.core.hotcache import SALT_BLOOM, SALT_BUCKET, CacheConfig
+from repro.core.keys import limb_eq, limb_hash, split_u64
+from repro.core.scancache import SALT_SBLOOM, SALT_SBUCKET, ScanCacheConfig
+
+
+def _limbs(keys):
+    l = split_u64(np.asarray(keys, dtype=np.uint64))
+    return jnp.asarray(l[:, 0]), jnp.asarray(l[:, 1])
+
+
+def _bloom_pass(bloom, tid, khi, klo, bits, salts):
+    may = jnp.ones_like(khi, dtype=bool)
+    for s in salts:
+        h = limb_hash(khi, klo, s) % jnp.uint32(bits)
+        word = bloom[tid, (h // 32).astype(jnp.int32)]
+        may &= (word >> (h % 32)) & 1 == 1
+    return may
+
+
+def _probe_ref_hot(cache, tid, khi, klo, cfg):
+    """Pre-refactor ``hotcache.probe`` body, transcribed verbatim."""
+    may = _bloom_pass(cache.bloom, tid, khi, klo, cfg.bloom_bits, SALT_BLOOM)
+    bucket = (limb_hash(khi, klo, SALT_BUCKET) % jnp.uint32(cfg.n_buckets)).astype(
+        jnp.int32
+    )
+    bk = cache.bkey[tid, bucket]
+    bv = cache.bval[tid, bucket]
+    valid = cache.bvalid[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
+    hit_way = jnp.argmax(eq, axis=1)
+    hit = may & jnp.any(eq, axis=1)
+    v = jnp.take_along_axis(bv, hit_way[:, None, None].repeat(2, -1), axis=1)[:, 0]
+    return hit, v[:, 0], v[:, 1]
+
+
+def _probe_ref_scan(cache, tid, khi, klo, cfg):
+    """Pre-refactor ``scancache.probe`` body, transcribed verbatim."""
+    may = _bloom_pass(cache.bloom, tid, khi, klo, cfg.bloom_bits, SALT_SBLOOM)
+    bucket = (limb_hash(khi, klo, SALT_SBUCKET) % jnp.uint32(cfg.n_buckets)).astype(
+        jnp.int32
+    )
+    bk = cache.bkey[tid, bucket]
+    bl = cache.bleaf[tid, bucket]
+    valid = cache.bvalid[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None]) & valid
+    hit_way = jnp.argmax(eq, axis=1)
+    hit = may & jnp.any(eq, axis=1)
+    leaf = jnp.take_along_axis(bl, hit_way[:, None], axis=1)[:, 0]
+    return hit, jnp.where(hit, leaf, 0)
+
+
+def _invalidate_ref_hot(cache, tid, khi, klo, active, cfg):
+    """Pre-refactor ``hotcache.invalidate`` body, transcribed verbatim."""
+    bucket = (limb_hash(khi, klo, SALT_BUCKET) % jnp.uint32(cfg.n_buckets)).astype(
+        jnp.int32
+    )
+    bk = cache.bkey[tid, bucket]
+    eq = limb_eq(bk[:, :, 0], bk[:, :, 1], khi[:, None], klo[:, None])
+    eq &= cache.bvalid[tid, bucket] & active[:, None]
+    way = jnp.argmax(eq, axis=1)
+    hit = jnp.any(eq, axis=1)
+    T = cache.bkey.shape[0]
+    tid_s = jnp.where(hit, tid, T)
+    bvalid = cache.bvalid.at[tid_s, bucket, way].set(False, mode="drop")
+    return cache._replace(bvalid=bvalid)
+
+
+def _filled_hot(cfg, rng, n=256):
+    cache = hotcache.make_cache(cfg)
+    keys = rng.integers(1, 2**63, n, dtype=np.uint64)
+    kh, kl = _limbs(keys)
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    vh, vl = _limbs(keys ^ np.uint64(0xBEEF))
+    for w in range(6):
+        cache = hotcache.admit(
+            cache, tid, kh, kl, vh, vl, jnp.ones(n, bool), cfg=cfg, wave=w
+        )
+    return cache, keys, tid
+
+
+def test_hotcache_probe_bitwise_equivalent():
+    cfg = CacheConfig(n_threads=4, admit_shift=1)
+    rng = np.random.default_rng(7)
+    cache, keys, _ = _filled_hot(cfg, rng)
+    # probe a mix of admitted keys and unseen keys (bloom FPs + cold misses)
+    probes = np.concatenate([keys, rng.integers(1, 2**63, 512, dtype=np.uint64)])
+    ph, pl = _limbs(probes)
+    ptid = hotcache.steer(ph, pl, cfg.n_threads)
+    hit, vh, vl = hotcache.probe(cache, ptid, ph, pl, cfg=cfg)
+    rhit, rvh, rvl = _probe_ref_hot(cache, ptid, ph, pl, cfg)
+    assert np.array_equal(np.asarray(hit), np.asarray(rhit))
+    assert np.array_equal(np.asarray(vh), np.asarray(rvh))  # incl. miss rows
+    assert np.array_equal(np.asarray(vl), np.asarray(rvl))
+    assert int(jnp.sum(hit)) > 0  # the comparison actually exercised hits
+
+
+def test_hotcache_invalidate_bitwise_equivalent():
+    cfg = CacheConfig(n_threads=4, admit_shift=0)
+    rng = np.random.default_rng(8)
+    cache, keys, tid = _filled_hot(cfg, rng)
+    kh, kl = _limbs(keys)
+    # half the rows active, plus some never-admitted keys (must be no-ops)
+    extra = rng.integers(1, 2**63, 64, dtype=np.uint64)
+    eh, el = _limbs(extra)
+    akh = jnp.concatenate([kh, eh])
+    akl = jnp.concatenate([kl, el])
+    atid = jnp.concatenate([tid, hotcache.steer(eh, el, cfg.n_threads)])
+    active = jnp.asarray(rng.random(int(akh.size)) < 0.5)
+    # run the reference first: the real invalidate() donates the cache buffers
+    before = int(jnp.sum(cache.bvalid))
+    ref = _invalidate_ref_hot(cache, atid, akh, akl, active, cfg)
+    got = hotcache.invalidate(cache, atid, akh, akl, active, cfg=cfg)
+    assert np.array_equal(np.asarray(got.bvalid), np.asarray(ref.bvalid))
+    assert int(jnp.sum(got.bvalid)) < before  # the clear actually fired
+
+
+def test_scancache_probe_bitwise_equivalent():
+    cfg = ScanCacheConfig(n_threads=4)
+    rng = np.random.default_rng(9)
+    cache = scancache.make_cache(cfg)
+    keys = rng.integers(1, 2**63, 256, dtype=np.uint64)
+    kh, kl = _limbs(keys)
+    tid = hotcache.steer(kh, kl, cfg.n_threads)
+    leaves = jnp.asarray(rng.integers(0, 1000, 256), dtype=jnp.int32)
+    cache = scancache.admit(
+        cache, tid, kh, kl, leaves, jnp.ones(256, bool), cfg=cfg, epoch=3
+    )
+    probes = np.concatenate([keys, rng.integers(1, 2**63, 512, dtype=np.uint64)])
+    ph, pl = _limbs(probes)
+    ptid = hotcache.steer(ph, pl, cfg.n_threads)
+    hit, leaf = scancache.probe(cache, ptid, ph, pl, cfg=cfg)
+    rhit, rleaf = _probe_ref_scan(cache, ptid, ph, pl, cfg)
+    assert np.array_equal(np.asarray(hit), np.asarray(rhit))
+    assert np.array_equal(np.asarray(leaf), np.asarray(rleaf))
+    assert int(jnp.sum(hit)) > 0

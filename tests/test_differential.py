@@ -72,9 +72,33 @@ def _check_items(store, oracle):
     assert all(int(v) == oracle[int(k)] for k, v in zip(ks, vs))
 
 
+def _check_as_of(store, snaps, data):
+    """One retained snapshot read: GET + RANGE with ``as_of`` must equal the
+    dict oracle FROZEN when the snapshot was taken, no matter what the live
+    store has done since.  Padding past ``counts`` is not asserted here —
+    the merged multi-shard versioned path zero-fills lazily."""
+    as_of, frozen = snaps[data.draw(st.integers(0, len(snaps) - 1))]
+    pool = np.array(sorted(frozen.keys()) or [1], dtype=np.uint64)
+    rng_q = np.concatenate([pool[:8], pool[-4:], pool[:4] + np.uint64(1)])
+    vals, found = store.get(rng_q, as_of=as_of)
+    for i, k in enumerate(rng_q):
+        assert bool(found[i]) == (int(k) in frozen), hex(int(k))
+        if found[i]:
+            assert int(vals[i]) == frozen[int(k)], hex(int(k))
+    sk = np.array(sorted(frozen.keys()), dtype=np.uint64)
+    limit = 9
+    r = store.range(rng_q[:4], limit=limit, as_of=as_of)
+    rk, rv, rc = (np.asarray(r.keys), np.asarray(r.vals), np.asarray(r.counts))
+    for i, k in enumerate(rng_q[:4]):
+        ek, ev = _np_range_oracle(sk, frozen, k, limit)
+        assert rc[i] == ek.size, (hex(int(k)), rc[i], ek.size)
+        assert (rk[i, : ek.size] == ek).all(), hex(int(k))
+        assert (rv[i, : ek.size] == ev).all(), hex(int(k))
+
+
 def _run_interleaving(
     data, *, n_shards, partition, n_keys, n_ops, wave, replication=1,
-    pipelined=False,
+    pipelined=False, versioned=False,
 ):
     """One fuzzed episode: load, interleave ops, verify bitwise throughout."""
     rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
@@ -83,12 +107,17 @@ def _run_interleaving(
     )
     vals = keys ^ np.uint64(0xD1FF)
     oracle = dict(zip(keys.tolist(), vals.tolist()))
+    # the versioned leg needs pool headroom: quarantined rows are withheld
+    # from the allocator for the whole retention window
+    cfg = TreeConfig(growth=64.0) if versioned else TreeConfig(growth=16.0)
+    retain = 40 if versioned else 0
     if n_shards == 0:  # single-store leg rides the same net
-        store = DPAStore(keys, vals, TreeConfig(growth=16.0), cache_cfg=None)
+        store = DPAStore(keys, vals, cfg, cache_cfg=None, retain_epochs=retain)
     else:
         store = kvshard.ShardedDPAStore(
-            keys, vals, n_shards, TreeConfig(growth=16.0),
+            keys, vals, n_shards, cfg,
             partition=partition, cache_cfg=None, replication=replication,
+            retain_epochs=retain,
         )
     if pipelined:
         # the pipelined leg drives the SAME op mix through the async wave
@@ -130,12 +159,14 @@ def _run_interleaving(
             ]
         )
 
+    snaps = []  # (as_of handle, frozen dict oracle) — the versioned leg
     for _ in range(n_ops):
         if pipelined:
             store.submit_get(some_keys(8))  # keep a wave in flight
         op = data.draw(
             st.sampled_from(
                 ["put_new", "put_mixed", "delete", "get", "range", "flush"]
+                + (["snapshot", "read_as_of"] if versioned else [])
                 + (
                     ["rebalance", "begin_rebalance", "commit_rebalance",
                      "reshard", "begin_reshard"]
@@ -193,6 +224,11 @@ def _run_interleaving(
             )
         elif op == "flush":
             store.flush()
+        elif op == "snapshot" and not in_handoff and failover_epoch is None:
+            snaps.append((store.snapshot_epoch(), dict(oracle)))
+            del snaps[:-3]  # bound live pins (and the churn they outlast)
+        elif op == "read_as_of" and snaps:
+            _check_as_of(store, snaps, data)
         elif op == "rebalance" and not in_handoff and failover_epoch is None:
             if store.planner is not None:
                 store.rebalance(store.planner.propose(store.boundaries))
@@ -259,6 +295,9 @@ def _run_interleaving(
     _check_items(store, oracle)
     _check_get(store, oracle, some_keys())
     _check_range(store, oracle, some_keys(wave // 2), 9, 2)
+    if snaps:
+        # every still-retained snapshot reads its frozen past to the end
+        _check_as_of(store, snaps, data)
     if replicated:
         # survivors never needed a host re-issue: the in-mesh continuation
         # contract is failover-invariant
@@ -313,6 +352,24 @@ def test_differential_fuzz_reshard(data):
     _run_interleaving(
         data, n_shards=2, partition="range", n_keys=240, n_ops=8, wave=24,
         pipelined=data.draw(st.booleans()),
+    )
+
+
+@given(st.data())
+@settings(max_examples=4, deadline=None)
+def test_differential_fuzz_versioned(data):
+    """Always-on point-in-time leg: ``snapshot_epoch`` pins and ``as_of``
+    reads drawn into the op mix on the single-store and range tiers —
+    every retained snapshot must keep serving its FROZEN oracle bitwise
+    while the live store churns, rebalances and reshards around it."""
+    _run_interleaving(
+        data,
+        n_shards=data.draw(st.sampled_from([0, 2])),
+        partition="range",
+        n_keys=220,
+        n_ops=6,
+        wave=24,
+        versioned=True,
     )
 
 

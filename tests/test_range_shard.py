@@ -840,6 +840,30 @@ def test_wave_equivalence_across_rebalance_epochs(n_shards):
                 exp = _np_oracle(sk, qs[i, j], 10)
                 assert va[i, j].sum() == exp.size, (label, i, j)
                 assert (got_k[i, j][: exp.size] == exp).all(), (label, i, j)
+    # mid-handoff GET wave, the same three ways: per-request epoch tags
+    # route tag=0 rows by the PREVIOUS boundary vector (donors, which still
+    # hold the migrated slices) and tag=1 rows by the current one — every
+    # tag pattern must serve the oracle bitwise (GET serving is epoch-
+    # invariant mid-handoff; routing is the whole difference)
+    for label, tag in tags.items():
+        gvh, gvl, gfd, gok = kvshard.serve_wave_emulated(
+            tree1, ib1, jnp.asarray(limbs[..., 0]), jnp.asarray(limbs[..., 1]),
+            cap=n_shards * W, depth=depth1, eps_inner=4, eps_leaf=8,
+            route_fn=rangeshard.make_route_fn(sharded.boundaries),
+            route_fn_prev=rangeshard.make_route_fn(
+                sharded.boundaries_for_epoch(snap["epoch"])
+            ),
+            epoch_tag=jnp.asarray(tag),
+        )
+        assert bool(jnp.all(gok)), label
+        gv = _join(gvh, gvl)
+        gf = np.asarray(gfd)
+        for i in range(n_shards):
+            for j in range(W):
+                k = int(qs[i, j])
+                assert gf[i, j] == (k in oracle1), (label, i, j)
+                if gf[i, j]:
+                    assert int(gv[i, j]) == oracle1[k], (label, i, j)
     # host facade, admitted-epoch routing: both epochs equal the oracle
     for ep in (None, snap["epoch"]):
         hk, hv, hc = sharded.range(qs.reshape(-1), limit=10, epoch=ep)

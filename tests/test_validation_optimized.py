@@ -1,0 +1,83 @@
+"""Request validation survives ``python -O`` (PYTHONOPTIMIZE=1).
+
+The epoch-path guards used to be ``assert`` statements, which optimized
+bytecode strips — a caller's routing epoch (or an ``as_of``+``epoch``
+combination with no defined meaning) would be silently accepted and
+ignored.  They are ``ValueError`` raises now; this test pins that by
+running the checks in a subprocess with ``PYTHONOPTIMIZE=1``, where any
+regression back to ``assert`` turns the expected error into silence.
+"""
+
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import numpy as np
+
+from repro.core import DPAStore, TreeConfig
+from repro.distributed import kvshard
+
+# asserts really are stripped in this interpreter
+try:
+    assert False
+except AssertionError:
+    raise SystemExit("PYTHONOPTIMIZE=1 not in effect: asserts still run")
+
+cfg = TreeConfig(growth=8.0)
+keys = np.arange(1, 65, dtype=np.uint64) * np.uint64(977)
+vals = keys ^ np.uint64(3)
+st = DPAStore(keys, vals, cfg, cache_cfg=None)
+
+def expect_value_error(fn, what):
+    try:
+        fn()
+    except ValueError:
+        return
+    raise SystemExit(f"{what}: ValueError not raised under -O")
+
+# single store: no routing epochs
+expect_value_error(lambda: st.get(keys[:4], epoch=1), "DPAStore.get(epoch=)")
+expect_value_error(
+    lambda: st.range(keys[:1], limit=4, epoch=1), "DPAStore.range(epoch=)"
+)
+expect_value_error(
+    lambda: st.range_with_state(keys[:1], limit=4, max_rounds=0),
+    "DPAStore.range_with_state(max_rounds=0)",
+)
+
+sh = kvshard.ShardedDPAStore(keys, vals, 2, cfg, partition="hash", cache_cfg=None)
+# hash routing has no boundary epochs
+expect_value_error(lambda: sh.route_np(keys[:4], epoch=1), "route_np(epoch=)")
+# as_of and epoch are mutually exclusive request parameters
+expect_value_error(
+    lambda: sh.get(keys[:4], epoch=1, as_of=1), "get(as_of=, epoch=)"
+)
+expect_value_error(
+    lambda: sh.range(keys[:1], limit=4, epoch=1, as_of=1),
+    "range(as_of=, epoch=)",
+)
+# the reserved 2^64-1 sentinel is request validation too — writes must
+# reject it even with asserts stripped (load path and both write paths)
+big = np.array([np.iinfo(np.uint64).max], dtype=np.uint64)
+expect_value_error(lambda: st.put(big, big), "put(KEY_MAX)")
+expect_value_error(lambda: st.write_issue("put", big, big), "write_issue(KEY_MAX)")
+expect_value_error(lambda: DPAStore(big, big, cfg), "DPAStore(load KEY_MAX)")
+print("OK")
+"""
+
+
+def test_validation_survives_python_O():
+    env = dict(os.environ, PYTHONOPTIMIZE="1")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(os.getcwd(), "src"), env.get("PYTHONPATH")] if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout

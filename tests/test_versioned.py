@@ -1,0 +1,282 @@
+"""Point-in-time reads (``as_of``) and TTL expiry vs a frozen dict oracle.
+
+The contract under test (``repro.core.api``): ``snapshot_epoch()`` names the
+current stitched state; ``get/range(..., as_of=<epoch>)`` serve bitwise the
+state the oracle dict held when the snapshot was taken, regardless of any
+writes, rebalances, reshards or failovers that landed since; reads past the
+retained window raise ``EpochRetiredError``; keys written with ``ttl=K``
+read as absent once the logical clock passes their deadline and are
+physically reclaimed by ``ttl_sweep()`` with no observable difference
+between filtered and reclaimed reads (expiry is a versioned event — older
+``as_of`` epochs still see the key).
+
+Retention sizing note: the multi-version window is counted in *flush
+cycles*, and a single facade ``put`` can burn several (auto-retry buffer
+drains each run a stitch cycle), so these tests use a generous
+``retain_epochs`` and pool ``growth`` — quarantined rows are withheld from
+the allocator for the whole window.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DPAStore, TreeConfig
+from repro.core.epoch import EpochRetiredError
+from repro.distributed import kvshard
+from repro.serving.pipeline import PipelinedStore
+
+CFG = TreeConfig(growth=64.0)
+RETAIN = 40
+
+
+def _data(n=320, seed=0xC0FFEE):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(1, 2**62, n, dtype=np.uint64))
+    return keys, keys ^ np.uint64(0xBEEF)
+
+
+BUILDERS = {
+    "single": lambda k, v: DPAStore(
+        k, v, CFG, cache_cfg=None, retain_epochs=RETAIN
+    ),
+    "hash": lambda k, v: kvshard.ShardedDPAStore(
+        k, v, 2, CFG, partition="hash", cache_cfg=None, retain_epochs=RETAIN
+    ),
+    "range": lambda k, v: kvshard.ShardedDPAStore(
+        k, v, 2, CFG, partition="range", cache_cfg=None, retain_epochs=RETAIN
+    ),
+    "replicated": lambda k, v: kvshard.ShardedDPAStore(
+        k,
+        v,
+        2,
+        CFG,
+        partition="range",
+        cache_cfg=None,
+        replication=2,
+        retain_epochs=RETAIN,
+    ),
+}
+
+
+def _check_get(store, oracle, probe, as_of=None):
+    vals, found = store.get(probe, as_of=as_of)
+    want_found = np.array([int(k) in oracle for k in probe.tolist()])
+    want_vals = np.array(
+        [oracle.get(int(k), 0) for k in probe.tolist()], dtype=np.uint64
+    )
+    assert np.array_equal(np.asarray(found, dtype=bool), want_found)
+    assert np.array_equal(
+        np.asarray(vals, dtype=np.uint64)[want_found], want_vals[want_found]
+    )
+
+
+def _paginate(store, oracle, *, as_of=None, page=7, between_pages=None):
+    """Client-side pagination loop: RANGE(cursor, page) until exhausted.
+
+    ``between_pages(i)`` runs arbitrary mutation between pages — for
+    ``as_of`` scans the concatenated sequence must still equal the frozen
+    oracle's ascending items bitwise."""
+    got = []
+    k = np.uint64(1)
+    for i in range(200):
+        r = store.range(np.asarray([k], dtype=np.uint64), limit=page, as_of=as_of)
+        c = int(np.asarray(r.counts)[0])
+        rk = np.asarray(r.keys, dtype=np.uint64)[0, :c]
+        rv = np.asarray(r.vals, dtype=np.uint64)[0, :c]
+        got.extend(zip(rk.tolist(), rv.tolist()))
+        if c < page:
+            break
+        k = rk[-1] + np.uint64(1)
+        if between_pages is not None:
+            between_pages(i)
+    else:
+        pytest.fail("pagination did not terminate")
+    want = sorted((int(k), int(v)) for k, v in oracle.items())
+    assert got == want
+
+
+@pytest.mark.parametrize("tier", sorted(BUILDERS))
+@pytest.mark.parametrize("qd", [1, 2])
+def test_as_of_reads_vs_frozen_oracle(tier, qd):
+    """GET/RANGE(as_of=E) == the dict oracle frozen at E, across two
+    snapshot generations and subsequent live writes, on every tier and
+    through the pipelined facade at both queue depths."""
+    keys, vals = _data()
+    store = PipelinedStore(BUILDERS[tier](keys, vals), queue_depth=qd)
+    oracle0 = dict(zip(keys.tolist(), vals.tolist()))
+    snap0 = store.snapshot_epoch()
+
+    # generation 1: overwrite a third, insert fresh keys, delete a few
+    rng = np.random.default_rng(7)
+    over = keys[:: 3]
+    store.put(over, over ^ np.uint64(0x1111))
+    fresh = np.unique(rng.integers(2**62, 2**63, 40, dtype=np.uint64))
+    store.put(fresh, fresh ^ np.uint64(0x2222))
+    gone = keys[1:: 7]
+    store.delete(gone)
+    oracle1 = dict(oracle0)
+    oracle1.update({int(k): int(k ^ np.uint64(0x1111)) for k in over})
+    oracle1.update({int(k): int(k ^ np.uint64(0x2222)) for k in fresh})
+    for k in gone.tolist():
+        oracle1.pop(int(k), None)
+    snap1 = store.snapshot_epoch()
+
+    # generation 2 (live, unsnapshotted): clobber everything snap1 saw
+    store.put(keys, keys ^ np.uint64(0x3333))
+    oracle2 = dict(oracle1)
+    oracle2.update({int(k): int(k ^ np.uint64(0x3333)) for k in keys})
+    store.flush()
+
+    probe = np.concatenate(
+        [keys, fresh, np.asarray([3, 5, 2**61 + 9], dtype=np.uint64)]
+    )
+    if qd > 1:  # exercise the drain: versioned reads amid in-flight tickets
+        t = store.submit_get(probe[:16])
+        _check_get(store, oracle0, probe, as_of=snap0)
+        np.asarray(store.result(t)[0])
+    else:
+        _check_get(store, oracle0, probe, as_of=snap0)
+    _check_get(store, oracle1, probe, as_of=snap1)
+    _check_get(store, oracle2, probe)  # live reads see the present
+
+    _paginate(store, oracle0, as_of=snap0, page=19)
+    _paginate(store, oracle1, as_of=snap1, page=19)
+    _paginate(store, oracle2, page=19)
+
+
+def test_paginated_as_of_scan_survives_rebalance_and_reshard():
+    """ISSUE acceptance: a RANGE pagination loop with ``as_of=E`` returns
+    the bitwise-identical sequence to the dict oracle frozen at E even with
+    writers, a rebalance and a reshard interleaved between pages — and the
+    live range path still never re-issues (``range_reissues == 0``)."""
+    keys, vals = _data(260, seed=5)
+    store = kvshard.ShardedDPAStore(
+        keys, vals, 2, CFG, partition="range", cache_cfg=None, retain_epochs=RETAIN
+    )
+    oracle = dict(zip(keys.tolist(), vals.tolist()))
+    snap = store.snapshot_epoch()
+
+    rng = np.random.default_rng(11)
+
+    def churn(i):
+        # writers between the first pages, then topology flips; churn is
+        # bounded because every put/delete burns flush cycles out of the
+        # retention window (see module docstring)
+        if i > 3:
+            return
+        nk = np.unique(rng.integers(1, 2**62, 25, dtype=np.uint64))
+        store.put(nk, nk ^ np.uint64(i + 1))
+        store.delete(keys[i:: 11])
+        if i == 1:
+            store.rebalance()
+        elif i == 3:
+            store.reshard(3)
+
+    live_reissues = store.range_reissues
+    _paginate(store, oracle, as_of=snap, between_pages=churn)
+    # live scan after all the churn: exact against items(), no re-issues
+    lk, lv = store.items()
+    _paginate(store, dict(zip(lk.tolist(), lv.tolist())))
+    assert store.range_reissues == live_reissues
+
+
+def test_as_of_past_horizon_raises():
+    keys, vals = _data(200, seed=9)
+    st = DPAStore(keys, vals, CFG, cache_cfg=None, retain_epochs=2)
+    e0 = st.snapshot_epoch()
+    for i in range(4):  # burn the window: each flush is one version epoch
+        st.put(keys[:32], keys[:32] ^ np.uint64(i + 10))
+        st.flush()
+    with pytest.raises(EpochRetiredError):
+        st.get(keys[:4], as_of=e0)
+    with pytest.raises(EpochRetiredError):
+        st.range(keys[:1], limit=4, as_of=e0)
+    # future epochs are equally unreadable
+    with pytest.raises(EpochRetiredError):
+        st.get(keys[:4], as_of=st.epochs.cycle + 1)
+
+
+def test_snapshot_requires_retention():
+    keys, vals = _data(150, seed=3)
+    st = DPAStore(keys, vals, CFG, cache_cfg=None)  # retain_epochs=0
+    with pytest.raises(EpochRetiredError):
+        st.snapshot_epoch()
+    fac = kvshard.ShardedDPAStore(keys, vals, 2, CFG, cache_cfg=None)
+    with pytest.raises(EpochRetiredError):
+        fac.snapshot_epoch()
+
+
+@pytest.mark.parametrize("tier", ["single", "range"])
+def test_ttl_filter_reclaim_equivalence(tier):
+    """Expired keys read as absent BEFORE the sweep (filter) and AFTER it
+    (physical reclaim) with bitwise-identical GET/RANGE results; the sweep
+    reports the reclaim count; a pre-expiry ``as_of`` epoch still sees the
+    keys (expiry is versioned, judged by that epoch's frozen clock)."""
+    keys, vals = _data(240, seed=21)
+    store = BUILDERS[tier](keys, vals)
+    ttl_keys = np.unique(
+        np.random.default_rng(2).integers(2**62, 2**63, 30, dtype=np.uint64)
+    )
+    store.put(ttl_keys, ttl_keys ^ np.uint64(0xDEAD), ttl=3)
+    snap_pre = store.snapshot_epoch()  # before expiry: keys visible
+    oracle_pre = dict(zip(keys.tolist(), vals.tolist()))
+    oracle_pre.update(
+        {int(k): int(k ^ np.uint64(0xDEAD)) for k in ttl_keys}
+    )
+    oracle_live = dict(zip(keys.tolist(), vals.tolist()))
+
+    ttl = store.ttl
+    ttl.tick(3)  # now >= deadline: expired
+
+    probe = np.concatenate([keys[:40], ttl_keys])
+    # filtered reads (pre-sweep)
+    g_filt = store.get(probe)
+    r_filt = store.range(ttl_keys[:1], limit=len(ttl_keys) + 4)
+    _check_get(store, oracle_live, probe)
+    # physical reclaim
+    reclaimed = store.ttl_sweep()
+    assert reclaimed == len(ttl_keys)
+    g_swept = store.get(probe)
+    r_swept = store.range(ttl_keys[:1], limit=len(ttl_keys) + 4)
+    assert np.array_equal(np.asarray(g_filt[1]), np.asarray(g_swept[1]))
+    assert np.array_equal(
+        np.asarray(g_filt[0])[np.asarray(g_filt[1])],
+        np.asarray(g_swept[0])[np.asarray(g_swept[1])],
+    )
+    assert np.array_equal(np.asarray(r_filt.counts), np.asarray(r_swept.counts))
+    assert np.array_equal(np.asarray(r_filt.keys), np.asarray(r_swept.keys))
+    # physically gone from the live image
+    lk, _ = store.items()
+    assert not np.isin(ttl_keys, lk).any()
+    # ... but the pre-expiry epoch still serves them
+    _check_get(store, oracle_pre, probe, as_of=snap_pre)
+
+
+def test_ttl_deadline_cleared_by_overwrite_and_delete():
+    keys, vals = _data(180, seed=33)
+    st = DPAStore(keys, vals, CFG, cache_cfg=None, retain_epochs=RETAIN)
+    k = keys[:10]
+    st.put(k, k ^ np.uint64(1), ttl=2)
+    st.put(k[:5], k[:5] ^ np.uint64(2))  # ttl=None overwrite clears deadline
+    st.ttl.tick(5)
+    v, f = st.get(k)
+    assert np.asarray(f)[:5].all() and not np.asarray(f)[5:].any()
+    assert st.ttl_sweep() == 5  # only the still-expiring half reclaimed
+    assert st.ttl_sweep() == 0  # idempotent once clean
+
+
+def test_facade_compaction_trigger():
+    """``maybe_compact`` arms only past the planner threshold (stubs +
+    expired TTL keys) and reports what the sweep reclaimed."""
+    keys, vals = _data(220, seed=41)
+    store = kvshard.ShardedDPAStore(
+        keys, vals, 2, CFG, partition="range", cache_cfg=None, retain_epochs=RETAIN
+    )
+    assert store.maybe_compact() is None  # nothing expired, no stubs
+    ttl_keys = keys[:: 4]
+    store.put(ttl_keys, ttl_keys ^ np.uint64(7), ttl=1)
+    store.ttl.tick(1)
+    out = store.maybe_compact()
+    assert out is not None and out["ttl_reclaimed"] == len(ttl_keys)
+    lk, _ = store.items()
+    assert not np.isin(ttl_keys, lk).any()
